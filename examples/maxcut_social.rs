@@ -1,0 +1,74 @@
+//! Non-monotone distributed maximization (paper §6.3): maximum directed cut
+//! on a Facebook-like message network, solved on each partition with
+//! RandomGreedy (Buchbinder et al. 2014) and locally evaluated objectives
+//! (cross-partition links disconnected) — exactly the paper's setup.
+//!
+//! ```sh
+//! cargo run --release --example maxcut_social -- --k 20 --m 10
+//! ```
+
+use std::sync::Arc;
+
+use greedi::coordinator::baselines::Baseline;
+use greedi::coordinator::greedi::{centralized, Greedi, GreediConfig};
+use greedi::coordinator::CutProblem;
+use greedi::data::graph::social_network;
+use greedi::util::args::Args;
+use greedi::util::stats::summarize;
+use greedi::util::table::Table;
+
+fn main() {
+    let args = Args::from_env();
+    let n = args.get_usize("n", 1_899); // paper's UCI network size
+    let edges = args.get_usize("edges", 20_296);
+    let k = args.get_usize("k", 20);
+    let m = args.get_usize("m", 10);
+    let trials = args.get_usize("trials", 5);
+    let seed = args.get_u64("seed", 3);
+
+    println!("== max-cut: n={n}, directed edges={edges}, k={k}, m={m} (RandomGreedy) ==\n");
+    let g = Arc::new(social_network(n, edges, seed));
+    let problem = CutProblem::new(&g);
+
+    // RandomGreedy is randomized — report mean ± std over trials, as the
+    // paper's Fig. 9 error bars do.
+    let central: Vec<f64> = (0..trials)
+        .map(|t| centralized(&problem, k, "random_greedy", seed + t as u64).value)
+        .collect();
+    let cstats = summarize(&central);
+
+    let mut t = Table::new("cut value (mean ± std over trials)", &["protocol", "cut", "ratio"]);
+    t.row(&[
+        "centralized".into(),
+        format!("{:.1}±{:.1}", cstats.mean, cstats.std),
+        "1.000".into(),
+    ]);
+
+    let grd: Vec<f64> = (0..trials)
+        .map(|t| {
+            Greedi::new(GreediConfig::new(m, k).algorithm("random_greedy").local())
+                .run(&problem, seed + t as u64)
+                .value
+        })
+        .collect();
+    let gstats = summarize(&grd);
+    t.row(&[
+        "greedi".into(),
+        format!("{:.1}±{:.1}", gstats.mean, gstats.std),
+        format!("{:.3}", gstats.mean / cstats.mean),
+    ]);
+
+    for b in Baseline::ALL {
+        let vals: Vec<f64> = (0..trials)
+            .map(|t| b.run(&problem, m, k, true, "random_greedy", seed + t as u64).value)
+            .collect();
+        let s = summarize(&vals);
+        t.row(&[
+            b.label().into(),
+            format!("{:.1}±{:.1}", s.mean, s.std),
+            format!("{:.3}", s.mean / cstats.mean),
+        ]);
+    }
+    t.print();
+    println!("(paper: GreeDi ≈ 0.90× centralized for max-cut — non-decomposable,\n yet the two-round protocol remains robust)");
+}

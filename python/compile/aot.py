@@ -1,0 +1,132 @@
+"""AOT bridge: lower the Layer-2 graphs to HLO-text artifacts for rust.
+
+Interchange format is HLO **text**, not serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the published ``xla`` 0.1.6 crate links) rejects with
+``proto.id() <= INT_MAX``. The text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Usage (from python/):  python -m compile.aot --outdir ../artifacts
+
+Produces one ``<name>.hlo.txt`` per shape-bucketed graph plus a
+``manifest.json`` the rust artifact registry reads at startup.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+F32 = "f32"
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+# Shape buckets. The rust coordinator pads up to the nearest bucket:
+#   d=6  (Yahoo-like)        -> d=8
+#   d=22 (Parkinsons-like)   -> d=32
+#   d=32 (tiny-image-like)   -> d=32
+# B is the candidate batch, N the shard-block length, U the coverage universe
+# block. Keeping the bucket list short bounds `make artifacts` time; adding a
+# bucket is a one-line change here and is picked up by the registry via the
+# manifest.
+FACILITY_B, FACILITY_N = 64, 1024
+RBF_M, RBF_N = 64, 256
+COVERAGE_B, COVERAGE_U = 64, 2048
+DIMS = (8, 32)
+
+
+def build_entries():
+    """(name, jitted fn, example specs, doc) for every artifact."""
+    entries = []
+    for d in DIMS:
+        entries.append(
+            (
+                f"facility_gain_b{FACILITY_B}_n{FACILITY_N}_d{d}",
+                jax.jit(model.facility_gains),
+                [spec(FACILITY_B, d), spec(FACILITY_N, d), spec(FACILITY_N)],
+                [(FACILITY_B,)],
+                "batched facility-location marginal gain sums",
+            )
+        )
+        entries.append(
+            (
+                f"sqdist_b{FACILITY_B}_n{FACILITY_N}_d{d}",
+                jax.jit(model.sqdist_rows),
+                [spec(FACILITY_B, d), spec(FACILITY_N, d)],
+                [(FACILITY_B, FACILITY_N)],
+                "pairwise squared distances (curmin refresh / exact eval)",
+            )
+        )
+        entries.append(
+            (
+                f"rbf_m{RBF_M}_n{RBF_N}_d{d}",
+                jax.jit(lambda x, y: model.rbf_block(x, y, h=0.75)),
+                [spec(RBF_M, d), spec(RBF_N, d)],
+                [(RBF_M, RBF_N)],
+                "RBF kernel block, h=0.75 (paper section 6.2)",
+            )
+        )
+    entries.append(
+        (
+            f"coverage_b{COVERAGE_B}_u{COVERAGE_U}",
+            jax.jit(model.coverage_counts),
+            [spec(COVERAGE_B, COVERAGE_U), spec(COVERAGE_U)],
+            [(COVERAGE_B,)],
+            "batched coverage marginal gains over a dense incidence block",
+        )
+    )
+    return entries
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="substring filter on names")
+    args = ap.parse_args()
+    os.makedirs(args.outdir, exist_ok=True)
+
+    manifest = {"format": "hlo-text", "entries": []}
+    for name, fn, in_specs, out_shapes, doc in build_entries():
+        if args.only and args.only not in name:
+            continue
+        lowered = fn.lower(*in_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.outdir, fname), "w") as f:
+            f.write(text)
+        manifest["entries"].append(
+            {
+                "name": name,
+                "file": fname,
+                "doc": doc,
+                "inputs": [list(s.shape) for s in in_specs],
+                "outputs": [list(s) for s in out_shapes],
+                "dtype": F32,
+            }
+        )
+        print(f"wrote {fname} ({len(text)} chars)")
+
+    with open(os.path.join(args.outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest.json ({len(manifest['entries'])} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

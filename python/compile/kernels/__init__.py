@@ -1,0 +1,14 @@
+"""Layer-1 Pallas kernels for the GreeDi compute hot spots.
+
+Each kernel ships with a pure-jnp oracle in :mod:`ref` and is verified by
+``python/tests``. Kernels are lowered with ``interpret=True`` so the emitted
+HLO runs on any PJRT backend (including the rust CPU client); on a real TPU
+the same BlockSpecs express the HBM->VMEM schedule (see DESIGN.md
+section "Hardware adaptation").
+"""
+
+from .pairwise import pairwise_sqdist
+from .rbf import rbf_kernel
+from .facility_gain import facility_gain_sums
+
+__all__ = ["pairwise_sqdist", "rbf_kernel", "facility_gain_sums"]

@@ -1,0 +1,57 @@
+"""Tiled pairwise squared-distance Pallas kernel.
+
+The exemplar-based-clustering objective (paper section 3.4.2, experiments
+section 6.1) is driven entirely by squared Euclidean distances
+``l(x, x') = ||x - x'||^2``. This kernel computes the ``[M, N]`` distance
+matrix between a candidate block ``X`` and a data block ``Y`` using the
+``||x||^2 + ||y||^2 - 2<x, y>`` expansion so the inner product maps onto the
+MXU systolic array on TPU (and a dgemm on CPU), instead of an O(M*N*D)
+gather-subtract-square loop.
+
+Tiling: grid over (M/bm, N/bn); each step holds an ``(bm, D)`` X-tile, an
+``(bn, D)`` Y-tile and the ``(bm, bn)`` output tile in VMEM. For the default
+bm=64, bn=256, D<=64 the working set is < 200 KiB f32 — far under the ~16 MiB
+VMEM budget, leaving room for double buffering.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _sqdist_block_kernel(x_ref, y_ref, o_ref):
+    """One (bm, bn) tile: o = |x|^2 + |y|^2 - 2 x y^T, clamped at 0."""
+    x = x_ref[...]  # (bm, D)
+    y = y_ref[...]  # (bn, D)
+    x2 = jnp.sum(x * x, axis=1, keepdims=True)  # (bm, 1)
+    y2 = jnp.sum(y * y, axis=1, keepdims=True).T  # (1, bn)
+    cross = jnp.dot(x, y.T, preferred_element_type=jnp.float32)  # MXU
+    # Numerical guard: the expansion can go epsilon-negative for x ~= y.
+    o_ref[...] = jnp.maximum(x2 + y2 - 2.0 * cross, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn"))
+def pairwise_sqdist(x, y, *, bm: int = 64, bn: int = 256):
+    """Squared distances between rows of ``x`` [M, D] and ``y`` [N, D].
+
+    M must be divisible by ``bm`` and N by ``bn`` (the AOT shapes are padded
+    on the rust side to the bucket shape, so this is enforced statically).
+    """
+    m, d = x.shape
+    n, d2 = y.shape
+    assert d == d2, f"dim mismatch {d} vs {d2}"
+    assert m % bm == 0 and n % bn == 0, (m, n, bm, bn)
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        _sqdist_block_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, y)

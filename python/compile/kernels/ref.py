@@ -1,0 +1,32 @@
+"""Pure-jnp oracles for the Pallas kernels (correctness ground truth).
+
+Deliberately written in the most direct way possible (no expansion tricks, no
+tiling) so any agreement with the kernels is meaningful.
+"""
+
+import jax.numpy as jnp
+
+
+def pairwise_sqdist_ref(x, y):
+    """[M, D] x [N, D] -> [M, N] squared Euclidean distances."""
+    diff = x[:, None, :] - y[None, :, :]
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def rbf_kernel_ref(x, y, h: float = 0.75):
+    """RBF kernel matrix with bandwidth h."""
+    return jnp.exp(-pairwise_sqdist_ref(x, y) / (h * h))
+
+
+def facility_gain_sums_ref(cands, data, curmin):
+    """Unnormalized facility-location marginal gains, see facility_gain.py."""
+    d2 = pairwise_sqdist_ref(cands, data)  # (B, N)
+    return jnp.sum(jnp.maximum(curmin[None, :] - d2, 0.0), axis=1, keepdims=True)
+
+
+def info_gain_ref(kernel_ss, sigma: float = 1.0):
+    """GP information gain f(S) = 1/2 log det(I + sigma^-2 K_SS)."""
+    k = kernel_ss.shape[0]
+    m = jnp.eye(k) + kernel_ss / (sigma * sigma)
+    sign, logdet = jnp.linalg.slogdet(m)
+    return 0.5 * logdet

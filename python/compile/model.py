@@ -1,0 +1,59 @@
+"""Layer-2 JAX compute graphs for the GreeDi objective hot spots.
+
+Each public function here is a jit-able graph that calls the Layer-1 Pallas
+kernels and is AOT-lowered by :mod:`aot` into an HLO-text artifact. The rust
+coordinator (Layer 3) streams fixed-shape blocks through these graphs on the
+request path; python never runs after ``make artifacts``.
+
+Shape discipline: all shapes are static buckets (see ``aot.SHAPE_BUCKETS``);
+the rust side pads candidate blocks / shard blocks up to the bucket and masks
+out padding (padded curmin entries are 0 so they contribute nothing; padded
+data rows are filtered by the coordinator before aggregation).
+"""
+
+import jax.numpy as jnp
+
+from .kernels import facility_gain_sums, pairwise_sqdist, rbf_kernel
+
+
+def facility_gains(cands, data, curmin):
+    """Batched facility-location marginal gains (UNNORMALIZED sums).
+
+    cands  : (B, D) candidate exemplars
+    data   : (N, D) shard block
+    curmin : (N,)   cached min squared distance to the current solution
+    returns: (B,)   sum_v max(curmin[v] - ||c - v||^2, 0)
+
+    The coordinator divides by the true ground-set size n. Returned as a
+    1-tuple because jax lowering uses return_tuple=True (see aot.py).
+    """
+    sums = facility_gain_sums(cands, data, curmin)  # (B, 1)
+    return (sums[:, 0],)
+
+
+def sqdist_rows(cands, data):
+    """Pairwise squared distances (B, D) x (N, D) -> (B, N).
+
+    Used by the coordinator to refresh ``curmin`` after each selection
+    (one row per newly selected exemplar) and to compute f(S) exactly.
+    """
+    return (pairwise_sqdist(cands, data),)
+
+
+def rbf_block(x, y, h: float = 0.75):
+    """RBF kernel block for GP info-gain (paper's h = 0.75 default)."""
+    return (rbf_kernel(x, y, h=h),)
+
+
+def coverage_counts(membership, covered):
+    """Batched coverage marginal gains over a dense incidence block.
+
+    membership : (B, U) 0/1 — candidate-to-universe incidence rows
+    covered    : (U,)   0/1 — already-covered indicator
+    returns    : (B,)   number of newly covered universe items per candidate
+
+    Plain-XLA graph (no Pallas): this one is bandwidth-bound with no matmul
+    structure; XLA's native fusion already produces the optimal loop.
+    """
+    uncovered = 1.0 - covered
+    return (jnp.dot(membership, uncovered),)

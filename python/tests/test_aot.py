@@ -1,0 +1,104 @@
+"""AOT pipeline: every artifact lowers to parseable HLO text with the
+declared parameter shapes, and the manifest is consistent."""
+
+import json
+import os
+import re
+
+import pytest
+
+from compile import aot
+
+
+@pytest.fixture(scope="module")
+def entries():
+    return aot.build_entries()
+
+
+class TestBuildEntries:
+    def test_unique_names(self, entries):
+        names = [e[0] for e in entries]
+        assert len(names) == len(set(names))
+
+    def test_every_dim_bucket_has_all_three_graphs(self, entries):
+        names = [e[0] for e in entries]
+        for d in aot.DIMS:
+            assert any(n.startswith("facility_gain") and n.endswith(f"_d{d}") for n in names)
+            assert any(n.startswith("sqdist") and n.endswith(f"_d{d}") for n in names)
+            assert any(n.startswith("rbf") and n.endswith(f"_d{d}") for n in names)
+
+    def test_io_shapes_well_formed(self, entries):
+        for name, _fn, in_specs, out_shapes, _doc in entries:
+            assert len(in_specs) >= 1, name
+            assert len(out_shapes) >= 1, name
+            for s in in_specs:
+                assert all(dim > 0 for dim in s.shape), name
+
+
+class TestLowering:
+    def test_facility_gain_lowers_to_hlo_text(self, entries):
+        name, fn, in_specs, _out, _doc = next(
+            e for e in entries if e[0].startswith("facility_gain") and "_d8" in e[0]
+        )
+        text = aot.to_hlo_text(fn.lower(*in_specs))
+        assert "HloModule" in text
+        assert "ENTRY" in text
+        # parameters must carry the bucketed shapes
+        assert "f32[64,8]" in text  # candidate block
+        assert "f32[1024,8]" in text  # shard block
+
+    def test_coverage_lowers_with_dot(self, entries):
+        name, fn, in_specs, _out, _doc = next(
+            e for e in entries if e[0].startswith("coverage")
+        )
+        text = aot.to_hlo_text(fn.lower(*in_specs))
+        assert "HloModule" in text
+        assert "dot(" in text  # the membership @ uncovered contraction
+
+    def test_output_is_tuple(self, entries):
+        """Lowered with return_tuple=True — rust unwraps with to_tuple1()."""
+        name, fn, in_specs, _out, _doc = next(
+            e for e in entries if e[0].startswith("sqdist") and "_d8" in e[0]
+        )
+        text = aot.to_hlo_text(fn.lower(*in_specs))
+        root = [l for l in text.splitlines() if "ROOT" in l and "ENTRY" not in l]
+        assert any("tuple" in l or "(f32[" in l for l in root), root
+
+
+class TestArtifactsOnDisk:
+    """Validate what `make artifacts` actually produced (skips if not built)."""
+
+    ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+    @pytest.fixture()
+    def manifest(self):
+        path = os.path.join(self.ART, "manifest.json")
+        if not os.path.exists(path):
+            pytest.skip("artifacts not built — run `make artifacts`")
+        with open(path) as f:
+            return json.load(f)
+
+    def test_manifest_files_exist_and_parse(self, manifest):
+        assert manifest["format"] == "hlo-text"
+        assert len(manifest["entries"]) >= 7
+        for e in manifest["entries"]:
+            p = os.path.join(self.ART, e["file"])
+            assert os.path.exists(p), e["file"]
+            head = open(p).read(200)
+            assert head.startswith("HloModule"), e["file"]
+
+    def test_manifest_shapes_match_hlo_parameters(self, manifest):
+        for e in manifest["entries"]:
+            lines = open(os.path.join(self.ART, e["file"])).read().splitlines()
+            start = next(i for i, l in enumerate(lines) if l.startswith("ENTRY"))
+            end = next(i for i in range(start, len(lines)) if lines[i] == "}")
+            got_shapes = []
+            for l in lines[start:end]:
+                if "parameter(" not in l:
+                    continue
+                m = re.search(r"f32\[([0-9,]*)\]", l)
+                if m:
+                    d = m.group(1)
+                    got_shapes.append([int(x) for x in d.split(",")] if d else [])
+            for shape in e["inputs"]:
+                assert shape in got_shapes, (e["name"], shape, got_shapes)

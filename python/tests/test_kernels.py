@@ -1,0 +1,228 @@
+"""Pallas kernels vs pure-jnp oracles — the core L1 correctness signal.
+
+Hypothesis sweeps shapes (all multiples of the block sizes, as enforced by
+the AOT shape buckets) and data distributions; fixed-seed numpy cases cover
+the exact artifact shapes used by the rust coordinator.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import facility_gain_sums, pairwise_sqdist, rbf_kernel
+from compile.kernels.ref import (
+    facility_gain_sums_ref,
+    info_gain_ref,
+    pairwise_sqdist_ref,
+    rbf_kernel_ref,
+)
+
+RNG = np.random.default_rng(1234)
+
+
+def randn(*shape, scale=1.0):
+    return jnp.asarray(RNG.normal(scale=scale, size=shape), dtype=jnp.float32)
+
+
+# ---------------------------------------------------------------- pairwise
+
+
+class TestPairwiseSqdist:
+    def test_exact_artifact_shape_d8(self):
+        x, y = randn(64, 8), randn(1024, 8)
+        np.testing.assert_allclose(
+            pairwise_sqdist(x, y), pairwise_sqdist_ref(x, y), atol=1e-4
+        )
+
+    def test_exact_artifact_shape_d32(self):
+        x, y = randn(64, 32), randn(1024, 32)
+        np.testing.assert_allclose(
+            pairwise_sqdist(x, y), pairwise_sqdist_ref(x, y), atol=1e-4
+        )
+
+    def test_identical_points_zero(self):
+        x = randn(64, 16)
+        d2 = pairwise_sqdist(x, jnp.tile(x, (4, 1))[:256])
+        # diagonal of the first block must be ~0 and never negative
+        diag = jnp.diagonal(d2[:, :64])
+        assert float(jnp.max(jnp.abs(diag))) < 1e-4
+        assert float(jnp.min(d2)) >= 0.0
+
+    def test_symmetry(self):
+        x = randn(256, 8)
+        d2 = pairwise_sqdist(x, x)
+        np.testing.assert_allclose(d2, d2.T, atol=1e-4)
+
+    def test_large_magnitude_stability(self):
+        x, y = randn(64, 8, scale=100.0), randn(256, 8, scale=100.0)
+        ref = pairwise_sqdist_ref(x, y)
+        got = pairwise_sqdist(x, y)
+        np.testing.assert_allclose(got, ref, rtol=2e-4, atol=2e-2)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        mi=st.integers(1, 3),
+        nj=st.integers(1, 4),
+        d=st.sampled_from([4, 8, 16, 32]),
+        seed=st.integers(0, 2**31 - 1),
+        scale=st.sampled_from([0.1, 1.0, 10.0]),
+    )
+    def test_hypothesis_shapes(self, mi, nj, d, seed, scale):
+        r = np.random.default_rng(seed)
+        m, n = 64 * mi, 256 * nj
+        x = jnp.asarray(r.normal(scale=scale, size=(m, d)), dtype=jnp.float32)
+        y = jnp.asarray(r.normal(scale=scale, size=(n, d)), dtype=jnp.float32)
+        ref = pairwise_sqdist_ref(x, y)
+        tol = 1e-4 * max(1.0, scale * scale)
+        np.testing.assert_allclose(pairwise_sqdist(x, y), ref, atol=tol, rtol=1e-4)
+
+
+# --------------------------------------------------------------------- rbf
+
+
+class TestRbfKernel:
+    def test_exact_artifact_shape(self):
+        x, y = randn(64, 32), randn(256, 32)
+        np.testing.assert_allclose(
+            rbf_kernel(x, y, h=0.75), rbf_kernel_ref(x, y, h=0.75), atol=1e-5
+        )
+
+    def test_self_kernel_diagonal_one(self):
+        x = randn(256, 8)
+        k = rbf_kernel(x, x)
+        np.testing.assert_allclose(jnp.diagonal(k), jnp.ones(256), atol=1e-5)
+
+    def test_range_zero_one(self):
+        x, y = randn(64, 8, scale=3.0), randn(256, 8, scale=3.0)
+        k = rbf_kernel(x, y)
+        assert float(jnp.min(k)) >= 0.0
+        assert float(jnp.max(k)) <= 1.0 + 1e-6
+
+    def test_bandwidth_monotonicity(self):
+        """Wider bandwidth => larger kernel values (off-diagonal)."""
+        x, y = randn(64, 8), randn(256, 8)
+        k_small = rbf_kernel(x, y, h=0.5)
+        k_large = rbf_kernel(x, y, h=2.0)
+        assert float(jnp.min(k_large - k_small)) >= -1e-6
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        d=st.sampled_from([4, 8, 22, 32]),
+        h=st.sampled_from([0.5, 0.75, 1.5]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_matches_ref(self, d, h, seed):
+        r = np.random.default_rng(seed)
+        x = jnp.asarray(r.normal(size=(64, d)), dtype=jnp.float32)
+        y = jnp.asarray(r.normal(size=(256, d)), dtype=jnp.float32)
+        np.testing.assert_allclose(
+            rbf_kernel(x, y, h=h), rbf_kernel_ref(x, y, h=h), atol=1e-5
+        )
+
+
+# ----------------------------------------------------------- facility gain
+
+
+class TestFacilityGain:
+    def test_exact_artifact_shape(self):
+        c, x = randn(64, 32), randn(1024, 32)
+        cm = jnp.asarray(RNG.uniform(0.5, 4.0, size=1024), dtype=jnp.float32)
+        np.testing.assert_allclose(
+            facility_gain_sums(c, x, cm),
+            facility_gain_sums_ref(c, x, cm),
+            rtol=1e-4,
+            atol=1e-2,
+        )
+
+    def test_zero_curmin_zero_gain(self):
+        """curmin == 0 (everything perfectly covered) => no gain anywhere."""
+        c, x = randn(64, 8), randn(1024, 8)
+        gains = facility_gain_sums(c, x, jnp.zeros(1024))
+        np.testing.assert_allclose(gains, jnp.zeros((64, 1)), atol=1e-6)
+
+    def test_gains_nonnegative(self):
+        c, x = randn(64, 8), randn(1024, 8)
+        cm = jnp.asarray(RNG.uniform(0, 2, size=1024), dtype=jnp.float32)
+        assert float(jnp.min(facility_gain_sums(c, x, cm))) >= 0.0
+
+    def test_gain_monotone_in_curmin(self):
+        """Raising curmin (worse current cover) can only increase gains."""
+        c, x = randn(64, 8), randn(1024, 8)
+        cm = jnp.asarray(RNG.uniform(0.5, 2, size=1024), dtype=jnp.float32)
+        g1 = facility_gain_sums(c, x, cm)
+        g2 = facility_gain_sums(c, x, cm + 1.0)
+        assert float(jnp.min(g2 - g1)) >= -1e-4
+
+    def test_self_candidate_dominates(self):
+        """A candidate equal to a data point fully recovers its curmin."""
+        x = randn(1024, 8)
+        c = jnp.tile(x[:1], (64, 1))  # candidate == data point 0
+        cm = jnp.full((1024,), 1e-3, dtype=jnp.float32)
+        gains = facility_gain_sums(c, x, cm)
+        # every candidate covers point 0 perfectly: gain >= curmin[0]
+        assert float(jnp.min(gains)) >= 1e-3 - 1e-6
+
+    def test_padding_rows_contribute_zero(self):
+        """The rust coordinator pads shards with curmin=0 rows — verify."""
+        c = randn(64, 8)
+        x_real, x_pad = randn(512, 8), jnp.zeros((512, 8))
+        cm_real = jnp.asarray(RNG.uniform(0.5, 2, size=512), dtype=jnp.float32)
+        g_full = facility_gain_sums(
+            c,
+            jnp.concatenate([x_real, x_pad]),
+            jnp.concatenate([cm_real, jnp.zeros(512)]),
+        )
+        # compare against a 512-point call (bv=256 divides both)
+        g_real = facility_gain_sums(c, x_real, cm_real)
+        np.testing.assert_allclose(g_full, g_real, rtol=1e-4, atol=1e-3)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        nblocks=st.integers(1, 4),
+        d=st.sampled_from([4, 8, 32]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_matches_ref(self, nblocks, d, seed):
+        r = np.random.default_rng(seed)
+        n = 256 * nblocks
+        c = jnp.asarray(r.normal(size=(64, d)), dtype=jnp.float32)
+        x = jnp.asarray(r.normal(size=(n, d)), dtype=jnp.float32)
+        cm = jnp.asarray(r.uniform(0, 3, size=n), dtype=jnp.float32)
+        np.testing.assert_allclose(
+            facility_gain_sums(c, x, cm),
+            facility_gain_sums_ref(c, x, cm),
+            rtol=1e-4,
+            atol=1e-2,
+        )
+
+
+# ------------------------------------------------------------ info gain ref
+
+
+class TestInfoGainRef:
+    """Sanity for the oracle the rust incremental Cholesky is checked against."""
+
+    def test_empty_like_identity(self):
+        assert float(info_gain_ref(jnp.zeros((4, 4)))) == pytest.approx(0.0)
+
+    def test_monotone_in_sigma(self):
+        x = randn(64, 8)
+        k = rbf_kernel_ref(x[:16], x[:16])
+        assert float(info_gain_ref(k, sigma=0.5)) > float(info_gain_ref(k, sigma=2.0))
+
+    def test_submodular_diminishing_returns(self):
+        """f(S+e)-f(S) >= f(T+e)-f(T) for S subset T on a random PSD kernel."""
+        x = randn(32, 8)
+        k = np.asarray(rbf_kernel_ref(x, x))
+        s_idx = [0, 1, 2]
+        t_idx = [0, 1, 2, 3, 4, 5]
+        e = 7
+
+        def f(idx):
+            sub = jnp.asarray(k[np.ix_(idx, idx)])
+            return float(info_gain_ref(sub))
+
+        gain_s = f(s_idx + [e]) - f(s_idx)
+        gain_t = f(t_idx + [e]) - f(t_idx)
+        assert gain_s >= gain_t - 1e-5

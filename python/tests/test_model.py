@@ -1,0 +1,76 @@
+"""Layer-2 model graphs: shapes, semantics, and coverage-count correctness."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels.ref import facility_gain_sums_ref, pairwise_sqdist_ref
+
+RNG = np.random.default_rng(7)
+
+
+def randn(*shape):
+    return jnp.asarray(RNG.normal(size=shape), dtype=jnp.float32)
+
+
+class TestFacilityGains:
+    def test_returns_tuple_of_flat_gains(self):
+        c, x = randn(64, 8), randn(1024, 8)
+        cm = jnp.ones(1024)
+        (gains,) = model.facility_gains(c, x, cm)
+        assert gains.shape == (64,)
+        np.testing.assert_allclose(
+            gains,
+            facility_gain_sums_ref(c, x, cm)[:, 0],
+            rtol=1e-4,
+            atol=1e-2,
+        )
+
+    def test_normalization_contract(self):
+        """Model returns sums; mean = sums / n is what the paper's f uses."""
+        c, x = randn(64, 8), randn(1024, 8)
+        cm = jnp.full((1024,), 2.0)
+        (gains,) = model.facility_gains(c, x, cm)
+        per_point_mean = gains / 1024.0
+        assert float(jnp.max(per_point_mean)) <= 2.0 + 1e-5
+
+
+class TestSqdistRows:
+    def test_shape_and_values(self):
+        c, x = randn(64, 32), randn(1024, 32)
+        (d2,) = model.sqdist_rows(c, x)
+        assert d2.shape == (64, 1024)
+        np.testing.assert_allclose(d2, pairwise_sqdist_ref(c, x), atol=1e-3)
+
+
+class TestRbfBlock:
+    def test_default_bandwidth_is_paper_value(self):
+        x, y = randn(64, 8), randn(256, 8)
+        (k,) = model.rbf_block(x, y)
+        expect = jnp.exp(-pairwise_sqdist_ref(x, y) / (0.75 * 0.75))
+        np.testing.assert_allclose(k, expect, atol=1e-5)
+
+
+class TestCoverageCounts:
+    def test_counts_newly_covered(self):
+        membership = jnp.zeros((64, 2048)).at[0, :100].set(1.0)
+        covered = jnp.zeros(2048).at[:50].set(1.0)
+        (counts,) = model.coverage_counts(membership, covered)
+        assert float(counts[0]) == 50.0  # covers 100, 50 already covered
+        assert float(counts[1]) == 0.0
+
+    def test_fully_covered_universe(self):
+        membership = jnp.ones((64, 2048))
+        (counts,) = model.coverage_counts(membership, jnp.ones(2048))
+        np.testing.assert_allclose(counts, jnp.zeros(64))
+
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), density=st.floats(0.01, 0.5))
+    def test_hypothesis_matches_set_semantics(self, seed, density):
+        r = np.random.default_rng(seed)
+        mem = (r.random((64, 2048)) < density).astype(np.float32)
+        cov = (r.random(2048) < density).astype(np.float32)
+        (counts,) = model.coverage_counts(jnp.asarray(mem), jnp.asarray(cov))
+        expect = (mem.astype(bool) & ~cov.astype(bool)).sum(axis=1)
+        np.testing.assert_allclose(counts, expect.astype(np.float32), atol=1e-3)

@@ -1,0 +1,47 @@
+//! `cargo bench` target: regenerates every paper table/figure at bench
+//! scale and times the end-to-end protocol runs (criterion is not in the
+//! offline dependency closure — `util::bench` provides the harness).
+//!
+//! Set `GREEDI_BENCH_FAST=1` for a CI-speed pass, `GREEDI_BENCH_FULL=1` to
+//! lift sizes toward paper scale.
+
+use greedi::experiments::{self, ExpOpts};
+use greedi::util::bench::Bencher;
+
+fn main() {
+    let full = std::env::var("GREEDI_BENCH_FULL").ok().as_deref() == Some("1");
+    let fast = std::env::var("GREEDI_BENCH_FAST").ok().as_deref() == Some("1");
+    let opts = ExpOpts {
+        n: if fast { Some(300) } else { None },
+        trials: if fast { 1 } else { 2 },
+        full,
+        ..Default::default()
+    };
+    let mut b = Bencher::new(0, 1); // figure harnesses are end-to-end: 1 iter
+
+    println!("== figure regeneration benchmarks (n overrides: fast={fast}, full={full}) ==\n");
+
+    let mut reports = Vec::new();
+    macro_rules! fig {
+        ($name:literal, $module:ident) => {
+            let mut out = None;
+            b.bench($name, || {
+                out = Some(experiments::$module::run(&opts));
+            });
+            reports.push(out.unwrap());
+        };
+    }
+    fig!("fig4: exemplar clustering sweeps", fig4);
+    fig!("fig5: large-scale local clustering", fig5);
+    fig!("fig6: GP active set (parkinsons)", fig6);
+    fig!("fig7: GP active set (yahoo)", fig7);
+    fig!("fig8: speedup vs m", fig8);
+    fig!("fig9: max-cut (non-monotone)", fig9);
+    fig!("fig10: coverage vs GreedyScaling", fig10);
+    fig!("theory: Thm 3/4 + Table 1 checks", theory);
+
+    println!("\n== figure outputs ==\n");
+    for r in &reports {
+        r.print();
+    }
+}

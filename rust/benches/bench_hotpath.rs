@@ -1,0 +1,153 @@
+//! `cargo bench` target: micro/meso benchmarks of the hot paths that the
+//! §Perf optimization pass iterates on (see EXPERIMENTS.md §Perf):
+//!
+//!   1. facility-location marginal gains — scalar loop vs cached-curmin
+//!      state vs the XLA batched artifact;
+//!   2. plain vs lazy vs stochastic greedy oracle-call economics;
+//!   3. incremental Cholesky vs dense log-det for info-gain;
+//!   4. the two-round protocol end-to-end.
+
+use std::sync::Arc;
+
+use greedi::algorithms::{greedy::Greedy, lazy::LazyGreedy, stochastic::StochasticGreedy, Maximizer};
+use greedi::constraints::cardinality::Cardinality;
+use greedi::coordinator::greedi::{centralized, Greedi, GreediConfig};
+use greedi::coordinator::FacilityProblem;
+use greedi::data::synth::{gaussian_blobs, parkinsons_like, SynthConfig};
+use greedi::linalg::{IncrementalCholesky, Matrix};
+use greedi::objective::facility::FacilityLocation;
+use greedi::objective::infogain::InfoGain;
+use greedi::objective::SubmodularFn;
+use greedi::util::bench::{black_box, Bencher};
+use greedi::util::rng::Rng;
+
+fn main() {
+    let fast = std::env::var("GREEDI_BENCH_FAST").ok().as_deref() == Some("1");
+    let (n, k) = if fast { (800, 10) } else { (4_000, 32) };
+    let mut b = Bencher::new(1, if fast { 2 } else { 5 });
+
+    println!("== hot-path benchmarks (n={n}, k={k}) ==\n");
+
+    // ---- 1. facility gains ------------------------------------------------
+    let ds = Arc::new(gaussian_blobs(&SynthConfig::tiny_images(n, 16), 1));
+    let fac = FacilityLocation::from_dataset(&ds);
+    let cands: Vec<usize> = (0..64).collect();
+    {
+        let mut st = fac.state();
+        st.push(100);
+        b.bench("facility: 64 gains, cached-curmin state", || {
+            black_box(st.batch_gains(&cands))
+        });
+    }
+    b.bench("facility: 64 gains, naive eval() diffs", || {
+        let base = fac.eval(&[100]);
+        let mut out = Vec::with_capacity(64);
+        for &c in &cands {
+            out.push(fac.eval(&[100, c]) - base);
+        }
+        black_box(out)
+    });
+    if let Ok(engine) = greedi::runtime::Engine::load_default() {
+        let engine = Arc::new(engine);
+        let backend =
+            greedi::runtime::XlaFacilityBackend::new(&engine, &ds, &ds.ids()).unwrap();
+        let fac_xla = FacilityLocation::from_dataset(&ds).with_backend(Arc::new(backend));
+        let mut st = fac_xla.state();
+        st.push(100);
+        b.bench("facility: 64 gains, XLA artifact backend", || {
+            black_box(st.batch_gains(&cands))
+        });
+    } else {
+        println!("(XLA backend bench skipped — run `make artifacts`)");
+    }
+
+    // ---- 2. greedy economics ----------------------------------------------
+    let ground = ds.ids();
+    let con = Cardinality::new(k);
+    let mut rng = Rng::new(2);
+    let plain = b.bench("greedy: plain", || {
+        black_box(Greedy.maximize(&fac, &ground, &con, &mut rng).oracle_calls)
+    });
+    let _ = plain;
+    b.bench("greedy: lazy (Minoux)", || {
+        black_box(LazyGreedy.maximize(&fac, &ground, &con, &mut rng).oracle_calls)
+    });
+    b.bench("greedy: stochastic (ε=0.1)", || {
+        black_box(
+            StochasticGreedy::default()
+                .maximize(&fac, &ground, &con, &mut rng)
+                .oracle_calls,
+        )
+    });
+    {
+        let mut r = Rng::new(3);
+        let pc = Greedy.maximize(&fac, &ground, &con, &mut r).oracle_calls;
+        let lc = LazyGreedy.maximize(&fac, &ground, &con, &mut r).oracle_calls;
+        let sc = StochasticGreedy::default()
+            .maximize(&fac, &ground, &con, &mut r)
+            .oracle_calls;
+        println!("  oracle calls: plain={pc} lazy={lc} stochastic={sc}");
+    }
+
+    // ---- 3. info-gain: incremental Cholesky vs dense logdet ----------------
+    let pk = Arc::new(parkinsons_like(if fast { 400 } else { 1_500 }, 22, 4));
+    let ig = InfoGain::paper_params(&pk);
+    let sel: Vec<usize> = (0..k).collect();
+    b.bench("infogain: incremental Cholesky eval", || {
+        black_box(ig.eval(&sel))
+    });
+    b.bench("infogain: dense logdet eval", || {
+        let kk = sel.len();
+        let mut m = Matrix::identity(kk);
+        for i in 0..kk {
+            for j in 0..kk {
+                m[(i, j)] += ig.scaled_kernel(sel[i], sel[j]);
+            }
+        }
+        black_box(m.logdet().unwrap())
+    });
+    b.bench("cholesky: 64 incremental pushes", || {
+        let mut inc = IncrementalCholesky::new();
+        for i in 0..64usize {
+            let a_se: Vec<f64> = (0..i).map(|j| 0.1 / (1.0 + (i + j) as f64)).collect();
+            inc.push(2.0, &a_se);
+        }
+        black_box(inc.logdet())
+    });
+
+    // ---- 4. protocol end-to-end --------------------------------------------
+    let problem = FacilityProblem::new(&ds);
+    b.bench("protocol: centralized lazy greedy", || {
+        black_box(centralized(&problem, k, "lazy", 1).value)
+    });
+    b.bench("protocol: greedi 2-round (m=8)", || {
+        black_box(Greedi::new(GreediConfig::new(8, k)).run(&problem, 1).value)
+    });
+    b.bench("protocol: greedi local mode (m=8)", || {
+        black_box(
+            Greedi::new(GreediConfig::new(8, k).local())
+                .run(&problem, 1)
+                .value,
+        )
+    });
+
+    println!("\n== summary ==");
+    if let Some(s) = b.speedup(
+        "facility: 64 gains, naive eval() diffs",
+        "facility: 64 gains, cached-curmin state",
+    ) {
+        println!("cached-curmin speedup over naive eval: {s:.1}x");
+    }
+    if let Some(s) = b.speedup(
+        "infogain: dense logdet eval",
+        "infogain: incremental Cholesky eval",
+    ) {
+        println!("incremental Cholesky speedup over dense: {s:.1}x");
+    }
+    if let Some(s) = b.speedup(
+        "protocol: centralized lazy greedy",
+        "protocol: greedi 2-round (m=8)",
+    ) {
+        println!("greedi wallclock speedup vs centralized (1 core, real time): {s:.2}x");
+    }
+}

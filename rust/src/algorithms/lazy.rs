@@ -1,0 +1,180 @@
+//! Lazy greedy (Minoux 1978) — the accelerated greedy the paper actually
+//! runs inside each Hadoop reducer (§6.1: "performed the lazy greedy
+//! algorithm on its own set of 10,000 images").
+//!
+//! Submodularity makes cached marginal gains upper bounds after the
+//! solution grows; a max-heap of stale bounds re-evaluates only the top
+//! candidate until one is *fresh*, typically cutting oracle calls from
+//! O(n·k) to roughly O(n + k·log n) on benign data. Exact same output as
+//! plain greedy (up to ties).
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use super::{Maximizer, RunResult};
+use crate::constraints::Constraint;
+use crate::objective::SubmodularFn;
+use crate::util::rng::Rng;
+
+/// Heap entry: cached upper bound for an element, stamped with the solution
+/// size at which it was computed.
+struct Entry {
+    bound: f64,
+    element: usize,
+    stamp: usize,
+}
+
+impl PartialEq for Entry {
+    fn eq(&self, other: &Self) -> bool {
+        self.bound == other.bound && self.element == other.element
+    }
+}
+impl Eq for Entry {}
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Entry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // max-heap by bound; ties broken by element id for determinism
+        self.bound
+            .partial_cmp(&other.bound)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| other.element.cmp(&self.element))
+    }
+}
+
+/// Lazy (accelerated) greedy.
+pub struct LazyGreedy;
+
+impl Maximizer for LazyGreedy {
+    fn maximize(
+        &self,
+        f: &dyn SubmodularFn,
+        ground: &[usize],
+        constraint: &dyn Constraint,
+        rng: &mut Rng,
+    ) -> RunResult {
+        let _ = rng;
+        let mut state = f.state();
+        let mut oracle_calls = 0u64;
+
+        // Initial pass: gains w.r.t. the empty set.
+        let gains = state.batch_gains(ground);
+        oracle_calls += ground.len() as u64;
+        let mut heap: BinaryHeap<Entry> = ground
+            .iter()
+            .zip(gains)
+            .map(|(&e, g)| Entry { bound: g, element: e, stamp: 0 })
+            .collect();
+
+        let mut round = 0usize;
+        while let Some(top) = heap.pop() {
+            if !constraint.can_add(state.selected(), top.element) {
+                // infeasible *now*; it can become feasible again only for
+                // non-cardinality systems after... never (hereditary +
+                // growing prefix => once blocked, always blocked).
+                continue;
+            }
+            if top.stamp == round {
+                // Fresh bound — it is the true current gain and it beats
+                // every other upper bound: commit.
+                if top.bound <= 0.0 && f.is_monotone() {
+                    break;
+                }
+                if top.bound < 0.0 {
+                    break;
+                }
+                state.push(top.element);
+                round += 1;
+                continue;
+            }
+            // Stale: re-price and re-insert.
+            let g = state.gain(top.element);
+            oracle_calls += 1;
+            heap.push(Entry { bound: g, element: top.element, stamp: round });
+        }
+
+        RunResult {
+            value: state.value(),
+            solution: state.selected().to_vec(),
+            oracle_calls,
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "lazy"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::greedy::Greedy;
+    use crate::constraints::cardinality::Cardinality;
+    use crate::data::synth::{gaussian_blobs, SynthConfig};
+    use crate::data::transactions::zipf_transactions;
+    use crate::objective::coverage::Coverage;
+    use crate::objective::facility::FacilityLocation;
+    use crate::objective::modular::Modular;
+    use std::sync::Arc;
+
+    #[test]
+    fn matches_plain_greedy_on_coverage() {
+        let td = Arc::new(zipf_transactions(60, 80, 7, 1.1, 3));
+        let f = Coverage::new(&td);
+        let ground: Vec<usize> = (0..60).collect();
+        let c = Cardinality::new(8);
+        let mut rng = Rng::new(0);
+        let a = Greedy.maximize(&f, &ground, &c, &mut rng);
+        let b = LazyGreedy.maximize(&f, &ground, &c, &mut rng);
+        assert!((a.value - b.value).abs() < 1e-9, "{} vs {}", a.value, b.value);
+    }
+
+    #[test]
+    fn matches_plain_greedy_on_facility() {
+        let ds = Arc::new(gaussian_blobs(&SynthConfig::tiny_images(80, 8), 21));
+        let f = FacilityLocation::from_dataset(&ds);
+        let ground: Vec<usize> = (0..80).collect();
+        let c = Cardinality::new(6);
+        let mut rng = Rng::new(0);
+        let a = Greedy.maximize(&f, &ground, &c, &mut rng);
+        let b = LazyGreedy.maximize(&f, &ground, &c, &mut rng);
+        assert!((a.value - b.value).abs() < 1e-6, "{} vs {}", a.value, b.value);
+    }
+
+    #[test]
+    fn fewer_oracle_calls_than_plain() {
+        let ds = Arc::new(gaussian_blobs(&SynthConfig::tiny_images(150, 8), 22));
+        let f = FacilityLocation::from_dataset(&ds);
+        let ground: Vec<usize> = (0..150).collect();
+        let c = Cardinality::new(10);
+        let mut rng = Rng::new(0);
+        let a = Greedy.maximize(&f, &ground, &c, &mut rng);
+        let b = LazyGreedy.maximize(&f, &ground, &c, &mut rng);
+        assert!(
+            b.oracle_calls < a.oracle_calls / 2,
+            "lazy {} vs plain {}",
+            b.oracle_calls,
+            a.oracle_calls
+        );
+    }
+
+    #[test]
+    fn respects_budget() {
+        let f = Modular::new(vec![1.0; 20]);
+        let mut rng = Rng::new(0);
+        let r = LazyGreedy.maximize(&f, &(0..20).collect::<Vec<_>>(), &Cardinality::new(4), &mut rng);
+        assert_eq!(r.solution.len(), 4);
+    }
+
+    #[test]
+    fn empty_ground() {
+        let f = Modular::new(vec![1.0]);
+        let mut rng = Rng::new(0);
+        let r = LazyGreedy.maximize(&f, &[], &Cardinality::new(3), &mut rng);
+        assert!(r.solution.is_empty());
+        assert_eq!(r.value, 0.0);
+    }
+}

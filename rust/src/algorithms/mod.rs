@@ -1,0 +1,74 @@
+//! Single-machine maximization algorithms — the "black box X" of the
+//! paper's Algorithm 3, and the standard greedy used by Algorithm 2.
+//!
+//! All algorithms operate on an arbitrary [`SubmodularFn`] through its
+//! incremental [`State`](crate::objective::State), restricted to an explicit
+//! ground slice (a machine's shard), under an arbitrary hereditary
+//! [`Constraint`]. They report oracle-call counts, which drive the paper's
+//! speedup analysis (Fig. 8).
+
+pub mod cost_benefit;
+pub mod greedy;
+pub mod lazy;
+pub mod local_search;
+pub mod random_greedy;
+pub mod sieve_streaming;
+pub mod stochastic;
+
+use crate::constraints::Constraint;
+use crate::objective::SubmodularFn;
+use crate::util::rng::Rng;
+
+/// Outcome of a single-machine maximization run.
+#[derive(Debug, Clone, Default)]
+pub struct RunResult {
+    /// Selected elements in selection order.
+    pub solution: Vec<usize>,
+    /// f(solution) as tracked incrementally.
+    pub value: f64,
+    /// Number of marginal-gain oracle evaluations issued.
+    pub oracle_calls: u64,
+}
+
+/// A submodular maximization algorithm (the paper's black box `X`).
+pub trait Maximizer: Sync {
+    /// Maximize `f` over `ground` subject to `constraint`.
+    fn maximize(
+        &self,
+        f: &dyn SubmodularFn,
+        ground: &[usize],
+        constraint: &dyn Constraint,
+        rng: &mut Rng,
+    ) -> RunResult;
+
+    /// Short identifier for reports.
+    fn name(&self) -> &'static str;
+}
+
+/// Resolve an algorithm by name (config files / CLI).
+pub fn by_name(name: &str) -> Option<Box<dyn Maximizer + Send>> {
+    match name {
+        "greedy" => Some(Box::new(greedy::Greedy)),
+        "lazy" => Some(Box::new(lazy::LazyGreedy)),
+        "stochastic" => Some(Box::new(stochastic::StochasticGreedy::default())),
+        "random_greedy" => Some(Box::new(random_greedy::RandomGreedy)),
+        "cost_benefit" => Some(Box::new(cost_benefit::CostBenefitGreedy::plain())),
+        "sieve_streaming" => Some(Box::new(sieve_streaming::SieveStreaming::default())),
+        "local_search" => Some(Box::new(local_search::LocalSearch::default())),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn by_name_resolves_known() {
+        for n in ["greedy", "lazy", "stochastic", "random_greedy", "local_search", "sieve_streaming"] {
+            assert!(by_name(n).is_some(), "{n}");
+            assert_eq!(by_name(n).unwrap().name(), n);
+        }
+        assert!(by_name("nope").is_none());
+    }
+}

@@ -1,0 +1,220 @@
+//! Typed experiment configuration, loadable from `configs/*.toml` presets
+//! (via the `util::toml` subset parser) and overridable from the CLI.
+
+use std::path::Path;
+
+pub use crate::coordinator::greedi::{GreediConfig, PartitionStrategy};
+use crate::util::toml;
+
+/// Which scenario an experiment run drives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Workload {
+    /// Exemplar clustering on tiny-image-like vectors (§6.1).
+    TinyImages,
+    /// GP active-set selection on Parkinsons-like vectors (§6.2).
+    Parkinsons,
+    /// GP active-set selection on Yahoo-like 6-d features (§6.2 large).
+    Yahoo,
+    /// Max-cut on a social graph (§6.3).
+    SocialCut,
+    /// Coverage on Accidents-like transactions (§6.4).
+    Accidents,
+    /// Coverage on Kosarak-like transactions (§6.4).
+    Kosarak,
+}
+
+impl Workload {
+    pub fn parse(s: &str) -> Option<Workload> {
+        Some(match s {
+            "tiny_images" => Workload::TinyImages,
+            "parkinsons" => Workload::Parkinsons,
+            "yahoo" => Workload::Yahoo,
+            "social_cut" => Workload::SocialCut,
+            "accidents" => Workload::Accidents,
+            "kosarak" => Workload::Kosarak,
+            _ => return None,
+        })
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Workload::TinyImages => "tiny_images",
+            Workload::Parkinsons => "parkinsons",
+            Workload::Yahoo => "yahoo",
+            Workload::SocialCut => "social_cut",
+            Workload::Accidents => "accidents",
+            Workload::Kosarak => "kosarak",
+        }
+    }
+}
+
+/// Full experiment description (what one `greedi <figN>` invocation runs).
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    pub name: String,
+    pub workload: Workload,
+    /// Ground set size (scaled-down stand-in for the paper's corpus).
+    pub n: usize,
+    /// Feature dimension (point workloads).
+    pub d: usize,
+    /// Budgets to sweep.
+    pub ks: Vec<usize>,
+    /// Machine counts to sweep.
+    pub ms: Vec<usize>,
+    /// κ/k over-selection factors to sweep (GreeDi curves per α).
+    pub alphas: Vec<f64>,
+    /// Local (decomposable) evaluation mode.
+    pub local_eval: bool,
+    /// Per-machine algorithm.
+    pub algorithm: String,
+    /// Repetitions (figures show mean ± std).
+    pub trials: usize,
+    pub seed: u64,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            name: "custom".into(),
+            workload: Workload::TinyImages,
+            n: 1000,
+            d: 8,
+            ks: vec![50],
+            ms: vec![5],
+            alphas: vec![1.0],
+            local_eval: false,
+            algorithm: "lazy".into(),
+            trials: 3,
+            seed: 42,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Load from a TOML-subset file; unknown keys are rejected so presets
+    /// cannot silently drift from the schema.
+    pub fn from_file(path: &Path) -> Result<Self, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path:?}: {e}"))?;
+        Self::from_toml(&text).map_err(|e| format!("{path:?}: {e}"))
+    }
+
+    pub fn from_toml(text: &str) -> Result<Self, String> {
+        let doc = toml::parse(text).map_err(|e| e.to_string())?;
+        let mut cfg = ExperimentConfig::default();
+        for (key, value) in &doc.entries {
+            match key.as_str() {
+                "name" => cfg.name = value.as_str().ok_or("name: string")?.into(),
+                "workload" => {
+                    let s = value.as_str().ok_or("workload: string")?;
+                    cfg.workload =
+                        Workload::parse(s).ok_or_else(|| format!("unknown workload {s}"))?;
+                }
+                "n" => cfg.n = value.as_usize().ok_or("n: int")?,
+                "d" => cfg.d = value.as_usize().ok_or("d: int")?,
+                "ks" => cfg.ks = value.as_usize_array().ok_or("ks: [int]")?,
+                "ms" => cfg.ms = value.as_usize_array().ok_or("ms: [int]")?,
+                "alphas" => {
+                    cfg.alphas = match value {
+                        toml::Value::Array(xs) => xs
+                            .iter()
+                            .map(|v| v.as_f64().ok_or("alphas: [float]"))
+                            .collect::<Result<_, _>>()?,
+                        _ => return Err("alphas: [float]".into()),
+                    }
+                }
+                "local_eval" => cfg.local_eval = value.as_bool().ok_or("local_eval: bool")?,
+                "algorithm" => cfg.algorithm = value.as_str().ok_or("algorithm: string")?.into(),
+                "trials" => cfg.trials = value.as_usize().ok_or("trials: int")?,
+                "seed" => cfg.seed = value.as_i64().ok_or("seed: int")? as u64,
+                other => return Err(format!("unknown config key {other:?}")),
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.n == 0 {
+            return Err("n must be > 0".into());
+        }
+        if self.ks.is_empty() || self.ms.is_empty() {
+            return Err("ks and ms must be non-empty".into());
+        }
+        if self.ks.iter().any(|&k| k == 0) {
+            return Err("all ks must be > 0".into());
+        }
+        if self.ms.iter().any(|&m| m == 0) {
+            return Err("all ms must be > 0".into());
+        }
+        if crate::algorithms::by_name(&self.algorithm).is_none() {
+            return Err(format!("unknown algorithm {:?}", self.algorithm));
+        }
+        if self.trials == 0 {
+            return Err("trials must be > 0".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full_config() {
+        let cfg = ExperimentConfig::from_toml(
+            r#"
+            name = "fig4a"
+            workload = "tiny_images"
+            n = 10000
+            d = 32
+            ks = [50]
+            ms = [2, 4, 6, 8, 10]
+            alphas = [0.5, 1.0, 2.0]
+            local_eval = false
+            algorithm = "lazy"
+            trials = 5
+            seed = 42
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.name, "fig4a");
+        assert_eq!(cfg.workload, Workload::TinyImages);
+        assert_eq!(cfg.ms, vec![2, 4, 6, 8, 10]);
+        assert_eq!(cfg.alphas, vec![0.5, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        assert!(ExperimentConfig::from_toml("bogus = 1").is_err());
+    }
+
+    #[test]
+    fn unknown_workload_rejected() {
+        assert!(ExperimentConfig::from_toml(r#"workload = "marsrover""#).is_err());
+    }
+
+    #[test]
+    fn zero_k_rejected() {
+        assert!(ExperimentConfig::from_toml("ks = [0]").is_err());
+    }
+
+    #[test]
+    fn bad_algorithm_rejected() {
+        assert!(ExperimentConfig::from_toml(r#"algorithm = "quantum""#).is_err());
+    }
+
+    #[test]
+    fn workload_roundtrip() {
+        for w in [
+            Workload::TinyImages,
+            Workload::Parkinsons,
+            Workload::Yahoo,
+            Workload::SocialCut,
+            Workload::Accidents,
+            Workload::Kosarak,
+        ] {
+            assert_eq!(Workload::parse(w.label()), Some(w));
+        }
+    }
+}

@@ -1,0 +1,47 @@
+//! Cardinality constraint `|S| ≤ k` — the paper's primary setting
+//! (Sections 3–4) and the uniform matroid's independence system.
+
+use super::Constraint;
+
+/// `|S| ≤ k`.
+#[derive(Debug, Clone, Copy)]
+pub struct Cardinality {
+    pub k: usize,
+}
+
+impl Cardinality {
+    pub fn new(k: usize) -> Self {
+        Cardinality { k }
+    }
+}
+
+impl Constraint for Cardinality {
+    fn can_add(&self, current: &[usize], _e: usize) -> bool {
+        current.len() < self.k
+    }
+
+    fn rho(&self) -> usize {
+        self.k
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic() {
+        let c = Cardinality::new(3);
+        assert!(c.can_add(&[], 0));
+        assert!(c.can_add(&[1, 2], 0));
+        assert!(!c.can_add(&[1, 2, 3], 0));
+        assert_eq!(c.rho(), 3);
+    }
+
+    #[test]
+    fn zero_budget() {
+        let c = Cardinality::new(0);
+        assert!(!c.can_add(&[], 0));
+        assert!(c.is_feasible(&[]));
+    }
+}

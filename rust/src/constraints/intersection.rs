@@ -1,0 +1,74 @@
+//! Generic intersection of heterogeneous hereditary constraints — e.g. the
+//! paper's "p-system + d knapsacks" setting (§5.2, Badanidiyuru & Vondrák
+//! 2014): feasible iff feasible in every component system.
+
+use super::Constraint;
+
+/// Intersection of arbitrary hereditary constraints (boxed, heterogeneous).
+pub struct Intersection {
+    pub parts: Vec<Box<dyn Constraint + Send>>,
+}
+
+impl Intersection {
+    pub fn new(parts: Vec<Box<dyn Constraint + Send>>) -> Self {
+        assert!(!parts.is_empty());
+        Intersection { parts }
+    }
+}
+
+impl Constraint for Intersection {
+    fn can_add(&self, current: &[usize], e: usize) -> bool {
+        self.parts.iter().all(|c| c.can_add(current, e))
+    }
+
+    fn rho(&self) -> usize {
+        self.parts.iter().map(|c| c.rho()).min().unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::constraints::cardinality::Cardinality;
+    use crate::constraints::knapsack::Knapsack;
+    use crate::constraints::matroid::PartitionMatroid;
+
+    fn psystem_plus_knapsack() -> Intersection {
+        Intersection::new(vec![
+            Box::new(PartitionMatroid::new(vec![0, 0, 1, 1], vec![1, 2])),
+            Box::new(Knapsack::new(vec![1.0, 3.0, 1.0, 1.0], 2.0)),
+        ])
+    }
+
+    #[test]
+    fn all_parts_must_allow() {
+        let ix = psystem_plus_knapsack();
+        assert!(ix.can_add(&[], 0)); // both OK
+        assert!(!ix.can_add(&[], 1)); // knapsack blocks (3 > 2)
+        assert!(!ix.can_add(&[0], 1)); // matroid also blocks cat-0 repeat
+        assert!(ix.can_add(&[0], 2)); // 1+1 <= 2, different category
+    }
+
+    #[test]
+    fn rho_is_min_over_parts() {
+        let ix = Intersection::new(vec![
+            Box::new(Cardinality::new(5)),
+            Box::new(Cardinality::new(3)),
+        ]);
+        assert_eq!(ix.rho(), 3);
+    }
+
+    #[test]
+    fn heredity_preserved() {
+        let ix = psystem_plus_knapsack();
+        assert!(ix.is_feasible(&[0, 2]));
+        assert!(ix.is_feasible(&[0]));
+        assert!(ix.is_feasible(&[2]));
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_intersection_rejected() {
+        Intersection::new(vec![]);
+    }
+}

@@ -1,0 +1,148 @@
+//! Knapsack constraints (paper §5.2): single budget `Σ c(e) ≤ R` and the
+//! d-dimensional generalization (multiple knapsacks).
+
+use super::Constraint;
+
+/// Single knapsack: `Σ_{e∈S} cost[e] ≤ budget`.
+#[derive(Debug, Clone)]
+pub struct Knapsack {
+    pub cost: Vec<f64>,
+    pub budget: f64,
+}
+
+impl Knapsack {
+    pub fn new(cost: Vec<f64>, budget: f64) -> Self {
+        assert!(cost.iter().all(|&c| c > 0.0), "positive costs required");
+        assert!(budget >= 0.0);
+        Knapsack { cost, budget }
+    }
+
+    pub fn used(&self, s: &[usize]) -> f64 {
+        s.iter().map(|&e| self.cost[e]).sum()
+    }
+}
+
+impl Constraint for Knapsack {
+    fn can_add(&self, current: &[usize], e: usize) -> bool {
+        self.used(current) + self.cost[e] <= self.budget + 1e-12
+    }
+
+    fn rho(&self) -> usize {
+        // ⌈R / min cost⌉ (paper, discussion under Thm 12)
+        let min_cost = self
+            .cost
+            .iter()
+            .cloned()
+            .fold(f64::INFINITY, f64::min)
+            .max(1e-12);
+        (self.budget / min_cost).ceil() as usize
+    }
+}
+
+/// d-dimensional knapsack: cost vectors, elementwise budget.
+#[derive(Debug, Clone)]
+pub struct MultiKnapsack {
+    /// cost[e] is a d-vector.
+    pub cost: Vec<Vec<f64>>,
+    pub budget: Vec<f64>,
+}
+
+impl MultiKnapsack {
+    pub fn new(cost: Vec<Vec<f64>>, budget: Vec<f64>) -> Self {
+        let d = budget.len();
+        assert!(cost.iter().all(|c| c.len() == d), "cost dim mismatch");
+        assert!(cost.iter().flatten().all(|&c| c >= 0.0));
+        MultiKnapsack { cost, budget }
+    }
+
+    fn used(&self, s: &[usize]) -> Vec<f64> {
+        let d = self.budget.len();
+        let mut u = vec![0.0; d];
+        for &e in s {
+            for t in 0..d {
+                u[t] += self.cost[e][t];
+            }
+        }
+        u
+    }
+}
+
+impl Constraint for MultiKnapsack {
+    fn can_add(&self, current: &[usize], e: usize) -> bool {
+        let u = self.used(current);
+        (0..self.budget.len()).all(|t| u[t] + self.cost[e][t] <= self.budget[t] + 1e-12)
+    }
+
+    fn rho(&self) -> usize {
+        // loosest single-dimension bound
+        (0..self.budget.len())
+            .map(|t| {
+                let min_c = self
+                    .cost
+                    .iter()
+                    .map(|c| c[t])
+                    .filter(|&c| c > 0.0)
+                    .fold(f64::INFINITY, f64::min);
+                if min_c.is_finite() {
+                    (self.budget[t] / min_c).ceil() as usize
+                } else {
+                    self.cost.len()
+                }
+            })
+            .min()
+            .unwrap_or(self.cost.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn knapsack_budget_respected() {
+        let k = Knapsack::new(vec![1.0, 2.0, 3.0], 4.0);
+        assert!(k.can_add(&[], 2)); // 3 <= 4
+        assert!(k.can_add(&[0], 1)); // 1+2 <= 4
+        assert!(!k.can_add(&[0, 1], 2)); // 1+2+3 > 4
+        assert!(k.is_feasible(&[0, 2])); // 4 <= 4 exactly
+    }
+
+    #[test]
+    fn knapsack_rho() {
+        let k = Knapsack::new(vec![0.5, 2.0], 3.0);
+        assert_eq!(k.rho(), 6); // 3 / 0.5
+    }
+
+    #[test]
+    fn heredity() {
+        let k = Knapsack::new(vec![2.0, 2.0, 2.0], 4.0);
+        assert!(k.is_feasible(&[0, 1]));
+        assert!(k.is_feasible(&[0]));
+        assert!(k.is_feasible(&[1]));
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_cost_rejected() {
+        Knapsack::new(vec![0.0], 1.0);
+    }
+
+    #[test]
+    fn multi_knapsack_all_dims_must_fit() {
+        let mk = MultiKnapsack::new(
+            vec![vec![1.0, 0.0], vec![0.0, 1.0], vec![1.0, 1.0]],
+            vec![1.0, 1.0],
+        );
+        assert!(mk.can_add(&[], 2));
+        assert!(mk.can_add(&[0], 1)); // dims (1,0)+(0,1) = (1,1) OK
+        assert!(!mk.can_add(&[0], 2)); // dim 0 would hit 2 > 1
+        assert!(mk.is_feasible(&[0, 1]));
+        assert!(!mk.is_feasible(&[0, 1, 2]));
+    }
+
+    #[test]
+    fn multi_knapsack_rho() {
+        let mk = MultiKnapsack::new(vec![vec![1.0], vec![1.0]], vec![2.0]);
+        assert_eq!(mk.rho(), 2);
+    }
+}

@@ -1,0 +1,127 @@
+//! Matroid constraints (paper §5.1): uniform and partition matroids.
+//!
+//! A partition matroid splits the ground set into categories with per-
+//! category capacities — the paper's motivating examples are content
+//! aggregation and advertising with per-topic budgets.
+
+use super::Constraint;
+
+/// Uniform matroid — identical to a cardinality constraint but kept as its
+/// own type so experiments can name the matroid semantics explicitly.
+#[derive(Debug, Clone, Copy)]
+pub struct UniformMatroid {
+    pub rank: usize,
+}
+
+impl UniformMatroid {
+    pub fn new(rank: usize) -> Self {
+        UniformMatroid { rank }
+    }
+}
+
+impl Constraint for UniformMatroid {
+    fn can_add(&self, current: &[usize], _e: usize) -> bool {
+        current.len() < self.rank
+    }
+
+    fn rho(&self) -> usize {
+        self.rank
+    }
+}
+
+/// Partition matroid: element `e` belongs to category `category[e]`;
+/// at most `capacity[c]` elements per category.
+#[derive(Debug, Clone)]
+pub struct PartitionMatroid {
+    pub category: Vec<usize>,
+    pub capacity: Vec<usize>,
+}
+
+impl PartitionMatroid {
+    pub fn new(category: Vec<usize>, capacity: Vec<usize>) -> Self {
+        assert!(
+            category.iter().all(|&c| c < capacity.len()),
+            "category id out of range"
+        );
+        PartitionMatroid { category, capacity }
+    }
+
+    /// Uniform capacities across `ncat` categories.
+    pub fn uniform(category: Vec<usize>, ncat: usize, per_cat: usize) -> Self {
+        Self::new(category, vec![per_cat; ncat])
+    }
+}
+
+impl Constraint for PartitionMatroid {
+    fn can_add(&self, current: &[usize], e: usize) -> bool {
+        let cat = self.category[e];
+        let used = current.iter().filter(|&&x| self.category[x] == cat).count();
+        used < self.capacity[cat]
+    }
+
+    fn rho(&self) -> usize {
+        self.capacity.iter().sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_matroid_is_cardinality() {
+        let m = UniformMatroid::new(2);
+        assert!(m.can_add(&[5], 9));
+        assert!(!m.can_add(&[5, 6], 9));
+        assert_eq!(m.rho(), 2);
+    }
+
+    #[test]
+    fn partition_respects_per_category_caps() {
+        // elements 0,1,2 in cat 0; 3,4 in cat 1; caps [2, 1]
+        let m = PartitionMatroid::new(vec![0, 0, 0, 1, 1], vec![2, 1]);
+        assert!(m.can_add(&[], 0));
+        assert!(m.can_add(&[0], 1));
+        assert!(!m.can_add(&[0, 1], 2)); // cat 0 full
+        assert!(m.can_add(&[0, 1], 3)); // cat 1 open
+        assert!(!m.can_add(&[3], 4)); // cat 1 full
+        assert_eq!(m.rho(), 3);
+    }
+
+    #[test]
+    fn heredity_property() {
+        // every subset of a feasible set is feasible
+        let m = PartitionMatroid::new(vec![0, 0, 1, 1], vec![1, 2]);
+        let full = vec![0, 2, 3];
+        assert!(m.is_feasible(&full));
+        for drop in 0..full.len() {
+            let sub: Vec<usize> = full
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| *i != drop)
+                .map(|(_, &e)| e)
+                .collect();
+            assert!(m.is_feasible(&sub));
+        }
+    }
+
+    #[test]
+    fn augmentation_property_spotcheck() {
+        // |B| > |A| both independent => some b in B\A augments A
+        let m = PartitionMatroid::new(vec![0, 0, 1, 1, 2], vec![1, 1, 1]);
+        let a = vec![0]; // cat 0
+        let b = vec![1, 2, 4]; // cats 0,1,2 — |B|>|A|
+        assert!(m.is_feasible(&a) && m.is_feasible(&b));
+        let can_augment = b
+            .iter()
+            .filter(|e| !a.contains(e))
+            .any(|&e| m.can_add(&a, e));
+        assert!(can_augment);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_category_rejected() {
+        PartitionMatroid::new(vec![0, 3], vec![1, 1]);
+    }
+}

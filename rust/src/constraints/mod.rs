@@ -1,0 +1,48 @@
+//! Hereditary constraint systems (paper §5): cardinality, matroids,
+//! knapsacks, p-systems and intersections. All are *hereditary* — every
+//! subset of a feasible set is feasible — which is exactly the property
+//! Theorem 12 needs for GreeDi's general-constraint guarantee.
+
+pub mod cardinality;
+pub mod intersection;
+pub mod knapsack;
+pub mod matroid;
+pub mod psystem;
+
+/// A hereditary feasibility constraint over ground set `0..n`.
+pub trait Constraint: Sync {
+    /// Can `e` be added to the (assumed feasible) set `current`?
+    fn can_add(&self, current: &[usize], e: usize) -> bool;
+
+    /// Is `s` feasible? Default: incremental check (valid for hereditary
+    /// systems where feasibility can be verified by insertion order — true
+    /// for all the systems here).
+    fn is_feasible(&self, s: &[usize]) -> bool {
+        let mut cur: Vec<usize> = Vec::with_capacity(s.len());
+        for &e in s {
+            if !self.can_add(&cur, e) {
+                return false;
+            }
+            cur.push(e);
+        }
+        true
+    }
+
+    /// ρ(ζ) = max cardinality of a feasible set (paper Thm 12). Used for
+    /// buffer sizing and for GreeDi's round budgets.
+    fn rho(&self) -> usize;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::cardinality::Cardinality;
+    use super::*;
+
+    #[test]
+    fn default_is_feasible_uses_can_add() {
+        let c = Cardinality::new(2);
+        assert!(c.is_feasible(&[0, 1]));
+        assert!(!c.is_feasible(&[0, 1, 2]));
+        assert!(c.is_feasible(&[]));
+    }
+}

@@ -1,0 +1,245 @@
+//! The four naive two-round protocols GreeDi is compared against in every
+//! figure of §6:
+//!
+//! * **random/random** — k random per machine, then k random from the merge.
+//! * **random/greedy** — k random per machine, greedy over the merged m·k.
+//! * **greedy/merge** — ⌈k/m⌉ greedy per machine, concatenate (truncate to k).
+//! * **greedy/max** — k greedy per machine, report the single best set.
+
+use super::metrics::RunMetrics;
+use super::Problem;
+use crate::algorithms::{self};
+use crate::constraints::cardinality::Cardinality;
+use crate::mapreduce::partition::random_partition;
+use crate::mapreduce::{JobReport, MapReduce};
+use crate::util::rng::Rng;
+
+/// Baseline protocol selector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Baseline {
+    RandomRandom,
+    RandomGreedy,
+    GreedyMerge,
+    GreedyMax,
+}
+
+impl Baseline {
+    pub const ALL: [Baseline; 4] = [
+        Baseline::RandomRandom,
+        Baseline::RandomGreedy,
+        Baseline::GreedyMerge,
+        Baseline::GreedyMax,
+    ];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Baseline::RandomRandom => "random/random",
+            Baseline::RandomGreedy => "random/greedy",
+            Baseline::GreedyMerge => "greedy/merge",
+            Baseline::GreedyMax => "greedy/max",
+        }
+    }
+
+    /// Run the baseline with `m` machines, budget `k`. `local_eval` mirrors
+    /// GreeDi's decomposable mode so comparisons stay apples-to-apples.
+    pub fn run(
+        &self,
+        problem: &dyn Problem,
+        m: usize,
+        k: usize,
+        local_eval: bool,
+        algorithm: &str,
+        seed: u64,
+    ) -> RunMetrics {
+        let base_rng = Rng::new(seed);
+        let mut rng = base_rng.clone();
+        let ground = problem.ground();
+        let shards = random_partition(&ground, m, &mut rng);
+        let engine = MapReduce::new(1);
+        let mut job = JobReport::default();
+        let this = *self;
+
+        // ---- Round 1 ------------------------------------------------------
+        let per_machine_k = match this {
+            Baseline::GreedyMerge => k.div_ceil(m).max(1),
+            _ => k,
+        };
+        let inputs: Vec<(usize, Vec<usize>)> = shards.into_iter().enumerate().collect();
+        let (r1, stage1) = engine.run_stage(inputs, |_, (i, shard)| {
+            let mut task_rng = base_rng.fork(100 + i as u64);
+            match this {
+                Baseline::RandomRandom | Baseline::RandomGreedy => {
+                    let take = per_machine_k.min(shard.len());
+                    let picks = task_rng
+                        .sample_indices(shard.len(), take)
+                        .into_iter()
+                        .map(|j| shard[j])
+                        .collect::<Vec<_>>();
+                    (picks, 0u64)
+                }
+                Baseline::GreedyMerge | Baseline::GreedyMax => {
+                    let algo = algorithms::by_name(algorithm).expect("algorithm");
+                    let obj = if local_eval {
+                        problem.local(&shard, &mut task_rng)
+                    } else {
+                        problem.global()
+                    };
+                    let r = algo.maximize(
+                        obj.as_ref(),
+                        &shard,
+                        &Cardinality::new(per_machine_k),
+                        &mut task_rng,
+                    );
+                    (r.solution, r.oracle_calls)
+                }
+            }
+        });
+        job.stages.push(stage1);
+        let mut oracle_calls: u64 = r1.iter().map(|(_, c)| c).sum();
+
+        let mut merged: Vec<usize> = Vec::new();
+        for (sol, _) in &r1 {
+            merged.extend_from_slice(sol);
+        }
+        merged.sort_unstable();
+        merged.dedup();
+        job.record_shuffle(merged.len());
+
+        // ---- Round 2 ------------------------------------------------------
+        let candidates: Vec<Vec<usize>> = r1.iter().map(|(s, _)| s.clone()).collect();
+        let merged_in = merged.clone();
+        let (mut out2, stage2) = engine.run_stage(vec![()], |_, ()| {
+            let mut task_rng = base_rng.fork(999);
+            match this {
+                Baseline::RandomRandom => {
+                    let take = k.min(merged_in.len());
+                    let sol = task_rng
+                        .sample_indices(merged_in.len(), take)
+                        .into_iter()
+                        .map(|j| merged_in[j])
+                        .collect::<Vec<_>>();
+                    (sol, 0u64)
+                }
+                Baseline::RandomGreedy => {
+                    let algo = algorithms::by_name(algorithm).expect("algorithm");
+                    let obj = if local_eval {
+                        problem.merge(m, &mut task_rng)
+                    } else {
+                        problem.global()
+                    };
+                    let r = algo.maximize(
+                        obj.as_ref(),
+                        &merged_in,
+                        &Cardinality::new(k),
+                        &mut task_rng,
+                    );
+                    (r.solution, r.oracle_calls)
+                }
+                Baseline::GreedyMerge => {
+                    // concatenation, truncated to k
+                    (merged_in.iter().copied().take(k).collect(), 0u64)
+                }
+                Baseline::GreedyMax => {
+                    let obj = if local_eval {
+                        problem.merge(m, &mut task_rng)
+                    } else {
+                        problem.global()
+                    };
+                    let mut best: Option<(Vec<usize>, f64)> = None;
+                    let mut calls = 0u64;
+                    for c in &candidates {
+                        let v = obj.eval(c);
+                        calls += c.len() as u64;
+                        if best.as_ref().map(|(_, bv)| v > *bv).unwrap_or(true) {
+                            best = Some((c.clone(), v));
+                        }
+                    }
+                    (best.map(|(s, _)| s).unwrap_or_default(), calls)
+                }
+            }
+        });
+        job.stages.push(stage2);
+        let (solution, extra) = out2.pop().unwrap();
+        oracle_calls += extra;
+
+        let value = problem.global().eval(&solution);
+        RunMetrics {
+            name: self.label().to_string(),
+            solution,
+            value,
+            oracle_calls,
+            job,
+            rounds: 2,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::greedi::{centralized, Greedi, GreediConfig};
+    use crate::coordinator::FacilityProblem;
+    use crate::data::synth::{gaussian_blobs, SynthConfig};
+    use crate::util::stats::mean;
+    use std::sync::Arc;
+
+    fn problem(n: usize, seed: u64) -> FacilityProblem {
+        let ds = Arc::new(gaussian_blobs(&SynthConfig::tiny_images(n, 8), seed));
+        FacilityProblem::new(&ds)
+    }
+
+    #[test]
+    fn all_respect_budget() {
+        let p = problem(200, 51);
+        for b in Baseline::ALL {
+            let r = b.run(&p, 5, 10, false, "lazy", 3);
+            assert!(r.solution.len() <= 10, "{} gave {}", b.label(), r.solution.len());
+            assert!(r.value.is_finite());
+            assert_eq!(r.rounds, 2);
+        }
+    }
+
+    #[test]
+    fn greedi_dominates_baselines_on_average() {
+        let p = problem(300, 52);
+        let k = 10;
+        let m = 5;
+        let mut greedi_vals = Vec::new();
+        let mut base_vals: Vec<Vec<f64>> = vec![Vec::new(); 4];
+        for seed in 0..3 {
+            greedi_vals.push(Greedi::new(GreediConfig::new(m, k)).run(&p, seed).value);
+            for (i, b) in Baseline::ALL.iter().enumerate() {
+                base_vals[i].push(b.run(&p, m, k, false, "lazy", seed).value);
+            }
+        }
+        let g = mean(&greedi_vals);
+        for (i, b) in Baseline::ALL.iter().enumerate() {
+            let bv = mean(&base_vals[i]);
+            assert!(g >= bv - 1e-9, "greedi {g} < {} {bv}", b.label());
+        }
+        // and random/random must be clearly worse
+        assert!(g > 1.02 * mean(&base_vals[0]), "greedi {g} vs random/random");
+    }
+
+    #[test]
+    fn ordering_random_random_weakest() {
+        let p = problem(250, 53);
+        let rr: Vec<f64> = (0..4)
+            .map(|s| Baseline::RandomRandom.run(&p, 5, 8, false, "lazy", s).value)
+            .collect();
+        let gm: Vec<f64> = (0..4)
+            .map(|s| Baseline::GreedyMax.run(&p, 5, 8, false, "lazy", s).value)
+            .collect();
+        assert!(mean(&gm) > mean(&rr));
+    }
+
+    #[test]
+    fn baselines_below_centralized() {
+        let p = problem(200, 54);
+        let c = centralized(&p, 8, "lazy", 1);
+        for b in Baseline::ALL {
+            let r = b.run(&p, 4, 8, false, "lazy", 1);
+            assert!(r.value <= c.value + 1e-9, "{}", b.label());
+        }
+    }
+}

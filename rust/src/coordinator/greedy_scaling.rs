@@ -1,0 +1,245 @@
+//! GreedyScaling — the threshold-greedy MapReduce algorithm of Kumar,
+//! Moseley, Vassilvitskii & Vattani (2013), reimplemented as the comparator
+//! for the paper's §6.4 / Fig. 10.
+//!
+//! The driver lowers a gain threshold τ geometrically from the largest
+//! singleton gain. Each synchronous MapReduce round: the cluster filters
+//! the surviving elements whose marginal gain w.r.t. the current solution
+//! meets τ (the distributed map stage); a memory-bounded sample of size
+//! μ = O(k·n^δ·log n) of the survivors is pulled to the driver, which
+//! greedily commits those still meeting τ (the reduce stage). This is the
+//! (1 − 1/e − ε)-style threshold greedy; the number of synchronous rounds
+//! grows like log₍₁/(1−ε)₎(Δ) — *not* the constant 2 of GreeDi — which is
+//! exactly the contrast Fig. 10's caption draws.
+
+use super::metrics::RunMetrics;
+use super::Problem;
+use crate::mapreduce::{JobReport, MapReduce, StageReport};
+use crate::util::rng::Rng;
+
+/// GreedyScaling configuration.
+#[derive(Debug, Clone)]
+pub struct GreedyScaling {
+    pub k: usize,
+    /// Memory exponent δ: per-round driver pool μ = ⌈k · n^δ · ln n⌉
+    /// (the paper's Fig. 10 uses δ = 1/2).
+    pub delta: f64,
+    /// Machines (distributed filter-stage accounting).
+    pub m: usize,
+    /// Threshold decay: τ ← τ·(1−ε) between rounds (ε of the guarantee).
+    pub epsilon: f64,
+}
+
+impl GreedyScaling {
+    pub fn new(k: usize, delta: f64, m: usize) -> Self {
+        GreedyScaling { k, delta, m: m.max(1), epsilon: 0.5 }
+    }
+
+    pub fn epsilon(mut self, eps: f64) -> Self {
+        assert!(eps > 0.0 && eps < 1.0);
+        self.epsilon = eps;
+        self
+    }
+
+    pub fn run(&self, problem: &dyn Problem, seed: u64) -> RunMetrics {
+        let base_rng = Rng::new(seed);
+        let mut rng = base_rng.clone();
+        let ground = problem.ground();
+        let n = ground.len();
+        let mu = (((self.k as f64) * (n as f64).powf(self.delta)
+            * (n as f64).ln().max(1.0))
+            .ceil() as usize)
+            .max(self.k);
+        let engine = MapReduce::new(1);
+        let mut job = JobReport::default();
+
+        let obj = problem.global();
+        let mut state = obj.state();
+        let mut oracle_calls = 0u64;
+        let mut surviving: Vec<usize> = ground.clone();
+        let mut rounds = 0usize;
+
+        // Round 0: distributed max-singleton-gain scan to seed τ.
+        let chunks = self.chunk(&surviving);
+        let (maxima, stage0) = engine.run_stage(chunks, |_, chunk| {
+            let mut st = obj.state();
+            let gains = st.batch_gains(&chunk);
+            let best = gains.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            (best, chunk.len() as u64)
+        });
+        job.stages.push(stage0);
+        rounds += 1;
+        let mut tau = f64::NEG_INFINITY;
+        for (mx, calls) in maxima {
+            tau = tau.max(mx);
+            oracle_calls += calls;
+        }
+        if !tau.is_finite() || tau <= 0.0 {
+            let value = obj.eval(&[]);
+            return self.finish(Vec::new(), value, oracle_calls, job, rounds);
+        }
+        let tau_floor = tau * self.epsilon / (2.0 * self.k as f64);
+
+        while state.selected().len() < self.k && !surviving.is_empty() && tau > tau_floor {
+            rounds += 1;
+
+            // -- distributed filter: survivors with gain >= τ ----------------
+            let selected_now = state.selected().to_vec();
+            let chunks = self.chunk(&surviving);
+            let (filtered, filter_stage) = engine.run_stage(chunks, |_, chunk| {
+                let mut st = obj.state();
+                for &s in &selected_now {
+                    st.push(s);
+                }
+                let mut keep = Vec::new();
+                let mut calls = 0u64;
+                for &e in &chunk {
+                    if st.gain(e) >= tau {
+                        keep.push(e);
+                    }
+                    calls += 1;
+                }
+                (keep, calls)
+            });
+            job.stages.push(filter_stage);
+            let mut pool: Vec<usize> = Vec::new();
+            for (keep, calls) in filtered {
+                pool.extend(keep);
+                oracle_calls += calls;
+            }
+
+            // Elements below τ now may clear a *lower* τ later — they stay
+            // in `surviving`; only committed elements are removed below.
+
+            // -- driver: memory-bounded sample + sequential commit -----------
+            let pool: Vec<usize> = if pool.len() > mu {
+                job.record_shuffle(mu);
+                rng.sample_indices(pool.len(), mu)
+                    .into_iter()
+                    .map(|i| pool[i])
+                    .collect()
+            } else {
+                job.record_shuffle(pool.len());
+                pool
+            };
+            let t = std::time::Instant::now();
+            for &e in &pool {
+                if state.selected().len() >= self.k {
+                    break;
+                }
+                let g = state.gain(e);
+                oracle_calls += 1;
+                if g >= tau {
+                    state.push(e);
+                }
+            }
+            let elapsed = t.elapsed().as_secs_f64();
+            job.stages.push(StageReport {
+                task_times: vec![elapsed],
+                max_task_time: elapsed,
+                total_cpu_time: elapsed,
+            });
+            let committed: std::collections::HashSet<usize> =
+                state.selected().iter().copied().collect();
+            surviving.retain(|e| !committed.contains(e));
+
+            tau *= 1.0 - self.epsilon;
+        }
+
+        let solution = state.selected().to_vec();
+        let value = problem.global().eval(&solution);
+        self.finish(solution, value, oracle_calls, job, rounds)
+    }
+
+    fn chunk(&self, items: &[usize]) -> Vec<Vec<usize>> {
+        let mut cs = vec![Vec::new(); self.m];
+        for (i, &e) in items.iter().enumerate() {
+            cs[i % self.m].push(e);
+        }
+        cs
+    }
+
+    fn finish(
+        &self,
+        solution: Vec<usize>,
+        value: f64,
+        oracle_calls: u64,
+        job: JobReport,
+        rounds: usize,
+    ) -> RunMetrics {
+        RunMetrics {
+            name: format!("greedy_scaling[k={},δ={}]", self.k, self.delta),
+            solution,
+            value,
+            oracle_calls,
+            job,
+            rounds,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::greedi::centralized;
+    use crate::coordinator::CoverageProblem;
+    use crate::data::transactions::zipf_transactions;
+    use std::sync::Arc;
+
+    fn problem() -> CoverageProblem {
+        let td = Arc::new(zipf_transactions(400, 300, 10, 1.1, 8));
+        CoverageProblem::new(&td)
+    }
+
+    #[test]
+    fn respects_budget_and_quality() {
+        let p = problem();
+        let gs = GreedyScaling::new(10, 0.5, 4).run(&p, 1);
+        assert!(gs.solution.len() <= 10);
+        let c = centralized(&p, 10, "lazy", 1);
+        // threshold greedy with ε=0.5 is within (1-1/e-ε)-ish of OPT;
+        // empirically it sits near plain greedy on coverage instances.
+        assert!(
+            gs.value >= 0.8 * c.value,
+            "greedy scaling {} vs centralized {}",
+            gs.value,
+            c.value
+        );
+    }
+
+    #[test]
+    fn uses_multiple_rounds() {
+        let p = problem();
+        let gs = GreedyScaling::new(12, 0.5, 4).run(&p, 2);
+        assert!(
+            gs.rounds > 2,
+            "threshold greedy must take more rounds than GreeDi's 2, got {}",
+            gs.rounds
+        );
+    }
+
+    #[test]
+    fn smaller_epsilon_more_rounds() {
+        let p = problem();
+        let coarse = GreedyScaling::new(8, 0.5, 4).epsilon(0.5).run(&p, 3);
+        let fine = GreedyScaling::new(8, 0.5, 4).epsilon(0.1).run(&p, 3);
+        assert!(fine.rounds >= coarse.rounds);
+        assert!(fine.value >= 0.95 * coarse.value);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let p = problem();
+        let a = GreedyScaling::new(8, 0.5, 4).run(&p, 7);
+        let b = GreedyScaling::new(8, 0.5, 4).run(&p, 7);
+        assert_eq!(a.solution, b.solution);
+    }
+
+    #[test]
+    fn empty_ground_ok() {
+        let td = Arc::new(zipf_transactions(1, 5, 2, 1.1, 1));
+        let p = CoverageProblem::new(&td);
+        let gs = GreedyScaling::new(3, 0.5, 2).run(&p, 1);
+        assert!(gs.solution.len() <= 1);
+    }
+}

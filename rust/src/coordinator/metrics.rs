@@ -1,0 +1,91 @@
+//! Unified accounting for distributed runs: solution quality, oracle load,
+//! simulated cluster time, communication volume and MapReduce round count —
+//! the quantities behind every figure in the paper's §6.
+
+use crate::mapreduce::JobReport;
+
+/// Outcome of one distributed (or centralized) protocol run.
+#[derive(Debug, Clone, Default)]
+pub struct RunMetrics {
+    /// Protocol label ("greedi", "greedy/max", "centralized", …).
+    pub name: String,
+    /// Final solution (global element ids).
+    pub solution: Vec<usize>,
+    /// f(solution) under the TRUE global objective.
+    pub value: f64,
+    /// Total marginal-gain oracle calls across all machines and stages.
+    pub oracle_calls: u64,
+    /// Per-stage timing and shuffle accounting.
+    pub job: JobReport,
+    /// Synchronous MapReduce rounds used (GreeDi: 2; GreedyScaling: many).
+    pub rounds: usize,
+}
+
+impl RunMetrics {
+    /// Simulated parallel wallclock (max task per stage, summed).
+    pub fn sim_time(&self) -> f64 {
+        self.job.sim_parallel_time()
+    }
+
+    /// Speedup of this run relative to a centralized baseline time.
+    pub fn speedup_vs(&self, centralized_secs: f64) -> f64 {
+        if self.sim_time() <= 0.0 {
+            return f64::NAN;
+        }
+        centralized_secs / self.sim_time()
+    }
+
+    /// Ratio of this run's value to a reference (the paper's headline
+    /// "distributed / centralized" metric).
+    pub fn ratio_vs(&self, centralized_value: f64) -> f64 {
+        if centralized_value.abs() < 1e-300 {
+            return f64::NAN;
+        }
+        self.value / centralized_value
+    }
+
+    pub fn one_line(&self) -> String {
+        format!(
+            "{:<16} f(S)={:<12.5} |S|={:<4} oracle={:<10} rounds={} simt={:.4}s comm={}",
+            self.name,
+            self.value,
+            self.solution.len(),
+            self.oracle_calls,
+            self.rounds,
+            self.sim_time(),
+            self.job.shuffled_elements
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ratio_and_speedup() {
+        let mut m = RunMetrics {
+            name: "x".into(),
+            value: 9.0,
+            ..Default::default()
+        };
+        assert!((m.ratio_vs(10.0) - 0.9).abs() < 1e-12);
+        assert!(m.ratio_vs(0.0).is_nan());
+        // no stages => sim_time 0 => NaN speedup
+        assert!(m.speedup_vs(1.0).is_nan());
+        m.job.stages.push(crate::mapreduce::StageReport {
+            task_times: vec![0.5],
+            max_task_time: 0.5,
+            total_cpu_time: 0.5,
+        });
+        assert!((m.speedup_vs(1.0) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn one_line_contains_fields() {
+        let m = RunMetrics { name: "greedi".into(), value: 1.25, rounds: 2, ..Default::default() };
+        let s = m.one_line();
+        assert!(s.contains("greedi"));
+        assert!(s.contains("rounds=2"));
+    }
+}

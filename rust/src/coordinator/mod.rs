@@ -1,0 +1,292 @@
+//! The distributed coordinator — the paper's system contribution.
+//!
+//! * [`greedi`] — the two-round GreeDi protocol (Algorithms 2 & 3) over the
+//!   simulated MapReduce runtime, in global and local (decomposable, §4.5)
+//!   evaluation modes.
+//! * [`baselines`] — the four naive two-round protocols of §6
+//!   (random/random, random/greedy, greedy/merge, greedy/max).
+//! * [`greedy_scaling`] — the multi-round GreedyScaling comparator of
+//!   Kumar et al. (2013) used in §6.4.
+//! * [`metrics`] — unified run accounting (solution value, oracle calls,
+//!   simulated cluster time, communication volume, MapReduce rounds).
+//!
+//! The [`Problem`] trait is the bridge between the protocol (which moves
+//! element ids around) and the objective library (which knows how to build
+//! global, shard-local and merge-round objective instances).
+
+pub mod baselines;
+pub mod greedi;
+pub mod greedy_scaling;
+pub mod metrics;
+pub mod multiround;
+
+use std::sync::Arc;
+
+use crate::data::graph::Digraph;
+use crate::data::transactions::TransactionData;
+use crate::data::Dataset;
+use crate::objective::coverage::Coverage;
+use crate::objective::cut::GraphCut;
+use crate::objective::facility::{FacilityLocation, GainBackend};
+use crate::objective::infogain::InfoGain;
+use crate::objective::SubmodularFn;
+use crate::util::rng::Rng;
+
+/// A distributable maximization problem: how to instantiate the objective
+/// for the global view, for one machine's shard (local/decomposable mode,
+/// paper §4.5), and for GreeDi's second round.
+pub trait Problem: Sync {
+    /// The ground set V.
+    fn ground(&self) -> Vec<usize>;
+
+    /// Full-information objective (used for final reporting and for every
+    /// stage in global mode).
+    fn global(&self) -> Box<dyn SubmodularFn + '_>;
+
+    /// Objective evaluated by the machine holding `shard` in local mode.
+    /// Default: same as global (objectives whose evaluation needs no data
+    /// beyond the selected elements — info-gain, coverage).
+    fn local(&self, shard: &[usize], _rng: &mut Rng) -> Box<dyn SubmodularFn + '_> {
+        let _ = shard;
+        self.global()
+    }
+
+    /// Objective for the merge round in local mode. `m` is the machine
+    /// count — the paper's §4.5 evaluates the second stage on a uniform
+    /// random subset U of size ⌈n/m⌉. Default: global.
+    fn merge(&self, m: usize, _rng: &mut Rng) -> Box<dyn SubmodularFn + '_> {
+        let _ = m;
+        self.global()
+    }
+
+    /// Whether a *distinct* local restriction exists (affects experiment
+    /// labeling only; protocols work either way).
+    fn has_local_mode(&self) -> bool {
+        false
+    }
+}
+
+/// Builds a [`GainBackend`] for a given evaluation window — implemented by
+/// `runtime::Engine` (the XLA path). Window-specific because the batched
+/// artifact streams pre-packed data blocks of exactly that window.
+pub trait BackendFactory: Sync + Send {
+    fn make(&self, data: &Arc<Dataset>, window: &[usize]) -> Arc<dyn GainBackend>;
+}
+
+/// Exemplar-based clustering problem (paper §6.1): decomposable, so local
+/// mode restricts the loss average to the shard and the merge round to a
+/// random ⌈n/m⌉-subset. An optional [`BackendFactory`] swaps the scalar
+/// gain loop for the batched XLA artifact, per window.
+pub struct FacilityProblem {
+    pub data: Arc<Dataset>,
+    pub backend_factory: Option<Arc<dyn BackendFactory>>,
+}
+
+impl FacilityProblem {
+    pub fn new(data: &Arc<Dataset>) -> Self {
+        FacilityProblem { data: Arc::clone(data), backend_factory: None }
+    }
+
+    pub fn with_backend_factory(mut self, factory: Arc<dyn BackendFactory>) -> Self {
+        self.backend_factory = Some(factory);
+        self
+    }
+
+    fn build(&self, window: Vec<usize>) -> Box<dyn SubmodularFn + '_> {
+        let f = FacilityLocation::with_window(&self.data, window);
+        match &self.backend_factory {
+            Some(factory) => {
+                let backend = factory.make(&self.data, f.window());
+                Box::new(f.with_backend(backend))
+            }
+            None => Box::new(f),
+        }
+    }
+}
+
+impl Problem for FacilityProblem {
+    fn ground(&self) -> Vec<usize> {
+        self.data.ids()
+    }
+
+    fn global(&self) -> Box<dyn SubmodularFn + '_> {
+        self.build(self.data.ids())
+    }
+
+    fn local(&self, shard: &[usize], _rng: &mut Rng) -> Box<dyn SubmodularFn + '_> {
+        self.build(shard.to_vec())
+    }
+
+    fn merge(&self, m: usize, rng: &mut Rng) -> Box<dyn SubmodularFn + '_> {
+        let n = self.data.n;
+        let u_size = n.div_ceil(m).max(1).min(n);
+        let window = rng.sample_indices(n, u_size);
+        self.build(window)
+    }
+
+    fn has_local_mode(&self) -> bool {
+        true
+    }
+}
+
+/// GP active-set selection (paper §6.2). The info-gain objective depends
+/// only on the selected set, so local evaluation *is* global evaluation.
+pub struct InfoGainProblem {
+    pub data: Arc<Dataset>,
+    pub h: f64,
+    pub sigma: f64,
+}
+
+impl InfoGainProblem {
+    pub fn paper_params(data: &Arc<Dataset>) -> Self {
+        InfoGainProblem { data: Arc::clone(data), h: 0.75, sigma: 1.0 }
+    }
+}
+
+impl Problem for InfoGainProblem {
+    fn ground(&self) -> Vec<usize> {
+        self.data.ids()
+    }
+
+    fn global(&self) -> Box<dyn SubmodularFn + '_> {
+        Box::new(InfoGain::new(&self.data, self.h, self.sigma))
+    }
+}
+
+/// Max-cut on a social graph (paper §6.3). Local mode induces the shard's
+/// subgraph (cross-partition links disconnected, as in the paper).
+pub struct CutProblem {
+    pub graph: Arc<Digraph>,
+}
+
+impl CutProblem {
+    pub fn new(graph: &Arc<Digraph>) -> Self {
+        CutProblem { graph: Arc::clone(graph) }
+    }
+}
+
+impl Problem for CutProblem {
+    fn ground(&self) -> Vec<usize> {
+        (0..self.graph.n).collect()
+    }
+
+    fn global(&self) -> Box<dyn SubmodularFn + '_> {
+        Box::new(GraphCut::new(&self.graph))
+    }
+
+    fn local(&self, shard: &[usize], _rng: &mut Rng) -> Box<dyn SubmodularFn + '_> {
+        Box::new(GraphCut::restricted(&self.graph, shard))
+    }
+
+    fn has_local_mode(&self) -> bool {
+        true
+    }
+}
+
+/// Submodular coverage over transactions (paper §6.4). Each transaction
+/// carries its own items, so shard-local evaluation equals global.
+pub struct CoverageProblem {
+    pub td: Arc<TransactionData>,
+}
+
+impl CoverageProblem {
+    pub fn new(td: &Arc<TransactionData>) -> Self {
+        CoverageProblem { td: Arc::clone(td) }
+    }
+}
+
+impl Problem for CoverageProblem {
+    fn ground(&self) -> Vec<usize> {
+        (0..self.td.n()).collect()
+    }
+
+    fn global(&self) -> Box<dyn SubmodularFn + '_> {
+        Box::new(Coverage::new(&self.td))
+    }
+}
+
+/// Wrap any standalone objective as a Problem (local == global).
+pub struct OpaqueProblem<'a> {
+    pub f: &'a dyn SubmodularFn,
+}
+
+impl<'a> OpaqueProblem<'a> {
+    pub fn new(f: &'a dyn SubmodularFn) -> Self {
+        OpaqueProblem { f }
+    }
+}
+
+impl<'a> Problem for OpaqueProblem<'a> {
+    fn ground(&self) -> Vec<usize> {
+        (0..self.f.ground_size()).collect()
+    }
+
+    fn global(&self) -> Box<dyn SubmodularFn + '_> {
+        Box::new(ForwardFn { f: self.f })
+    }
+}
+
+/// Forwarding shim so `OpaqueProblem` can hand out boxed views.
+struct ForwardFn<'a> {
+    f: &'a dyn SubmodularFn,
+}
+
+impl<'a> SubmodularFn for ForwardFn<'a> {
+    fn state(&self) -> Box<dyn crate::objective::State + '_> {
+        self.f.state()
+    }
+
+    fn eval(&self, s: &[usize]) -> f64 {
+        self.f.eval(s)
+    }
+
+    fn is_monotone(&self) -> bool {
+        self.f.is_monotone()
+    }
+
+    fn ground_size(&self) -> usize {
+        self.f.ground_size()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{gaussian_blobs, SynthConfig};
+
+    #[test]
+    fn facility_problem_local_restricts() {
+        let ds = Arc::new(gaussian_blobs(&SynthConfig::tiny_images(60, 8), 1));
+        let p = FacilityProblem::new(&ds);
+        let mut rng = Rng::new(0);
+        let shard: Vec<usize> = (0..30).collect();
+        let local = p.local(&shard, &mut rng);
+        let global = p.global();
+        // values generally differ because the loss averages over different sets
+        let s = [3, 9];
+        assert!(local.eval(&s).is_finite());
+        assert!(global.eval(&s).is_finite());
+        assert!(p.has_local_mode());
+    }
+
+    #[test]
+    fn facility_merge_window_size() {
+        let ds = Arc::new(gaussian_blobs(&SynthConfig::tiny_images(100, 8), 2));
+        let p = FacilityProblem::new(&ds);
+        let mut rng = Rng::new(0);
+        let merged = p.merge(4, &mut rng);
+        // ⌈100/4⌉ = 25-point window; eval still defined on global ids
+        assert!(merged.eval(&[0, 50, 99]).is_finite());
+    }
+
+    #[test]
+    fn opaque_problem_forwards() {
+        let ds = Arc::new(gaussian_blobs(&SynthConfig::tiny_images(20, 4), 3));
+        let f = FacilityLocation::from_dataset(&ds);
+        let p = OpaqueProblem::new(&f);
+        assert_eq!(p.ground().len(), 20);
+        let g = p.global();
+        assert!((g.eval(&[1, 2]) - f.eval(&[1, 2])).abs() < 1e-12);
+        assert!(!p.has_local_mode());
+    }
+}

@@ -1,0 +1,259 @@
+//! Multi-round (tree-reduction) GreeDi — the paper's §4.2 extension:
+//! *"it is straightforward to generalize GreeDi to multiple rounds (i.e.,
+//! more than two) for very large datasets."*
+//!
+//! Round 0 partitions V over m leaf machines exactly as Algorithm 2; each
+//! subsequent round merges groups of `fanout` candidate sets and re-runs
+//! the black box, halving-or-more the machine count until one set remains.
+//! With L levels the communication per synchronization drops from m·κ ids
+//! at a single merge point to fanout·κ, at the cost of L−1 extra rounds —
+//! the trade Fig. 8b motivates when the round-2 merge dominates.
+//!
+//! Guarantee: composing Theorem 4 per level gives
+//! `((1−e^{−κ/k})/min(fanout,k))^L · OPT` in the worst case; with random
+//! partitioning each level keeps the (1−1/e)/2-style average-case behavior,
+//! and empirically the tree loses almost nothing (see the ablation bench).
+
+use super::greedi::PartitionStrategy;
+use super::metrics::RunMetrics;
+use super::Problem;
+use crate::algorithms;
+use crate::constraints::cardinality::Cardinality;
+use crate::constraints::Constraint;
+use crate::mapreduce::partition::{balanced_partition, contiguous_partition, random_partition};
+use crate::mapreduce::{JobReport, MapReduce};
+use crate::util::rng::Rng;
+
+/// Tree-reduction GreeDi configuration.
+#[derive(Debug, Clone)]
+pub struct MultiRoundConfig {
+    /// Leaf machine count m.
+    pub m: usize,
+    /// Final budget k.
+    pub k: usize,
+    /// Per-machine budget κ at every level.
+    pub kappa: usize,
+    /// Candidate sets merged per reducer at each level (≥ 2).
+    pub fanout: usize,
+    pub algorithm: String,
+    pub local_eval: bool,
+    pub partition: PartitionStrategy,
+}
+
+impl MultiRoundConfig {
+    pub fn new(m: usize, k: usize, fanout: usize) -> Self {
+        MultiRoundConfig {
+            m: m.max(1),
+            k,
+            kappa: k,
+            fanout: fanout.max(2),
+            algorithm: "lazy".into(),
+            local_eval: false,
+            partition: PartitionStrategy::Random,
+        }
+    }
+
+    pub fn algorithm(mut self, name: &str) -> Self {
+        assert!(algorithms::by_name(name).is_some(), "unknown algorithm {name}");
+        self.algorithm = name.to_string();
+        self
+    }
+
+    pub fn local(mut self) -> Self {
+        self.local_eval = true;
+        self
+    }
+}
+
+/// The tree-reduction protocol.
+pub struct MultiRoundGreedi {
+    pub cfg: MultiRoundConfig,
+}
+
+impl MultiRoundGreedi {
+    pub fn new(cfg: MultiRoundConfig) -> Self {
+        MultiRoundGreedi { cfg }
+    }
+
+    pub fn run(&self, problem: &dyn Problem, seed: u64) -> RunMetrics {
+        let cfg = &self.cfg;
+        let base_rng = Rng::new(seed);
+        let mut rng = base_rng.clone();
+        let ground = problem.ground();
+        let shards = match cfg.partition {
+            PartitionStrategy::Random => random_partition(&ground, cfg.m, &mut rng),
+            PartitionStrategy::Balanced => balanced_partition(&ground, cfg.m, &mut rng),
+            PartitionStrategy::Contiguous => contiguous_partition(&ground, cfg.m),
+        };
+
+        let engine = MapReduce::new(1);
+        let mut job = JobReport::default();
+        let mut oracle_calls = 0u64;
+        let mut rounds = 0usize;
+
+        // ---- Level 0: leaves ------------------------------------------------
+        let leaf_con = Cardinality::new(cfg.kappa);
+        let local_eval = cfg.local_eval;
+        let algo_name = cfg.algorithm.clone();
+        let inputs: Vec<(usize, Vec<usize>)> = shards.into_iter().enumerate().collect();
+        let (leaf_results, stage) = engine.run_stage(inputs, |_, (i, shard)| {
+            let mut task_rng = base_rng.fork(7_000 + i as u64);
+            let algo = algorithms::by_name(&algo_name).expect("algorithm");
+            let obj = if local_eval {
+                problem.local(&shard, &mut task_rng)
+            } else {
+                problem.global()
+            };
+            algo.maximize(obj.as_ref(), &shard, &leaf_con, &mut task_rng)
+        });
+        job.stages.push(stage);
+        rounds += 1;
+        oracle_calls += leaf_results.iter().map(|r| r.oracle_calls).sum::<u64>();
+        let mut frontier: Vec<Vec<usize>> =
+            leaf_results.into_iter().map(|r| r.solution).collect();
+
+        // ---- Reduction levels ----------------------------------------------
+        let mut level = 0u64;
+        while frontier.len() > 1 {
+            level += 1;
+            rounds += 1;
+            let groups: Vec<(usize, Vec<Vec<usize>>)> = frontier
+                .chunks(cfg.fanout)
+                .map(|c| c.to_vec())
+                .enumerate()
+                .collect();
+            let is_root = groups.len() == 1;
+            let con = if is_root {
+                Cardinality::new(cfg.k)
+            } else {
+                Cardinality::new(cfg.kappa)
+            };
+            let m = cfg.m;
+            let algo_name = cfg.algorithm.clone();
+            let (next, stage) = engine.run_stage(groups, |_, (gi, sets)| {
+                let mut task_rng = base_rng.fork(8_000 + level * 100 + gi as u64);
+                let mut pool: Vec<usize> = sets.iter().flatten().copied().collect();
+                pool.sort_unstable();
+                pool.dedup();
+                let algo = algorithms::by_name(&algo_name).expect("algorithm");
+                let obj = if local_eval {
+                    problem.merge(m, &mut task_rng)
+                } else {
+                    problem.global()
+                };
+                let run = algo.maximize(obj.as_ref(), &pool, &con, &mut task_rng);
+                // keep the better of the merged re-run and the best input set
+                // (trimmed to the level constraint), mirroring Algorithm 2.
+                let mut best_set = run.solution;
+                let mut best_val = obj.eval(&best_set);
+                let mut calls = run.oracle_calls + best_set.len() as u64;
+                for s in &sets {
+                    let mut trimmed = Vec::new();
+                    for &e in s {
+                        if con.can_add(&trimmed, e) {
+                            trimmed.push(e);
+                        }
+                    }
+                    let v = obj.eval(&trimmed);
+                    calls += trimmed.len() as u64;
+                    if v > best_val {
+                        best_val = v;
+                        best_set = trimmed;
+                    }
+                }
+                (best_set, pool.len(), calls)
+            });
+            job.stages.push(stage);
+            let mut new_frontier = Vec::with_capacity(next.len());
+            for (set, pool_len, calls) in next {
+                job.record_shuffle(pool_len);
+                oracle_calls += calls;
+                new_frontier.push(set);
+            }
+            frontier = new_frontier;
+        }
+
+        let solution = frontier.pop().unwrap_or_default();
+        let value = problem.global().eval(&solution);
+        RunMetrics {
+            name: format!(
+                "greedi-tree[m={},k={},fanout={}]",
+                cfg.m, cfg.k, cfg.fanout
+            ),
+            solution,
+            value,
+            oracle_calls,
+            job,
+            rounds,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::greedi::{centralized, Greedi, GreediConfig};
+    use crate::coordinator::FacilityProblem;
+    use crate::data::synth::{gaussian_blobs, SynthConfig};
+    use std::sync::Arc;
+
+    fn problem(n: usize, seed: u64) -> FacilityProblem {
+        let ds = Arc::new(gaussian_blobs(&SynthConfig::tiny_images(n, 8), seed));
+        FacilityProblem::new(&ds)
+    }
+
+    #[test]
+    fn tree_reduces_to_single_solution() {
+        let p = problem(400, 1);
+        let r = MultiRoundGreedi::new(MultiRoundConfig::new(16, 8, 4)).run(&p, 2);
+        assert!(r.solution.len() <= 8);
+        // 16 leaves → 4 → 1: 1 leaf round + 2 reduction rounds
+        assert_eq!(r.rounds, 3);
+    }
+
+    #[test]
+    fn tree_competitive_with_flat_greedi() {
+        let p = problem(600, 2);
+        let central = centralized(&p, 10, "lazy", 3).value;
+        let flat = Greedi::new(GreediConfig::new(16, 10)).run(&p, 3);
+        let tree = MultiRoundGreedi::new(MultiRoundConfig::new(16, 10, 4)).run(&p, 3);
+        assert!(tree.value / central > 0.9, "tree ratio {}", tree.value / central);
+        assert!(
+            tree.value > 0.95 * flat.value,
+            "tree {} vs flat {}",
+            tree.value,
+            flat.value
+        );
+    }
+
+    #[test]
+    fn per_merge_communication_bounded_by_fanout_kappa() {
+        let p = problem(500, 3);
+        let cfg = MultiRoundConfig::new(16, 6, 4);
+        let kappa = cfg.kappa;
+        let fanout = cfg.fanout;
+        let r = MultiRoundGreedi::new(cfg).run(&p, 4);
+        // total shuffle ≤ Σ over merge tasks of fanout·κ
+        // 16→4→1: 4 + 1 merge tasks
+        assert!(r.job.shuffled_elements <= 5 * fanout * kappa);
+    }
+
+    #[test]
+    fn two_level_tree_equals_flat_when_fanout_ge_m() {
+        let p = problem(300, 4);
+        let flat = Greedi::new(GreediConfig::new(4, 6)).run(&p, 5);
+        let tree = MultiRoundGreedi::new(MultiRoundConfig::new(4, 6, 8)).run(&p, 5);
+        assert_eq!(tree.rounds, 2, "fanout ≥ m must collapse to two rounds");
+        // same structure ⇒ same result given identical seeds is not
+        // guaranteed (different rng streams), but quality must match.
+        assert!((tree.value - flat.value).abs() / flat.value < 0.05);
+    }
+
+    #[test]
+    fn deterministic() {
+        let p = problem(300, 5);
+        let a = MultiRoundGreedi::new(MultiRoundConfig::new(9, 5, 3)).run(&p, 6);
+        let b = MultiRoundGreedi::new(MultiRoundConfig::new(9, 5, 3)).run(&p, 6);
+        assert_eq!(a.solution, b.solution);
+    }
+}

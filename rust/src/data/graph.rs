@@ -1,0 +1,131 @@
+//! Directed-graph substrate + the social-network generator for the max-cut
+//! experiment (paper §6.3: a Facebook-like message network with 1,899 users
+//! and 20,296 directed ties — we generate a preferential-attachment digraph
+//! with the same node/edge counts and heavy-tailed degrees).
+
+use crate::util::rng::Rng;
+
+/// Directed weighted graph in adjacency-list form (out- and in-lists kept so
+/// the cut objective can scan both directions in O(deg)).
+#[derive(Debug, Clone)]
+pub struct Digraph {
+    pub n: usize,
+    /// out[u] = list of (v, w) with edge u->v weight w
+    pub out: Vec<Vec<(usize, f64)>>,
+    /// rin[v] = list of (u, w) with edge u->v weight w
+    pub rin: Vec<Vec<(usize, f64)>>,
+    pub m: usize,
+}
+
+impl Digraph {
+    pub fn new(n: usize) -> Self {
+        Digraph { n, out: vec![Vec::new(); n], rin: vec![Vec::new(); n], m: 0 }
+    }
+
+    pub fn add_edge(&mut self, u: usize, v: usize, w: f64) {
+        assert!(u < self.n && v < self.n);
+        self.out[u].push((v, w));
+        self.rin[v].push((u, w));
+        self.m += 1;
+    }
+
+    pub fn total_weight(&self) -> f64 {
+        self.out.iter().flatten().map(|&(_, w)| w).sum()
+    }
+
+    /// Out-degree + in-degree.
+    pub fn degree(&self, u: usize) -> usize {
+        self.out[u].len() + self.rin[u].len()
+    }
+}
+
+/// Preferential-attachment directed graph: `n` nodes, ~`m_edges` edges,
+/// unit weights. Endpoint popularity follows a heavy-tailed distribution,
+/// mirroring the UCI message network's degree skew.
+pub fn social_network(n: usize, m_edges: usize, seed: u64) -> Digraph {
+    let mut rng = Rng::new(seed);
+    let mut g = Digraph::new(n);
+    // Maintain an endpoint pool for preferential attachment; seed it with
+    // every node once so isolated nodes are possible but rare.
+    let mut pool: Vec<usize> = (0..n).collect();
+    let mut edges_seen = std::collections::HashSet::with_capacity(m_edges);
+    let mut attempts = 0usize;
+    while g.m < m_edges && attempts < m_edges * 50 {
+        attempts += 1;
+        let u = if rng.bool(0.8) {
+            pool[rng.below(pool.len())]
+        } else {
+            rng.below(n)
+        };
+        let v = if rng.bool(0.8) {
+            pool[rng.below(pool.len())]
+        } else {
+            rng.below(n)
+        };
+        if u == v || edges_seen.contains(&(u, v)) {
+            continue;
+        }
+        edges_seen.insert((u, v));
+        g.add_edge(u, v, 1.0);
+        pool.push(u);
+        pool.push(v);
+    }
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_edge_updates_both_lists() {
+        let mut g = Digraph::new(3);
+        g.add_edge(0, 1, 2.0);
+        assert_eq!(g.out[0], vec![(1, 2.0)]);
+        assert_eq!(g.rin[1], vec![(0, 2.0)]);
+        assert_eq!(g.m, 1);
+        assert_eq!(g.total_weight(), 2.0);
+    }
+
+    #[test]
+    fn social_network_counts() {
+        let g = social_network(1899, 20_296, 42);
+        assert_eq!(g.n, 1899);
+        assert_eq!(g.m, 20_296);
+    }
+
+    #[test]
+    fn social_network_deterministic() {
+        let a = social_network(200, 1000, 5);
+        let b = social_network(200, 1000, 5);
+        assert_eq!(a.m, b.m);
+        assert_eq!(a.out[0], b.out[0]);
+    }
+
+    #[test]
+    fn social_network_heavy_tail() {
+        let g = social_network(1000, 10_000, 9);
+        let mut degs: Vec<usize> = (0..g.n).map(|u| g.degree(u)).collect();
+        degs.sort_unstable_by(|a, b| b.cmp(a));
+        // top 1% of nodes should hold well above their uniform share
+        let top: usize = degs[..10].iter().sum();
+        let total: usize = degs.iter().sum();
+        // top 1% of nodes hold >= 3x their uniform share of degree
+        assert!(
+            top as f64 > 0.03 * total as f64,
+            "no skew: top10={top}, total={total}"
+        );
+    }
+
+    #[test]
+    fn no_self_loops_or_duplicates() {
+        let g = social_network(100, 500, 11);
+        let mut seen = std::collections::HashSet::new();
+        for u in 0..g.n {
+            for &(v, _) in &g.out[u] {
+                assert_ne!(u, v, "self loop");
+                assert!(seen.insert((u, v)), "duplicate edge {u}->{v}");
+            }
+        }
+    }
+}

@@ -1,0 +1,149 @@
+//! Dataset persistence: CSV read/write for point sets so synthetic corpora
+//! can be cached across runs (and real data dropped in without code
+//! changes — the paper's workflows all start from on-disk feature files).
+//!
+//! Format: plain headerless CSV, one row per point, f32 values. Loading
+//! validates rectangularity and finiteness.
+
+use std::io::{BufRead, BufWriter, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::Dataset;
+
+/// Write a dataset as headerless CSV.
+pub fn save_csv(ds: &Dataset, path: &Path) -> Result<()> {
+    let file = std::fs::File::create(path).with_context(|| format!("create {path:?}"))?;
+    let mut w = BufWriter::new(file);
+    for i in 0..ds.n {
+        let row = ds.row(i);
+        for (t, v) in row.iter().enumerate() {
+            if t > 0 {
+                w.write_all(b",")?;
+            }
+            write!(w, "{v}")?;
+        }
+        w.write_all(b"\n")?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Load a headerless CSV of f32 rows.
+pub fn load_csv(path: &Path) -> Result<Dataset> {
+    let file = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+    let reader = std::io::BufReader::new(file);
+    let mut xs: Vec<f32> = Vec::new();
+    let mut d = 0usize;
+    let mut n = 0usize;
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line?;
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        let mut count = 0usize;
+        for tok in trimmed.split(',') {
+            let v: f32 = tok
+                .trim()
+                .parse()
+                .with_context(|| format!("{path:?}:{}: bad value {tok:?}", lineno + 1))?;
+            if !v.is_finite() {
+                bail!("{path:?}:{}: non-finite value", lineno + 1);
+            }
+            xs.push(v);
+            count += 1;
+        }
+        if n == 0 {
+            d = count;
+        } else if count != d {
+            bail!(
+                "{path:?}:{}: ragged row ({count} cols, expected {d})",
+                lineno + 1
+            );
+        }
+        n += 1;
+    }
+    if n == 0 {
+        bail!("{path:?}: empty dataset");
+    }
+    Ok(Dataset { n, d, xs })
+}
+
+/// Load from cache if present, else generate and cache. The workhorse for
+/// `--full`-scale experiment reruns.
+pub fn load_or_generate(path: &Path, generate: impl FnOnce() -> Dataset) -> Result<Dataset> {
+    if path.exists() {
+        return load_csv(path);
+    }
+    let ds = generate();
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    save_csv(&ds, path)?;
+    Ok(ds)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{gaussian_blobs, SynthConfig};
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("greedi_loader_{name}.csv"))
+    }
+
+    #[test]
+    fn roundtrip_exact() {
+        let ds = gaussian_blobs(&SynthConfig::tiny_images(50, 6), 3);
+        let p = tmp("roundtrip");
+        save_csv(&ds, &p).unwrap();
+        let back = load_csv(&p).unwrap();
+        assert_eq!(back.n, ds.n);
+        assert_eq!(back.d, ds.d);
+        // f32 → decimal → f32 is exact for shortest-roundtrip formatting
+        assert_eq!(back.xs, ds.xs);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn ragged_rejected() {
+        let p = tmp("ragged");
+        std::fs::write(&p, "1,2,3\n4,5\n").unwrap();
+        assert!(load_csv(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn bad_value_rejected() {
+        let p = tmp("bad");
+        std::fs::write(&p, "1,2\n3,abc\n").unwrap();
+        assert!(load_csv(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn empty_rejected() {
+        let p = tmp("empty");
+        std::fs::write(&p, "\n\n").unwrap();
+        assert!(load_csv(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn load_or_generate_caches() {
+        let p = tmp("cache");
+        std::fs::remove_file(&p).ok();
+        let mut calls = 0;
+        let a = load_or_generate(&p, || {
+            calls += 1;
+            gaussian_blobs(&SynthConfig::tiny_images(20, 4), 1)
+        })
+        .unwrap();
+        assert_eq!(calls, 1);
+        let b = load_or_generate(&p, || unreachable!("must hit cache")).unwrap();
+        assert_eq!(a.xs, b.xs);
+        std::fs::remove_file(&p).ok();
+    }
+}

@@ -1,0 +1,180 @@
+//! Datasets: dense point sets, graphs and transaction (set-system) data,
+//! plus the synthetic generators that stand in for the paper's corpora
+//! (Tiny Images, Parkinsons Telemonitoring, Yahoo! Front Page, the UCI
+//! social network, Accidents and Kosarak — see DESIGN.md §3 for the
+//! substitution rationale).
+
+pub mod graph;
+pub mod loader;
+pub mod synth;
+pub mod transactions;
+
+/// Dense row-major point set: `n` points in `d` dimensions, f32 (matching
+/// the artifact dtype so shard blocks upload without conversion).
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub n: usize,
+    pub d: usize,
+    pub xs: Vec<f32>, // row-major n*d
+}
+
+impl Dataset {
+    pub fn zeros(n: usize, d: usize) -> Self {
+        Dataset { n, d, xs: vec![0.0; n * d] }
+    }
+
+    pub fn from_rows(rows: Vec<Vec<f32>>) -> Self {
+        let n = rows.len();
+        let d = rows.first().map(|r| r.len()).unwrap_or(0);
+        let mut xs = Vec::with_capacity(n * d);
+        for r in &rows {
+            assert_eq!(r.len(), d, "ragged rows");
+            xs.extend_from_slice(r);
+        }
+        Dataset { n, d, xs }
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.xs[i * self.d..(i + 1) * self.d]
+    }
+
+    /// All element ids `0..n` (the ground set `V`).
+    pub fn ids(&self) -> Vec<usize> {
+        (0..self.n).collect()
+    }
+
+    /// Squared Euclidean distance between points `i` and `j`.
+    #[inline]
+    pub fn sqdist(&self, i: usize, j: usize) -> f64 {
+        let (a, b) = (self.row(i), self.row(j));
+        let mut s = 0.0f64;
+        for t in 0..self.d {
+            let diff = (a[t] - b[t]) as f64;
+            s += diff * diff;
+        }
+        s
+    }
+
+    /// Squared distance from point `i` to an arbitrary vector.
+    #[inline]
+    pub fn sqdist_to(&self, i: usize, v: &[f32]) -> f64 {
+        let a = self.row(i);
+        let mut s = 0.0f64;
+        for t in 0..self.d {
+            let diff = (a[t] - v[t]) as f64;
+            s += diff * diff;
+        }
+        s
+    }
+
+    /// Subtract the dataset mean from every row (paper §6.1 preprocessing).
+    pub fn center(&mut self) {
+        let mut mean = vec![0.0f64; self.d];
+        for i in 0..self.n {
+            for (t, m) in mean.iter_mut().enumerate() {
+                *m += self.row(i)[t] as f64;
+            }
+        }
+        for m in &mut mean {
+            *m /= self.n.max(1) as f64;
+        }
+        for i in 0..self.n {
+            for t in 0..self.d {
+                self.xs[i * self.d + t] -= mean[t] as f32;
+            }
+        }
+    }
+
+    /// L2-normalize every row (paper §6.1/§6.2 preprocessing). Zero rows
+    /// are left untouched.
+    pub fn normalize_rows(&mut self) {
+        for i in 0..self.n {
+            let norm: f64 = self.row(i).iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt();
+            if norm > 1e-12 {
+                for t in 0..self.d {
+                    self.xs[i * self.d + t] /= norm as f32;
+                }
+            }
+        }
+    }
+
+    /// Maximum squared distance between any point and the origin — used to
+    /// validate the phantom-exemplar condition (paper §3.4.2).
+    pub fn max_sqnorm(&self) -> f64 {
+        (0..self.n)
+            .map(|i| self.row(i).iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>())
+            .fold(0.0, f64::max)
+    }
+
+    /// Restrict to a subset of rows (used to materialize shards).
+    pub fn subset(&self, idx: &[usize]) -> Dataset {
+        let mut xs = Vec::with_capacity(idx.len() * self.d);
+        for &i in idx {
+            xs.extend_from_slice(self.row(i));
+        }
+        Dataset { n: idx.len(), d: self.d, xs }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> Dataset {
+        Dataset::from_rows(vec![
+            vec![0.0, 0.0],
+            vec![3.0, 4.0],
+            vec![1.0, 1.0],
+        ])
+    }
+
+    #[test]
+    fn row_access_and_sqdist() {
+        let ds = small();
+        assert_eq!(ds.row(1), &[3.0, 4.0]);
+        assert!((ds.sqdist(0, 1) - 25.0).abs() < 1e-9);
+        assert!((ds.sqdist(1, 1)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sqdist_symmetry() {
+        let ds = small();
+        assert_eq!(ds.sqdist(0, 2), ds.sqdist(2, 0));
+    }
+
+    #[test]
+    fn center_zeroes_mean() {
+        let mut ds = small();
+        ds.center();
+        for t in 0..ds.d {
+            let mean: f32 = (0..ds.n).map(|i| ds.row(i)[t]).sum::<f32>() / ds.n as f32;
+            assert!(mean.abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn normalize_rows_unit_norm() {
+        let mut ds = small();
+        ds.normalize_rows();
+        // row 0 is zero and stays zero
+        assert_eq!(ds.row(0), &[0.0, 0.0]);
+        let norm: f32 = ds.row(1).iter().map(|x| x * x).sum::<f32>();
+        assert!((norm - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn subset_preserves_rows() {
+        let ds = small();
+        let sub = ds.subset(&[2, 0]);
+        assert_eq!(sub.n, 2);
+        assert_eq!(sub.row(0), ds.row(2));
+        assert_eq!(sub.row(1), ds.row(0));
+    }
+
+    #[test]
+    #[should_panic]
+    fn ragged_rows_rejected() {
+        Dataset::from_rows(vec![vec![1.0], vec![1.0, 2.0]]);
+    }
+}

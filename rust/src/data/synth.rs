@@ -1,0 +1,200 @@
+//! Synthetic point-cloud generators standing in for the paper's corpora.
+//!
+//! * [`gaussian_blobs`] — cluster-structured data (Tiny-Images surrogate):
+//!   exemplar clustering only observes pairwise distances, so a Gaussian
+//!   mixture with well-populated clusters exercises the identical code path
+//!   and satisfies the dense-neighborhood condition of Theorem 8.
+//! * [`parkinsons_like`] — 22-d correlated Gaussian rows, zero-mean and
+//!   row-normalized like the paper's preprocessing (§6.2).
+//! * [`yahoo_like`] — 6-d non-negative user-feature vectors (§6.2, Fig 7).
+
+use super::Dataset;
+use crate::util::rng::Rng;
+
+/// Configuration for the Gaussian-mixture generator.
+#[derive(Debug, Clone)]
+pub struct SynthConfig {
+    pub n: usize,
+    pub d: usize,
+    pub clusters: usize,
+    /// Std of cluster centers around the origin.
+    pub center_spread: f64,
+    /// Std of points around their cluster center.
+    pub cluster_std: f64,
+    /// Apply mean-subtraction + row normalization (paper §6.1 pipeline).
+    pub preprocess: bool,
+}
+
+impl SynthConfig {
+    /// Tiny-Images-like preset: clustered, centered, unit-norm rows.
+    pub fn tiny_images(n: usize, d: usize) -> Self {
+        SynthConfig {
+            n,
+            d,
+            clusters: 10,
+            center_spread: 3.0,
+            cluster_std: 1.0,
+            preprocess: true,
+        }
+    }
+
+    /// Uniform cloud with no cluster structure (worst-case-ish inputs).
+    pub fn unstructured(n: usize, d: usize) -> Self {
+        SynthConfig {
+            n,
+            d,
+            clusters: 1,
+            center_spread: 0.0,
+            cluster_std: 1.0,
+            preprocess: false,
+        }
+    }
+}
+
+/// Gaussian mixture with `clusters` components.
+pub fn gaussian_blobs(cfg: &SynthConfig, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let mut centers = vec![0.0f64; cfg.clusters * cfg.d];
+    for c in centers.iter_mut() {
+        *c = rng.normal_ms(0.0, cfg.center_spread);
+    }
+    let mut ds = Dataset::zeros(cfg.n, cfg.d);
+    for i in 0..cfg.n {
+        let c = rng.below(cfg.clusters);
+        for t in 0..cfg.d {
+            let mu = centers[c * cfg.d + t];
+            ds.xs[i * cfg.d + t] = rng.normal_ms(mu, cfg.cluster_std) as f32;
+        }
+    }
+    if cfg.preprocess {
+        ds.center();
+        ds.normalize_rows();
+    }
+    ds
+}
+
+/// Parkinsons-Telemonitoring-like data: `n` rows of `d` correlated
+/// Gaussian features (a few latent factors), zero-mean, unit-norm — the
+/// paper's exact preprocessing for the GP active-set experiment.
+pub fn parkinsons_like(n: usize, d: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let factors = 4.min(d);
+    // random loading matrix L (d x factors)
+    let mut loading = vec![0.0f64; d * factors];
+    for l in loading.iter_mut() {
+        *l = rng.normal();
+    }
+    let mut ds = Dataset::zeros(n, d);
+    for i in 0..n {
+        let z: Vec<f64> = (0..factors).map(|_| rng.normal()).collect();
+        for t in 0..d {
+            let mut v = 0.25 * rng.normal(); // idiosyncratic noise
+            for (f, zf) in z.iter().enumerate() {
+                v += loading[t * factors + f] * zf;
+            }
+            ds.xs[i * d + t] = v as f32;
+        }
+    }
+    ds.center();
+    ds.normalize_rows();
+    ds
+}
+
+/// Yahoo!-Front-Page-like user features: 6-d, non-negative, normalized
+/// (the released dataset's features are simplex-like).
+pub fn yahoo_like(n: usize, seed: u64) -> Dataset {
+    let d = 6;
+    let mut rng = Rng::new(seed);
+    let mut ds = Dataset::zeros(n, d);
+    for i in 0..n {
+        let mut row = [0.0f64; 6];
+        let mut sum = 0.0;
+        for r in row.iter_mut() {
+            // mixture of sparse near-zero mass and a few active features
+            *r = if rng.bool(0.4) { rng.f64() } else { 0.02 * rng.f64() };
+            sum += *r;
+        }
+        for (t, r) in row.iter().enumerate() {
+            ds.xs[i * d + t] = (r / sum.max(1e-9)) as f32;
+        }
+    }
+    ds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn blobs_shape_and_determinism() {
+        let cfg = SynthConfig::tiny_images(500, 16);
+        let a = gaussian_blobs(&cfg, 7);
+        let b = gaussian_blobs(&cfg, 7);
+        assert_eq!(a.n, 500);
+        assert_eq!(a.d, 16);
+        assert_eq!(a.xs, b.xs);
+        let c = gaussian_blobs(&cfg, 8);
+        assert_ne!(a.xs, c.xs);
+    }
+
+    #[test]
+    fn blobs_preprocessed_unit_norm() {
+        let ds = gaussian_blobs(&SynthConfig::tiny_images(200, 8), 1);
+        for i in 0..ds.n {
+            let norm: f64 = ds.row(i).iter().map(|&x| (x as f64).powi(2)).sum();
+            assert!((norm - 1.0).abs() < 1e-4 || norm < 1e-8, "row {i}: {norm}");
+        }
+    }
+
+    #[test]
+    fn blobs_have_cluster_structure() {
+        // With 10 tight clusters, the mean nearest-neighbor distance must be
+        // far below the mean pairwise distance.
+        let cfg = SynthConfig {
+            n: 300,
+            d: 8,
+            clusters: 5,
+            center_spread: 10.0,
+            cluster_std: 0.5,
+            preprocess: false,
+        };
+        let ds = gaussian_blobs(&cfg, 3);
+        let mut nn = 0.0;
+        let mut all = 0.0;
+        let mut cnt = 0.0;
+        for i in 0..100 {
+            let mut best = f64::INFINITY;
+            for j in 0..ds.n {
+                if i == j {
+                    continue;
+                }
+                let d2 = ds.sqdist(i, j);
+                best = best.min(d2);
+                all += d2;
+                cnt += 1.0;
+            }
+            nn += best;
+        }
+        assert!(nn / 100.0 < 0.2 * (all / cnt));
+    }
+
+    #[test]
+    fn parkinsons_like_preprocessed() {
+        let ds = parkinsons_like(100, 22, 5);
+        assert_eq!(ds.d, 22);
+        // rows unit-norm
+        let norm: f64 = ds.row(0).iter().map(|&x| (x as f64).powi(2)).sum();
+        assert!((norm - 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn yahoo_like_nonneg_normalized() {
+        let ds = yahoo_like(100, 2);
+        assert_eq!(ds.d, 6);
+        for i in 0..ds.n {
+            let sum: f32 = ds.row(i).iter().sum();
+            assert!((sum - 1.0).abs() < 1e-4);
+            assert!(ds.row(i).iter().all(|&x| x >= 0.0));
+        }
+    }
+}

@@ -1,0 +1,135 @@
+//! Transaction (set-system) data for the submodular-coverage experiment
+//! (paper §6.4: Accidents — 340,183 transactions, 468 items; Kosarak —
+//! 990,002 transactions, 41,270 items). The generators below produce
+//! scaled-down instances with matching shape: heavy-tailed item frequencies
+//! (Zipf), transaction lengths matching each corpus's mean (Accidents is
+//! dense/long, Kosarak sparse/short).
+
+use crate::util::rng::{Rng, ZipfSampler};
+
+/// A collection of transactions; element `i` of the ground set is the i-th
+/// transaction (a set of item ids). Coverage of `S` = |union of S's items|.
+#[derive(Debug, Clone)]
+pub struct TransactionData {
+    pub n_items: usize,
+    pub transactions: Vec<Vec<u32>>,
+}
+
+impl TransactionData {
+    pub fn n(&self) -> usize {
+        self.transactions.len()
+    }
+
+    /// Union size of a set of transaction ids (reference implementation).
+    pub fn union_size(&self, ids: &[usize]) -> usize {
+        let mut seen = vec![false; self.n_items];
+        let mut count = 0;
+        for &t in ids {
+            for &it in &self.transactions[t] {
+                if !seen[it as usize] {
+                    seen[it as usize] = true;
+                    count += 1;
+                }
+            }
+        }
+        count
+    }
+}
+
+/// Zipf-popularity transaction generator.
+///
+/// * `n` transactions over `n_items` items;
+/// * lengths ~ `mean_len` (geometric-ish, at least 1);
+/// * item draws Zipf(`skew`) so a few items are near-universal — the same
+///   structure that makes greedy coverage saturate quickly on Accidents.
+pub fn zipf_transactions(
+    n: usize,
+    n_items: usize,
+    mean_len: usize,
+    skew: f64,
+    seed: u64,
+) -> TransactionData {
+    let mut rng = Rng::new(seed);
+    let sampler = ZipfSampler::new(n_items, skew);
+    let mut transactions = Vec::with_capacity(n);
+    for _ in 0..n {
+        // geometric length with the given mean, clamped to [1, 4*mean]
+        let mut len = 1usize;
+        let p = 1.0 / mean_len as f64;
+        while !rng.bool(p) && len < mean_len * 4 {
+            len += 1;
+        }
+        let mut items: Vec<u32> = Vec::with_capacity(len);
+        for _ in 0..len {
+            items.push(sampler.sample(&mut rng) as u32);
+        }
+        items.sort_unstable();
+        items.dedup();
+        transactions.push(items);
+    }
+    TransactionData { n_items, transactions }
+}
+
+/// Accidents-like instance (dense: 468 items, ~34 items/transaction),
+/// scaled 10x down from the 340,183-transaction original by default.
+pub fn accidents_like(n: usize, seed: u64) -> TransactionData {
+    zipf_transactions(n, 468, 34, 1.05, seed)
+}
+
+/// Kosarak-like instance (sparse: 41,270 items, ~8 items/transaction),
+/// scaled 10x down from the 990,002-transaction original by default.
+pub fn kosarak_like(n: usize, seed: u64) -> TransactionData {
+    zipf_transactions(n, 41_270, 8, 1.3, seed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generator_shapes() {
+        let td = zipf_transactions(1000, 100, 10, 1.1, 3);
+        assert_eq!(td.n(), 1000);
+        assert!(td.transactions.iter().all(|t| !t.is_empty()));
+        assert!(td
+            .transactions
+            .iter()
+            .all(|t| t.iter().all(|&i| (i as usize) < 100)));
+    }
+
+    #[test]
+    fn items_deduped_and_sorted() {
+        let td = zipf_transactions(200, 50, 20, 1.5, 4);
+        for t in &td.transactions {
+            for w in t.windows(2) {
+                assert!(w[0] < w[1]);
+            }
+        }
+    }
+
+    #[test]
+    fn union_size_monotone() {
+        let td = accidents_like(500, 5);
+        let u1 = td.union_size(&[0, 1]);
+        let u2 = td.union_size(&[0, 1, 2, 3]);
+        assert!(u2 >= u1);
+        assert!(u2 <= td.n_items);
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = kosarak_like(300, 6);
+        let b = kosarak_like(300, 6);
+        assert_eq!(a.transactions, b.transactions);
+    }
+
+    #[test]
+    fn accidents_denser_than_kosarak() {
+        let a = accidents_like(500, 7);
+        let k = kosarak_like(500, 7);
+        let mean = |td: &TransactionData| {
+            td.transactions.iter().map(|t| t.len()).sum::<usize>() as f64 / td.n() as f64
+        };
+        assert!(mean(&a) > mean(&k));
+    }
+}

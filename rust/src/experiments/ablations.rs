@@ -1,0 +1,123 @@
+//! Ablations of GreeDi's design choices (the knobs DESIGN.md calls out):
+//!
+//! * **partition strategy** — random (theory's assumption) vs balanced vs
+//!   contiguous: how much does Theorem 8/11's randomization actually buy?
+//! * **per-machine algorithm** — lazy greedy vs stochastic greedy vs
+//!   sieve-streaming as Algorithm 3's black box `X`;
+//! * **α = κ/k over-selection** — the paper's Fig. 4 knob, isolated;
+//! * **flat 2-round vs tree reduction** — the multi-round extension's
+//!   quality/communication/rounds trade-off.
+
+use std::sync::Arc;
+
+use super::{ExpOpts, FigureReport};
+use crate::coordinator::greedi::{centralized, Greedi, GreediConfig, PartitionStrategy};
+use crate::coordinator::multiround::{MultiRoundConfig, MultiRoundGreedi};
+use crate::coordinator::FacilityProblem;
+use crate::data::synth::{gaussian_blobs, SynthConfig};
+use crate::util::stats::summarize;
+use crate::util::table::Table;
+
+pub fn run(opts: &ExpOpts) -> FigureReport {
+    let n = opts.size(2_000, 10_000);
+    let ds = Arc::new(gaussian_blobs(&SynthConfig::tiny_images(n, 16), opts.seed));
+    let problem = FacilityProblem::new(&ds);
+    let (m, k) = (8, 20.min(n / 20).max(4));
+    let central = centralized(&problem, k, "lazy", opts.seed).value;
+    let trials = opts.trials;
+    let mut body = format!("ablation workload: tiny-images n={n}, m={m}, k={k}, trials={trials}\n\n");
+
+    let ratio_of = |mk: &dyn Fn(u64) -> f64| -> (f64, f64) {
+        let vals: Vec<f64> = (0..trials as u64)
+            .map(|s| mk(opts.seed.wrapping_add(s * 101)) / central)
+            .collect();
+        let st = summarize(&vals);
+        (st.mean, st.std)
+    };
+
+    // ---- partition strategy ---------------------------------------------
+    let mut t = Table::new("ablation: partition strategy", &["strategy", "ratio"]);
+    for (label, strat) in [
+        ("random", PartitionStrategy::Random),
+        ("balanced", PartitionStrategy::Balanced),
+        ("contiguous", PartitionStrategy::Contiguous),
+    ] {
+        let (mean, std) = ratio_of(&|s| {
+            Greedi::new(GreediConfig::new(m, k).partition(strat))
+                .run(&problem, s)
+                .value
+        });
+        t.row(&[label.into(), format!("{mean:.4}±{std:.4}")]);
+    }
+    body.push_str(&t.render());
+    body.push('\n');
+
+    // ---- per-machine black box --------------------------------------------
+    let mut t = Table::new(
+        "ablation: Algorithm 3 black box X",
+        &["algorithm", "ratio", "oracle calls"],
+    );
+    for algo in ["greedy", "lazy", "stochastic", "sieve_streaming"] {
+        let run = Greedi::new(GreediConfig::new(m, k).algorithm(algo)).run(&problem, opts.seed);
+        t.row(&[
+            algo.into(),
+            format!("{:.4}", run.value / central),
+            run.oracle_calls.to_string(),
+        ]);
+    }
+    body.push_str(&t.render());
+    body.push('\n');
+
+    // ---- α = κ/k ------------------------------------------------------------
+    let mut t = Table::new("ablation: over-selection α = κ/k", &["α", "ratio", "comm (ids)"]);
+    for alpha in [0.25, 0.5, 1.0, 2.0, 4.0] {
+        let run = Greedi::new(GreediConfig::new(m, k).alpha(alpha)).run(&problem, opts.seed);
+        t.row(&[
+            format!("{alpha}"),
+            format!("{:.4}", run.value / central),
+            run.job.shuffled_elements.to_string(),
+        ]);
+    }
+    body.push_str(&t.render());
+    body.push('\n');
+
+    // ---- flat vs tree --------------------------------------------------------
+    let mut t = Table::new(
+        "ablation: flat 2-round vs tree reduction (m=16)",
+        &["protocol", "ratio", "rounds", "max comm per sync"],
+    );
+    let flat = Greedi::new(GreediConfig::new(16, k)).run(&problem, opts.seed);
+    t.row(&[
+        "flat (1 merge point)".into(),
+        format!("{:.4}", flat.value / central),
+        flat.rounds.to_string(),
+        flat.job.shuffled_elements.to_string(),
+    ]);
+    for fanout in [2, 4] {
+        let tree = MultiRoundGreedi::new(MultiRoundConfig::new(16, k, fanout)).run(&problem, opts.seed);
+        t.row(&[
+            format!("tree fanout={fanout}"),
+            format!("{:.4}", tree.value / central),
+            tree.rounds.to_string(),
+            (fanout * k).to_string(),
+        ]);
+    }
+    body.push_str(&t.render());
+
+    FigureReport { id: "ablations".into(), body }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ablation_report_complete() {
+        let opts = ExpOpts { n: Some(200), trials: 1, ..Default::default() };
+        let rep = run(&opts);
+        assert!(rep.body.contains("partition strategy"));
+        assert!(rep.body.contains("black box X"));
+        assert!(rep.body.contains("over-selection"));
+        assert!(rep.body.contains("tree reduction"));
+    }
+}

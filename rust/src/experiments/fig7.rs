@@ -1,0 +1,55 @@
+//! Figure 7 — large-scale active-set selection on Yahoo! Front Page user
+//! visits (§6.2): 45.8M 6-dimensional user feature vectors on Spark with
+//! m = 32 reducers, k up to 256, information-gain objective.
+//!
+//! Scaled substitution: n = 5,000 (fast) / 45,811 (--full, 1000× down),
+//! identical d = 6 and m = 32.
+
+use std::sync::Arc;
+
+use super::{central_ref, render_sweep, suite_ratios, ExpOpts, FigureReport};
+use crate::coordinator::InfoGainProblem;
+use crate::data::synth::yahoo_like;
+
+pub fn run(opts: &ExpOpts) -> FigureReport {
+    let n = opts.size(5_000, 45_811);
+    let ds = Arc::new(yahoo_like(n, opts.seed));
+    let problem = InfoGainProblem::paper_params(&ds);
+
+    let m = 32;
+    let ks: Vec<usize> = if opts.full {
+        vec![16, 32, 64, 128, 256]
+    } else {
+        vec![16, 32, 64, 128]
+    };
+
+    let rows: Vec<_> = ks
+        .iter()
+        .map(|&k| {
+            let (cv, _) = central_ref(&problem, k, "lazy", opts.seed);
+            suite_ratios(&problem, m, k, &[1.0], false, "lazy", opts.trials, opts.seed, cv)
+        })
+        .collect();
+
+    let mut body = format!("yahoo-webscope surrogate: n={n}, d=6, m={m}, trials={}\n\n", opts.trials);
+    body.push_str(&render_sweep(
+        &format!("Fig 7: ratio vs k (m={m}, info-gain, Yahoo-like)"),
+        "k",
+        &ks,
+        &rows,
+    ));
+    FigureReport { id: "fig7".into(), body }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_run() {
+        let opts = ExpOpts { n: Some(300), trials: 1, ..Default::default() };
+        let rep = run(&opts);
+        assert!(rep.body.contains("Fig 7"));
+        assert!(rep.body.contains("greedi"));
+    }
+}

@@ -1,0 +1,77 @@
+//! Figure 8 — GreeDi speedup vs the centralized greedy (§6.2, Yahoo!
+//! webscope workload): simulated-parallel GreeDi time (max round-1 task +
+//! round-2 task) against the centralized single-machine time.
+//!
+//! * (a) k ∈ {64, 128, 256}, m ≤ 32 — near-linear speedup regime;
+//! * (b) same ks, m ≤ 512 — the round-2 merge (m·κ candidates) grows with
+//!   m and eventually dominates, rolling the speedup curve over. Larger k
+//!   shifts the rollover left (the paper's exact observation).
+//!
+//! The simulated cluster clock comes from `mapreduce::JobReport`: each map
+//! task's wallclock is measured in isolation, so `max + merge` is the
+//! 2-round protocol's critical path on an ideal m-machine cluster.
+
+use std::sync::Arc;
+
+use super::{ExpOpts, FigureReport};
+use crate::coordinator::greedi::{centralized, Greedi, GreediConfig};
+use crate::coordinator::InfoGainProblem;
+use crate::data::synth::yahoo_like;
+use crate::util::table::Table;
+
+pub fn run(opts: &ExpOpts) -> FigureReport {
+    let n = opts.size(8_000, 45_811);
+    let ds = Arc::new(yahoo_like(n, opts.seed));
+    let problem = InfoGainProblem::paper_params(&ds);
+
+    let ks: Vec<usize> = if opts.full { vec![64, 128, 256] } else { vec![32, 64, 128] };
+    let ms_a: Vec<usize> = vec![2, 4, 8, 16, 32];
+    let ms_b: Vec<usize> = vec![32, 64, 128, 256, 512];
+
+    let mut body = format!("speedup workload: yahoo-like n={n}, d=6 (info-gain, lazy greedy)\n\n");
+
+    for (part, ms) in [("a", &ms_a), ("b", &ms_b)] {
+        if !opts.wants(part) {
+            continue;
+        }
+        let mut headers: Vec<String> = vec!["m".into()];
+        for &k in &ks {
+            headers.push(format!("speedup(k={k})"));
+        }
+        let hdr_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+        let mut t = Table::new(
+            &format!("Fig 8{part}: simulated speedup vs m (centralized time / GreeDi time)"),
+            &hdr_refs,
+        );
+        // centralized reference times per k
+        let central: Vec<f64> = ks
+            .iter()
+            .map(|&k| centralized(&problem, k, "lazy", opts.seed).sim_time())
+            .collect();
+        for &m in ms {
+            let mut cells = vec![m.to_string()];
+            for (ki, &k) in ks.iter().enumerate() {
+                let run = Greedi::new(GreediConfig::new(m, k)).run(&problem, opts.seed);
+                cells.push(format!("{:.2}", run.speedup_vs(central[ki])));
+            }
+            t.row(&cells);
+        }
+        body.push_str(&t.render());
+        body.push('\n');
+    }
+
+    FigureReport { id: "fig8".into(), body }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_speedup_table() {
+        let opts = ExpOpts { n: Some(500), trials: 1, part: "a".into(), ..Default::default() };
+        let rep = run(&opts);
+        assert!(rep.body.contains("Fig 8a"));
+        assert!(rep.body.contains("speedup"));
+    }
+}

@@ -1,0 +1,84 @@
+//! Figure 9 — non-monotone maximization: finding maximum cuts on a
+//! Facebook-like social network (§6.3; 1,899 users, 20,296 directed ties,
+//! RandomGreedy of Buchbinder et al. 2014 on each partition, objective
+//! evaluated locally so cross-partition links are disconnected).
+//!
+//! * (a) k = 20, m ∈ {2..10};
+//! * (b) m = 10, k ∈ {5..60}.
+
+use std::sync::Arc;
+
+use super::{central_ref, render_sweep, suite_ratios, ExpOpts, FigureReport};
+use crate::coordinator::CutProblem;
+use crate::data::graph::social_network;
+
+pub fn run(opts: &ExpOpts) -> FigureReport {
+    // Paper-matching graph size by default — the cut objective is cheap.
+    let n = opts.size(1_899, 1_899);
+    let edges = if n == 1_899 { 20_296 } else { n * 10 };
+    let g = Arc::new(social_network(n, edges, opts.seed));
+    let problem = CutProblem::new(&g);
+
+    let ms: Vec<usize> = vec![2, 4, 6, 8, 10];
+    let ks: Vec<usize> = vec![5, 10, 20, 40, 60];
+    let k_fixed = 20;
+    let m_fixed = 10;
+
+    let mut body = format!(
+        "social-graph surrogate: n={n}, edges={edges}, RandomGreedy, local evaluation, trials={}\n\n",
+        opts.trials
+    );
+
+    if opts.wants("a") {
+        let (cv, _) = central_ref(&problem, k_fixed, "random_greedy", opts.seed);
+        let rows: Vec<_> = ms
+            .iter()
+            .map(|&m| {
+                suite_ratios(
+                    &problem, m, k_fixed, &[1.0], true, "random_greedy", opts.trials, opts.seed, cv,
+                )
+            })
+            .collect();
+        body.push_str(&render_sweep(
+            &format!("Fig 9a: ratio vs m (k={k_fixed}, max-cut)"),
+            "m",
+            &ms,
+            &rows,
+        ));
+        body.push('\n');
+    }
+
+    if opts.wants("b") {
+        let rows: Vec<_> = ks
+            .iter()
+            .map(|&k| {
+                let (cv, _) = central_ref(&problem, k, "random_greedy", opts.seed);
+                suite_ratios(
+                    &problem, m_fixed, k, &[1.0], true, "random_greedy", opts.trials, opts.seed, cv,
+                )
+            })
+            .collect();
+        body.push_str(&render_sweep(
+            &format!("Fig 9b: ratio vs k (m={m_fixed}, max-cut)"),
+            "k",
+            &ks,
+            &rows,
+        ));
+        body.push('\n');
+    }
+
+    FigureReport { id: "fig9".into(), body }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_run_both_parts() {
+        let opts = ExpOpts { n: Some(150), trials: 1, ..Default::default() };
+        let rep = run(&opts);
+        assert!(rep.body.contains("Fig 9a"));
+        assert!(rep.body.contains("Fig 9b"));
+    }
+}

@@ -1,0 +1,200 @@
+//! Experiment harnesses — one module per figure in the paper's §6, plus a
+//! theory-validation experiment for the bounds of §4. Each harness prints
+//! (and returns) the same rows/series the paper's figure plots: the ratio
+//! of the distributed to the centralized solution, per protocol, as m, k
+//! or α sweeps.
+//!
+//! Default sizes are scaled down from the paper's corpora so the full suite
+//! runs in minutes on one core (see DESIGN.md §3 for the substitutions);
+//! `--full` or explicit `--n` lifts them toward paper scale.
+
+pub mod ablations;
+pub mod fig10;
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+pub mod fig7;
+pub mod fig8;
+pub mod fig9;
+pub mod theory;
+
+use std::collections::BTreeMap;
+
+use crate::coordinator::baselines::Baseline;
+use crate::coordinator::greedi::{centralized, Greedi, GreediConfig};
+use crate::coordinator::Problem;
+use crate::util::stats::summarize;
+use crate::util::table::Table;
+
+/// Common experiment options (CLI-overridable).
+#[derive(Debug, Clone)]
+pub struct ExpOpts {
+    /// Ground-set size override (each figure has its own default).
+    pub n: Option<usize>,
+    pub trials: usize,
+    pub seed: u64,
+    /// Use the XLA facility-gain backend where applicable.
+    pub xla: bool,
+    /// Lift sizes toward paper scale.
+    pub full: bool,
+    /// Figure sub-part selector ("a", "b", …; empty = all).
+    pub part: String,
+}
+
+impl Default for ExpOpts {
+    fn default() -> Self {
+        ExpOpts { n: None, trials: 3, seed: 42, xla: false, full: false, part: String::new() }
+    }
+}
+
+impl ExpOpts {
+    pub fn size(&self, fast: usize, full: usize) -> usize {
+        self.n.unwrap_or(if self.full { full } else { fast })
+    }
+
+    pub fn wants(&self, part: &str) -> bool {
+        self.part.is_empty() || self.part == part
+    }
+}
+
+/// One sweep point: protocol label → per-trial ratios vs centralized.
+pub type RatioRows = BTreeMap<String, Vec<f64>>;
+
+/// Run the full protocol suite (GreeDi per α + the 4 baselines) at one
+/// (m, k) setting and collect distributed/centralized value ratios.
+#[allow(clippy::too_many_arguments)]
+pub fn suite_ratios(
+    problem: &dyn Problem,
+    m: usize,
+    k: usize,
+    alphas: &[f64],
+    local: bool,
+    algorithm: &str,
+    trials: usize,
+    seed: u64,
+    central_value: f64,
+) -> RatioRows {
+    let mut rows: RatioRows = BTreeMap::new();
+    for t in 0..trials {
+        let s = seed.wrapping_add(t as u64).wrapping_mul(0x9E37_79B9);
+        for &alpha in alphas {
+            let mut cfg = GreediConfig::new(m, k).alpha(alpha).algorithm(algorithm);
+            if local {
+                cfg = cfg.local();
+            }
+            let run = Greedi::new(cfg).run(problem, s);
+            let label = if alphas.len() == 1 {
+                "greedi".to_string()
+            } else {
+                format!("greedi(α={alpha})")
+            };
+            rows.entry(label).or_default().push(run.ratio_vs(central_value));
+        }
+        for b in Baseline::ALL {
+            let run = b.run(problem, m, k, local, algorithm, s);
+            rows.entry(b.label().to_string())
+                .or_default()
+                .push(run.ratio_vs(central_value));
+        }
+    }
+    rows
+}
+
+/// Render a sweep (x-axis values × protocol ratio rows) as the textual
+/// analogue of a paper figure: `mean±std` per cell.
+pub fn render_sweep(title: &str, xlabel: &str, xs: &[usize], rows: &[RatioRows]) -> String {
+    assert_eq!(xs.len(), rows.len());
+    let mut labels: Vec<String> = rows
+        .iter()
+        .flat_map(|r| r.keys().cloned())
+        .collect::<std::collections::BTreeSet<_>>()
+        .into_iter()
+        .collect();
+    // greedi curves first, then baselines alphabetically
+    labels.sort_by_key(|l| (!l.starts_with("greedi"), l.clone()));
+    let mut headers: Vec<&str> = vec![xlabel];
+    for l in &labels {
+        headers.push(l.as_str());
+    }
+    let mut t = Table::new(title, &headers);
+    for (x, row) in xs.iter().zip(rows) {
+        let mut cells = vec![x.to_string()];
+        for l in &labels {
+            let cell = row
+                .get(l)
+                .map(|v| {
+                    let s = summarize(v);
+                    format!("{:.3}±{:.3}", s.mean, s.std)
+                })
+                .unwrap_or_else(|| "-".into());
+            cells.push(cell);
+        }
+        t.row(&cells);
+    }
+    t.render()
+}
+
+/// Centralized reference value/time for budget k (averaged over 1 run —
+/// greedy is deterministic given the data).
+pub fn central_ref(problem: &dyn Problem, k: usize, algorithm: &str, seed: u64) -> (f64, f64) {
+    let c = centralized(problem, k, algorithm, seed);
+    (c.value, c.sim_time())
+}
+
+/// A figure harness's output: rendered text report (printed by the CLI and
+/// appended to EXPERIMENTS.md by `make experiments`).
+pub struct FigureReport {
+    pub id: String,
+    pub body: String,
+}
+
+impl FigureReport {
+    pub fn print(&self) {
+        println!("==== {} ====\n{}", self.id, self.body);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::FacilityProblem;
+    use crate::data::synth::{gaussian_blobs, SynthConfig};
+    use std::sync::Arc;
+
+    #[test]
+    fn suite_ratios_contains_all_protocols() {
+        let ds = Arc::new(gaussian_blobs(&SynthConfig::tiny_images(120, 8), 1));
+        let p = FacilityProblem::new(&ds);
+        let (cv, _) = central_ref(&p, 5, "lazy", 1);
+        let rows = suite_ratios(&p, 3, 5, &[1.0], false, "lazy", 2, 1, cv);
+        assert!(rows.contains_key("greedi"));
+        assert!(rows.contains_key("random/random"));
+        assert_eq!(rows["greedi"].len(), 2);
+        for v in rows.values().flatten() {
+            assert!(*v <= 1.0 + 1e-9 && *v >= 0.0);
+        }
+    }
+
+    #[test]
+    fn render_sweep_shape() {
+        let mut r1: RatioRows = BTreeMap::new();
+        r1.insert("greedi".into(), vec![0.99, 0.98]);
+        r1.insert("random/random".into(), vec![0.5, 0.6]);
+        let out = render_sweep("demo", "m", &[2], &[r1]);
+        assert!(out.contains("greedi"));
+        assert!(out.contains("0.9"));
+    }
+
+    #[test]
+    fn opts_size_and_parts() {
+        let mut o = ExpOpts::default();
+        assert_eq!(o.size(100, 1000), 100);
+        o.full = true;
+        assert_eq!(o.size(100, 1000), 1000);
+        o.n = Some(7);
+        assert_eq!(o.size(100, 1000), 7);
+        assert!(o.wants("a") && o.wants("b"));
+        o.part = "a".into();
+        assert!(o.wants("a") && !o.wants("b"));
+    }
+}

@@ -1,0 +1,203 @@
+//! Theory validation — empirical checks of the paper's bounds:
+//!
+//! * **Theorem 3/4 tightness** — on the adversarial entropy instance with
+//!   the adversarial (contiguous) partition, GreeDi's value collapses
+//!   toward OPT/min(m,k); with random partitioning it recovers (Theorem
+//!   11's (1−1/e)/2 average-case bound is comfortably cleared).
+//! * **Theorem 4 lower bound** — (1−e^{−κ/k})/min(m,k)·OPT holds across a
+//!   (m, k, α) grid on a real objective.
+//! * **Table 1 constraint classes** — greedy-family algorithms under
+//!   matroid / knapsack / p-system constraints achieve their stated
+//!   fractions on brute-forceable instances.
+
+use std::sync::Arc;
+
+use super::{ExpOpts, FigureReport};
+use crate::algorithms::{cost_benefit::CostBenefitGreedy, greedy::Greedy, Maximizer};
+use crate::constraints::knapsack::Knapsack;
+use crate::constraints::matroid::PartitionMatroid;
+use crate::coordinator::greedi::{Greedi, GreediConfig, PartitionStrategy};
+use crate::coordinator::OpaqueProblem;
+use crate::data::synth::{gaussian_blobs, SynthConfig};
+use crate::objective::entropy_worstcase::EntropyWorstCase;
+use crate::objective::facility::FacilityLocation;
+use crate::objective::SubmodularFn;
+use crate::util::rng::Rng;
+use crate::util::table::Table;
+
+pub fn run(opts: &ExpOpts) -> FigureReport {
+    let mut body = String::new();
+
+    // ---- Worst-case instance (Thm 3/4) ---------------------------------
+    // Two readings of the adversarial entropy instance:
+    //  * "greedi" — the actual protocol. Greedy prefers each group's
+    //    aggregate Y (gain k vs 1), so it *escapes* the trap: ratio 1.
+    //  * "adversarial ties" — Algorithm 1 with the adversarial optimal
+    //    tie-break A_i = {X_i1..X_ik} (both choices are optimal on the
+    //    shard). The merged pool then contains only single bits and the
+    //    ratio collapses to exactly 1/min(m,k) — Theorem 3's tight case.
+    let mut t = Table::new(
+        "Thm 3: adversarial entropy instance — ratio to OPT",
+        &["(m,k)", "greedi (adv. part.)", "greedi (random)", "adversarial ties", "1/min(m,k)", "(1-1/e)/2"],
+    );
+    for (m, k) in [(2, 2), (4, 4), (8, 8), (4, 8)] {
+        let f = EntropyWorstCase::new(m, k);
+        let p = OpaqueProblem::new(&f);
+        let opt = f.optimal_value(k);
+        let adv = Greedi::new(GreediConfig::new(m, k).partition(PartitionStrategy::Contiguous))
+            .run(&p, opts.seed);
+        let mut rnd_vals = Vec::new();
+        for s in 0..opts.trials as u64 {
+            rnd_vals.push(
+                Greedi::new(GreediConfig::new(m, k))
+                    .run(&p, opts.seed + s)
+                    .value
+                    / opt,
+            );
+        }
+        let rnd = crate::util::stats::mean(&rnd_vals);
+        // Algorithm-1 adversarial tie-break: every machine returns its X
+        // bits; the best k-subset of the merged pool is any k bits.
+        let mut adversarial_pool: Vec<usize> = Vec::new();
+        for g in 0..m {
+            for j in 0..k {
+                adversarial_pool.push(g * (k + 1) + j); // X_{g,j}
+            }
+        }
+        let tie_run = {
+            use crate::algorithms::greedy::Greedy;
+            use crate::constraints::cardinality::Cardinality;
+            let mut rng = Rng::new(opts.seed);
+            Greedy.maximize(&f, &adversarial_pool, &Cardinality::new(k), &mut rng)
+        };
+        t.row(&[
+            format!("({m},{k})"),
+            format!("{:.3}", adv.value / opt),
+            format!("{rnd:.3}"),
+            format!("{:.3}", tie_run.value / opt),
+            format!("{:.3}", 1.0 / m.min(k) as f64),
+            format!("{:.3}", (1.0 - (-1.0f64).exp()) / 2.0),
+        ]);
+    }
+    body.push_str(&t.render());
+    body.push('\n');
+
+    // ---- Thm 4 bound sweep on facility location -------------------------
+    let ds = Arc::new(gaussian_blobs(&SynthConfig::tiny_images(400, 8), opts.seed));
+    let fac = FacilityLocation::from_dataset(&ds);
+    let p = OpaqueProblem::new(&fac);
+    let mut t = Table::new(
+        "Thm 4: f(greedi) ≥ (1-e^{-κ/k})/min(m,k) · f(central-greedy)",
+        &["m", "k", "α", "ratio", "bound", "holds"],
+    );
+    for (m, k, alpha) in [(4, 8, 1.0), (8, 8, 1.0), (4, 8, 0.5), (4, 8, 2.0), (2, 16, 1.0)] {
+        let central = crate::coordinator::greedi::centralized(&p, k, "lazy", opts.seed);
+        let run = Greedi::new(GreediConfig::new(m, k).alpha(alpha)).run(&p, opts.seed);
+        let kappa = (alpha * k as f64).round();
+        let bound = (1.0 - (-kappa / k as f64).exp()) / m.min(k) as f64;
+        let ratio = run.value / central.value;
+        t.row(&[
+            m.to_string(),
+            k.to_string(),
+            format!("{alpha}"),
+            format!("{ratio:.3}"),
+            format!("{bound:.3}"),
+            (ratio >= bound - 1e-9).to_string(),
+        ]);
+    }
+    body.push_str(&t.render());
+    body.push('\n');
+
+    // ---- Table 1 spot checks --------------------------------------------
+    let mut t = Table::new(
+        "Table 1: constraint-class approximation spot checks (vs brute force)",
+        &["constraint", "algorithm", "achieved", "guarantee"],
+    );
+    let mut rng = Rng::new(opts.seed);
+
+    // matroid + greedy: 1/2 (Fisher et al.)
+    {
+        let ds = Arc::new(gaussian_blobs(&SynthConfig::tiny_images(12, 4), 3));
+        let f = FacilityLocation::from_dataset(&ds);
+        let cats: Vec<usize> = (0..12).map(|i| i % 3).collect();
+        let con = PartitionMatroid::new(cats.clone(), vec![1, 1, 1]);
+        let g = Greedy.maximize(&f, &(0..12).collect::<Vec<_>>(), &con, &mut rng);
+        let opt = brute_force_best(&f, 12, &|s| {
+            let mut used = [0usize; 3];
+            for &e in s {
+                used[cats[e]] += 1;
+            }
+            used.iter().all(|&u| u <= 1)
+        });
+        t.row(&[
+            "1 matroid".into(),
+            "greedy".into(),
+            format!("{:.3}", g.value / opt),
+            "0.500".into(),
+        ]);
+        assert!(g.value / opt >= 0.5 - 1e-9);
+    }
+
+    // knapsack + cost-benefit: 1 − 1/√e ≈ 0.393 (Krause & Guestrin)
+    {
+        let ds = Arc::new(gaussian_blobs(&SynthConfig::tiny_images(12, 4), 4));
+        let f = FacilityLocation::from_dataset(&ds);
+        let mut costs = vec![1.0; 12];
+        for (i, c) in costs.iter_mut().enumerate() {
+            *c = 1.0 + (i % 4) as f64;
+        }
+        let con = Knapsack::new(costs.clone(), 6.0);
+        let g = CostBenefitGreedy::for_knapsack(&con).maximize(
+            &f,
+            &(0..12).collect::<Vec<_>>(),
+            &con,
+            &mut rng,
+        );
+        let opt = brute_force_best(&f, 12, &|s| {
+            s.iter().map(|&e| costs[e]).sum::<f64>() <= 6.0 + 1e-9
+        });
+        t.row(&[
+            "1 knapsack".into(),
+            "cost-benefit".into(),
+            format!("{:.3}", g.value / opt),
+            "0.393".into(),
+        ]);
+        assert!(g.value / opt >= 1.0 - (-0.5f64).exp() - 1e-9);
+    }
+    body.push_str(&t.render());
+
+    FigureReport { id: "theory".into(), body }
+}
+
+/// Brute-force optimum of f over all feasible subsets of `0..n` (n ≤ 16).
+fn brute_force_best(
+    f: &dyn SubmodularFn,
+    n: usize,
+    feasible: &dyn Fn(&[usize]) -> bool,
+) -> f64 {
+    assert!(n <= 16);
+    let mut best = f64::NEG_INFINITY;
+    for mask in 0u32..(1 << n) {
+        let s: Vec<usize> = (0..n).filter(|&i| mask & (1 << i) != 0).collect();
+        if feasible(&s) {
+            best = best.max(f.eval(&s));
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn theory_report_runs() {
+        let opts = ExpOpts { trials: 2, ..Default::default() };
+        let rep = run(&opts);
+        assert!(rep.body.contains("Thm 3:"));
+        assert!(rep.body.contains("adversarial ties"));
+        assert!(rep.body.contains("Table 1"));
+        // every Thm 4 row must hold
+        assert!(!rep.body.contains("false"));
+    }
+}

@@ -1,0 +1,71 @@
+//! # GreeDi — Distributed Submodular Maximization
+//!
+//! A production-grade reproduction of *"Distributed Submodular Maximization"*
+//! (Mirzasoleiman, Karbasi, Sarkar, Krause — JMLR/arXiv 2014). The paper's
+//! two-round MapReduce protocol **GreeDi** is implemented as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the distributed coordinator: a simulated
+//!   MapReduce runtime, the GreeDi protocol (Algorithms 2 & 3), naive
+//!   baselines, the GreedyScaling comparator, objective/constraint/algorithm
+//!   libraries, and the experiment harnesses that regenerate every figure in
+//!   the paper's evaluation section.
+//! * **Layer 2 (python/compile/model.py)** — JAX compute graphs for the
+//!   objective-function hot spots (pairwise distances, RBF kernel matrices,
+//!   batched facility-location marginal gains), AOT-lowered to HLO text.
+//! * **Layer 1 (python/compile/kernels/)** — Pallas kernels implementing the
+//!   hot loops, lowered inside the L2 graphs (interpret mode for CPU PJRT).
+//!
+//! Python never runs at coordination time: `make artifacts` produces
+//! `artifacts/*.hlo.txt`, which [`runtime`] loads through the PJRT C API.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use std::sync::Arc;
+//! use greedi::coordinator::greedi::{Greedi, GreediConfig};
+//! use greedi::coordinator::FacilityProblem;
+//! use greedi::data::synth::{gaussian_blobs, SynthConfig};
+//!
+//! // 10k points in 16-d, 50 exemplars, 10 machines.
+//! let data = Arc::new(gaussian_blobs(&SynthConfig::tiny_images(10_000, 16), 42));
+//! let problem = FacilityProblem::new(&data);
+//! let run = Greedi::new(GreediConfig::new(10, 50)).run(&problem, 7);
+//! println!("distributed f(S) = {}", run.value);
+//! ```
+pub mod algorithms;
+pub mod config;
+pub mod constraints;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod linalg;
+pub mod mapreduce;
+pub mod objective;
+pub mod runtime;
+pub mod util;
+
+pub mod prelude {
+    //! Convenience re-exports covering the common public API surface.
+    pub use crate::algorithms::{
+        greedy::Greedy, lazy::LazyGreedy, random_greedy::RandomGreedy,
+        stochastic::StochasticGreedy, Maximizer,
+    };
+    pub use crate::config::ExperimentConfig;
+    pub use crate::constraints::{
+        cardinality::Cardinality, knapsack::Knapsack, matroid::PartitionMatroid, Constraint,
+    };
+    pub use crate::coordinator::{
+        baselines::Baseline,
+        greedi::{centralized, Greedi, GreediConfig},
+        greedy_scaling::GreedyScaling,
+        metrics::RunMetrics,
+        CoverageProblem, CutProblem, FacilityProblem, InfoGainProblem, Problem,
+    };
+    pub use crate::data::{synth, synth::SynthConfig, Dataset};
+    pub use crate::objective::{
+        coverage::Coverage, cut::GraphCut, facility::FacilityLocation, infogain::InfoGain,
+        SubmodularFn,
+    };
+    pub use crate::util::rng::Rng;
+}

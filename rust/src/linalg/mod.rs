@@ -1,0 +1,10 @@
+//! Small dense linear algebra substrate: row-major matrices and the
+//! incremental (bordered) Cholesky factorization that gives the GP
+//! information-gain objective O(k²) marginal-gain evaluations instead of
+//! O(k³) log-det recomputations.
+
+pub mod cholesky;
+pub mod matrix;
+
+pub use cholesky::IncrementalCholesky;
+pub use matrix::Matrix;

@@ -1,0 +1,187 @@
+//! Fault injection + retry for the simulated MapReduce runtime.
+//!
+//! The paper's Hadoop deployment leans on MapReduce's core resilience
+//! property: failed tasks are rescheduled and the job still completes with
+//! identical output (map tasks are deterministic and side-effect-free).
+//! This module models that: a [`FaultPlan`] decides, deterministically from
+//! a seed, which (task, attempt) pairs fail; [`run_stage_with_faults`]
+//! re-executes failed tasks up to `max_attempts`, charging each attempt's
+//! wallclock to the stage like a real re-scheduled container would be.
+//!
+//! Because GreeDi's map tasks are pure functions of (shard, seed), retries
+//! cannot change the protocol's output — asserted by the integration tests.
+
+use std::time::Instant;
+
+use super::StageReport;
+use crate::util::rng::Rng;
+
+/// Deterministic per-(task, attempt) failure oracle.
+#[derive(Debug, Clone)]
+pub struct FaultPlan {
+    /// Probability a given task attempt fails.
+    pub fail_prob: f64,
+    /// Attempts per task before the stage aborts.
+    pub max_attempts: usize,
+    seed: u64,
+}
+
+impl FaultPlan {
+    pub fn new(fail_prob: f64, max_attempts: usize, seed: u64) -> Self {
+        assert!((0.0..1.0).contains(&fail_prob));
+        assert!(max_attempts >= 1);
+        FaultPlan { fail_prob, max_attempts, seed }
+    }
+
+    /// No faults (baseline).
+    pub fn none() -> Self {
+        FaultPlan { fail_prob: 0.0, max_attempts: 1, seed: 0 }
+    }
+
+    /// Does attempt `attempt` of task `task` fail?
+    pub fn fails(&self, task: usize, attempt: usize) -> bool {
+        if self.fail_prob <= 0.0 {
+            return false;
+        }
+        let mut rng = Rng::new(
+            self.seed ^ (task as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                ^ (attempt as u64).wrapping_mul(0xC2B2_AE3D_27D4_EB4F),
+        );
+        rng.bool(self.fail_prob)
+    }
+}
+
+/// Error when a task exhausts its attempts.
+#[derive(Debug)]
+pub struct StageFailed {
+    pub task: usize,
+    pub attempts: usize,
+}
+
+impl std::fmt::Display for StageFailed {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "task {} failed {} attempts", self.task, self.attempts)
+    }
+}
+
+impl std::error::Error for StageFailed {}
+
+/// Run a stage under a fault plan: each task is (re)executed until an
+/// attempt succeeds; every attempt's wallclock is charged to the task
+/// (a rescheduled container re-does the work). Inputs must be cloneable —
+/// retries replay the same input, preserving determinism.
+pub fn run_stage_with_faults<T, R, F>(
+    inputs: Vec<T>,
+    plan: &FaultPlan,
+    f: F,
+) -> Result<(Vec<R>, StageReport, usize), StageFailed>
+where
+    T: Clone,
+    F: Fn(usize, T) -> R,
+{
+    let mut outputs = Vec::with_capacity(inputs.len());
+    let mut times = Vec::with_capacity(inputs.len());
+    let mut retries = 0usize;
+    for (i, input) in inputs.into_iter().enumerate() {
+        let mut task_time = 0.0;
+        let mut done = None;
+        for attempt in 0..plan.max_attempts {
+            let t = Instant::now();
+            let r = f(i, input.clone());
+            task_time += t.elapsed().as_secs_f64();
+            if plan.fails(i, attempt) {
+                retries += 1;
+                continue; // attempt lost; result discarded like a dead container
+            }
+            done = Some(r);
+            break;
+        }
+        match done {
+            Some(r) => {
+                outputs.push(r);
+                times.push(task_time);
+            }
+            None => return Err(StageFailed { task: i, attempts: plan.max_attempts }),
+        }
+    }
+    let max_task_time = times.iter().cloned().fold(0.0, f64::max);
+    let total_cpu_time = times.iter().sum();
+    Ok((
+        outputs,
+        StageReport { task_times: times, max_task_time, total_cpu_time },
+        retries,
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn no_faults_matches_plain_stage() {
+        let (out, rep, retries) =
+            run_stage_with_faults((0..10).collect(), &FaultPlan::none(), |_, x: i32| x * 2)
+                .unwrap();
+        assert_eq!(out, (0..10).map(|x| x * 2).collect::<Vec<_>>());
+        assert_eq!(retries, 0);
+        assert_eq!(rep.task_times.len(), 10);
+    }
+
+    #[test]
+    fn retries_preserve_outputs() {
+        let plan = FaultPlan::new(0.4, 20, 7);
+        let (out, _, retries) =
+            run_stage_with_faults((0..50).collect(), &plan, |i, x: i32| x + i as i32).unwrap();
+        let (base, _, _) =
+            run_stage_with_faults((0..50).collect(), &FaultPlan::none(), |i, x: i32| {
+                x + i as i32
+            })
+            .unwrap();
+        assert_eq!(out, base, "faults must not change results");
+        assert!(retries > 0, "plan with p=0.4 over 50 tasks must fail sometimes");
+    }
+
+    #[test]
+    fn failed_attempts_charge_time() {
+        let plan = FaultPlan::new(0.9, 50, 3);
+        let (_, rep_faulty, retries) =
+            run_stage_with_faults(vec![500_000usize], &plan, |_, n| {
+                (0..n as u64).map(std::hint::black_box).sum::<u64>()
+            })
+            .unwrap();
+        assert!(retries >= 1);
+        let (_, rep_clean, _) =
+            run_stage_with_faults(vec![500_000usize], &FaultPlan::none(), |_, n| {
+                (0..n as u64).map(std::hint::black_box).sum::<u64>()
+            })
+            .unwrap();
+        assert!(
+            rep_faulty.max_task_time > rep_clean.max_task_time,
+            "retries must inflate the task time"
+        );
+    }
+
+    #[test]
+    fn exhausted_attempts_abort() {
+        // fail_prob ~1 with 1 attempt => guaranteed failure
+        let plan = FaultPlan::new(0.999, 1, 3);
+        let mut failed = false;
+        for _ in 0..5 {
+            if run_stage_with_faults(vec![1, 2, 3], &plan, |_, x: i32| x).is_err() {
+                failed = true;
+                break;
+            }
+        }
+        assert!(failed);
+    }
+
+    #[test]
+    fn fault_plan_deterministic() {
+        let p = FaultPlan::new(0.3, 5, 11);
+        for task in 0..20 {
+            for attempt in 0..5 {
+                assert_eq!(p.fails(task, attempt), p.fails(task, attempt));
+            }
+        }
+    }
+}

@@ -1,0 +1,169 @@
+//! Simulated MapReduce runtime.
+//!
+//! The paper runs GreeDi on Hadoop/Spark clusters and reports, per stage,
+//! the *maximum running time per reduce task* (§6.1/§6.2). This engine
+//! reproduces that accounting on a single box: each map/reduce task is run
+//! as an independent unit of work whose own wallclock is measured, and a
+//! stage's **simulated parallel time** is the maximum task time (every
+//! machine runs its task concurrently in the modeled cluster) plus the
+//! driver-side shuffle cost. Tasks execute on a thread pool when real
+//! parallelism is available, or sequentially when `threads == 1` — the
+//! accounting is identical either way, and sequential execution keeps the
+//! per-task timings interference-free on small hosts.
+//!
+//! The engine is generic over task payloads; GreeDi's coordinator submits
+//! one map task per machine shard and one reduce task for the merge round.
+
+pub mod fault;
+pub mod partition;
+
+use std::time::Instant;
+
+use crate::util::threadpool::parallel_map;
+
+/// Per-stage execution report (the paper's per-stage metrics).
+#[derive(Debug, Clone, Default)]
+pub struct StageReport {
+    /// Wallclock of each task, seconds, task order = input order.
+    pub task_times: Vec<f64>,
+    /// max(task_times) — the simulated parallel stage time.
+    pub max_task_time: f64,
+    /// Σ task_times — the sequential (centralized) cost of the stage.
+    pub total_cpu_time: f64,
+}
+
+impl StageReport {
+    fn from_times(task_times: Vec<f64>) -> Self {
+        let max_task_time = task_times.iter().cloned().fold(0.0, f64::max);
+        let total_cpu_time = task_times.iter().sum();
+        StageReport { task_times, max_task_time, total_cpu_time }
+    }
+}
+
+/// A whole simulated job: ordered stage reports + shuffle accounting.
+#[derive(Debug, Clone, Default)]
+pub struct JobReport {
+    pub stages: Vec<StageReport>,
+    /// Elements moved between stages (communication volume; the paper's
+    /// protocols exchange poly(k·m) elements, never O(n)).
+    pub shuffled_elements: usize,
+}
+
+impl JobReport {
+    /// Simulated end-to-end parallel wallclock: Σ over stages of each
+    /// stage's max task time.
+    pub fn sim_parallel_time(&self) -> f64 {
+        self.stages.iter().map(|s| s.max_task_time).sum()
+    }
+
+    /// Total CPU across all tasks (≈ a centralized single-machine run of
+    /// the same work).
+    pub fn total_cpu_time(&self) -> f64 {
+        self.stages.iter().map(|s| s.total_cpu_time).sum()
+    }
+
+    pub fn record_shuffle(&mut self, elements: usize) {
+        self.shuffled_elements += elements;
+    }
+}
+
+/// The engine: runs stages of independent tasks with per-task timing.
+#[derive(Debug, Clone)]
+pub struct MapReduce {
+    /// OS threads used to execute tasks (1 = sequential, exact timings).
+    pub threads: usize,
+}
+
+impl Default for MapReduce {
+    fn default() -> Self {
+        MapReduce { threads: 1 }
+    }
+}
+
+impl MapReduce {
+    pub fn new(threads: usize) -> Self {
+        MapReduce { threads: threads.max(1) }
+    }
+
+    /// Run one stage: `f(task_index, input) -> output` per task. Returns
+    /// outputs in input order plus the stage report.
+    pub fn run_stage<T, R, F>(&self, inputs: Vec<T>, f: F) -> (Vec<R>, StageReport)
+    where
+        T: Send,
+        R: Send,
+        F: Fn(usize, T) -> R + Sync,
+    {
+        let timed: Vec<(R, f64)> = if self.threads == 1 {
+            inputs
+                .into_iter()
+                .enumerate()
+                .map(|(i, x)| {
+                    let t = Instant::now();
+                    let r = f(i, x);
+                    (r, t.elapsed().as_secs_f64())
+                })
+                .collect()
+        } else {
+            parallel_map(inputs, self.threads, |i, x| {
+                let t = Instant::now();
+                let r = f(i, x);
+                (r, t.elapsed().as_secs_f64())
+            })
+        };
+        let mut outputs = Vec::with_capacity(timed.len());
+        let mut times = Vec::with_capacity(timed.len());
+        for (r, t) in timed {
+            outputs.push(r);
+            times.push(t);
+        }
+        (outputs, StageReport::from_times(times))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_outputs_in_order() {
+        let mr = MapReduce::new(1);
+        let (out, rep) = mr.run_stage((0..10).collect(), |_, x: i32| x * x);
+        assert_eq!(out, (0..10).map(|x| x * x).collect::<Vec<_>>());
+        assert_eq!(rep.task_times.len(), 10);
+        assert!(rep.max_task_time <= rep.total_cpu_time + 1e-12);
+    }
+
+    #[test]
+    fn parallel_matches_sequential_outputs() {
+        let seq = MapReduce::new(1);
+        let par = MapReduce::new(4);
+        let (a, _) = seq.run_stage((0..50).collect(), |i, x: i32| x + i as i32);
+        let (b, _) = par.run_stage((0..50).collect(), |i, x: i32| x + i as i32);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn job_report_accumulates() {
+        let mr = MapReduce::new(1);
+        let mut job = JobReport::default();
+        let (_, s1) = mr.run_stage(vec![1, 2, 3], |_, x: i32| {
+            std::hint::black_box((0..10_000 * x).sum::<i32>())
+        });
+        let (_, s2) = mr.run_stage(vec![4], |_, x: i32| x);
+        job.stages.push(s1);
+        job.stages.push(s2);
+        job.record_shuffle(12);
+        assert_eq!(job.shuffled_elements, 12);
+        assert!(job.sim_parallel_time() > 0.0);
+        assert!(job.total_cpu_time() >= job.sim_parallel_time() - 1e-12);
+    }
+
+    #[test]
+    fn max_task_time_is_max() {
+        let mr = MapReduce::new(1);
+        let (_, rep) = mr.run_stage(vec![1usize, 50_000], |_, n| {
+            std::hint::black_box((0..n as u64).sum::<u64>())
+        });
+        assert!((rep.max_task_time - rep.task_times.iter().cloned().fold(0.0, f64::max)).abs() < 1e-15);
+    }
+}

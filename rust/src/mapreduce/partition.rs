@@ -1,0 +1,108 @@
+//! Ground-set partitioning strategies (paper step 1: "Partition V into m
+//! sets V₁ … V_m (arbitrarily or at random)"). Random uniform assignment is
+//! what Theorems 8–11 assume; round-robin and contiguous partitions exist
+//! for ablations of that assumption.
+
+use crate::util::rng::Rng;
+
+/// Uniformly random assignment of each element to one of `m` machines.
+/// Shards can differ in size (multinomial), exactly as the theory assumes.
+pub fn random_partition(ground: &[usize], m: usize, rng: &mut Rng) -> Vec<Vec<usize>> {
+    assert!(m >= 1);
+    let mut shards = vec![Vec::with_capacity(ground.len() / m + 1); m];
+    for &e in ground {
+        shards[rng.below(m)].push(e);
+    }
+    shards
+}
+
+/// Balanced random partition: shuffle then deal round-robin — shard sizes
+/// differ by at most one (what the paper's Hadoop deployment does with
+/// fixed-size reducer inputs).
+pub fn balanced_partition(ground: &[usize], m: usize, rng: &mut Rng) -> Vec<Vec<usize>> {
+    assert!(m >= 1);
+    let mut ids = ground.to_vec();
+    rng.shuffle(&mut ids);
+    let mut shards = vec![Vec::with_capacity(ids.len() / m + 1); m];
+    for (i, e) in ids.into_iter().enumerate() {
+        shards[i % m].push(e);
+    }
+    shards
+}
+
+/// Contiguous (adversarial-ish) partition: no randomization at all. Used by
+/// ablations and by the worst-case instance, which needs the adversarial
+/// grouping to bite.
+pub fn contiguous_partition(ground: &[usize], m: usize) -> Vec<Vec<usize>> {
+    assert!(m >= 1);
+    let n = ground.len();
+    let base = n / m;
+    let extra = n % m;
+    let mut shards = Vec::with_capacity(m);
+    let mut at = 0;
+    for i in 0..m {
+        let len = base + usize::from(i < extra);
+        shards.push(ground[at..at + len].to_vec());
+        at += len;
+    }
+    shards
+}
+
+/// Verify that `shards` is an exact partition of `ground` (diagnostics and
+/// property tests).
+pub fn check_is_partition(ground: &[usize], shards: &[Vec<usize>]) -> bool {
+    let mut all: Vec<usize> = shards.iter().flatten().copied().collect();
+    all.sort_unstable();
+    let mut g = ground.to_vec();
+    g.sort_unstable();
+    all == g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn random_partition_covers_ground() {
+        let ground: Vec<usize> = (0..1000).collect();
+        let mut rng = Rng::new(1);
+        let shards = random_partition(&ground, 7, &mut rng);
+        assert_eq!(shards.len(), 7);
+        assert!(check_is_partition(&ground, &shards));
+    }
+
+    #[test]
+    fn balanced_partition_sizes() {
+        let ground: Vec<usize> = (0..103).collect();
+        let mut rng = Rng::new(2);
+        let shards = balanced_partition(&ground, 10, &mut rng);
+        assert!(check_is_partition(&ground, &shards));
+        let sizes: Vec<usize> = shards.iter().map(|s| s.len()).collect();
+        assert!(sizes.iter().all(|&s| s == 10 || s == 11), "{sizes:?}");
+    }
+
+    #[test]
+    fn contiguous_partition_order_preserved() {
+        let ground: Vec<usize> = (0..10).collect();
+        let shards = contiguous_partition(&ground, 3);
+        assert_eq!(shards[0], vec![0, 1, 2, 3]);
+        assert_eq!(shards[1], vec![4, 5, 6]);
+        assert_eq!(shards[2], vec![7, 8, 9]);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let ground: Vec<usize> = (0..50).collect();
+        let a = random_partition(&ground, 5, &mut Rng::new(9));
+        let b = random_partition(&ground, 5, &mut Rng::new(9));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn single_machine_gets_everything() {
+        let ground: Vec<usize> = (0..20).collect();
+        let shards = random_partition(&ground, 1, &mut Rng::new(3));
+        assert_eq!(shards.len(), 1);
+        assert_eq!(shards[0].len(), 20);
+    }
+}

@@ -1,0 +1,192 @@
+//! Directed graph-cut objective (paper §6.3): `f(S) = Σ_{u∈S, v∉S} w(u→v)`
+//! — **non-monotone** submodular (f(V) = 0). The paper runs RandomGreedy
+//! (Buchbinder et al. 2014) on a Facebook-like message network, evaluating
+//! the function *locally* on each partition (cross-partition links
+//! disconnected), which [`GraphCut::restricted`] reproduces.
+
+use std::sync::Arc;
+
+use super::{State, SubmodularFn};
+use crate::data::graph::Digraph;
+
+/// Directed cut function, optionally restricted to an induced subgraph.
+pub struct GraphCut {
+    g: Arc<Digraph>,
+    /// If present: only edges with BOTH endpoints in this set count
+    /// (membership indexed by node id).
+    member: Option<Vec<bool>>,
+}
+
+impl GraphCut {
+    pub fn new(g: &Arc<Digraph>) -> Self {
+        GraphCut { g: Arc::clone(g), member: None }
+    }
+
+    /// Restrict to the subgraph induced by `nodes` (local evaluation mode).
+    pub fn restricted(g: &Arc<Digraph>, nodes: &[usize]) -> Self {
+        let mut member = vec![false; g.n];
+        for &u in nodes {
+            member[u] = true;
+        }
+        GraphCut { g: Arc::clone(g), member: Some(member) }
+    }
+
+    #[inline]
+    fn visible(&self, u: usize) -> bool {
+        self.member.as_ref().map(|m| m[u]).unwrap_or(true)
+    }
+}
+
+impl SubmodularFn for GraphCut {
+    fn state(&self) -> Box<dyn State + '_> {
+        Box::new(CutState {
+            obj: self,
+            in_s: vec![false; self.g.n],
+            selected: Vec::new(),
+            value: 0.0,
+        })
+    }
+
+    fn is_monotone(&self) -> bool {
+        false
+    }
+
+    fn ground_size(&self) -> usize {
+        self.g.n
+    }
+}
+
+/// Incremental state: membership flags + running cut value.
+pub struct CutState<'a> {
+    obj: &'a GraphCut,
+    in_s: Vec<bool>,
+    selected: Vec<usize>,
+    value: f64,
+}
+
+impl<'a> CutState<'a> {
+    /// Marginal change of adding `e`:
+    ///  + outgoing edges e→v with v ∉ S
+    ///  + 0 for outgoing edges into S
+    ///  − incoming edges u→e with u ∈ S (they stop being cut)
+    fn delta(&self, e: usize) -> f64 {
+        if self.in_s[e] {
+            return 0.0;
+        }
+        let mut d = 0.0;
+        for &(v, w) in &self.obj.g.out[e] {
+            if self.obj.visible(v) && !self.in_s[v] {
+                d += w;
+            }
+        }
+        for &(u, w) in &self.obj.g.rin[e] {
+            if self.obj.visible(u) && self.in_s[u] {
+                d -= w;
+            }
+        }
+        d
+    }
+}
+
+impl<'a> State for CutState<'a> {
+    fn value(&self) -> f64 {
+        self.value
+    }
+
+    fn gain(&mut self, e: usize) -> f64 {
+        self.delta(e)
+    }
+
+    fn push(&mut self, e: usize) -> f64 {
+        let d = self.delta(e);
+        if !self.in_s[e] {
+            self.in_s[e] = true;
+            self.value += d;
+            self.selected.push(e);
+        }
+        d
+    }
+
+    fn selected(&self) -> &[usize] {
+        &self.selected
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::graph::social_network;
+    use crate::objective::check_diminishing_returns;
+    use crate::util::rng::Rng;
+
+    fn triangle() -> Arc<Digraph> {
+        // 0 -> 1 (2.0), 1 -> 2 (3.0), 2 -> 0 (5.0)
+        let mut g = Digraph::new(3);
+        g.add_edge(0, 1, 2.0);
+        g.add_edge(1, 2, 3.0);
+        g.add_edge(2, 0, 5.0);
+        Arc::new(g)
+    }
+
+    #[test]
+    fn known_cut_values() {
+        let g = triangle();
+        let f = GraphCut::new(&g);
+        assert_eq!(f.eval(&[]), 0.0);
+        assert_eq!(f.eval(&[0]), 2.0); // 0->1 cut
+        assert_eq!(f.eval(&[1]), 3.0);
+        assert_eq!(f.eval(&[0, 1]), 3.0); // 1->2 cut, 0->1 internal
+        assert_eq!(f.eval(&[0, 1, 2]), 0.0); // everything internal
+    }
+
+    #[test]
+    fn non_monotone() {
+        let g = triangle();
+        let f = GraphCut::new(&g);
+        assert!(!f.is_monotone());
+        assert!(f.eval(&[0, 1, 2]) < f.eval(&[1]));
+    }
+
+    #[test]
+    fn submodular_on_random_graph() {
+        let g = Arc::new(social_network(30, 120, 1));
+        let f = GraphCut::new(&g);
+        let ground: Vec<usize> = (0..30).collect();
+        let mut rng = Rng::new(8);
+        assert!(check_diminishing_returns(&f, &ground, &mut rng, 80) < 1e-12);
+    }
+
+    #[test]
+    fn gain_matches_eval_difference() {
+        let g = Arc::new(social_network(25, 100, 2));
+        let f = GraphCut::new(&g);
+        let mut st = f.state();
+        st.push(3);
+        st.push(11);
+        let gain = st.gain(7);
+        let brute = f.eval(&[3, 11, 7]) - f.eval(&[3, 11]);
+        assert!((gain - brute).abs() < 1e-12);
+    }
+
+    #[test]
+    fn restriction_drops_cross_edges() {
+        let g = triangle();
+        // restrict to {0, 1}: only edge 0->1 visible
+        let f = GraphCut::restricted(&g, &[0, 1]);
+        assert_eq!(f.eval(&[0]), 2.0);
+        assert_eq!(f.eval(&[1]), 0.0); // 1->2 invisible
+        assert_eq!(f.eval(&[0, 1]), 0.0);
+    }
+
+    #[test]
+    fn double_push_is_noop() {
+        let g = triangle();
+        let f = GraphCut::new(&g);
+        let mut st = f.state();
+        st.push(0);
+        let v = st.value();
+        assert_eq!(st.push(0), 0.0);
+        assert_eq!(st.value(), v);
+        assert_eq!(st.selected(), &[0]);
+    }
+}

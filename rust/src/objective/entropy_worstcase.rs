@@ -1,0 +1,179 @@
+//! The tight lower-bound instance from the proof of Theorem 3 (appendix
+//! A.1): independent Bernoulli bits `X_{i,j}` (i ∈ machines, j ∈ 1..k) and
+//! aggregate variables `Y_i = (X_{i,1}, …, X_{i,k})`; `f(S) = H(S)` is the
+//! joint entropy. Machine i's shard is `{X_{i,1}, …, X_{i,k}, Y_i}`; on it,
+//! both `{X_{i,·}}` and `{Y_i}` achieve local value k, while globally only
+//! `{Y_1, …, Y_m}` reaches `min(m,k)·k`.
+//!
+//! Closed form: `H(S) = Σ_i [ k if Y_i ∈ S else |{j : X_{i,j} ∈ S}| ]`
+//! (each group's bits are determined by its Y; groups are independent).
+//!
+//! Element numbering: group i occupies ids `i·(k+1) .. i·(k+1)+k`, the
+//! last id of a group being its `Y_i`.
+
+use super::{State, SubmodularFn};
+
+/// The Θ(min(m,k)) tightness instance for the two-round protocol.
+pub struct EntropyWorstCase {
+    pub m: usize,
+    pub k: usize,
+}
+
+impl EntropyWorstCase {
+    pub fn new(m: usize, k: usize) -> Self {
+        EntropyWorstCase { m, k }
+    }
+
+    /// Group of an element.
+    pub fn group(&self, e: usize) -> usize {
+        e / (self.k + 1)
+    }
+
+    /// Is this element the aggregate `Y_i` of its group?
+    pub fn is_y(&self, e: usize) -> bool {
+        e % (self.k + 1) == self.k
+    }
+
+    /// The natural adversarial partition: machine i holds group i.
+    pub fn adversarial_partition(&self) -> Vec<Vec<usize>> {
+        (0..self.m)
+            .map(|i| (i * (self.k + 1)..(i + 1) * (self.k + 1)).collect())
+            .collect()
+    }
+
+    /// The optimal centralized solution: all the Y_i (value min(m,k)·k
+    /// when choosing k of them, i.e. k·min(m,k)).
+    pub fn optimal_value(&self, budget: usize) -> f64 {
+        // picking Y's first (k bits each), then leftover single bits
+        let ys = budget.min(self.m);
+        let mut v = (ys * self.k) as f64;
+        let leftover = budget - ys;
+        // extra X bits only help in groups whose Y is absent — none left if
+        // ys == m; otherwise each adds 1. Cap by available bits.
+        if ys == self.m {
+            // all groups covered: extra X bits add nothing
+        } else {
+            v += leftover.min((self.m - ys) * self.k) as f64;
+        }
+        v
+    }
+}
+
+impl SubmodularFn for EntropyWorstCase {
+    fn state(&self) -> Box<dyn State + '_> {
+        Box::new(EntropyState {
+            obj: self,
+            y_in: vec![false; self.m],
+            x_count: vec![0usize; self.m],
+            x_in: vec![false; self.m * (self.k + 1)],
+            selected: Vec::new(),
+        })
+    }
+
+    fn ground_size(&self) -> usize {
+        self.m * (self.k + 1)
+    }
+}
+
+pub struct EntropyState<'a> {
+    obj: &'a EntropyWorstCase,
+    y_in: Vec<bool>,
+    x_count: Vec<usize>,
+    x_in: Vec<bool>,
+    selected: Vec<usize>,
+}
+
+impl<'a> EntropyState<'a> {
+    fn group_value(&self, g: usize) -> usize {
+        if self.y_in[g] {
+            self.obj.k
+        } else {
+            self.x_count[g]
+        }
+    }
+}
+
+impl<'a> State for EntropyState<'a> {
+    fn value(&self) -> f64 {
+        (0..self.obj.m).map(|g| self.group_value(g)).sum::<usize>() as f64
+    }
+
+    fn gain(&mut self, e: usize) -> f64 {
+        let g = self.obj.group(e);
+        if self.x_in[e] {
+            return 0.0;
+        }
+        if self.obj.is_y(e) {
+            (self.obj.k - self.group_value(g)) as f64
+        } else if self.y_in[g] {
+            0.0
+        } else {
+            1.0
+        }
+    }
+
+    fn push(&mut self, e: usize) -> f64 {
+        let gain = self.gain(e);
+        if !self.x_in[e] {
+            self.x_in[e] = true;
+            let g = self.obj.group(e);
+            if self.obj.is_y(e) {
+                self.y_in[g] = true;
+            } else {
+                self.x_count[g] += 1;
+            }
+            self.selected.push(e);
+        }
+        gain
+    }
+
+    fn selected(&self) -> &[usize] {
+        &self.selected
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::objective::{check_diminishing_returns, check_monotone};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn closed_form_values() {
+        let f = EntropyWorstCase::new(2, 3); // groups of X0..X2,Y per machine
+        // element ids: group 0 = {0,1,2, 3=Y0}, group 1 = {4,5,6, 7=Y1}
+        assert_eq!(f.eval(&[0, 1]), 2.0);
+        assert_eq!(f.eval(&[3]), 3.0); // Y0 carries all 3 bits
+        assert_eq!(f.eval(&[3, 0]), 3.0); // X bit absorbed by Y
+        assert_eq!(f.eval(&[3, 7]), 6.0);
+        assert_eq!(f.eval(&[0, 4]), 2.0);
+    }
+
+    #[test]
+    fn monotone_and_submodular() {
+        let f = EntropyWorstCase::new(3, 3);
+        let ground: Vec<usize> = (0..f.ground_size()).collect();
+        let mut rng = Rng::new(6);
+        assert!(check_monotone(&f, &ground, &mut rng, 80) < 1e-12);
+        assert!(check_diminishing_returns(&f, &ground, &mut rng, 80) < 1e-12);
+    }
+
+    #[test]
+    fn optimal_value_formula() {
+        let f = EntropyWorstCase::new(4, 5);
+        assert_eq!(f.optimal_value(3), 15.0); // 3 Y's
+        assert_eq!(f.optimal_value(4), 20.0);
+        assert_eq!(f.optimal_value(6), 20.0); // 4 Y's; stray bits add nothing
+    }
+
+    #[test]
+    fn adversarial_partition_shape() {
+        let f = EntropyWorstCase::new(3, 2);
+        let parts = f.adversarial_partition();
+        assert_eq!(parts.len(), 3);
+        assert!(parts.iter().all(|p| p.len() == 3));
+        // Y of group 1 is element 5
+        assert!(f.is_y(5));
+        assert_eq!(f.group(5), 1);
+    }
+}

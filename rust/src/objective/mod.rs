@@ -1,0 +1,136 @@
+//! Submodular objective functions.
+//!
+//! The central abstraction is [`SubmodularFn`], which hands out *incremental
+//! evaluation states* ([`State`]): greedy algorithms price candidates through
+//! `State::gain` / `State::batch_gains` and commit with `State::push`. This
+//! is what makes the paper's experiments tractable — facility location keeps
+//! a cached `curmin` vector (O(n) gains instead of O(n·k)), information gain
+//! keeps an incremental Cholesky factor (O(k²) instead of O(k³)), coverage
+//! keeps a covered bitset, and the cut function keeps membership flags.
+//!
+//! Every objective supports *restriction* to a subset of the data for the
+//! decomposable/local evaluation mode of the paper's §4.5 (function
+//! evaluation limited to the elements on a machine).
+
+pub mod coverage;
+pub mod curvature;
+pub mod cut;
+pub mod dpp;
+pub mod entropy_worstcase;
+pub mod facility;
+pub mod infogain;
+pub mod modular;
+
+/// Incremental evaluation state for one growing solution set.
+pub trait State {
+    /// Current f(S).
+    fn value(&self) -> f64;
+
+    /// Marginal gain f(S ∪ {e}) − f(S). Does not commit `e`.
+    fn gain(&mut self, e: usize) -> f64;
+
+    /// Batched gains (hot path; backends may vectorize via XLA artifacts).
+    /// Default implementation prices candidates one by one.
+    fn batch_gains(&mut self, es: &[usize]) -> Vec<f64> {
+        es.iter().map(|&e| self.gain(e)).collect()
+    }
+
+    /// Commit `e` into the solution, returning the realized gain.
+    fn push(&mut self, e: usize) -> f64;
+
+    /// Elements committed so far, in insertion order.
+    fn selected(&self) -> &[usize];
+}
+
+/// A non-negative submodular set function over ground set `0..n`.
+pub trait SubmodularFn: Sync {
+    /// Fresh incremental state with `S = ∅`.
+    fn state(&self) -> Box<dyn State + '_>;
+
+    /// Evaluate f(S) from scratch (default: replay through a state).
+    fn eval(&self, s: &[usize]) -> f64 {
+        let mut st = self.state();
+        for &e in s {
+            st.push(e);
+        }
+        st.value()
+    }
+
+    /// Whether f is monotone (greedy stopping rules differ).
+    fn is_monotone(&self) -> bool {
+        true
+    }
+
+    /// Size of the ground set, if known (buffers, sanity checks).
+    fn ground_size(&self) -> usize;
+}
+
+/// Gain-oracle call counter, shared by algorithms to report the metric the
+/// paper's speedup plots are driven by.
+#[derive(Debug, Default, Clone)]
+pub struct OracleCounter {
+    pub gains: u64,
+    pub batches: u64,
+}
+
+impl OracleCounter {
+    pub fn count_gain(&mut self, n: usize) {
+        self.gains += n as u64;
+    }
+    pub fn count_batch(&mut self) {
+        self.batches += 1;
+    }
+}
+
+/// Brute-force submodularity check on a small ground set (test helper):
+/// verifies diminishing returns f(A+e)−f(A) ≥ f(B+e)−f(B) for sampled
+/// chains A ⊆ B. Returns the worst violation (≤ tol means pass).
+pub fn check_diminishing_returns(
+    f: &dyn SubmodularFn,
+    ground: &[usize],
+    rng: &mut crate::util::rng::Rng,
+    trials: usize,
+) -> f64 {
+    let mut worst: f64 = 0.0;
+    for _ in 0..trials {
+        let mut pool = ground.to_vec();
+        rng.shuffle(&mut pool);
+        let bsz = 1 + rng.below(pool.len().saturating_sub(1).max(1));
+        let asz = rng.below(bsz) + 1;
+        let b: Vec<usize> = pool[..bsz].to_vec();
+        let a: Vec<usize> = b[..asz].to_vec();
+        let Some(&e) = pool[bsz..].first() else { continue };
+        let fa = f.eval(&a);
+        let fb = f.eval(&b);
+        let mut ae = a.clone();
+        ae.push(e);
+        let mut be = b.clone();
+        be.push(e);
+        let gain_a = f.eval(&ae) - fa;
+        let gain_b = f.eval(&be) - fb;
+        worst = worst.max(gain_b - gain_a);
+    }
+    worst
+}
+
+/// Monotonicity spot-check (test helper): f(A) ≤ f(A ∪ e) over random sets.
+pub fn check_monotone(
+    f: &dyn SubmodularFn,
+    ground: &[usize],
+    rng: &mut crate::util::rng::Rng,
+    trials: usize,
+) -> f64 {
+    let mut worst: f64 = 0.0;
+    for _ in 0..trials {
+        let mut pool = ground.to_vec();
+        rng.shuffle(&mut pool);
+        let asz = rng.below(pool.len() - 1) + 1;
+        let a: Vec<usize> = pool[..asz].to_vec();
+        let e = pool[asz];
+        let fa = f.eval(&a);
+        let mut ae = a.clone();
+        ae.push(e);
+        worst = worst.max(fa - f.eval(&ae));
+    }
+    worst
+}

@@ -1,0 +1,98 @@
+//! Modular (additive) function `f(S) = Σ_{e∈S} w(e)` — the degenerate case
+//! where GreeDi is *exactly* optimal (paper §4.1 discussion). Used heavily
+//! in tests as the analytically solvable objective.
+
+use super::{State, SubmodularFn};
+
+/// Additive objective with non-negative weights.
+pub struct Modular {
+    pub weights: Vec<f64>,
+}
+
+impl Modular {
+    pub fn new(weights: Vec<f64>) -> Self {
+        assert!(weights.iter().all(|&w| w >= 0.0), "non-negative weights");
+        Modular { weights }
+    }
+
+    /// Optimal value for a cardinality constraint (top-k weights).
+    pub fn opt_cardinality(&self, k: usize) -> f64 {
+        let mut w = self.weights.clone();
+        w.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        w.iter().take(k).sum()
+    }
+}
+
+impl SubmodularFn for Modular {
+    fn state(&self) -> Box<dyn State + '_> {
+        Box::new(ModularState { obj: self, selected: Vec::new(), value: 0.0 })
+    }
+
+    fn ground_size(&self) -> usize {
+        self.weights.len()
+    }
+}
+
+pub struct ModularState<'a> {
+    obj: &'a Modular,
+    selected: Vec<usize>,
+    value: f64,
+}
+
+impl<'a> State for ModularState<'a> {
+    fn value(&self) -> f64 {
+        self.value
+    }
+
+    fn gain(&mut self, e: usize) -> f64 {
+        if self.selected.contains(&e) {
+            0.0
+        } else {
+            self.obj.weights[e]
+        }
+    }
+
+    fn push(&mut self, e: usize) -> f64 {
+        if self.selected.contains(&e) {
+            return 0.0;
+        }
+        self.selected.push(e);
+        self.value += self.obj.weights[e];
+        self.obj.weights[e]
+    }
+
+    fn selected(&self) -> &[usize] {
+        &self.selected
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn additive_eval() {
+        let f = Modular::new(vec![1.0, 2.0, 3.0]);
+        assert_eq!(f.eval(&[0, 2]), 4.0);
+        assert_eq!(f.eval(&[]), 0.0);
+    }
+
+    #[test]
+    fn duplicates_ignored() {
+        let f = Modular::new(vec![1.0, 2.0]);
+        assert_eq!(f.eval(&[1, 1, 1]), 2.0);
+    }
+
+    #[test]
+    fn opt_cardinality_topk() {
+        let f = Modular::new(vec![5.0, 1.0, 3.0, 2.0]);
+        assert_eq!(f.opt_cardinality(2), 8.0);
+        assert_eq!(f.opt_cardinality(10), 11.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn negative_weight_rejected() {
+        Modular::new(vec![1.0, -0.5]);
+    }
+}

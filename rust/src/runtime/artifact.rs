@@ -1,0 +1,176 @@
+//! Artifact manifest: the contract between `aot.py` and the rust runtime.
+//! `manifest.json` lists every compiled graph with its shape bucket; the
+//! registry validates shapes at load time so a stale `artifacts/` directory
+//! fails fast instead of mis-executing.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::{self, Json};
+
+/// One AOT-compiled graph.
+#[derive(Debug, Clone)]
+pub struct ManifestEntry {
+    pub name: String,
+    pub file: String,
+    pub doc: String,
+    /// Input shapes in argument order (f32).
+    pub inputs: Vec<Vec<usize>>,
+    /// Output shapes (single-output graphs in this project).
+    pub outputs: Vec<Vec<usize>>,
+}
+
+impl ManifestEntry {
+    /// Total f32 element count of input `i`.
+    pub fn input_len(&self, i: usize) -> usize {
+        self.inputs[i].iter().product()
+    }
+
+    pub fn output_len(&self, i: usize) -> usize {
+        self.outputs[i].iter().product()
+    }
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: Vec<ManifestEntry>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts`"))?;
+        let doc = json::parse(&text).map_err(|e| anyhow!("{path:?}: {e}"))?;
+        if doc.get("format").and_then(Json::as_str) != Some("hlo-text") {
+            bail!("{path:?}: unsupported manifest format");
+        }
+        let mut entries = Vec::new();
+        for e in doc
+            .get("entries")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest: missing entries"))?
+        {
+            let shapes = |key: &str| -> Result<Vec<Vec<usize>>> {
+                e.get(key)
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("entry missing {key}"))?
+                    .iter()
+                    .map(|s| s.as_usize_arr().ok_or_else(|| anyhow!("bad shape in {key}")))
+                    .collect()
+            };
+            entries.push(ManifestEntry {
+                name: e
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("entry missing name"))?
+                    .to_string(),
+                file: e
+                    .get("file")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("entry missing file"))?
+                    .to_string(),
+                doc: e.get("doc").and_then(Json::as_str).unwrap_or("").to_string(),
+                inputs: shapes("inputs")?,
+                outputs: shapes("outputs")?,
+            });
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), entries })
+    }
+
+    pub fn find(&self, name: &str) -> Option<&ManifestEntry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    /// Path of an entry's HLO file.
+    pub fn path_of(&self, entry: &ManifestEntry) -> PathBuf {
+        self.dir.join(&entry.file)
+    }
+
+    /// Pick the facility-gain artifact bucket for dimension `d` (smallest
+    /// bucket ≥ d), returning `(entry, padded_d, block_b, block_n)`.
+    pub fn facility_bucket(&self, d: usize) -> Option<(&ManifestEntry, usize, usize, usize)> {
+        let mut best: Option<(&ManifestEntry, usize)> = None;
+        for e in &self.entries {
+            if !e.name.starts_with("facility_gain") {
+                continue;
+            }
+            let bucket_d = *e.inputs[0].last()?;
+            if bucket_d >= d && best.map(|(_, bd)| bucket_d < bd).unwrap_or(true) {
+                best = Some((e, bucket_d));
+            }
+        }
+        best.map(|(e, bd)| (e, bd, e.inputs[0][0], e.inputs[1][0]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), body).unwrap();
+    }
+
+    #[test]
+    fn loads_and_finds() {
+        let dir = std::env::temp_dir().join("greedi_manifest_test1");
+        write_manifest(
+            &dir,
+            r#"{"format": "hlo-text", "entries": [
+                {"name": "facility_gain_b64_n1024_d8", "file": "f.hlo.txt", "doc": "",
+                 "inputs": [[64, 8], [1024, 8], [1024]], "outputs": [[64]]},
+                {"name": "facility_gain_b64_n1024_d32", "file": "g.hlo.txt", "doc": "",
+                 "inputs": [[64, 32], [1024, 32], [1024]], "outputs": [[64]]}
+            ]}"#,
+        );
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.entries.len(), 2);
+        assert!(m.find("facility_gain_b64_n1024_d8").is_some());
+        assert!(m.find("nope").is_none());
+        let e = m.find("facility_gain_b64_n1024_d8").unwrap();
+        assert_eq!(e.input_len(0), 64 * 8);
+        assert_eq!(e.output_len(0), 64);
+    }
+
+    #[test]
+    fn facility_bucket_selects_smallest_fit() {
+        let dir = std::env::temp_dir().join("greedi_manifest_test2");
+        write_manifest(
+            &dir,
+            r#"{"format": "hlo-text", "entries": [
+                {"name": "facility_gain_b64_n1024_d8", "file": "f.hlo.txt", "doc": "",
+                 "inputs": [[64, 8], [1024, 8], [1024]], "outputs": [[64]]},
+                {"name": "facility_gain_b64_n1024_d32", "file": "g.hlo.txt", "doc": "",
+                 "inputs": [[64, 32], [1024, 32], [1024]], "outputs": [[64]]}
+            ]}"#,
+        );
+        let m = Manifest::load(&dir).unwrap();
+        let (e, d, b, n) = m.facility_bucket(6).unwrap();
+        assert_eq!(d, 8);
+        assert_eq!((b, n), (64, 1024));
+        assert!(e.name.ends_with("_d8"));
+        let (_, d32, _, _) = m.facility_bucket(22).unwrap();
+        assert_eq!(d32, 32);
+        assert!(m.facility_bucket(64).is_none());
+    }
+
+    #[test]
+    fn missing_manifest_errors() {
+        let dir = std::env::temp_dir().join("greedi_manifest_missing");
+        let _ = std::fs::remove_dir_all(&dir);
+        assert!(Manifest::load(&dir).is_err());
+    }
+
+    #[test]
+    fn bad_format_rejected() {
+        let dir = std::env::temp_dir().join("greedi_manifest_badfmt");
+        write_manifest(&dir, r#"{"format": "protobuf", "entries": []}"#);
+        assert!(Manifest::load(&dir).is_err());
+    }
+}

@@ -1,0 +1,135 @@
+//! The PJRT execution engine: one CPU client, one compiled executable per
+//! manifest entry, typed f32 execute helpers.
+//!
+//! Thread-safety: the underlying PJRT CPU client is thread-safe, but the
+//! `xla` crate's wrapper types are not marked `Send`/`Sync`. The engine
+//! therefore serializes executions behind a `Mutex` and asserts
+//! `Send + Sync` for the whole struct — sound because every FFI call is
+//! made while holding the lock, and the CPU client itself is re-entrant.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::artifact::{Manifest, ManifestEntry};
+
+struct Loaded {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+struct Inner {
+    _client: xla::PjRtClient,
+    loaded: HashMap<String, Loaded>,
+}
+
+/// Compiled-artifact execution engine.
+pub struct Engine {
+    pub manifest: Manifest,
+    inner: Mutex<Inner>,
+    /// Cumulative number of executions (perf accounting).
+    pub exec_count: std::sync::atomic::AtomicU64,
+}
+
+// SAFETY: all xla FFI objects are only touched under `inner`'s Mutex; the
+// PJRT CPU client itself is thread-safe. See module docs.
+unsafe impl Send for Engine {}
+unsafe impl Sync for Engine {}
+
+impl Engine {
+    /// Load every artifact in `<dir>/manifest.json` and compile it on the
+    /// PJRT CPU client.
+    pub fn load(dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT CPU client: {e}"))?;
+        let mut loaded = HashMap::new();
+        for entry in &manifest.entries {
+            let path = manifest.path_of(entry);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow!("parse {path:?}: {e}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {}: {e}", entry.name))?;
+            loaded.insert(entry.name.clone(), Loaded { exe });
+        }
+        Ok(Engine {
+            manifest,
+            inner: Mutex::new(Inner { _client: client, loaded }),
+            exec_count: std::sync::atomic::AtomicU64::new(0),
+        })
+    }
+
+    /// Load from the default artifact directory.
+    pub fn load_default() -> Result<Engine> {
+        Engine::load(&super::default_artifact_dir())
+    }
+
+    pub fn entry(&self, name: &str) -> Result<ManifestEntry> {
+        self.manifest
+            .find(name)
+            .cloned()
+            .ok_or_else(|| anyhow!("unknown artifact {name}"))
+    }
+
+    /// Execute artifact `name` on f32 buffers (shapes validated against the
+    /// manifest). Returns the flattened f32 output of the (single-output)
+    /// tuple the graphs produce.
+    pub fn execute_f32(&self, name: &str, inputs: &[&[f32]]) -> Result<Vec<f32>> {
+        let entry = self.entry(name)?;
+        if inputs.len() != entry.inputs.len() {
+            bail!(
+                "{name}: expected {} inputs, got {}",
+                entry.inputs.len(),
+                inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, (data, shape)) in inputs.iter().zip(&entry.inputs).enumerate() {
+            let want: usize = shape.iter().product();
+            if data.len() != want {
+                bail!("{name}: input {i} has {} elems, shape {shape:?} wants {want}", data.len());
+            }
+            let bytes: &[u8] = unsafe {
+                std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+            };
+            let lit = xla::Literal::create_from_shape_and_untyped_data(
+                xla::ElementType::F32,
+                shape,
+                bytes,
+            )
+            .map_err(|e| anyhow!("{name}: literal for input {i}: {e}"))?;
+            literals.push(lit);
+        }
+
+        let inner = self.inner.lock().unwrap();
+        let loaded = inner
+            .loaded
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name} not loaded"))?;
+        let result = loaded
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("{name}: execute: {e}"))?;
+        self.exec_count
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("{name}: readback: {e}"))?;
+        // Graphs are lowered with return_tuple=True → unwrap the 1-tuple.
+        let out = lit
+            .to_tuple1()
+            .map_err(|e| anyhow!("{name}: tuple unwrap: {e}"))?;
+        out.to_vec::<f32>()
+            .map_err(|e| anyhow!("{name}: to_vec: {e}"))
+            .with_context(|| format!("output shape {:?}", entry.outputs))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! Engine tests live in `rust/tests/integration_runtime.rs` — they need
+    //! the real artifacts directory, which unit tests must not assume.
+}

@@ -1,0 +1,25 @@
+//! PJRT runtime — loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the request path.
+//!
+//! Python is build-time only: after `make artifacts` the rust binary runs
+//! the Layer-1/2 compute (Pallas kernels inside JAX graphs) through the
+//! `xla` crate's PJRT C API. Interchange is HLO **text** because the
+//! crate's xla_extension 0.5.1 rejects jax≥0.5 serialized protos (64-bit
+//! instruction ids) — see DESIGN.md and /opt/xla-example/README.md.
+
+pub mod artifact;
+pub mod engine;
+pub mod xla_facility;
+
+pub use artifact::{Manifest, ManifestEntry};
+pub use engine::Engine;
+pub use xla_facility::{XlaBackendFactory, XlaFacilityBackend};
+
+/// Default artifact directory (relative to the repo root).
+pub fn default_artifact_dir() -> std::path::PathBuf {
+    // Honour GREEDI_ARTIFACTS for tests/deployment; else ./artifacts.
+    if let Ok(dir) = std::env::var("GREEDI_ARTIFACTS") {
+        return dir.into();
+    }
+    "artifacts".into()
+}

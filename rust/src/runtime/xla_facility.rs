@@ -1,0 +1,158 @@
+//! XLA-backed facility-location gain oracle — the batched hot path.
+//!
+//! Implements [`GainBackend`](crate::objective::facility::GainBackend) by
+//! streaming fixed-shape blocks through the `facility_gain_*` artifact
+//! (the Pallas kernel lowered into the L2 graph):
+//!
+//! * candidates are packed into `B`-row blocks (last block padded by
+//!   repeating the first candidate; surplus outputs are dropped);
+//! * the evaluation window is packed once, at construction, into `N`-row
+//!   data blocks padded with zero rows;
+//! * padded `curmin` entries are 0, so padding rows contribute exactly 0 to
+//!   the gain sums (verified by `test_padding_rows_contribute_zero` on the
+//!   python side and the integration tests here);
+//! * feature dimension is zero-padded up to the artifact's shape bucket
+//!   (zero dims add zero to squared distances).
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use super::engine::Engine;
+use crate::data::Dataset;
+use crate::objective::facility::GainBackend;
+
+/// Batched facility-gain executor over one evaluation window.
+pub struct XlaFacilityBackend {
+    engine: Arc<Engine>,
+    data: Arc<Dataset>,
+    artifact: String,
+    /// Bucketed dims.
+    d_pad: usize,
+    block_b: usize,
+    block_n: usize,
+    /// Window rows packed into padded data blocks (each `block_n * d_pad`).
+    data_blocks: Vec<Vec<f32>>,
+    /// Number of *real* rows per data block (suffix rows are padding).
+    real_rows: Vec<usize>,
+}
+
+impl XlaFacilityBackend {
+    /// Build a backend evaluating gains against `window` (global mode:
+    /// `0..n`; local mode: the machine's shard).
+    pub fn new(engine: &Arc<Engine>, data: &Arc<Dataset>, window: &[usize]) -> Result<Self> {
+        let (entry, d_pad, block_b, block_n) = engine
+            .manifest
+            .facility_bucket(data.d)
+            .ok_or_else(|| anyhow::anyhow!("no facility_gain bucket for d={}", data.d))?;
+        let artifact = entry.name.clone();
+
+        let mut data_blocks = Vec::new();
+        let mut real_rows = Vec::new();
+        for chunk in window.chunks(block_n) {
+            let mut block = vec![0.0f32; block_n * d_pad];
+            for (r, &v) in chunk.iter().enumerate() {
+                let row = data.row(v);
+                block[r * d_pad..r * d_pad + data.d].copy_from_slice(row);
+            }
+            data_blocks.push(block);
+            real_rows.push(chunk.len());
+        }
+
+        Ok(XlaFacilityBackend {
+            engine: Arc::clone(engine),
+            data: Arc::clone(data),
+            artifact,
+            d_pad,
+            block_b,
+            block_n,
+            data_blocks,
+            real_rows,
+        })
+    }
+
+    /// Pack a candidate block (ids) into a padded `[block_b, d_pad]` buffer.
+    fn pack_cands(&self, cands: &[usize]) -> Vec<f32> {
+        debug_assert!(!cands.is_empty() && cands.len() <= self.block_b);
+        let mut buf = vec![0.0f32; self.block_b * self.d_pad];
+        for (r, &c) in cands.iter().enumerate() {
+            buf[r * self.d_pad..r * self.d_pad + self.data.d]
+                .copy_from_slice(self.data.row(c));
+        }
+        // pad by repeating the first candidate (outputs ignored)
+        for r in cands.len()..self.block_b {
+            let (first, rest) = buf.split_at_mut(self.d_pad);
+            let _ = &rest; // slices below copy from `first`
+            let dst = r * self.d_pad;
+            // copy_within: first row -> row r
+            let src: Vec<f32> = first.to_vec();
+            buf[dst..dst + self.d_pad].copy_from_slice(&src);
+        }
+        buf
+    }
+}
+
+/// `BackendFactory` implementation: builds window-specific backends from a
+/// shared engine (so local/merge objectives each get a matching backend).
+pub struct XlaBackendFactory {
+    pub engine: Arc<Engine>,
+}
+
+impl crate::coordinator::BackendFactory for XlaBackendFactory {
+    fn make(
+        &self,
+        data: &Arc<Dataset>,
+        window: &[usize],
+    ) -> Arc<dyn GainBackend> {
+        Arc::new(
+            XlaFacilityBackend::new(&self.engine, data, window)
+                .expect("facility backend construction"),
+        )
+    }
+}
+
+impl GainBackend for XlaFacilityBackend {
+    fn batch_gain_sums(&self, cands: &[usize], curmin: &[f32]) -> Vec<f64> {
+        let window_len: usize = self.real_rows.iter().sum();
+        assert_eq!(
+            curmin.len(),
+            window_len,
+            "curmin length {} != backend window {} — backend/objective window mismatch",
+            curmin.len(),
+            window_len
+        );
+        let mut sums = vec![0.0f64; cands.len()];
+        // Pack curmin per data block once per call (padded with zeros).
+        let mut curmin_blocks: Vec<Vec<f32>> = Vec::with_capacity(self.data_blocks.len());
+        let mut at = 0usize;
+        for &rows in &self.real_rows {
+            let mut cm = vec![0.0f32; self.block_n];
+            cm[..rows].copy_from_slice(&curmin[at..at + rows]);
+            curmin_blocks.push(cm);
+            at += rows;
+        }
+        debug_assert_eq!(at, curmin.len(), "curmin length != window length");
+
+        for cand_chunk_idx in 0..cands.len().div_ceil(self.block_b) {
+            let lo = cand_chunk_idx * self.block_b;
+            let hi = (lo + self.block_b).min(cands.len());
+            let cbuf = self.pack_cands(&cands[lo..hi]);
+            for (dblock, cm) in self.data_blocks.iter().zip(&curmin_blocks) {
+                let out = self
+                    .engine
+                    .execute_f32(&self.artifact, &[&cbuf, dblock, cm])
+                    .expect("facility_gain artifact execution failed");
+                for (i, s) in sums[lo..hi].iter_mut().enumerate() {
+                    *s += out[i] as f64;
+                }
+            }
+        }
+        sums
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! Numerical agreement with the scalar path is covered by
+    //! `rust/tests/integration_runtime.rs` (requires built artifacts).
+}

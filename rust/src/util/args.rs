@@ -1,0 +1,150 @@
+//! Minimal CLI argument parser (the vendored dependency closure has no
+//! `clap`). Supports `--flag`, `--key value`, `--key=value` and positional
+//! arguments, with typed accessors and a generated usage string.
+
+use std::collections::HashMap;
+
+/// Parsed command line.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: HashMap<String, String>,
+    pub flags: Vec<String>,
+    declared: Vec<(String, String, String)>, // (name, default, help)
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Self {
+        let mut a = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(rest) = tok.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    a.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    a.options.insert(rest.to_string(), v);
+                } else {
+                    a.flags.push(rest.to_string());
+                }
+            } else {
+                a.positional.push(tok);
+            }
+        }
+        a
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env() -> Self {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    /// Declare an option for the usage string; returns self for chaining.
+    pub fn declare(mut self, name: &str, default: &str, help: &str) -> Self {
+        self.declared
+            .push((name.to_string(), default.to_string(), help.to_string()));
+        self
+    }
+
+    pub fn usage(&self, prog: &str) -> String {
+        let mut s = format!("usage: {prog} [options]\n");
+        for (name, default, help) in &self.declared {
+            s.push_str(&format!("  --{name:<16} {help} (default: {default})\n"));
+        }
+        s
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_str(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> u64 {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects a float, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    /// Comma-separated list of usize (`--k 8,16,32`).
+    pub fn get_usize_list(&self, name: &str, default: &[usize]) -> Vec<usize> {
+        match self.get(name) {
+            None => default.to_vec(),
+            Some(v) => v
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| s.trim().parse().unwrap_or_else(|_| panic!("--{name}: bad integer {s:?}")))
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn positional_and_options() {
+        let a = parse("fig4 --part a --k 50 --seed=7 --verbose");
+        assert_eq!(a.positional, vec!["fig4"]);
+        assert_eq!(a.get("part"), Some("a"));
+        assert_eq!(a.get_usize("k", 0), 50);
+        assert_eq!(a.get_u64("seed", 0), 7);
+        assert!(a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("run");
+        assert_eq!(a.get_usize("k", 10), 10);
+        assert_eq!(a.get_f64("alpha", 1.5), 1.5);
+        assert_eq!(a.get_str("part", "a"), "a");
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = parse("x --ks 8,16,32");
+        assert_eq!(a.get_usize_list("ks", &[1]), vec![8, 16, 32]);
+        assert_eq!(a.get_usize_list("ms", &[1, 2]), vec![1, 2]);
+    }
+
+    #[test]
+    fn flag_before_option() {
+        let a = parse("--dry-run --m 4");
+        assert!(a.has_flag("dry-run"));
+        assert_eq!(a.get_usize("m", 0), 4);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_int_panics() {
+        parse("--k abc").get_usize("k", 0);
+    }
+}

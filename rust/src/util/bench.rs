@@ -1,0 +1,129 @@
+//! Micro-benchmark harness (no criterion in the offline closure).
+//!
+//! Provides warmup + timed iterations with mean/std/min reporting, a
+//! `black_box` to defeat const-folding, and a tiny registry so `cargo bench`
+//! targets can share formatting. Deliberately simple: the experiment benches
+//! measure end-to-end protocol runs (seconds), not nanosecond kernels.
+
+use std::hint::black_box as std_black_box;
+use std::time::Instant;
+
+use super::stats::summarize;
+use super::timer::fmt_duration;
+
+/// Re-export of `std::hint::black_box` under the criterion-familiar name.
+pub fn black_box<T>(x: T) -> T {
+    std_black_box(x)
+}
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub min_s: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>12} ±{:>10}  (min {:>10}, n={})",
+            self.name,
+            fmt_duration(self.mean_s),
+            fmt_duration(self.std_s),
+            fmt_duration(self.min_s),
+            self.iters
+        )
+    }
+}
+
+/// Benchmark runner with configurable warmup/iteration counts.
+pub struct Bencher {
+    pub warmup: usize,
+    pub iters: usize,
+    pub results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher { warmup: 1, iters: 5, results: Vec::new() }
+    }
+}
+
+impl Bencher {
+    pub fn new(warmup: usize, iters: usize) -> Self {
+        Bencher { warmup, iters: iters.max(1), results: Vec::new() }
+    }
+
+    /// Honour `GREEDI_BENCH_FAST=1` for CI-speed runs.
+    pub fn from_env() -> Self {
+        if std::env::var("GREEDI_BENCH_FAST").ok().as_deref() == Some("1") {
+            Bencher::new(0, 2)
+        } else {
+            Bencher::default()
+        }
+    }
+
+    /// Run `f` and record its timing under `name`. The closure's output is
+    /// black-boxed so the work cannot be optimized away.
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &BenchResult {
+        for _ in 0..self.warmup {
+            black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters {
+            let t = Instant::now();
+            black_box(f());
+            samples.push(t.elapsed().as_secs_f64());
+        }
+        let s = summarize(&samples);
+        let res = BenchResult {
+            name: name.to_string(),
+            iters: self.iters,
+            mean_s: s.mean,
+            std_s: s.std,
+            min_s: s.min,
+        };
+        println!("{}", res.report());
+        self.results.push(res);
+        self.results.last().unwrap()
+    }
+
+    /// Ratio between two recorded results (speedup of `b` over `a`).
+    pub fn speedup(&self, a: &str, b: &str) -> Option<f64> {
+        let fa = self.results.iter().find(|r| r.name == a)?.mean_s;
+        let fb = self.results.iter().find(|r| r.name == b)?.mean_s;
+        Some(fa / fb)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_records_result() {
+        let mut b = Bencher::new(0, 3);
+        b.bench("noop", || 1 + 1);
+        assert_eq!(b.results.len(), 1);
+        assert_eq!(b.results[0].iters, 3);
+        assert!(b.results[0].mean_s >= 0.0);
+    }
+
+    #[test]
+    fn speedup_of_slower_over_faster_gt_one() {
+        let mut b = Bencher::new(0, 3);
+        b.bench("slow", || {
+            let mut s = 0u64;
+            for i in 0..200_000u64 {
+                s = s.wrapping_add(black_box(i));
+            }
+            s
+        });
+        b.bench("fast", || black_box(1u64));
+        assert!(b.speedup("slow", "fast").unwrap() > 1.0);
+        assert!(b.speedup("missing", "fast").is_none());
+    }
+}

@@ -1,0 +1,16 @@
+//! Infrastructure substrates built from scratch for the offline environment:
+//! deterministic RNG, thread pool, CLI parsing, a TOML-subset config reader,
+//! summary statistics, wallclock timing, ASCII table rendering and a
+//! micro-benchmark harness (criterion/clap/serde/tokio are unavailable in
+//! the vendored dependency closure — each is replaced by a purpose-built
+//! module below).
+
+pub mod args;
+pub mod bench;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod table;
+pub mod threadpool;
+pub mod timer;
+pub mod toml;

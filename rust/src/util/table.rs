@@ -1,0 +1,151 @@
+//! ASCII table / series rendering — the experiment harnesses print the same
+//! rows/series the paper's figures plot, in a diff-friendly format that is
+//! also recorded in EXPERIMENTS.md.
+
+/// A column-aligned ASCII table.
+#[derive(Debug, Default)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Convenience: format f64 cells with 4 decimals.
+    pub fn row_f(&mut self, label: &str, values: &[f64]) {
+        let mut cells = vec![label.to_string()];
+        cells.extend(values.iter().map(|v| format!("{v:.4}")));
+        self.row(&cells);
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("## {}\n", self.title));
+        }
+        let sep: String = widths
+            .iter()
+            .map(|w| "-".repeat(w + 2))
+            .collect::<Vec<_>>()
+            .join("+");
+        let fmt_row = |cells: &[String]| -> String {
+            (0..ncol)
+                .map(|i| format!(" {:<width$} ", cells[i], width = widths[i]))
+                .collect::<Vec<_>>()
+                .join("|")
+        };
+        out.push_str(&fmt_row(&self.headers));
+        out.push('\n');
+        out.push_str(&sep);
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        println!("{}", self.render());
+    }
+}
+
+/// Named (x, y) series — one per curve in a paper figure.
+#[derive(Debug, Clone)]
+pub struct Series {
+    pub name: String,
+    pub points: Vec<(f64, f64)>,
+}
+
+impl Series {
+    pub fn new(name: &str) -> Self {
+        Series { name: name.to_string(), points: Vec::new() }
+    }
+
+    pub fn push(&mut self, x: f64, y: f64) {
+        self.points.push((x, y));
+    }
+}
+
+/// Render a set of series as a table with one x column and one column per
+/// series (the textual equivalent of a multi-line figure).
+pub fn render_series(title: &str, xlabel: &str, series: &[Series]) -> String {
+    let mut headers: Vec<&str> = vec![xlabel];
+    for s in series {
+        headers.push(&s.name);
+    }
+    let mut t = Table::new(title, &headers);
+    let xs: Vec<f64> = series
+        .first()
+        .map(|s| s.points.iter().map(|p| p.0).collect())
+        .unwrap_or_default();
+    for (i, x) in xs.iter().enumerate() {
+        let mut cells = vec![format!("{x}")];
+        for s in series {
+            cells.push(
+                s.points
+                    .get(i)
+                    .map(|p| format!("{:.4}", p.1))
+                    .unwrap_or_else(|| "-".into()),
+            );
+        }
+        t.row(&cells);
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("demo", &["m", "greedi", "random"]);
+        t.row_f("2", &[0.98, 0.55]);
+        t.row_f("4", &[0.97, 0.52]);
+        let s = t.render();
+        assert!(s.contains("## demo"));
+        assert!(s.contains("greedi"));
+        assert!(s.lines().count() >= 4);
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_mismatch_panics() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(&["only-one".to_string()]);
+    }
+
+    #[test]
+    fn series_render() {
+        let mut a = Series::new("greedi");
+        a.push(2.0, 0.99);
+        a.push(4.0, 0.98);
+        let mut b = Series::new("random");
+        b.push(2.0, 0.6);
+        b.push(4.0, 0.5);
+        let out = render_series("fig", "m", &[a, b]);
+        assert!(out.contains("greedi") && out.contains("random"));
+        assert!(out.contains("0.9900"));
+    }
+}

@@ -1,0 +1,183 @@
+//! Fixed-size worker thread pool (no tokio in the offline closure).
+//!
+//! The simulated MapReduce engine runs map/reduce tasks on this pool. The
+//! design is the classic channel-of-boxed-closures worker pool plus a scoped
+//! `parallel_map` helper that preserves input order and propagates panics.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A fixed pool of worker threads executing boxed jobs.
+pub struct ThreadPool {
+    workers: Vec<thread::JoinHandle<()>>,
+    sender: Option<mpsc::Sender<Job>>,
+}
+
+impl ThreadPool {
+    /// Create a pool with `size` workers (min 1).
+    pub fn new(size: usize) -> Self {
+        let size = size.max(1);
+        let (sender, receiver) = mpsc::channel::<Job>();
+        let receiver = Arc::new(Mutex::new(receiver));
+        let workers = (0..size)
+            .map(|i| {
+                let rx = Arc::clone(&receiver);
+                thread::Builder::new()
+                    .name(format!("greedi-worker-{i}"))
+                    .spawn(move || loop {
+                        let job = { rx.lock().unwrap().recv() };
+                        match job {
+                            Ok(job) => job(),
+                            Err(_) => break, // channel closed
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool { workers, sender: Some(sender) }
+    }
+
+    /// Pool sized to the machine (`available_parallelism`, >= 1).
+    pub fn default_size() -> Self {
+        let n = thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        ThreadPool::new(n)
+    }
+
+    /// Submit a fire-and-forget job.
+    pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
+        self.sender
+            .as_ref()
+            .expect("pool shut down")
+            .send(Box::new(job))
+            .expect("worker channel closed");
+    }
+
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.sender.take()); // close channel => workers exit
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Run `f` over `items` in parallel on a temporary scoped pool, returning
+/// results in input order. Panics in any task are re-raised on the caller.
+///
+/// This uses `std::thread::scope` rather than the long-lived pool so that
+/// `f` may borrow from the caller's stack (shards reference the dataset).
+pub fn parallel_map<T, R, F>(items: Vec<T>, workers: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(usize, T) -> R + Sync,
+{
+    let workers = workers.max(1);
+    let n = items.len();
+    let mut results: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    if n == 0 {
+        return Vec::new();
+    }
+    let work: Mutex<std::vec::IntoIter<(usize, T)>> =
+        Mutex::new(items.into_iter().enumerate().collect::<Vec<_>>().into_iter());
+    let slots: Vec<Mutex<&mut Option<R>>> =
+        results.iter_mut().map(Mutex::new).collect();
+    let panicked = Mutex::new(None::<String>);
+
+    thread::scope(|scope| {
+        for _ in 0..workers.min(n) {
+            scope.spawn(|| loop {
+                let next = { work.lock().unwrap().next() };
+                let Some((idx, item)) = next else { break };
+                let out = catch_unwind(AssertUnwindSafe(|| f(idx, item)));
+                match out {
+                    Ok(r) => {
+                        **slots[idx].lock().unwrap() = Some(r);
+                    }
+                    Err(e) => {
+                        let msg = e
+                            .downcast_ref::<String>()
+                            .cloned()
+                            .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                            .unwrap_or_else(|| "task panicked".into());
+                        *panicked.lock().unwrap() = Some(msg);
+                        break;
+                    }
+                }
+            });
+        }
+    });
+
+    if let Some(msg) = panicked.into_inner().unwrap() {
+        panic!("parallel_map task panicked: {msg}");
+    }
+    results
+        .into_iter()
+        .map(|r| r.expect("task did not complete"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn pool_runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool); // join
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let out = parallel_map((0..1000).collect(), 8, |_, x: i32| x * 2);
+        assert_eq!(out, (0..1000).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn parallel_map_empty() {
+        let out: Vec<i32> = parallel_map(Vec::<i32>::new(), 4, |_, x| x);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn parallel_map_borrows_environment() {
+        let data = vec![1.0f64; 100];
+        let sums = parallel_map(vec![0usize, 1, 2, 3], 2, |_, _| data.iter().sum::<f64>());
+        assert!(sums.iter().all(|&s| (s - 100.0).abs() < 1e-12));
+    }
+
+    #[test]
+    #[should_panic(expected = "parallel_map task panicked")]
+    fn parallel_map_propagates_panic() {
+        parallel_map(vec![1, 2, 3], 2, |_, x: i32| {
+            if x == 2 {
+                panic!("boom");
+            }
+            x
+        });
+    }
+
+    #[test]
+    fn pool_min_one_worker() {
+        let pool = ThreadPool::new(0);
+        assert_eq!(pool.size(), 1);
+    }
+}

@@ -1,0 +1,271 @@
+//! TOML-subset parser for experiment config files (`configs/*.toml`).
+//!
+//! The vendored dependency closure has no `serde`/`toml`, so we implement the
+//! subset the config system needs: `[section]` headers, `key = value` with
+//! string / integer / float / bool / flat array values, `#` comments, and
+//! blank lines. Nested tables and multi-line values are intentionally out of
+//! scope — config presets stay flat by design.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A parsed TOML-subset value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Value::Str(s) => write!(f, "{s:?}"),
+            Value::Int(i) => write!(f, "{i}"),
+            Value::Float(x) => write!(f, "{x}"),
+            Value::Bool(b) => write!(f, "{b}"),
+            Value::Array(xs) => {
+                write!(f, "[")?;
+                for (i, x) in xs.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "{x}")?;
+                }
+                write!(f, "]")
+            }
+        }
+    }
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_i64().and_then(|i| usize::try_from(i).ok())
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(x) => Some(*x),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize_array(&self) -> Option<Vec<usize>> {
+        match self {
+            Value::Array(xs) => xs.iter().map(|v| v.as_usize()).collect(),
+            _ => None,
+        }
+    }
+}
+
+/// A parsed document: `section.key -> value`; keys before any `[section]`
+/// live in the "" (root) section.
+#[derive(Debug, Default, Clone)]
+pub struct Document {
+    pub entries: BTreeMap<String, Value>,
+}
+
+impl Document {
+    pub fn get(&self, path: &str) -> Option<&Value> {
+        self.entries.get(path)
+    }
+
+    pub fn sections(&self) -> Vec<String> {
+        let mut out: Vec<String> = self
+            .entries
+            .keys()
+            .filter_map(|k| k.rsplit_once('.').map(|(s, _)| s.to_string()))
+            .collect();
+        out.sort();
+        out.dedup();
+        out
+    }
+}
+
+/// Parse error with a line number.
+#[derive(Debug)]
+pub struct ParseError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "toml parse error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+fn parse_scalar(tok: &str, line: usize) -> Result<Value, ParseError> {
+    let t = tok.trim();
+    if t.starts_with('"') && t.ends_with('"') && t.len() >= 2 {
+        return Ok(Value::Str(t[1..t.len() - 1].to_string()));
+    }
+    if t == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if t == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Ok(i) = t.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(x) = t.parse::<f64>() {
+        return Ok(Value::Float(x));
+    }
+    Err(ParseError { line, msg: format!("bad value {t:?}") })
+}
+
+fn parse_value(tok: &str, line: usize) -> Result<Value, ParseError> {
+    let t = tok.trim();
+    if t.starts_with('[') {
+        if !t.ends_with(']') {
+            return Err(ParseError { line, msg: "unterminated array".into() });
+        }
+        let inner = &t[1..t.len() - 1];
+        let mut items = Vec::new();
+        if !inner.trim().is_empty() {
+            for part in inner.split(',') {
+                items.push(parse_scalar(part, line)?);
+            }
+        }
+        return Ok(Value::Array(items));
+    }
+    parse_scalar(t, line)
+}
+
+/// Strip a trailing comment that is not inside a quoted string.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+/// Parse a TOML-subset document.
+pub fn parse(text: &str) -> Result<Document, ParseError> {
+    let mut doc = Document::default();
+    let mut section = String::new();
+    for (idx, raw) in text.lines().enumerate() {
+        let line_no = idx + 1;
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if line.starts_with('[') {
+            if !line.ends_with(']') {
+                return Err(ParseError { line: line_no, msg: "unterminated section header".into() });
+            }
+            section = line[1..line.len() - 1].trim().to_string();
+            continue;
+        }
+        let Some((k, v)) = line.split_once('=') else {
+            return Err(ParseError { line: line_no, msg: format!("expected key = value, got {line:?}") });
+        };
+        let key = k.trim();
+        if key.is_empty() {
+            return Err(ParseError { line: line_no, msg: "empty key".into() });
+        }
+        let path = if section.is_empty() {
+            key.to_string()
+        } else {
+            format!("{section}.{key}")
+        };
+        doc.entries.insert(path, parse_value(v, line_no)?);
+    }
+    Ok(doc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars_and_sections() {
+        let doc = parse(
+            r#"
+            # experiment preset
+            name = "fig4a"
+            [greedi]
+            m = 10
+            alpha = 1.5
+            local = true
+            ks = [10, 20, 50]
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.get("name").unwrap().as_str(), Some("fig4a"));
+        assert_eq!(doc.get("greedi.m").unwrap().as_usize(), Some(10));
+        assert_eq!(doc.get("greedi.alpha").unwrap().as_f64(), Some(1.5));
+        assert_eq!(doc.get("greedi.local").unwrap().as_bool(), Some(true));
+        assert_eq!(
+            doc.get("greedi.ks").unwrap().as_usize_array(),
+            Some(vec![10, 20, 50])
+        );
+    }
+
+    #[test]
+    fn comments_inside_strings_preserved() {
+        let doc = parse(r##"s = "a#b" # trailing"##).unwrap();
+        assert_eq!(doc.get("s").unwrap().as_str(), Some("a#b"));
+    }
+
+    #[test]
+    fn int_promotes_to_f64() {
+        let doc = parse("x = 3").unwrap();
+        assert_eq!(doc.get("x").unwrap().as_f64(), Some(3.0));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let err = parse("ok = 1\nbroken line").unwrap_err();
+        assert_eq!(err.line, 2);
+    }
+
+    #[test]
+    fn empty_array() {
+        let doc = parse("xs = []").unwrap();
+        assert_eq!(doc.get("xs").unwrap().as_usize_array(), Some(vec![]));
+    }
+
+    #[test]
+    fn bad_value_rejected() {
+        assert!(parse("x = nope").is_err());
+    }
+
+    #[test]
+    fn sections_listing() {
+        let doc = parse("[a]\nx=1\n[b]\ny=2").unwrap();
+        assert_eq!(doc.sections(), vec!["a".to_string(), "b".to_string()]);
+    }
+}

@@ -1,0 +1,97 @@
+//! Integration: Algorithm 3 (GreeDi under general hereditary constraints)
+//! across matroid / knapsack / p-system / intersection systems, with
+//! feasibility verified on the final solutions (Theorem 12 setting).
+
+use std::sync::Arc;
+
+use greedi::constraints::cardinality::Cardinality;
+use greedi::constraints::intersection::Intersection;
+use greedi::constraints::knapsack::Knapsack;
+use greedi::constraints::matroid::PartitionMatroid;
+use greedi::constraints::psystem::MatroidIntersection;
+use greedi::constraints::Constraint;
+use greedi::coordinator::greedi::{Greedi, GreediConfig};
+use greedi::coordinator::FacilityProblem;
+use greedi::data::synth::{gaussian_blobs, SynthConfig};
+
+fn problem(n: usize, seed: u64) -> (Arc<greedi::data::Dataset>, FacilityProblem) {
+    let ds = Arc::new(gaussian_blobs(&SynthConfig::tiny_images(n, 8), seed));
+    let p = FacilityProblem::new(&ds);
+    (ds, p)
+}
+
+#[test]
+fn greedi_under_partition_matroid() {
+    let (ds, p) = problem(200, 1);
+    // categories: 4 groups round-robin, 2 slots each => ρ = 8
+    let cats: Vec<usize> = (0..ds.n).map(|i| i % 4).collect();
+    let con = PartitionMatroid::new(cats, vec![2, 2, 2, 2]);
+    let r = Greedi::new(GreediConfig::new(4, con.rho())).run_constrained(&p, &con, &con, 3);
+    assert!(con.is_feasible(&r.solution), "infeasible {:?}", r.solution);
+    assert!(r.solution.len() <= 8);
+    assert!(r.value > 0.0);
+}
+
+#[test]
+fn greedi_under_knapsack() {
+    let (ds, p) = problem(150, 2);
+    let costs: Vec<f64> = (0..ds.n).map(|i| 1.0 + (i % 3) as f64).collect();
+    let con = Knapsack::new(costs, 10.0);
+    let r = Greedi::new(GreediConfig::new(3, con.rho())).run_constrained(&p, &con, &con, 4);
+    assert!(con.is_feasible(&r.solution));
+    assert!(r.value > 0.0);
+}
+
+#[test]
+fn greedi_under_matroid_intersection() {
+    let (ds, p) = problem(120, 3);
+    let m1 = PartitionMatroid::new((0..ds.n).map(|i| i % 3).collect(), vec![2, 2, 2]);
+    let m2 = PartitionMatroid::new((0..ds.n).map(|i| (i / 3) % 2).collect(), vec![3, 3]);
+    let con = MatroidIntersection::new(vec![m1, m2]);
+    let r = Greedi::new(GreediConfig::new(3, con.rho())).run_constrained(&p, &con, &con, 5);
+    assert!(con.is_feasible(&r.solution));
+}
+
+#[test]
+fn greedi_under_psystem_plus_knapsack() {
+    // The paper's §5.2 composite: p-system ∩ d-knapsack.
+    let (ds, p) = problem(120, 4);
+    let matroid = PartitionMatroid::new((0..ds.n).map(|i| i % 5).collect(), vec![2; 5]);
+    let knap = Knapsack::new((0..ds.n).map(|i| 1.0 + (i % 2) as f64).collect(), 8.0);
+    let con = Intersection::new(vec![Box::new(matroid), Box::new(knap)]);
+    let r = Greedi::new(GreediConfig::new(3, con.rho())).run_constrained(&p, &con, &con, 6);
+    assert!(con.is_feasible(&r.solution));
+    assert!(r.value > 0.0);
+}
+
+#[test]
+fn tighter_round2_constraint_respected() {
+    // Algorithm 2's κ > k: round 1 over-selects, round 2 enforces k.
+    let (_, p) = problem(200, 5);
+    let r1 = Cardinality::new(16);
+    let r2 = Cardinality::new(8);
+    let r = Greedi::new(GreediConfig::new(4, 8)).run_constrained(&p, &r1, &r2, 7);
+    assert!(r.solution.len() <= 8);
+}
+
+#[test]
+fn constrained_matches_plain_when_cardinality() {
+    // run() is sugar for run_constrained(Cardinality(κ), Cardinality(k)).
+    let (_, p) = problem(150, 6);
+    let a = Greedi::new(GreediConfig::new(4, 6)).run(&p, 8);
+    let b = Greedi::new(GreediConfig::new(4, 6)).run_constrained(
+        &p,
+        &Cardinality::new(6),
+        &Cardinality::new(6),
+        8,
+    );
+    assert_eq!(a.solution, b.solution);
+}
+
+#[test]
+fn rho_drives_default_budgets() {
+    let con = Knapsack::new(vec![2.0; 10], 6.0);
+    assert_eq!(con.rho(), 3);
+    let m = PartitionMatroid::new(vec![0, 0, 1], vec![1, 1]);
+    assert_eq!(m.rho(), 2);
+}

@@ -1,0 +1,91 @@
+//! Integration tests for the simulated MapReduce runtime driving real
+//! protocol work: timing accounting, shuffle volumes, and the Fig-8
+//! speedup mechanics (round-2 dominance at large m).
+
+use std::sync::Arc;
+
+use greedi::coordinator::greedi::{centralized, Greedi, GreediConfig};
+use greedi::coordinator::InfoGainProblem;
+use greedi::data::synth::yahoo_like;
+use greedi::mapreduce::{JobReport, MapReduce};
+
+#[test]
+fn stage_timing_accounting() {
+    let mr = MapReduce::new(1);
+    let (outs, rep) = mr.run_stage(vec![10_000usize, 100_000, 1_000], |_, n| {
+        (0..n as u64).map(std::hint::black_box).sum::<u64>()
+    });
+    assert_eq!(outs.len(), 3);
+    // the 100k task must be the max
+    let max_idx = rep
+        .task_times
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .unwrap()
+        .0;
+    assert_eq!(max_idx, 1);
+    assert!((rep.total_cpu_time - rep.task_times.iter().sum::<f64>()).abs() < 1e-12);
+}
+
+#[test]
+fn greedi_two_stages_recorded() {
+    let ds = Arc::new(yahoo_like(500, 1));
+    let p = InfoGainProblem::paper_params(&ds);
+    let r = Greedi::new(GreediConfig::new(4, 8)).run(&p, 1);
+    assert_eq!(r.job.stages.len(), 2, "map + reduce");
+    assert_eq!(r.job.stages[0].task_times.len(), 4, "one task per machine");
+    assert_eq!(r.job.stages[1].task_times.len(), 1, "single merge task");
+    assert!(r.job.shuffled_elements <= 4 * 8);
+    assert!(r.sim_time() > 0.0);
+}
+
+#[test]
+fn speedup_grows_then_saturates() {
+    // Fig 8 mechanics: sim-parallel time falls as m grows (map shards
+    // shrink) until the merge round's m·κ-candidate greedy dominates.
+    let ds = Arc::new(yahoo_like(4_000, 2));
+    let p = InfoGainProblem::paper_params(&ds);
+    let k = 24;
+    let central = centralized(&p, k, "lazy", 1).sim_time();
+
+    let mut speedups = Vec::new();
+    for m in [2, 8, 32] {
+        let r = Greedi::new(GreediConfig::new(m, k)).run(&p, 1);
+        speedups.push(central / r.sim_time());
+    }
+    // speedup at m=8 must beat m=2
+    assert!(
+        speedups[1] > speedups[0],
+        "speedups not increasing: {speedups:?}"
+    );
+    // and the round-2 share of time must grow with m
+    let share = |m: usize| {
+        let r = Greedi::new(GreediConfig::new(m, k)).run(&p, 1);
+        r.job.stages[1].max_task_time / r.sim_time()
+    };
+    let s2 = share(2);
+    let s64 = share(64);
+    assert!(
+        s64 > s2,
+        "merge share must grow with m: m=2 {s2:.3} vs m=64 {s64:.3}"
+    );
+}
+
+#[test]
+fn job_report_shuffle_accumulates_across_protocols() {
+    let mut job = JobReport::default();
+    job.record_shuffle(10);
+    job.record_shuffle(5);
+    assert_eq!(job.shuffled_elements, 15);
+}
+
+#[test]
+fn parallel_engine_matches_sequential_results() {
+    let ds = Arc::new(yahoo_like(600, 3));
+    let p = InfoGainProblem::paper_params(&ds);
+    let seq = Greedi::new(GreediConfig::new(4, 8).threads(1)).run(&p, 9);
+    let par = Greedi::new(GreediConfig::new(4, 8).threads(4)).run(&p, 9);
+    assert_eq!(seq.solution, par.solution, "thread count must not change results");
+    assert_eq!(seq.value, par.value);
+}

@@ -1,0 +1,264 @@
+//! Property-based tests (hand-rolled harness — proptest is not in the
+//! offline dependency closure): randomized invariants over the coordinator
+//! (partitioning/routing, protocol feasibility, state management), the
+//! objective states, and the algorithm family. Each property runs across a
+//! deterministic seed sweep; failures print the offending seed.
+
+use std::sync::Arc;
+
+use greedi::algorithms::{self, Maximizer};
+use greedi::constraints::cardinality::Cardinality;
+use greedi::constraints::knapsack::Knapsack;
+use greedi::constraints::matroid::PartitionMatroid;
+use greedi::constraints::Constraint;
+use greedi::coordinator::greedi::{Greedi, GreediConfig};
+use greedi::coordinator::{CutProblem, FacilityProblem, Problem};
+use greedi::data::graph::social_network;
+use greedi::data::synth::{gaussian_blobs, SynthConfig};
+use greedi::data::transactions::zipf_transactions;
+use greedi::objective::coverage::Coverage;
+use greedi::objective::cut::GraphCut;
+use greedi::objective::facility::FacilityLocation;
+use greedi::objective::SubmodularFn;
+use greedi::mapreduce::partition::{balanced_partition, check_is_partition, random_partition};
+use greedi::util::rng::Rng;
+
+const SEEDS: std::ops::Range<u64> = 0..12;
+
+/// Random (objective, ground-size) generator spanning the three main
+/// objective families. The objectives own their data (Arc), so the boxes
+/// are 'static.
+fn random_objective(seed: u64) -> (Box<dyn SubmodularFn>, usize) {
+    let mut rng = Rng::new(seed);
+    match rng.below(3) {
+        0 => {
+            let n = 30 + rng.below(60);
+            let ds = Arc::new(gaussian_blobs(
+                &SynthConfig::tiny_images(n, 4 + rng.below(6)),
+                seed,
+            ));
+            (Box::new(FacilityLocation::from_dataset(&ds)), n)
+        }
+        1 => {
+            let n = 30 + rng.below(60);
+            let td = Arc::new(zipf_transactions(
+                n,
+                40 + rng.below(60),
+                5 + rng.below(10),
+                1.1,
+                seed,
+            ));
+            (Box::new(Coverage::new(&td)), n)
+        }
+        _ => {
+            let n = 30 + rng.below(60);
+            let g = Arc::new(social_network(n, n * 5, seed));
+            (Box::new(GraphCut::new(&g)), n)
+        }
+    }
+}
+
+// ---------------------------------------------------------------- properties
+
+#[test]
+fn prop_partitions_are_exact() {
+    for seed in SEEDS {
+        let mut rng = Rng::new(seed);
+        let n = 50 + rng.below(500);
+        let m = 1 + rng.below(16);
+        let ground: Vec<usize> = (0..n).collect();
+        let p1 = random_partition(&ground, m, &mut rng);
+        assert!(check_is_partition(&ground, &p1), "random partition seed {seed}");
+        let p2 = balanced_partition(&ground, m, &mut rng);
+        assert!(check_is_partition(&ground, &p2), "balanced partition seed {seed}");
+        let sizes: Vec<usize> = p2.iter().map(|s| s.len()).collect();
+        let (mn, mx) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+        assert!(mx - mn <= 1, "balanced sizes seed {seed}: {sizes:?}");
+    }
+}
+
+#[test]
+fn prop_greedi_solution_feasible_and_within_bounds() {
+    for seed in SEEDS {
+        let mut rng = Rng::new(seed ^ 0xABCD);
+        let ds = Arc::new(gaussian_blobs(
+            &SynthConfig::tiny_images(80 + rng.below(200), 6),
+            seed,
+        ));
+        let p = FacilityProblem::new(&ds);
+        let m = 2 + rng.below(6);
+        let k = 2 + rng.below(10);
+        let alpha = [0.5, 1.0, 2.0][rng.below(3)];
+        let r = Greedi::new(GreediConfig::new(m, k).alpha(alpha)).run(&p, seed);
+        // feasibility: |S| <= k, S ⊆ V, no duplicates
+        assert!(r.solution.len() <= k, "seed {seed}");
+        let set: std::collections::HashSet<_> = r.solution.iter().collect();
+        assert_eq!(set.len(), r.solution.len(), "duplicates seed {seed}");
+        assert!(r.solution.iter().all(|&e| e < ds.n), "seed {seed}");
+        // value consistency: reported value is the true global objective
+        let true_val = p.global().eval(&r.solution);
+        assert!((true_val - r.value).abs() < 1e-9, "seed {seed}");
+        // communication bound: ≤ m·κ ids
+        let kappa = ((alpha * k as f64).round() as usize).max(1);
+        assert!(r.job.shuffled_elements <= m * kappa, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_gain_matches_eval_difference() {
+    for seed in SEEDS {
+        let (f, n) = random_objective(seed);
+        let mut rng = Rng::new(seed ^ 0x1234);
+        let mut st = f.state();
+        // random prefix (distinct elements)
+        let prefix_len = rng.below(5);
+        let prefix: Vec<usize> = rng.sample_indices(n, prefix_len.min(n));
+        for &e in &prefix {
+            st.push(e);
+        }
+        let e = rng.below(n);
+        if prefix.contains(&e) {
+            continue;
+        }
+        let g = st.gain(e);
+        let mut with = prefix.clone();
+        with.push(e);
+        let brute = f.eval(&with) - f.eval(&prefix);
+        assert!(
+            (g - brute).abs() < 1e-6 * (1.0 + brute.abs()),
+            "seed {seed}: gain {g} vs brute {brute}"
+        );
+    }
+}
+
+#[test]
+fn prop_greedy_value_never_below_random_set_average() {
+    for seed in SEEDS {
+        let (f, n) = random_objective(seed ^ 0x77);
+        if !f.is_monotone() {
+            continue; // greedy comparison only meaningful for monotone
+        }
+        let ground: Vec<usize> = (0..n).collect();
+        let k = 3 + (seed as usize % 5);
+        let mut rng = Rng::new(seed);
+        let greedy = algorithms::greedy::Greedy
+            .maximize(f.as_ref(), &ground, &Cardinality::new(k), &mut rng)
+            .value;
+        let mut rand_avg = 0.0;
+        for _ in 0..5 {
+            let idx = rng.sample_indices(n, k.min(n));
+            rand_avg += f.eval(&idx);
+        }
+        rand_avg /= 5.0;
+        assert!(
+            greedy >= rand_avg - 1e-9,
+            "seed {seed}: greedy {greedy} < random avg {rand_avg}"
+        );
+    }
+}
+
+#[test]
+fn prop_lazy_equals_plain_greedy() {
+    for seed in SEEDS {
+        let (f, n) = random_objective(seed ^ 0x5A5A);
+        if !f.is_monotone() {
+            continue;
+        }
+        let ground: Vec<usize> = (0..n).collect();
+        let k = 2 + (seed as usize % 6);
+        let mut rng = Rng::new(seed);
+        let a = algorithms::greedy::Greedy
+            .maximize(f.as_ref(), &ground, &Cardinality::new(k), &mut rng)
+            .value;
+        let b = algorithms::lazy::LazyGreedy
+            .maximize(f.as_ref(), &ground, &Cardinality::new(k), &mut rng)
+            .value;
+        assert!(
+            (a - b).abs() < 1e-6 * (1.0 + a.abs()),
+            "seed {seed}: plain {a} vs lazy {b}"
+        );
+    }
+}
+
+#[test]
+fn prop_constraints_hereditary() {
+    // every prefix of a feasible greedy solution is feasible
+    for seed in SEEDS {
+        let mut rng = Rng::new(seed);
+        let n = 20 + rng.below(30);
+        let cats: Vec<usize> = (0..n).map(|_| rng.below(4)).collect();
+        let caps = vec![1 + rng.below(3); 4];
+        let matroid = PartitionMatroid::new(cats, caps);
+        let costs: Vec<f64> = (0..n).map(|_| 0.5 + rng.f64() * 2.0).collect();
+        let knap = Knapsack::new(costs, 4.0);
+        let ds = Arc::new(gaussian_blobs(&SynthConfig::tiny_images(n, 4), seed));
+        let f = FacilityLocation::from_dataset(&ds);
+        for con in [&matroid as &dyn Constraint, &knap as &dyn Constraint] {
+            let r = algorithms::greedy::Greedy.maximize(
+                &f,
+                &(0..n).collect::<Vec<_>>(),
+                con,
+                &mut rng,
+            );
+            for cut in 0..=r.solution.len() {
+                assert!(
+                    con.is_feasible(&r.solution[..cut]),
+                    "seed {seed}: prefix {cut} infeasible"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_cut_protocol_state_consistent() {
+    // Non-monotone distributed runs: reported value always equals a fresh
+    // global evaluation of the returned solution (no state leakage between
+    // rounds/machines).
+    for seed in SEEDS {
+        let g = Arc::new(social_network(100, 600, seed));
+        let p = CutProblem::new(&g);
+        let r = Greedi::new(GreediConfig::new(4, 8).algorithm("random_greedy").local())
+            .run(&p, seed);
+        let fresh = p.global().eval(&r.solution);
+        assert!((fresh - r.value).abs() < 1e-9, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_batch_gains_agree_with_scalar_gains() {
+    for seed in SEEDS {
+        let (f, n) = random_objective(seed ^ 0xBEEF);
+        let mut rng = Rng::new(seed);
+        let mut st = f.state();
+        let prefix_len = rng.below(4).min(n);
+        for &e in &rng.sample_indices(n, prefix_len) {
+            st.push(e);
+        }
+        let cand_len = (5 + rng.below(10)).min(n);
+        let cands = rng.sample_indices(n, cand_len);
+        let batch = st.batch_gains(&cands);
+        for (i, &e) in cands.iter().enumerate() {
+            let g = st.gain(e);
+            assert!(
+                (batch[i] - g).abs() < 1e-9 * (1.0 + g.abs()),
+                "seed {seed}: batch[{i}] {} vs {g}",
+                batch[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_rng_stream_splitting_reproducible() {
+    for seed in SEEDS {
+        let base = Rng::new(seed);
+        for i in 0..4 {
+            let mut a = base.fork(i);
+            let mut b = base.fork(i);
+            for _ in 0..16 {
+                assert_eq!(a.next_u64(), b.next_u64(), "seed {seed} fork {i}");
+            }
+        }
+    }
+}
