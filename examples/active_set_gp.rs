@@ -9,8 +9,7 @@
 
 use std::sync::Arc;
 
-use greedi::coordinator::baselines::Baseline;
-use greedi::coordinator::greedi::{centralized, Greedi, GreediConfig};
+use greedi::coordinator::protocol::{self, Protocol, RunSpec};
 use greedi::coordinator::InfoGainProblem;
 use greedi::coordinator::Problem;
 use greedi::data::synth::parkinsons_like;
@@ -22,14 +21,16 @@ fn main() {
     let n = args.get_usize("n", 5_875); // the paper's exact corpus size
     let k = args.get_usize("k", 50);
     let m = args.get_usize("m", 10);
+    let threads = args.get_usize("threads", 1);
     let seed = args.get_u64("seed", 11);
 
     println!("== GP active-set selection: n={n}, d=22, k={k}, m={m}, h=0.75, σ=1 ==\n");
     let data = Arc::new(parkinsons_like(n, 22, seed));
     let problem = InfoGainProblem::paper_params(&data);
 
-    let central = centralized(&problem, k, "lazy", seed);
-    let grd = Greedi::new(GreediConfig::new(m, k)).run(&problem, seed);
+    let spec = RunSpec::new(m, k).threads(threads).seed(seed);
+    let central = protocol::by_name("centralized").expect("registry").run(&problem, &spec);
+    let grd = protocol::by_name("greedi").expect("registry").run(&problem, &spec);
 
     let mut t = Table::new("information gain", &["protocol", "f(S)", "ratio"]);
     t.row(&["centralized".into(), format!("{:.4}", central.value), "1.000".into()]);
@@ -38,10 +39,10 @@ fn main() {
         format!("{:.4}", grd.value),
         format!("{:.3}", grd.ratio_vs(central.value)),
     ]);
-    for b in Baseline::ALL {
-        let r = b.run(&problem, m, k, false, "lazy", seed);
+    for name in protocol::BASELINE_NAMES {
+        let r = protocol::by_name(name).expect("registry").run(&problem, &spec);
         t.row(&[
-            b.label().into(),
+            r.name.clone(),
             format!("{:.4}", r.value),
             format!("{:.3}", r.ratio_vs(central.value)),
         ]);

@@ -6,23 +6,23 @@
 //! * **Layer 1/2**: the Pallas facility-gain kernel inside the JAX graph,
 //!   AOT-compiled by `make artifacts` into `artifacts/*.hlo.txt`;
 //! * **Runtime**: the rust PJRT engine loads and executes those artifacts
-//!   (no python anywhere in this process);
-//! * **Layer 3**: the GreeDi coordinator drives the simulated MapReduce
-//!   cluster with the XLA gain oracle on the hot path, against the
-//!   centralized reference and all four naive baselines, in both global
-//!   and local (decomposable) evaluation modes.
+//!   (no python anywhere in this process; requires `--features xla`);
+//! * **Layer 3**: every distributed protocol drives the simulated MapReduce
+//!   cluster through the unified `protocol::by_name` + `RunSpec` API, with
+//!   the XLA gain oracle on the hot path when available.
 //!
 //! Headline metric (paper §6.1): distributed/centralized utility ratio —
 //! expected ≈0.98 for GreeDi, clearly lower for the naive protocols.
 //!
 //! ```sh
-//! make artifacts && cargo run --release --example end_to_end
+//! # vendor the `xla` crate first (see rust/Cargo.toml [features]), then:
+//! make artifacts && cargo run --release --features xla --example end_to_end
+//! # without the vendored crate/artifacts it falls back to the scalar oracle
 //! ```
 
 use std::sync::Arc;
 
-use greedi::coordinator::baselines::Baseline;
-use greedi::coordinator::greedi::{centralized, Greedi, GreediConfig};
+use greedi::coordinator::protocol::{self, Protocol, RunSpec};
 use greedi::coordinator::FacilityProblem;
 use greedi::data::synth::{gaussian_blobs, SynthConfig};
 use greedi::runtime::{Engine, XlaBackendFactory};
@@ -36,6 +36,7 @@ fn main() {
     let d = args.get_usize("d", 32);
     let k = args.get_usize("k", 64);
     let m = args.get_usize("m", 10);
+    let threads = args.get_usize("threads", 1);
     let seed = args.get_u64("seed", 42);
     let scalar_only = args.has_flag("scalar"); // debug escape hatch
 
@@ -54,23 +55,29 @@ fn main() {
         println!("[2/4] scalar gain oracle (--scalar)");
     } else {
         let t = Timer::start();
-        let engine = Arc::new(
-            Engine::load_default()
-                .expect("artifacts missing — run `make artifacts` first"),
-        );
-        problem = problem
-            .with_backend_factory(Arc::new(XlaBackendFactory { engine: Arc::clone(&engine) }));
-        println!(
-            "[2/4] PJRT engine up: {} artifacts compiled ({:.2}s) — python is NOT running",
-            engine.manifest.entries.len(),
-            t.elapsed_secs()
-        );
-        engine_execs = Some(engine);
+        match Engine::load_default() {
+            Ok(engine) => {
+                let engine = Arc::new(engine);
+                problem = problem.with_backend_factory(Arc::new(XlaBackendFactory {
+                    engine: Arc::clone(&engine),
+                }));
+                println!(
+                    "[2/4] PJRT engine up: {} artifacts compiled ({:.2}s) — python is NOT running",
+                    engine.manifest.entries.len(),
+                    t.elapsed_secs()
+                );
+                engine_execs = Some(engine);
+            }
+            Err(e) => {
+                println!("[2/4] scalar gain oracle (PJRT unavailable: {e})");
+            }
+        }
     }
 
     // ---- centralized reference -------------------------------------------
+    let spec = RunSpec::new(m, k).threads(threads).seed(seed);
     let t = Timer::start();
-    let central = centralized(&problem, k, "lazy", seed);
+    let central = protocol::by_name("centralized").expect("registry").run(&problem, &spec);
     println!(
         "[3/4] centralized lazy greedy: f={:.5}, {} oracle calls ({:.2}s)\n",
         central.value,
@@ -79,7 +86,7 @@ fn main() {
     );
 
     // ---- distributed protocols over the simulated cluster ------------------
-    println!("[4/4] distributed protocols (m={m} machines, 2 MapReduce rounds each):\n");
+    println!("[4/4] distributed protocols (m={m} machines, unified RunSpec):\n");
     let mut table = Table::new(
         "END-TO-END RESULTS (headline: distributed/centralized ratio)",
         &["protocol", "f(S)", "ratio", "oracle calls", "sim-parallel time", "comm (ids)"],
@@ -95,15 +102,16 @@ fn main() {
         ]);
     };
 
-    let grd_global = Greedi::new(GreediConfig::new(m, k)).run(&problem, seed);
+    let greedi = protocol::by_name("greedi").expect("registry");
+    let grd_global = greedi.run(&problem, &spec);
     add("greedi (global)", &grd_global);
-    let grd_local = Greedi::new(GreediConfig::new(m, k).local()).run(&problem, seed);
+    let grd_local = greedi.run(&problem, &spec.clone().local());
     add("greedi (local §4.5)", &grd_local);
-    let grd_over = Greedi::new(GreediConfig::new(m, k).alpha(2.0)).run(&problem, seed);
+    let grd_over = greedi.run(&problem, &spec.clone().alpha(2.0));
     add("greedi (α=2)", &grd_over);
-    for b in Baseline::ALL {
-        let r = b.run(&problem, m, k, false, "lazy", seed);
-        add(b.label(), &r);
+    for name in protocol::BASELINE_NAMES {
+        let r = protocol::by_name(name).expect("registry").run(&problem, &spec);
+        add(&r.name.clone(), &r);
     }
     table.print();
 

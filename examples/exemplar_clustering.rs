@@ -1,15 +1,15 @@
 //! Exemplar-based clustering (paper §3.4.2 / §6.1): select k representative
-//! images from a tiny-image-like corpus with GreeDi, compare every protocol,
-//! and report cluster occupancy for the winning exemplars.
+//! images from a tiny-image-like corpus with GreeDi, compare every protocol
+//! through the unified registry, and report cluster occupancy for the
+//! winning exemplars.
 //!
 //! ```sh
-//! cargo run --release --example exemplar_clustering -- --n 5000 --k 50 --m 10 [--local]
+//! cargo run --release --example exemplar_clustering -- --n 5000 --k 50 --m 10 [--local] [--threads 4]
 //! ```
 
 use std::sync::Arc;
 
-use greedi::coordinator::baselines::Baseline;
-use greedi::coordinator::greedi::{centralized, Greedi, GreediConfig};
+use greedi::coordinator::protocol::{self, Protocol, RunSpec};
 use greedi::coordinator::FacilityProblem;
 use greedi::data::synth::{gaussian_blobs, SynthConfig};
 use greedi::util::args::Args;
@@ -20,6 +20,7 @@ fn main() {
     let n = args.get_usize("n", 5_000);
     let k = args.get_usize("k", 50);
     let m = args.get_usize("m", 10);
+    let threads = args.get_usize("threads", 1);
     let local = args.has_flag("local");
     let seed = args.get_u64("seed", 7);
 
@@ -27,7 +28,12 @@ fn main() {
     let data = Arc::new(gaussian_blobs(&SynthConfig::tiny_images(n, 32), seed));
     let problem = FacilityProblem::new(&data);
 
-    let central = centralized(&problem, k, "lazy", seed);
+    let mut spec = RunSpec::new(m, k).threads(threads).seed(seed);
+    if local {
+        spec = spec.local();
+    }
+
+    let central = protocol::by_name("centralized").expect("registry").run(&problem, &spec);
     let mut t = Table::new(
         "protocol comparison",
         &["protocol", "f(S)", "ratio", "oracle calls", "sim time"],
@@ -40,11 +46,7 @@ fn main() {
         format!("{:.3}s", central.sim_time()),
     ]);
 
-    let mut cfg = GreediConfig::new(m, k);
-    if local {
-        cfg = cfg.local();
-    }
-    let grd = Greedi::new(cfg).run(&problem, seed);
+    let grd = protocol::by_name("greedi").expect("registry").run(&problem, &spec);
     t.row(&[
         "greedi".into(),
         format!("{:.5}", grd.value),
@@ -52,10 +54,10 @@ fn main() {
         grd.oracle_calls.to_string(),
         format!("{:.3}s", grd.sim_time()),
     ]);
-    for b in Baseline::ALL {
-        let r = b.run(&problem, m, k, local, "lazy", seed);
+    for name in protocol::BASELINE_NAMES {
+        let r = protocol::by_name(name).expect("registry").run(&problem, &spec);
         t.row(&[
-            b.label().into(),
+            r.name.clone(),
             format!("{:.5}", r.value),
             format!("{:.3}", r.ratio_vs(central.value)),
             r.oracle_calls.to_string(),

@@ -9,8 +9,7 @@
 
 use std::sync::Arc;
 
-use greedi::coordinator::baselines::Baseline;
-use greedi::coordinator::greedi::{centralized, Greedi, GreediConfig};
+use greedi::coordinator::protocol::{self, Protocol, RunSpec};
 use greedi::coordinator::CutProblem;
 use greedi::data::graph::social_network;
 use greedi::util::args::Args;
@@ -23,6 +22,7 @@ fn main() {
     let edges = args.get_usize("edges", 20_296);
     let k = args.get_usize("k", 20);
     let m = args.get_usize("m", 10);
+    let threads = args.get_usize("threads", 1);
     let trials = args.get_usize("trials", 5);
     let seed = args.get_u64("seed", 3);
 
@@ -30,10 +30,20 @@ fn main() {
     let g = Arc::new(social_network(n, edges, seed));
     let problem = CutProblem::new(&g);
 
+    // One spec per trial; every protocol sees the identical (seeded) spec.
+    let spec_at = |t: usize| {
+        RunSpec::new(m, k)
+            .algorithm("random_greedy")
+            .local()
+            .threads(threads)
+            .seed(seed + t as u64)
+    };
+
     // RandomGreedy is randomized — report mean ± std over trials, as the
     // paper's Fig. 9 error bars do.
+    let central_proto = protocol::by_name("centralized").expect("registry");
     let central: Vec<f64> = (0..trials)
-        .map(|t| centralized(&problem, k, "random_greedy", seed + t as u64).value)
+        .map(|t| central_proto.run(&problem, &spec_at(t)).value)
         .collect();
     let cstats = summarize(&central);
 
@@ -44,12 +54,9 @@ fn main() {
         "1.000".into(),
     ]);
 
+    let greedi = protocol::by_name("greedi").expect("registry");
     let grd: Vec<f64> = (0..trials)
-        .map(|t| {
-            Greedi::new(GreediConfig::new(m, k).algorithm("random_greedy").local())
-                .run(&problem, seed + t as u64)
-                .value
-        })
+        .map(|t| greedi.run(&problem, &spec_at(t)).value)
         .collect();
     let gstats = summarize(&grd);
     t.row(&[
@@ -58,13 +65,19 @@ fn main() {
         format!("{:.3}", gstats.mean / cstats.mean),
     ]);
 
-    for b in Baseline::ALL {
+    for name in protocol::BASELINE_NAMES {
+        let proto = protocol::by_name(name).expect("registry");
+        let mut label = String::new();
         let vals: Vec<f64> = (0..trials)
-            .map(|t| b.run(&problem, m, k, true, "random_greedy", seed + t as u64).value)
+            .map(|t| {
+                let r = proto.run(&problem, &spec_at(t));
+                label = r.name.clone(); // display label ("random/random", …)
+                r.value
+            })
             .collect();
         let s = summarize(&vals);
         t.row(&[
-            b.label().into(),
+            label,
             format!("{:.1}±{:.1}", s.mean, s.std),
             format!("{:.3}", s.mean / cstats.mean),
         ]);

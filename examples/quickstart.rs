@@ -1,16 +1,16 @@
-//! Quickstart: the smallest end-to-end GreeDi run.
+//! Quickstart: the smallest end-to-end run of the unified protocol API.
 //!
 //! ```sh
 //! cargo run --release --example quickstart
 //! ```
 //!
-//! Generates a clustered point set, runs the centralized lazy greedy and
-//! the two-round GreeDi protocol on the exemplar-clustering objective, and
-//! prints the paper's headline metric (distributed/centralized ratio).
+//! Generates a clustered point set, builds ONE `RunSpec`, and drives every
+//! registered distributed protocol (plus the centralized reference) through
+//! `protocol::by_name` — the paper's whole §6 comparison in a dozen lines.
 
 use std::sync::Arc;
 
-use greedi::coordinator::greedi::{centralized, Greedi, GreediConfig};
+use greedi::coordinator::protocol::{self, Protocol, RunSpec};
 use greedi::coordinator::FacilityProblem;
 use greedi::data::synth::{gaussian_blobs, SynthConfig};
 
@@ -24,20 +24,40 @@ fn main() {
     // 2. problem — exemplar clustering (k-medoid via submodular f, §3.4.2)
     let problem = FacilityProblem::new(&data);
 
-    // 3. centralized reference (impractical at real scale — the baseline)
-    let central = centralized(&problem, k, "lazy", 42);
+    // 3. one spec for every protocol: same budgets, partition, seed, threads
+    let spec = RunSpec::new(m, k).threads(2).seed(42);
+
+    // 4. centralized reference (impractical at real scale — the baseline)
+    let central = protocol::by_name("centralized")
+        .expect("registry")
+        .run(&problem, &spec);
     println!("centralized : {}", central.one_line());
 
-    // 4. GreeDi — two MapReduce rounds, m machines
-    let run = Greedi::new(GreediConfig::new(m, k)).run(&problem, 42);
-    println!("greedi      : {}", run.one_line());
+    // 5. sweep the registry — GreeDi, tree reduction, naive baselines,
+    //    GreedyScaling — all under the identical spec
+    let mut greedi = None;
+    for name in protocol::NAMES {
+        if name == "centralized" {
+            continue;
+        }
+        let run = protocol::by_name(name).expect("registry").run(&problem, &spec);
+        println!(
+            "{name:<13}: ratio={:.4}  {}",
+            run.ratio_vs(central.value),
+            run.one_line()
+        );
+        if name == "greedi" {
+            greedi = Some(run);
+        }
+    }
 
+    let greedi = greedi.expect("greedi in registry");
     println!(
-        "\nratio = {:.4}  (paper reports ≈0.98 for exemplar clustering)",
-        run.ratio_vs(central.value)
+        "\nheadline ratio = {:.4}  (paper reports ≈0.98 for exemplar clustering)",
+        greedi.ratio_vs(central.value)
     );
     println!(
         "communication: {} element ids shuffled (vs n = {n} for data-parallel greedy)",
-        run.job.shuffled_elements
+        greedi.job.shuffled_elements
     );
 }

@@ -11,7 +11,8 @@ use std::sync::Arc;
 
 use greedi::algorithms::{greedy::Greedy, lazy::LazyGreedy, stochastic::StochasticGreedy, Maximizer};
 use greedi::constraints::cardinality::Cardinality;
-use greedi::coordinator::greedi::{centralized, Greedi, GreediConfig};
+use greedi::coordinator::greedi::{centralized, Greedi};
+use greedi::coordinator::protocol::{Protocol, RunSpec};
 use greedi::coordinator::FacilityProblem;
 use greedi::data::synth::{gaussian_blobs, parkinsons_like, SynthConfig};
 use greedi::linalg::{IncrementalCholesky, Matrix};
@@ -121,12 +122,15 @@ fn main() {
         black_box(centralized(&problem, k, "lazy", 1).value)
     });
     b.bench("protocol: greedi 2-round (m=8)", || {
-        black_box(Greedi::new(GreediConfig::new(8, k)).run(&problem, 1).value)
+        black_box(Greedi.run(&problem, &RunSpec::new(8, k).seed(1)).value)
     });
     b.bench("protocol: greedi local mode (m=8)", || {
+        black_box(Greedi.run(&problem, &RunSpec::new(8, k).local().seed(1)).value)
+    });
+    b.bench("protocol: greedi 2-round (m=8, 4 threads)", || {
         black_box(
-            Greedi::new(GreediConfig::new(8, k).local())
-                .run(&problem, 1)
+            Greedi
+                .run(&problem, &RunSpec::new(8, k).threads(4).seed(1))
                 .value,
         )
     });

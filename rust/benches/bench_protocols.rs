@@ -1,0 +1,64 @@
+//! `cargo bench` target: the protocol-registry sweep. One workload, one
+//! shared `RunSpec`, every protocol in `protocol::by_name` — so any protocol
+//! added to the registry is benchmarked for free, in both sequential and
+//! threaded map-stage configurations.
+//!
+//! Set `GREEDI_BENCH_FAST=1` for a CI-speed pass.
+
+use std::sync::Arc;
+
+use greedi::coordinator::protocol::{self, Protocol, RunSpec};
+use greedi::coordinator::FacilityProblem;
+use greedi::data::synth::{gaussian_blobs, SynthConfig};
+use greedi::util::bench::{black_box, Bencher};
+
+fn main() {
+    let fast = std::env::var("GREEDI_BENCH_FAST").ok().as_deref() == Some("1");
+    let (n, m, k) = if fast { (600, 4, 8) } else { (4_000, 8, 24) };
+    let mut b = Bencher::new(1, if fast { 2 } else { 5 });
+
+    println!("== protocol registry benchmarks (n={n}, m={m}, k={k}) ==\n");
+
+    let ds = Arc::new(gaussian_blobs(&SynthConfig::tiny_images(n, 16), 1));
+    let problem = FacilityProblem::new(&ds);
+    let spec = RunSpec::new(m, k).seed(1);
+
+    // ---- every registered protocol under the one shared spec --------------
+    let mut values = Vec::new();
+    for name in protocol::NAMES {
+        let proto = protocol::by_name(name).expect("registry");
+        let mut last = 0.0;
+        b.bench(&format!("protocol: {name}"), || {
+            last = proto.run(&problem, &spec).value;
+            black_box(last)
+        });
+        values.push((name, last));
+    }
+
+    // ---- threaded map stage: the uniform `threads` knob --------------------
+    for threads in [2, 4] {
+        let spec_t = spec.clone().threads(threads);
+        b.bench(&format!("protocol: greedi ({threads} threads)"), || {
+            black_box(
+                protocol::by_name("greedi")
+                    .expect("registry")
+                    .run(&problem, &spec_t)
+                    .value,
+            )
+        });
+    }
+
+    println!("\n== values under the shared spec ==");
+    let central = values
+        .iter()
+        .find(|(n, _)| *n == "centralized")
+        .map(|(_, v)| *v)
+        .unwrap_or(1.0);
+    for (name, v) in &values {
+        println!("  {name:<16} f(S)={v:<12.5} ratio={:.4}", v / central);
+    }
+
+    if let Some(s) = b.speedup("protocol: greedi", "protocol: greedi (4 threads)") {
+        println!("\ngreedi map-stage speedup with 4 threads: {s:.2}x");
+    }
+}

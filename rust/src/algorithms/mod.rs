@@ -65,7 +65,15 @@ mod tests {
 
     #[test]
     fn by_name_resolves_known() {
-        for n in ["greedy", "lazy", "stochastic", "random_greedy", "local_search", "sieve_streaming"] {
+        for n in [
+            "greedy",
+            "lazy",
+            "stochastic",
+            "random_greedy",
+            "cost_benefit",
+            "local_search",
+            "sieve_streaming",
+        ] {
             assert!(by_name(n).is_some(), "{n}");
             assert_eq!(by_name(n).unwrap().name(), n);
         }

@@ -1,9 +1,14 @@
 //! Typed experiment configuration, loadable from `configs/*.toml` presets
 //! (via the `util::toml` subset parser) and overridable from the CLI.
+//!
+//! Presets drive the unified protocol API: a `protocol = "..."` key selects
+//! any `protocol::by_name` entry, and [`ExperimentConfig::run_spec`] turns a
+//! preset plus one (m, k) sweep point into the shared [`RunSpec`].
 
 use std::path::Path;
 
-pub use crate::coordinator::greedi::{GreediConfig, PartitionStrategy};
+pub use crate::coordinator::protocol::{PartitionStrategy, RunSpec};
+use crate::coordinator::protocol;
 use crate::util::toml;
 
 /// Which scenario an experiment run drives.
@@ -53,6 +58,8 @@ impl Workload {
 pub struct ExperimentConfig {
     pub name: String,
     pub workload: Workload,
+    /// Distributed protocol to drive (see `protocol::by_name`).
+    pub protocol: String,
     /// Ground set size (scaled-down stand-in for the paper's corpus).
     pub n: usize,
     /// Feature dimension (point workloads).
@@ -67,6 +74,10 @@ pub struct ExperimentConfig {
     pub local_eval: bool,
     /// Per-machine algorithm.
     pub algorithm: String,
+    /// Ground-set partitioning strategy.
+    pub partition: PartitionStrategy,
+    /// OS threads for the simulated cluster.
+    pub threads: usize,
     /// Repetitions (figures show mean ± std).
     pub trials: usize,
     pub seed: u64,
@@ -77,6 +88,7 @@ impl Default for ExperimentConfig {
         ExperimentConfig {
             name: "custom".into(),
             workload: Workload::TinyImages,
+            protocol: "greedi".into(),
             n: 1000,
             d: 8,
             ks: vec![50],
@@ -84,6 +96,8 @@ impl Default for ExperimentConfig {
             alphas: vec![1.0],
             local_eval: false,
             algorithm: "lazy".into(),
+            partition: PartitionStrategy::Random,
+            threads: 1,
             trials: 3,
             seed: 42,
         }
@@ -109,6 +123,9 @@ impl ExperimentConfig {
                     cfg.workload =
                         Workload::parse(s).ok_or_else(|| format!("unknown workload {s}"))?;
                 }
+                "protocol" => {
+                    cfg.protocol = value.as_str().ok_or("protocol: string")?.into()
+                }
                 "n" => cfg.n = value.as_usize().ok_or("n: int")?,
                 "d" => cfg.d = value.as_usize().ok_or("d: int")?,
                 "ks" => cfg.ks = value.as_usize_array().ok_or("ks: [int]")?,
@@ -124,6 +141,12 @@ impl ExperimentConfig {
                 }
                 "local_eval" => cfg.local_eval = value.as_bool().ok_or("local_eval: bool")?,
                 "algorithm" => cfg.algorithm = value.as_str().ok_or("algorithm: string")?.into(),
+                "partition" => {
+                    let s = value.as_str().ok_or("partition: string")?;
+                    cfg.partition = PartitionStrategy::parse(s)
+                        .ok_or_else(|| format!("unknown partition strategy {s}"))?;
+                }
+                "threads" => cfg.threads = value.as_usize().ok_or("threads: int")?,
                 "trials" => cfg.trials = value.as_usize().ok_or("trials: int")?,
                 "seed" => cfg.seed = value.as_i64().ok_or("seed: int")? as u64,
                 other => return Err(format!("unknown config key {other:?}")),
@@ -149,10 +172,30 @@ impl ExperimentConfig {
         if crate::algorithms::by_name(&self.algorithm).is_none() {
             return Err(format!("unknown algorithm {:?}", self.algorithm));
         }
+        if protocol::by_name(&self.protocol).is_none() {
+            return Err(format!("unknown protocol {:?}", self.protocol));
+        }
+        if self.threads == 0 {
+            return Err("threads must be > 0".into());
+        }
         if self.trials == 0 {
             return Err("trials must be > 0".into());
         }
         Ok(())
+    }
+
+    /// The shared [`RunSpec`] for one (m, k) sweep point of this preset —
+    /// ready to hand to any `protocol::by_name(&self.protocol)` instance.
+    pub fn run_spec(&self, m: usize, k: usize) -> RunSpec {
+        let mut spec = RunSpec::new(m, k)
+            .algorithm(&self.algorithm)
+            .partition(self.partition)
+            .threads(self.threads)
+            .seed(self.seed);
+        if self.local_eval {
+            spec = spec.local();
+        }
+        spec
     }
 }
 
@@ -166,6 +209,7 @@ mod tests {
             r#"
             name = "fig4a"
             workload = "tiny_images"
+            protocol = "multiround"
             n = 10000
             d = 32
             ks = [50]
@@ -173,6 +217,8 @@ mod tests {
             alphas = [0.5, 1.0, 2.0]
             local_eval = false
             algorithm = "lazy"
+            partition = "balanced"
+            threads = 4
             trials = 5
             seed = 42
             "#,
@@ -180,8 +226,11 @@ mod tests {
         .unwrap();
         assert_eq!(cfg.name, "fig4a");
         assert_eq!(cfg.workload, Workload::TinyImages);
+        assert_eq!(cfg.protocol, "multiround");
         assert_eq!(cfg.ms, vec![2, 4, 6, 8, 10]);
         assert_eq!(cfg.alphas, vec![0.5, 1.0, 2.0]);
+        assert_eq!(cfg.partition, PartitionStrategy::Balanced);
+        assert_eq!(cfg.threads, 4);
     }
 
     #[test]
@@ -202,6 +251,47 @@ mod tests {
     #[test]
     fn bad_algorithm_rejected() {
         assert!(ExperimentConfig::from_toml(r#"algorithm = "quantum""#).is_err());
+    }
+
+    #[test]
+    fn bad_protocol_rejected() {
+        assert!(ExperimentConfig::from_toml(r#"protocol = "carrier_pigeon""#).is_err());
+    }
+
+    #[test]
+    fn every_registry_protocol_accepted() {
+        for name in crate::coordinator::protocol::NAMES {
+            let cfg =
+                ExperimentConfig::from_toml(&format!("protocol = \"{name}\"")).unwrap();
+            assert_eq!(cfg.protocol, name);
+        }
+    }
+
+    #[test]
+    fn bad_partition_rejected() {
+        assert!(ExperimentConfig::from_toml(r#"partition = "psychic""#).is_err());
+    }
+
+    #[test]
+    fn run_spec_carries_preset_fields() {
+        let cfg = ExperimentConfig::from_toml(
+            r#"
+            protocol = "greedy_scaling"
+            algorithm = "greedy"
+            local_eval = true
+            partition = "contiguous"
+            threads = 3
+            seed = 7
+            "#,
+        )
+        .unwrap();
+        let spec = cfg.run_spec(6, 12);
+        assert_eq!((spec.m, spec.k), (6, 12));
+        assert_eq!(spec.algorithm, "greedy");
+        assert!(spec.local_eval);
+        assert_eq!(spec.partition, PartitionStrategy::Contiguous);
+        assert_eq!(spec.threads, 3);
+        assert_eq!(spec.seed, 7);
     }
 
     #[test]

@@ -5,12 +5,17 @@
 //! * **random/greedy** — k random per machine, greedy over the merged m·k.
 //! * **greedy/merge** — ⌈k/m⌉ greedy per machine, concatenate (truncate to k).
 //! * **greedy/max** — k greedy per machine, report the single best set.
+//!
+//! Each variant implements [`Protocol`] and is registered in
+//! `protocol::by_name` under its snake_case name (`"random_random"`, …), so
+//! baselines run under the exact same [`RunSpec`] — budgets, partition,
+//! local/global mode, threads, seed — as GreeDi itself.
 
 use super::metrics::RunMetrics;
+use super::protocol::{Protocol, RunSpec};
 use super::Problem;
 use crate::algorithms::{self};
 use crate::constraints::cardinality::Cardinality;
-use crate::mapreduce::partition::random_partition;
 use crate::mapreduce::{JobReport, MapReduce};
 use crate::util::rng::Rng;
 
@@ -31,6 +36,7 @@ impl Baseline {
         Baseline::GreedyMax,
     ];
 
+    /// Display label used in figures and `RunMetrics.name`.
     pub fn label(&self) -> &'static str {
         match self {
             Baseline::RandomRandom => "random/random",
@@ -39,23 +45,28 @@ impl Baseline {
             Baseline::GreedyMax => "greedy/max",
         }
     }
+}
 
-    /// Run the baseline with `m` machines, budget `k`. `local_eval` mirrors
-    /// GreeDi's decomposable mode so comparisons stay apples-to-apples.
-    pub fn run(
-        &self,
-        problem: &dyn Problem,
-        m: usize,
-        k: usize,
-        local_eval: bool,
-        algorithm: &str,
-        seed: u64,
-    ) -> RunMetrics {
-        let base_rng = Rng::new(seed);
+impl Protocol for Baseline {
+    fn name(&self) -> &'static str {
+        match self {
+            Baseline::RandomRandom => "random_random",
+            Baseline::RandomGreedy => "random_greedy",
+            Baseline::GreedyMerge => "greedy_merge",
+            Baseline::GreedyMax => "greedy_max",
+        }
+    }
+
+    /// Run the baseline under `spec`. `spec.local_eval` mirrors GreeDi's
+    /// decomposable mode so comparisons stay apples-to-apples.
+    fn run(&self, problem: &dyn Problem, spec: &RunSpec) -> RunMetrics {
+        let (m, k) = (spec.m, spec.k);
+        let local_eval = spec.local_eval;
+        let base_rng = Rng::new(spec.seed);
         let mut rng = base_rng.clone();
         let ground = problem.ground();
-        let shards = random_partition(&ground, m, &mut rng);
-        let engine = MapReduce::new(1);
+        let shards = spec.partition.split(&ground, m, &mut rng);
+        let engine = MapReduce::new(spec.threads);
         let mut job = JobReport::default();
         let this = *self;
 
@@ -64,6 +75,7 @@ impl Baseline {
             Baseline::GreedyMerge => k.div_ceil(m).max(1),
             _ => k,
         };
+        let algorithm = spec.algorithm.clone();
         let inputs: Vec<(usize, Vec<usize>)> = shards.into_iter().enumerate().collect();
         let (r1, stage1) = engine.run_stage(inputs, |_, (i, shard)| {
             let mut task_rng = base_rng.fork(100 + i as u64);
@@ -78,7 +90,7 @@ impl Baseline {
                     (picks, 0u64)
                 }
                 Baseline::GreedyMerge | Baseline::GreedyMax => {
-                    let algo = algorithms::by_name(algorithm).expect("algorithm");
+                    let algo = algorithms::by_name(&algorithm).expect("algorithm");
                     let obj = if local_eval {
                         problem.local(&shard, &mut task_rng)
                     } else {
@@ -108,6 +120,7 @@ impl Baseline {
         // ---- Round 2 ------------------------------------------------------
         let candidates: Vec<Vec<usize>> = r1.iter().map(|(s, _)| s.clone()).collect();
         let merged_in = merged.clone();
+        let algorithm2 = spec.algorithm.clone();
         let (mut out2, stage2) = engine.run_stage(vec![()], |_, ()| {
             let mut task_rng = base_rng.fork(999);
             match this {
@@ -121,7 +134,7 @@ impl Baseline {
                     (sol, 0u64)
                 }
                 Baseline::RandomGreedy => {
-                    let algo = algorithms::by_name(algorithm).expect("algorithm");
+                    let algo = algorithms::by_name(&algorithm2).expect("algorithm");
                     let obj = if local_eval {
                         problem.merge(m, &mut task_rng)
                     } else {
@@ -177,7 +190,7 @@ impl Baseline {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::greedi::{centralized, Greedi, GreediConfig};
+    use crate::coordinator::greedi::{centralized, Greedi};
     use crate::coordinator::FacilityProblem;
     use crate::data::synth::{gaussian_blobs, SynthConfig};
     use crate::util::stats::mean;
@@ -192,7 +205,7 @@ mod tests {
     fn all_respect_budget() {
         let p = problem(200, 51);
         for b in Baseline::ALL {
-            let r = b.run(&p, 5, 10, false, "lazy", 3);
+            let r = b.run(&p, &RunSpec::new(5, 10).seed(3));
             assert!(r.solution.len() <= 10, "{} gave {}", b.label(), r.solution.len());
             assert!(r.value.is_finite());
             assert_eq!(r.rounds, 2);
@@ -207,9 +220,9 @@ mod tests {
         let mut greedi_vals = Vec::new();
         let mut base_vals: Vec<Vec<f64>> = vec![Vec::new(); 4];
         for seed in 0..3 {
-            greedi_vals.push(Greedi::new(GreediConfig::new(m, k)).run(&p, seed).value);
+            greedi_vals.push(Greedi.run(&p, &RunSpec::new(m, k).seed(seed)).value);
             for (i, b) in Baseline::ALL.iter().enumerate() {
-                base_vals[i].push(b.run(&p, m, k, false, "lazy", seed).value);
+                base_vals[i].push(b.run(&p, &RunSpec::new(m, k).seed(seed)).value);
             }
         }
         let g = mean(&greedi_vals);
@@ -225,10 +238,10 @@ mod tests {
     fn ordering_random_random_weakest() {
         let p = problem(250, 53);
         let rr: Vec<f64> = (0..4)
-            .map(|s| Baseline::RandomRandom.run(&p, 5, 8, false, "lazy", s).value)
+            .map(|s| Baseline::RandomRandom.run(&p, &RunSpec::new(5, 8).seed(s)).value)
             .collect();
         let gm: Vec<f64> = (0..4)
-            .map(|s| Baseline::GreedyMax.run(&p, 5, 8, false, "lazy", s).value)
+            .map(|s| Baseline::GreedyMax.run(&p, &RunSpec::new(5, 8).seed(s)).value)
             .collect();
         assert!(mean(&gm) > mean(&rr));
     }
@@ -238,7 +251,7 @@ mod tests {
         let p = problem(200, 54);
         let c = centralized(&p, 8, "lazy", 1);
         for b in Baseline::ALL {
-            let r = b.run(&p, 4, 8, false, "lazy", 1);
+            let r = b.run(&p, &RunSpec::new(4, 8).seed(1));
             assert!(r.value <= c.value + 1e-9, "{}", b.label());
         }
     }

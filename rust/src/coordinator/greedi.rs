@@ -14,103 +14,53 @@
 //! the objective restricted to each machine's shard and round 2 on a random
 //! ⌈n/m⌉-element window; reported values are always re-evaluated under the
 //! true global objective.
+//!
+//! All parameters come from the shared [`RunSpec`]; `Greedi` itself is a
+//! stateless unit struct registered as `"greedi"` in `protocol::by_name`.
 
 use super::metrics::RunMetrics;
+use super::protocol::{Protocol, RunSpec};
 use super::Problem;
 use crate::algorithms;
 use crate::constraints::cardinality::Cardinality;
 use crate::constraints::Constraint;
-use crate::mapreduce::partition::{balanced_partition, contiguous_partition, random_partition};
 use crate::mapreduce::{JobReport, MapReduce};
 use crate::util::rng::Rng;
 
-/// How the ground set is spread over machines.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum PartitionStrategy {
-    /// Uniform random assignment (the theory's assumption).
-    Random,
-    /// Shuffled round-robin (equal shard sizes).
-    Balanced,
-    /// Contiguous slices (no randomization — ablation / worst case).
-    Contiguous,
-}
-
-/// GreeDi configuration.
-#[derive(Debug, Clone)]
-pub struct GreediConfig {
-    /// Number of machines m.
-    pub m: usize,
-    /// Final solution budget k.
-    pub k: usize,
-    /// Per-machine budget κ (Algorithm 2 allows κ ≠ k; α = κ/k).
-    pub kappa: usize,
-    /// Decomposable local evaluation (paper §4.5).
-    pub local_eval: bool,
-    /// Black-box algorithm name (see `algorithms::by_name`).
-    pub algorithm: String,
-    /// OS threads for the simulated cluster.
-    pub threads: usize,
-    pub partition: PartitionStrategy,
-}
-
-impl GreediConfig {
-    pub fn new(m: usize, k: usize) -> Self {
-        GreediConfig {
-            m: m.max(1),
-            k,
-            kappa: k,
-            local_eval: false,
-            algorithm: "lazy".to_string(),
-            threads: 1,
-            partition: PartitionStrategy::Random,
-        }
-    }
-
-    /// Set κ = ⌈α·k⌉ (the paper sweeps α ∈ {κ/k}).
-    pub fn alpha(mut self, alpha: f64) -> Self {
-        self.kappa = ((alpha * self.k as f64).round() as usize).max(1);
-        self
-    }
-
-    pub fn local(mut self) -> Self {
-        self.local_eval = true;
-        self
-    }
-
-    pub fn algorithm(mut self, name: &str) -> Self {
-        assert!(algorithms::by_name(name).is_some(), "unknown algorithm {name}");
-        self.algorithm = name.to_string();
-        self
-    }
-
-    pub fn partition(mut self, p: PartitionStrategy) -> Self {
-        self.partition = p;
-        self
-    }
-
-    pub fn threads(mut self, t: usize) -> Self {
-        self.threads = t.max(1);
-        self
-    }
-}
+pub use crate::mapreduce::partition::PartitionStrategy;
 
 /// The two-round distributed maximizer.
-pub struct Greedi {
-    pub cfg: GreediConfig,
+pub struct Greedi;
+
+impl Protocol for Greedi {
+    /// Algorithm 2: cardinality constraints (κ per machine, k final), or the
+    /// spec's explicit per-round constraints when set (Algorithm 3).
+    fn run(&self, problem: &dyn Problem, spec: &RunSpec) -> RunMetrics {
+        let c1;
+        let round1: &dyn Constraint = match &spec.round1 {
+            Some(c) => c.as_ref(),
+            None => {
+                c1 = Cardinality::new(spec.kappa);
+                &c1
+            }
+        };
+        let c2;
+        let round2: &dyn Constraint = match &spec.round2 {
+            Some(c) => c.as_ref(),
+            None => {
+                c2 = Cardinality::new(spec.k);
+                &c2
+            }
+        };
+        self.run_constrained(problem, round1, round2, spec)
+    }
+
+    fn name(&self) -> &'static str {
+        "greedi"
+    }
 }
 
 impl Greedi {
-    pub fn new(cfg: GreediConfig) -> Self {
-        Greedi { cfg }
-    }
-
-    /// Algorithm 2: cardinality constraints (κ per machine, k final).
-    pub fn run(&self, problem: &dyn Problem, seed: u64) -> RunMetrics {
-        let r1 = Cardinality::new(self.cfg.kappa);
-        let r2 = Cardinality::new(self.cfg.k);
-        self.run_constrained(problem, &r1, &r2, seed)
-    }
-
     /// Algorithm 3: arbitrary hereditary constraints per round. For the
     /// general setting pass the same ζ for both rounds.
     pub fn run_constrained(
@@ -118,24 +68,19 @@ impl Greedi {
         problem: &dyn Problem,
         round1: &dyn Constraint,
         round2: &dyn Constraint,
-        seed: u64,
+        spec: &RunSpec,
     ) -> RunMetrics {
-        let cfg = &self.cfg;
-        let base_rng = Rng::new(seed);
+        let base_rng = Rng::new(spec.seed);
         let mut rng = base_rng.clone();
         let ground = problem.ground();
-        let shards = match cfg.partition {
-            PartitionStrategy::Random => random_partition(&ground, cfg.m, &mut rng),
-            PartitionStrategy::Balanced => balanced_partition(&ground, cfg.m, &mut rng),
-            PartitionStrategy::Contiguous => contiguous_partition(&ground, cfg.m),
-        };
+        let shards = spec.partition.split(&ground, spec.m, &mut rng);
 
-        let engine = MapReduce::new(cfg.threads);
+        let engine = MapReduce::new(spec.threads);
         let mut job = JobReport::default();
 
         // ---- Round 1: per-machine black box ------------------------------
-        let local_eval = cfg.local_eval;
-        let algo_name = cfg.algorithm.clone();
+        let local_eval = spec.local_eval;
+        let algo_name = spec.algorithm.clone();
         let inputs: Vec<(usize, Vec<usize>)> = shards.into_iter().enumerate().collect();
         let (round1_results, stage1) = engine.run_stage(inputs, |_, (i, shard)| {
             let mut task_rng = base_rng.fork(1000 + i as u64);
@@ -164,8 +109,8 @@ impl Greedi {
         let candidates: Vec<Vec<usize>> =
             round1_results.iter().map(|r| r.solution.clone()).collect();
         let merged_for_task = merged.clone();
-        let algo_name2 = cfg.algorithm.clone();
-        let m = cfg.m;
+        let algo_name2 = spec.algorithm.clone();
+        let m = spec.m;
         let (mut round2_out, stage2) = engine.run_stage(vec![()], |_, ()| {
             let mut task_rng = base_rng.fork(2000);
             let obj = if local_eval {
@@ -212,10 +157,10 @@ impl Greedi {
         RunMetrics {
             name: format!(
                 "greedi[m={},k={},κ={}{}]",
-                cfg.m,
-                cfg.k,
-                cfg.kappa,
-                if cfg.local_eval { ",local" } else { "" }
+                spec.m,
+                spec.k,
+                spec.kappa,
+                if spec.local_eval { ",local" } else { "" }
             ),
             solution,
             value,
@@ -227,7 +172,8 @@ impl Greedi {
 }
 
 /// Centralized reference run (one machine, full ground set, budget k) —
-/// the denominator of every ratio the paper reports.
+/// the denominator of every ratio the paper reports. Also exposed through
+/// the registry as the `"centralized"` protocol.
 pub fn centralized(
     problem: &dyn Problem,
     k: usize,
@@ -270,7 +216,7 @@ mod tests {
         let ds = Arc::new(gaussian_blobs(&SynthConfig::tiny_images(300, 8), 41));
         let p = FacilityProblem::new(&ds);
         let central = centralized(&p, 10, "lazy", 7);
-        let run = Greedi::new(GreediConfig::new(5, 10)).run(&p, 7);
+        let run = Greedi.run(&p, &RunSpec::new(5, 10).seed(7));
         assert!(run.solution.len() <= 10);
         let ratio = run.ratio_vs(central.value);
         assert!(ratio > 0.9, "ratio {ratio}");
@@ -283,7 +229,7 @@ mod tests {
         let ds = Arc::new(gaussian_blobs(&SynthConfig::tiny_images(300, 8), 42));
         let p = FacilityProblem::new(&ds);
         let central = centralized(&p, 10, "lazy", 3);
-        let run = Greedi::new(GreediConfig::new(5, 10).local()).run(&p, 3);
+        let run = Greedi.run(&p, &RunSpec::new(5, 10).local().seed(3));
         let ratio = run.ratio_vs(central.value);
         assert!(ratio > 0.8, "local ratio {ratio}");
     }
@@ -292,8 +238,8 @@ mod tests {
     fn kappa_over_selection_helps_or_equals() {
         let ds = Arc::new(gaussian_blobs(&SynthConfig::tiny_images(200, 8), 43));
         let p = FacilityProblem::new(&ds);
-        let base = Greedi::new(GreediConfig::new(4, 8)).run(&p, 5);
-        let over = Greedi::new(GreediConfig::new(4, 8).alpha(2.0)).run(&p, 5);
+        let base = Greedi.run(&p, &RunSpec::new(4, 8).seed(5));
+        let over = Greedi.run(&p, &RunSpec::new(4, 8).alpha(2.0).seed(5));
         assert!(over.solution.len() <= 8);
         assert!(over.value >= base.value * 0.98, "{} vs {}", over.value, base.value);
     }
@@ -303,7 +249,7 @@ mod tests {
         let ds = Arc::new(parkinsons_like(150, 10, 44));
         let p = InfoGainProblem::paper_params(&ds);
         let central = centralized(&p, 8, "lazy", 2);
-        let run = Greedi::new(GreediConfig::new(5, 8)).run(&p, 2);
+        let run = Greedi.run(&p, &RunSpec::new(5, 8).seed(2));
         assert!(run.ratio_vs(central.value) > 0.9);
     }
 
@@ -311,8 +257,10 @@ mod tests {
     fn nonmonotone_cut_via_random_greedy() {
         let g = Arc::new(social_network(120, 800, 4));
         let p = CutProblem::new(&g);
-        let run = Greedi::new(GreediConfig::new(4, 10).algorithm("random_greedy").local())
-            .run(&p, 6);
+        let run = Greedi.run(
+            &p,
+            &RunSpec::new(4, 10).algorithm("random_greedy").local().seed(6),
+        );
         assert!(run.value >= 0.0);
         assert!(run.solution.len() <= 10);
     }
@@ -326,10 +274,12 @@ mod tests {
         let f = EntropyWorstCase::new(m, k);
         let p = OpaqueProblem::new(&f);
         let opt = f.optimal_value(k);
-        let run = Greedi::new(
-            GreediConfig::new(m, k).partition(PartitionStrategy::Contiguous),
-        )
-        .run(&p, 1);
+        let run = Greedi.run(
+            &p,
+            &RunSpec::new(m, k)
+                .partition(PartitionStrategy::Contiguous)
+                .seed(1),
+        );
         assert!(run.value <= opt + 1e-9);
         let bound = (1.0 - (-1.0f64).exp()) / (m.min(k) as f64) * opt;
         assert!(run.value >= bound - 1e-9, "{} < {}", run.value, bound);
@@ -340,7 +290,7 @@ mod tests {
         let ds = Arc::new(gaussian_blobs(&SynthConfig::tiny_images(120, 8), 45));
         let p = FacilityProblem::new(&ds);
         let central = centralized(&p, 6, "lazy", 9);
-        let run = Greedi::new(GreediConfig::new(1, 6)).run(&p, 9);
+        let run = Greedi.run(&p, &RunSpec::new(1, 6).seed(9));
         assert!((run.value - central.value).abs() < 1e-9);
     }
 
@@ -348,9 +298,9 @@ mod tests {
     fn communication_bounded_by_m_kappa() {
         let ds = Arc::new(gaussian_blobs(&SynthConfig::tiny_images(200, 8), 46));
         let p = FacilityProblem::new(&ds);
-        let cfg = GreediConfig::new(8, 5).alpha(2.0);
-        let kappa = cfg.kappa;
-        let run = Greedi::new(cfg).run(&p, 11);
+        let spec = RunSpec::new(8, 5).alpha(2.0).seed(11);
+        let kappa = spec.kappa;
+        let run = Greedi.run(&p, &spec);
         assert!(run.job.shuffled_elements <= 8 * kappa);
     }
 }

@@ -11,46 +11,34 @@
 //! (1 − 1/e − ε)-style threshold greedy; the number of synchronous rounds
 //! grows like log₍₁/(1−ε)₎(Δ) — *not* the constant 2 of GreeDi — which is
 //! exactly the contrast Fig. 10's caption draws.
+//!
+//! Registered as `"greedy_scaling"`; reads k, m, δ (`spec.delta`),
+//! ε (`spec.epsilon`), threads and seed from the shared [`RunSpec`].
 
 use super::metrics::RunMetrics;
+use super::protocol::{Protocol, RunSpec};
 use super::Problem;
 use crate::mapreduce::{JobReport, MapReduce, StageReport};
 use crate::util::rng::Rng;
 
-/// GreedyScaling configuration.
-#[derive(Debug, Clone)]
-pub struct GreedyScaling {
-    pub k: usize,
-    /// Memory exponent δ: per-round driver pool μ = ⌈k · n^δ · ln n⌉
-    /// (the paper's Fig. 10 uses δ = 1/2).
-    pub delta: f64,
-    /// Machines (distributed filter-stage accounting).
-    pub m: usize,
-    /// Threshold decay: τ ← τ·(1−ε) between rounds (ε of the guarantee).
-    pub epsilon: f64,
-}
+/// The multi-round threshold-greedy protocol.
+pub struct GreedyScaling;
 
-impl GreedyScaling {
-    pub fn new(k: usize, delta: f64, m: usize) -> Self {
-        GreedyScaling { k, delta, m: m.max(1), epsilon: 0.5 }
+impl Protocol for GreedyScaling {
+    fn name(&self) -> &'static str {
+        "greedy_scaling"
     }
 
-    pub fn epsilon(mut self, eps: f64) -> Self {
-        assert!(eps > 0.0 && eps < 1.0);
-        self.epsilon = eps;
-        self
-    }
-
-    pub fn run(&self, problem: &dyn Problem, seed: u64) -> RunMetrics {
-        let base_rng = Rng::new(seed);
+    fn run(&self, problem: &dyn Problem, spec: &RunSpec) -> RunMetrics {
+        let (k, m, delta, epsilon) = (spec.k, spec.m, spec.delta, spec.epsilon);
+        let base_rng = Rng::new(spec.seed);
         let mut rng = base_rng.clone();
         let ground = problem.ground();
         let n = ground.len();
-        let mu = (((self.k as f64) * (n as f64).powf(self.delta)
-            * (n as f64).ln().max(1.0))
-            .ceil() as usize)
-            .max(self.k);
-        let engine = MapReduce::new(1);
+        let mu = (((k as f64) * (n as f64).powf(delta) * (n as f64).ln().max(1.0)).ceil()
+            as usize)
+            .max(k);
+        let engine = MapReduce::new(spec.threads);
         let mut job = JobReport::default();
 
         let obj = problem.global();
@@ -60,7 +48,7 @@ impl GreedyScaling {
         let mut rounds = 0usize;
 
         // Round 0: distributed max-singleton-gain scan to seed τ.
-        let chunks = self.chunk(&surviving);
+        let chunks = chunk(&surviving, m);
         let (maxima, stage0) = engine.run_stage(chunks, |_, chunk| {
             let mut st = obj.state();
             let gains = st.batch_gains(&chunk);
@@ -76,16 +64,16 @@ impl GreedyScaling {
         }
         if !tau.is_finite() || tau <= 0.0 {
             let value = obj.eval(&[]);
-            return self.finish(Vec::new(), value, oracle_calls, job, rounds);
+            return finish(spec, Vec::new(), value, oracle_calls, job, rounds);
         }
-        let tau_floor = tau * self.epsilon / (2.0 * self.k as f64);
+        let tau_floor = tau * epsilon / (2.0 * k as f64);
 
-        while state.selected().len() < self.k && !surviving.is_empty() && tau > tau_floor {
+        while state.selected().len() < k && !surviving.is_empty() && tau > tau_floor {
             rounds += 1;
 
             // -- distributed filter: survivors with gain >= τ ----------------
             let selected_now = state.selected().to_vec();
-            let chunks = self.chunk(&surviving);
+            let chunks = chunk(&surviving, m);
             let (filtered, filter_stage) = engine.run_stage(chunks, |_, chunk| {
                 let mut st = obj.state();
                 for &s in &selected_now {
@@ -124,7 +112,7 @@ impl GreedyScaling {
             };
             let t = std::time::Instant::now();
             for &e in &pool {
-                if state.selected().len() >= self.k {
+                if state.selected().len() >= k {
                     break;
                 }
                 let g = state.gain(e);
@@ -143,38 +131,39 @@ impl GreedyScaling {
                 state.selected().iter().copied().collect();
             surviving.retain(|e| !committed.contains(e));
 
-            tau *= 1.0 - self.epsilon;
+            tau *= 1.0 - epsilon;
         }
 
         let solution = state.selected().to_vec();
         let value = problem.global().eval(&solution);
-        self.finish(solution, value, oracle_calls, job, rounds)
+        finish(spec, solution, value, oracle_calls, job, rounds)
     }
+}
 
-    fn chunk(&self, items: &[usize]) -> Vec<Vec<usize>> {
-        let mut cs = vec![Vec::new(); self.m];
-        for (i, &e) in items.iter().enumerate() {
-            cs[i % self.m].push(e);
-        }
-        cs
+fn chunk(items: &[usize], m: usize) -> Vec<Vec<usize>> {
+    let m = m.max(1);
+    let mut cs = vec![Vec::new(); m];
+    for (i, &e) in items.iter().enumerate() {
+        cs[i % m].push(e);
     }
+    cs
+}
 
-    fn finish(
-        &self,
-        solution: Vec<usize>,
-        value: f64,
-        oracle_calls: u64,
-        job: JobReport,
-        rounds: usize,
-    ) -> RunMetrics {
-        RunMetrics {
-            name: format!("greedy_scaling[k={},δ={}]", self.k, self.delta),
-            solution,
-            value,
-            oracle_calls,
-            job,
-            rounds,
-        }
+fn finish(
+    spec: &RunSpec,
+    solution: Vec<usize>,
+    value: f64,
+    oracle_calls: u64,
+    job: JobReport,
+    rounds: usize,
+) -> RunMetrics {
+    RunMetrics {
+        name: format!("greedy_scaling[k={},δ={}]", spec.k, spec.delta),
+        solution,
+        value,
+        oracle_calls,
+        job,
+        rounds,
     }
 }
 
@@ -194,7 +183,7 @@ mod tests {
     #[test]
     fn respects_budget_and_quality() {
         let p = problem();
-        let gs = GreedyScaling::new(10, 0.5, 4).run(&p, 1);
+        let gs = GreedyScaling.run(&p, &RunSpec::new(4, 10).delta(0.5).seed(1));
         assert!(gs.solution.len() <= 10);
         let c = centralized(&p, 10, "lazy", 1);
         // threshold greedy with ε=0.5 is within (1-1/e-ε)-ish of OPT;
@@ -210,7 +199,7 @@ mod tests {
     #[test]
     fn uses_multiple_rounds() {
         let p = problem();
-        let gs = GreedyScaling::new(12, 0.5, 4).run(&p, 2);
+        let gs = GreedyScaling.run(&p, &RunSpec::new(4, 12).delta(0.5).seed(2));
         assert!(
             gs.rounds > 2,
             "threshold greedy must take more rounds than GreeDi's 2, got {}",
@@ -221,8 +210,8 @@ mod tests {
     #[test]
     fn smaller_epsilon_more_rounds() {
         let p = problem();
-        let coarse = GreedyScaling::new(8, 0.5, 4).epsilon(0.5).run(&p, 3);
-        let fine = GreedyScaling::new(8, 0.5, 4).epsilon(0.1).run(&p, 3);
+        let coarse = GreedyScaling.run(&p, &RunSpec::new(4, 8).epsilon(0.5).seed(3));
+        let fine = GreedyScaling.run(&p, &RunSpec::new(4, 8).epsilon(0.1).seed(3));
         assert!(fine.rounds >= coarse.rounds);
         assert!(fine.value >= 0.95 * coarse.value);
     }
@@ -230,8 +219,8 @@ mod tests {
     #[test]
     fn deterministic_given_seed() {
         let p = problem();
-        let a = GreedyScaling::new(8, 0.5, 4).run(&p, 7);
-        let b = GreedyScaling::new(8, 0.5, 4).run(&p, 7);
+        let a = GreedyScaling.run(&p, &RunSpec::new(4, 8).seed(7));
+        let b = GreedyScaling.run(&p, &RunSpec::new(4, 8).seed(7));
         assert_eq!(a.solution, b.solution);
     }
 
@@ -239,7 +228,7 @@ mod tests {
     fn empty_ground_ok() {
         let td = Arc::new(zipf_transactions(1, 5, 2, 1.1, 1));
         let p = CoverageProblem::new(&td);
-        let gs = GreedyScaling::new(3, 0.5, 2).run(&p, 1);
+        let gs = GreedyScaling.run(&p, &RunSpec::new(2, 3).seed(1));
         assert!(gs.solution.len() <= 1);
     }
 }

@@ -9,6 +9,9 @@
 //!   Kumar et al. (2013) used in §6.4.
 //! * [`metrics`] — unified run accounting (solution value, oracle calls,
 //!   simulated cluster time, communication volume, MapReduce rounds).
+//! * [`protocol`] — the unified API: the [`protocol::Protocol`] trait every
+//!   coordinator implements, the shared [`protocol::RunSpec`] builder, and
+//!   the `protocol::by_name` registry mirroring `algorithms::by_name`.
 //!
 //! The [`Problem`] trait is the bridge between the protocol (which moves
 //! element ids around) and the objective library (which knows how to build
@@ -19,6 +22,9 @@ pub mod greedi;
 pub mod greedy_scaling;
 pub mod metrics;
 pub mod multiround;
+pub mod protocol;
+
+pub use protocol::{Protocol, RunSpec};
 
 use std::sync::Arc;
 

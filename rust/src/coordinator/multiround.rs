@@ -13,88 +13,44 @@
 //! `((1−e^{−κ/k})/min(fanout,k))^L · OPT` in the worst case; with random
 //! partitioning each level keeps the (1−1/e)/2-style average-case behavior,
 //! and empirically the tree loses almost nothing (see the ablation bench).
+//!
+//! Registered as `"multiround"`; reads m, k, κ, `fanout`, algorithm,
+//! local/global mode, partition, threads and seed from the shared
+//! [`RunSpec`].
 
-use super::greedi::PartitionStrategy;
 use super::metrics::RunMetrics;
+use super::protocol::{Protocol, RunSpec};
 use super::Problem;
 use crate::algorithms;
 use crate::constraints::cardinality::Cardinality;
 use crate::constraints::Constraint;
-use crate::mapreduce::partition::{balanced_partition, contiguous_partition, random_partition};
 use crate::mapreduce::{JobReport, MapReduce};
 use crate::util::rng::Rng;
 
-/// Tree-reduction GreeDi configuration.
-#[derive(Debug, Clone)]
-pub struct MultiRoundConfig {
-    /// Leaf machine count m.
-    pub m: usize,
-    /// Final budget k.
-    pub k: usize,
-    /// Per-machine budget κ at every level.
-    pub kappa: usize,
-    /// Candidate sets merged per reducer at each level (≥ 2).
-    pub fanout: usize,
-    pub algorithm: String,
-    pub local_eval: bool,
-    pub partition: PartitionStrategy,
-}
-
-impl MultiRoundConfig {
-    pub fn new(m: usize, k: usize, fanout: usize) -> Self {
-        MultiRoundConfig {
-            m: m.max(1),
-            k,
-            kappa: k,
-            fanout: fanout.max(2),
-            algorithm: "lazy".into(),
-            local_eval: false,
-            partition: PartitionStrategy::Random,
-        }
-    }
-
-    pub fn algorithm(mut self, name: &str) -> Self {
-        assert!(algorithms::by_name(name).is_some(), "unknown algorithm {name}");
-        self.algorithm = name.to_string();
-        self
-    }
-
-    pub fn local(mut self) -> Self {
-        self.local_eval = true;
-        self
-    }
-}
-
 /// The tree-reduction protocol.
-pub struct MultiRoundGreedi {
-    pub cfg: MultiRoundConfig,
-}
+pub struct MultiRoundGreedi;
 
-impl MultiRoundGreedi {
-    pub fn new(cfg: MultiRoundConfig) -> Self {
-        MultiRoundGreedi { cfg }
+impl Protocol for MultiRoundGreedi {
+    fn name(&self) -> &'static str {
+        "multiround"
     }
 
-    pub fn run(&self, problem: &dyn Problem, seed: u64) -> RunMetrics {
-        let cfg = &self.cfg;
-        let base_rng = Rng::new(seed);
+    fn run(&self, problem: &dyn Problem, spec: &RunSpec) -> RunMetrics {
+        let fanout = spec.fanout.max(2);
+        let base_rng = Rng::new(spec.seed);
         let mut rng = base_rng.clone();
         let ground = problem.ground();
-        let shards = match cfg.partition {
-            PartitionStrategy::Random => random_partition(&ground, cfg.m, &mut rng),
-            PartitionStrategy::Balanced => balanced_partition(&ground, cfg.m, &mut rng),
-            PartitionStrategy::Contiguous => contiguous_partition(&ground, cfg.m),
-        };
+        let shards = spec.partition.split(&ground, spec.m, &mut rng);
 
-        let engine = MapReduce::new(1);
+        let engine = MapReduce::new(spec.threads);
         let mut job = JobReport::default();
         let mut oracle_calls = 0u64;
         let mut rounds = 0usize;
 
         // ---- Level 0: leaves ------------------------------------------------
-        let leaf_con = Cardinality::new(cfg.kappa);
-        let local_eval = cfg.local_eval;
-        let algo_name = cfg.algorithm.clone();
+        let leaf_con = Cardinality::new(spec.kappa);
+        let local_eval = spec.local_eval;
+        let algo_name = spec.algorithm.clone();
         let inputs: Vec<(usize, Vec<usize>)> = shards.into_iter().enumerate().collect();
         let (leaf_results, stage) = engine.run_stage(inputs, |_, (i, shard)| {
             let mut task_rng = base_rng.fork(7_000 + i as u64);
@@ -118,18 +74,18 @@ impl MultiRoundGreedi {
             level += 1;
             rounds += 1;
             let groups: Vec<(usize, Vec<Vec<usize>>)> = frontier
-                .chunks(cfg.fanout)
+                .chunks(fanout)
                 .map(|c| c.to_vec())
                 .enumerate()
                 .collect();
             let is_root = groups.len() == 1;
             let con = if is_root {
-                Cardinality::new(cfg.k)
+                Cardinality::new(spec.k)
             } else {
-                Cardinality::new(cfg.kappa)
+                Cardinality::new(spec.kappa)
             };
-            let m = cfg.m;
-            let algo_name = cfg.algorithm.clone();
+            let m = spec.m;
+            let algo_name = spec.algorithm.clone();
             let (next, stage) = engine.run_stage(groups, |_, (gi, sets)| {
                 let mut task_rng = base_rng.fork(8_000 + level * 100 + gi as u64);
                 let mut pool: Vec<usize> = sets.iter().flatten().copied().collect();
@@ -173,12 +129,16 @@ impl MultiRoundGreedi {
             frontier = new_frontier;
         }
 
-        let solution = frontier.pop().unwrap_or_default();
+        let mut solution = frontier.pop().unwrap_or_default();
+        // With m = 1 (or a degenerate tree) no root reduction ran, so the
+        // leaf's κ-budget set may exceed k; the greedy selection order makes
+        // the k-prefix feasible by heredity.
+        solution.truncate(spec.k);
         let value = problem.global().eval(&solution);
         RunMetrics {
             name: format!(
                 "greedi-tree[m={},k={},fanout={}]",
-                cfg.m, cfg.k, cfg.fanout
+                spec.m, spec.k, fanout
             ),
             solution,
             value,
@@ -192,7 +152,7 @@ impl MultiRoundGreedi {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::greedi::{centralized, Greedi, GreediConfig};
+    use crate::coordinator::greedi::{centralized, Greedi};
     use crate::coordinator::FacilityProblem;
     use crate::data::synth::{gaussian_blobs, SynthConfig};
     use std::sync::Arc;
@@ -205,7 +165,7 @@ mod tests {
     #[test]
     fn tree_reduces_to_single_solution() {
         let p = problem(400, 1);
-        let r = MultiRoundGreedi::new(MultiRoundConfig::new(16, 8, 4)).run(&p, 2);
+        let r = MultiRoundGreedi.run(&p, &RunSpec::new(16, 8).fanout(4).seed(2));
         assert!(r.solution.len() <= 8);
         // 16 leaves → 4 → 1: 1 leaf round + 2 reduction rounds
         assert_eq!(r.rounds, 3);
@@ -215,8 +175,8 @@ mod tests {
     fn tree_competitive_with_flat_greedi() {
         let p = problem(600, 2);
         let central = centralized(&p, 10, "lazy", 3).value;
-        let flat = Greedi::new(GreediConfig::new(16, 10)).run(&p, 3);
-        let tree = MultiRoundGreedi::new(MultiRoundConfig::new(16, 10, 4)).run(&p, 3);
+        let flat = Greedi.run(&p, &RunSpec::new(16, 10).seed(3));
+        let tree = MultiRoundGreedi.run(&p, &RunSpec::new(16, 10).fanout(4).seed(3));
         assert!(tree.value / central > 0.9, "tree ratio {}", tree.value / central);
         assert!(
             tree.value > 0.95 * flat.value,
@@ -229,10 +189,10 @@ mod tests {
     #[test]
     fn per_merge_communication_bounded_by_fanout_kappa() {
         let p = problem(500, 3);
-        let cfg = MultiRoundConfig::new(16, 6, 4);
-        let kappa = cfg.kappa;
-        let fanout = cfg.fanout;
-        let r = MultiRoundGreedi::new(cfg).run(&p, 4);
+        let spec = RunSpec::new(16, 6).fanout(4).seed(4);
+        let kappa = spec.kappa;
+        let fanout = spec.fanout;
+        let r = MultiRoundGreedi.run(&p, &spec);
         // total shuffle ≤ Σ over merge tasks of fanout·κ
         // 16→4→1: 4 + 1 merge tasks
         assert!(r.job.shuffled_elements <= 5 * fanout * kappa);
@@ -241,8 +201,8 @@ mod tests {
     #[test]
     fn two_level_tree_equals_flat_when_fanout_ge_m() {
         let p = problem(300, 4);
-        let flat = Greedi::new(GreediConfig::new(4, 6)).run(&p, 5);
-        let tree = MultiRoundGreedi::new(MultiRoundConfig::new(4, 6, 8)).run(&p, 5);
+        let flat = Greedi.run(&p, &RunSpec::new(4, 6).seed(5));
+        let tree = MultiRoundGreedi.run(&p, &RunSpec::new(4, 6).fanout(8).seed(5));
         assert_eq!(tree.rounds, 2, "fanout ≥ m must collapse to two rounds");
         // same structure ⇒ same result given identical seeds is not
         // guaranteed (different rng streams), but quality must match.
@@ -250,10 +210,20 @@ mod tests {
     }
 
     #[test]
+    fn single_machine_overselection_respects_k() {
+        // m = 1 skips every reduction level; the κ = α·k leaf set must
+        // still be clipped to the declared budget k.
+        let p = problem(200, 6);
+        let r = MultiRoundGreedi.run(&p, &RunSpec::new(1, 8).alpha(2.0).seed(7));
+        assert!(r.solution.len() <= 8, "budget violated: {}", r.solution.len());
+        assert_eq!(r.rounds, 1);
+    }
+
+    #[test]
     fn deterministic() {
         let p = problem(300, 5);
-        let a = MultiRoundGreedi::new(MultiRoundConfig::new(9, 5, 3)).run(&p, 6);
-        let b = MultiRoundGreedi::new(MultiRoundConfig::new(9, 5, 3)).run(&p, 6);
+        let a = MultiRoundGreedi.run(&p, &RunSpec::new(9, 5).fanout(3).seed(6));
+        let b = MultiRoundGreedi.run(&p, &RunSpec::new(9, 5).fanout(3).seed(6));
         assert_eq!(a.solution, b.solution);
     }
 }

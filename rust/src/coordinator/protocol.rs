@@ -1,0 +1,340 @@
+//! The unified protocol API — every distributed coordinator behind one
+//! trait, one spec, one registry.
+//!
+//! The paper's evaluation (§6) only means something because GreeDi, the four
+//! naive two-round baselines and GreedyScaling all run under *identical*
+//! budgets, partitions and seeds. [`RunSpec`] is that shared contract: one
+//! builder carrying machine count `m`, budget `k`, per-machine budget κ
+//! (α = κ/k), tree fanout, GreedyScaling's (δ, ε), local/global evaluation
+//! mode, the black-box algorithm name, thread count, partition strategy,
+//! seed, and optional per-round hereditary constraints (Algorithm 3).
+//!
+//! [`Protocol`] is the trait every coordinator implements, and [`by_name`]
+//! is the registry mirroring `algorithms::by_name` — so experiments sweep
+//! *protocols* exactly the way they already sweep black boxes:
+//!
+//! ```ignore
+//! let spec = RunSpec::new(8, 20).threads(4).seed(7);
+//! for name in protocol::NAMES {
+//!     let run = protocol::by_name(name).unwrap().run(&problem, &spec);
+//!     println!("{}", run.one_line());
+//! }
+//! ```
+
+use std::fmt;
+use std::sync::Arc;
+
+use super::baselines::Baseline;
+use super::greedi::{centralized, Greedi};
+use super::greedy_scaling::GreedyScaling;
+use super::metrics::RunMetrics;
+use super::multiround::MultiRoundGreedi;
+use super::Problem;
+use crate::algorithms;
+use crate::constraints::Constraint;
+
+pub use crate::mapreduce::partition::PartitionStrategy;
+
+/// A distributed maximization protocol: anything that can turn a
+/// [`Problem`] plus a [`RunSpec`] into a finished [`RunMetrics`].
+pub trait Protocol: Sync {
+    /// Execute the protocol under `spec` (all randomness from `spec.seed`).
+    fn run(&self, problem: &dyn Problem, spec: &RunSpec) -> RunMetrics;
+
+    /// Registry identifier (round-trips through [`by_name`]).
+    fn name(&self) -> &'static str;
+}
+
+/// Shared run specification — the one builder every protocol reads.
+///
+/// Fields a protocol does not use are simply ignored (e.g. `fanout` only
+/// matters to `multiround`, `delta`/`epsilon` only to `greedy_scaling`), so
+/// a single spec can drive a whole protocol sweep apples-to-apples.
+#[derive(Clone)]
+pub struct RunSpec {
+    /// Number of machines m.
+    pub m: usize,
+    /// Final solution budget k.
+    pub k: usize,
+    /// Per-machine budget κ (Algorithm 2 allows κ ≠ k; α = κ/k).
+    pub kappa: usize,
+    /// Candidate sets merged per reducer per level (`multiround` only, ≥ 2).
+    pub fanout: usize,
+    /// Memory exponent δ: driver pool μ = ⌈k·n^δ·ln n⌉ (`greedy_scaling`).
+    pub delta: f64,
+    /// Threshold decay τ ← τ·(1−ε) between rounds (`greedy_scaling`).
+    pub epsilon: f64,
+    /// Decomposable local evaluation (paper §4.5).
+    pub local_eval: bool,
+    /// Black-box algorithm name (see `algorithms::by_name`).
+    pub algorithm: String,
+    /// OS threads for the simulated cluster's map stages.
+    pub threads: usize,
+    pub partition: PartitionStrategy,
+    /// Base RNG seed — partitions and every per-task stream fork from it.
+    pub seed: u64,
+    /// Round-1 hereditary constraint override (Algorithm 3). `None` ⇒
+    /// `Cardinality(kappa)`.
+    pub round1: Option<Arc<dyn Constraint + Send + Sync>>,
+    /// Round-2 / merge constraint override. `None` ⇒ `Cardinality(k)`.
+    pub round2: Option<Arc<dyn Constraint + Send + Sync>>,
+}
+
+impl RunSpec {
+    pub fn new(m: usize, k: usize) -> Self {
+        RunSpec {
+            m: m.max(1),
+            k,
+            kappa: k,
+            fanout: 2,
+            delta: 0.5,
+            epsilon: 0.5,
+            local_eval: false,
+            algorithm: "lazy".to_string(),
+            threads: 1,
+            partition: PartitionStrategy::Random,
+            seed: 42,
+            round1: None,
+            round2: None,
+        }
+    }
+
+    /// Set κ = ⌈α·k⌉ (the paper sweeps α = κ/k).
+    pub fn alpha(mut self, alpha: f64) -> Self {
+        self.kappa = ((alpha * self.k as f64).round() as usize).max(1);
+        self
+    }
+
+    /// Set κ directly.
+    pub fn kappa(mut self, kappa: usize) -> Self {
+        self.kappa = kappa.max(1);
+        self
+    }
+
+    /// Enable decomposable local evaluation (paper §4.5).
+    pub fn local(mut self) -> Self {
+        self.local_eval = true;
+        self
+    }
+
+    pub fn algorithm(mut self, name: &str) -> Self {
+        assert!(algorithms::by_name(name).is_some(), "unknown algorithm {name}");
+        self.algorithm = name.to_string();
+        self
+    }
+
+    pub fn partition(mut self, p: PartitionStrategy) -> Self {
+        self.partition = p;
+        self
+    }
+
+    pub fn threads(mut self, t: usize) -> Self {
+        self.threads = t.max(1);
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Tree-reduction fanout (`multiround`).
+    pub fn fanout(mut self, fanout: usize) -> Self {
+        self.fanout = fanout.max(2);
+        self
+    }
+
+    /// GreedyScaling memory exponent δ.
+    pub fn delta(mut self, delta: f64) -> Self {
+        assert!(delta >= 0.0, "delta must be non-negative");
+        self.delta = delta;
+        self
+    }
+
+    /// GreedyScaling threshold decay ε ∈ (0, 1).
+    pub fn epsilon(mut self, eps: f64) -> Self {
+        assert!(eps > 0.0 && eps < 1.0, "epsilon must be in (0, 1)");
+        self.epsilon = eps;
+        self
+    }
+
+    /// Per-round hereditary constraints (Algorithm 3). Protocols without a
+    /// general-constraint path fall back to their cardinality behavior.
+    pub fn constraints(
+        mut self,
+        round1: Arc<dyn Constraint + Send + Sync>,
+        round2: Arc<dyn Constraint + Send + Sync>,
+    ) -> Self {
+        self.round1 = Some(round1);
+        self.round2 = Some(round2);
+        self
+    }
+}
+
+impl fmt::Debug for RunSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("RunSpec")
+            .field("m", &self.m)
+            .field("k", &self.k)
+            .field("kappa", &self.kappa)
+            .field("fanout", &self.fanout)
+            .field("delta", &self.delta)
+            .field("epsilon", &self.epsilon)
+            .field("local_eval", &self.local_eval)
+            .field("algorithm", &self.algorithm)
+            .field("threads", &self.threads)
+            .field("partition", &self.partition)
+            .field("seed", &self.seed)
+            .field("round1", &self.round1.as_ref().map(|_| "<constraint>"))
+            .field("round2", &self.round2.as_ref().map(|_| "<constraint>"))
+            .finish()
+    }
+}
+
+/// Every registered protocol name, in canonical report order.
+pub const NAMES: [&str; 8] = [
+    "greedi",
+    "multiround",
+    "greedy_scaling",
+    "random_random",
+    "random_greedy",
+    "greedy_merge",
+    "greedy_max",
+    "centralized",
+];
+
+/// The four naive two-round baselines of §6, in `Baseline::ALL` order.
+pub const BASELINE_NAMES: [&str; 4] =
+    ["random_random", "random_greedy", "greedy_merge", "greedy_max"];
+
+/// Resolve a protocol by name (config files / CLI / sweeps) — the protocol
+/// analogue of `algorithms::by_name`.
+pub fn by_name(name: &str) -> Option<Box<dyn Protocol + Send>> {
+    match name {
+        "greedi" => Some(Box::new(Greedi)),
+        "multiround" => Some(Box::new(MultiRoundGreedi)),
+        "greedy_scaling" => Some(Box::new(GreedyScaling)),
+        "random_random" => Some(Box::new(Baseline::RandomRandom)),
+        "random_greedy" => Some(Box::new(Baseline::RandomGreedy)),
+        "greedy_merge" => Some(Box::new(Baseline::GreedyMerge)),
+        "greedy_max" => Some(Box::new(Baseline::GreedyMax)),
+        "centralized" => Some(Box::new(Centralized)),
+        _ => None,
+    }
+}
+
+/// Centralized single-machine reference run as a protocol — the denominator
+/// of every ratio the paper reports, now sweepable like everything else.
+pub struct Centralized;
+
+impl Protocol for Centralized {
+    fn run(&self, problem: &dyn Problem, spec: &RunSpec) -> RunMetrics {
+        centralized(problem, spec.k, &spec.algorithm, spec.seed)
+    }
+
+    fn name(&self) -> &'static str {
+        "centralized"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::FacilityProblem;
+    use crate::data::synth::{gaussian_blobs, SynthConfig};
+
+    fn problem(n: usize, seed: u64) -> FacilityProblem {
+        let ds = std::sync::Arc::new(gaussian_blobs(&SynthConfig::tiny_images(n, 8), seed));
+        FacilityProblem::new(&ds)
+    }
+
+    #[test]
+    fn registry_round_trips_every_name() {
+        for name in NAMES {
+            let proto = by_name(name);
+            assert!(proto.is_some(), "{name} not registered");
+            assert_eq!(proto.unwrap().name(), name, "{name} does not round-trip");
+        }
+        assert!(by_name("nope").is_none());
+        assert!(by_name("").is_none());
+        assert!(by_name("GreeDi").is_none(), "names are case-sensitive");
+    }
+
+    #[test]
+    fn baseline_names_subset_of_registry() {
+        for b in BASELINE_NAMES {
+            assert!(NAMES.contains(&b));
+            assert!(by_name(b).is_some());
+        }
+    }
+
+    #[test]
+    fn cross_protocol_smoke_under_shared_spec() {
+        // Every protocol runs on one tiny problem under ONE spec — the whole
+        // point of the unified API.
+        let p = problem(80, 3);
+        let spec = RunSpec::new(3, 4).seed(5);
+        for name in NAMES {
+            let run = by_name(name).unwrap().run(&p, &spec);
+            assert!(run.value.is_finite(), "{name}: value {}", run.value);
+            assert!(run.value >= 0.0, "{name}: negative value");
+            assert!(run.solution.len() <= 4, "{name}: budget violated");
+            assert!(run.rounds >= 1, "{name}: no rounds recorded");
+            let set: std::collections::HashSet<_> = run.solution.iter().collect();
+            assert_eq!(set.len(), run.solution.len(), "{name}: duplicate ids");
+            // reported value must be the true global objective of the solution
+            let fresh = p.global().eval(&run.solution);
+            assert!((fresh - run.value).abs() < 1e-9, "{name}: stale value");
+        }
+    }
+
+    #[test]
+    fn registry_dispatch_matches_direct_call() {
+        let p = problem(120, 4);
+        let spec = RunSpec::new(4, 6).seed(9);
+        let via_registry = by_name("greedi").unwrap().run(&p, &spec);
+        let direct = Greedi.run(&p, &spec);
+        assert_eq!(via_registry.solution, direct.solution);
+        assert_eq!(via_registry.value, direct.value);
+        assert_eq!(via_registry.oracle_calls, direct.oracle_calls);
+    }
+
+    #[test]
+    fn spec_builder_defaults_and_overrides() {
+        let s = RunSpec::new(0, 10);
+        assert_eq!(s.m, 1, "m clamps to 1");
+        assert_eq!(s.kappa, 10, "κ defaults to k");
+        assert_eq!(s.algorithm, "lazy");
+        assert_eq!(s.threads, 1);
+        assert!(!s.local_eval);
+        let s = RunSpec::new(4, 10)
+            .alpha(2.0)
+            .local()
+            .threads(0)
+            .fanout(1)
+            .partition(PartitionStrategy::Contiguous)
+            .seed(99);
+        assert_eq!(s.kappa, 20);
+        assert!(s.local_eval);
+        assert_eq!(s.threads, 1, "threads clamps to 1");
+        assert_eq!(s.fanout, 2, "fanout clamps to 2");
+        assert_eq!(s.partition, PartitionStrategy::Contiguous);
+        assert_eq!(s.seed, 99);
+    }
+
+    #[test]
+    fn threads_do_not_change_any_protocol_result() {
+        // The tentpole's perf half: every protocol's map stage may run on a
+        // pool, and the pool must be invisible in the results.
+        let p = problem(150, 6);
+        for name in NAMES {
+            let seq = by_name(name).unwrap().run(&p, &RunSpec::new(4, 5).seed(8));
+            let par = by_name(name)
+                .unwrap()
+                .run(&p, &RunSpec::new(4, 5).seed(8).threads(4));
+            assert_eq!(seq.solution, par.solution, "{name}: threads changed result");
+            assert_eq!(seq.value, par.value, "{name}");
+            assert_eq!(seq.oracle_calls, par.oracle_calls, "{name}");
+        }
+    }
+}

@@ -11,8 +11,9 @@
 use std::sync::Arc;
 
 use super::{ExpOpts, FigureReport};
-use crate::coordinator::greedi::{centralized, Greedi, GreediConfig, PartitionStrategy};
-use crate::coordinator::multiround::{MultiRoundConfig, MultiRoundGreedi};
+use crate::coordinator::greedi::{centralized, Greedi, PartitionStrategy};
+use crate::coordinator::multiround::MultiRoundGreedi;
+use crate::coordinator::protocol::Protocol;
 use crate::coordinator::FacilityProblem;
 use crate::data::synth::{gaussian_blobs, SynthConfig};
 use crate::util::stats::summarize;
@@ -43,8 +44,8 @@ pub fn run(opts: &ExpOpts) -> FigureReport {
         ("contiguous", PartitionStrategy::Contiguous),
     ] {
         let (mean, std) = ratio_of(&|s| {
-            Greedi::new(GreediConfig::new(m, k).partition(strat))
-                .run(&problem, s)
+            Greedi
+                .run(&problem, &opts.spec(m, k, false, "lazy").partition(strat).seed(s))
                 .value
         });
         t.row(&[label.into(), format!("{mean:.4}±{std:.4}")]);
@@ -58,7 +59,7 @@ pub fn run(opts: &ExpOpts) -> FigureReport {
         &["algorithm", "ratio", "oracle calls"],
     );
     for algo in ["greedy", "lazy", "stochastic", "sieve_streaming"] {
-        let run = Greedi::new(GreediConfig::new(m, k).algorithm(algo)).run(&problem, opts.seed);
+        let run = Greedi.run(&problem, &opts.spec(m, k, false, algo));
         t.row(&[
             algo.into(),
             format!("{:.4}", run.value / central),
@@ -71,7 +72,7 @@ pub fn run(opts: &ExpOpts) -> FigureReport {
     // ---- α = κ/k ------------------------------------------------------------
     let mut t = Table::new("ablation: over-selection α = κ/k", &["α", "ratio", "comm (ids)"]);
     for alpha in [0.25, 0.5, 1.0, 2.0, 4.0] {
-        let run = Greedi::new(GreediConfig::new(m, k).alpha(alpha)).run(&problem, opts.seed);
+        let run = Greedi.run(&problem, &opts.spec(m, k, false, "lazy").alpha(alpha));
         t.row(&[
             format!("{alpha}"),
             format!("{:.4}", run.value / central),
@@ -86,7 +87,7 @@ pub fn run(opts: &ExpOpts) -> FigureReport {
         "ablation: flat 2-round vs tree reduction (m=16)",
         &["protocol", "ratio", "rounds", "max comm per sync"],
     );
-    let flat = Greedi::new(GreediConfig::new(16, k)).run(&problem, opts.seed);
+    let flat = Greedi.run(&problem, &opts.spec(16, k, false, "lazy"));
     t.row(&[
         "flat (1 merge point)".into(),
         format!("{:.4}", flat.value / central),
@@ -94,7 +95,7 @@ pub fn run(opts: &ExpOpts) -> FigureReport {
         flat.job.shuffled_elements.to_string(),
     ]);
     for fanout in [2, 4] {
-        let tree = MultiRoundGreedi::new(MultiRoundConfig::new(16, k, fanout)).run(&problem, opts.seed);
+        let tree = MultiRoundGreedi.run(&problem, &opts.spec(16, k, false, "lazy").fanout(fanout));
         t.row(&[
             format!("tree fanout={fanout}"),
             format!("{:.4}", tree.value / central),

@@ -13,8 +13,9 @@
 use std::sync::Arc;
 
 use super::{central_ref, ExpOpts, FigureReport};
-use crate::coordinator::greedi::{Greedi, GreediConfig};
+use crate::coordinator::greedi::Greedi;
 use crate::coordinator::greedy_scaling::GreedyScaling;
+use crate::coordinator::protocol::Protocol;
 use crate::coordinator::CoverageProblem;
 use crate::data::transactions::{accidents_like, kosarak_like};
 use crate::util::table::Table;
@@ -43,8 +44,8 @@ pub fn run(opts: &ExpOpts) -> FigureReport {
         );
         for &k in &ks {
             let (cv, _) = central_ref(&problem, k, "lazy", opts.seed);
-            let grd = Greedi::new(GreediConfig::new(m, k)).run(&problem, opts.seed);
-            let gs = GreedyScaling::new(k, 0.5, m).run(&problem, opts.seed);
+            let grd = Greedi.run(&problem, &opts.spec(m, k, false, "lazy"));
+            let gs = GreedyScaling.run(&problem, &opts.spec(m, k, false, "lazy").delta(0.5));
             t.row(&[
                 k.to_string(),
                 format!("{:.3}", grd.ratio_vs(cv)),

@@ -43,7 +43,11 @@ pub fn run(opts: &ExpOpts) -> FigureReport {
             .iter()
             .map(|&m| {
                 suite_ratios(
-                    &problem, m, k_fixed, &alphas, local, "lazy", opts.trials, opts.seed, cv,
+                    &problem,
+                    &opts.spec(m, k_fixed, local, "lazy"),
+                    &alphas,
+                    opts.trials,
+                    cv,
                 )
             })
             .collect();
@@ -68,7 +72,11 @@ pub fn run(opts: &ExpOpts) -> FigureReport {
             .map(|&k| {
                 let (cv, _) = central_ref(&problem, k, "lazy", opts.seed);
                 suite_ratios(
-                    &problem, m_fixed, k, &alphas, local, "lazy", opts.trials, opts.seed, cv,
+                    &problem,
+                    &opts.spec(m_fixed, k, local, "lazy"),
+                    &alphas,
+                    opts.trials,
+                    cv,
                 )
             })
             .collect();
@@ -91,7 +99,8 @@ fn build_problem(ds: &Arc<crate::data::Dataset>, opts: &ExpOpts) -> FacilityProb
     let mut p = FacilityProblem::new(ds);
     if opts.xla {
         let engine = Arc::new(
-            crate::runtime::Engine::load_default().expect("artifacts missing — `make artifacts`"),
+            crate::runtime::Engine::load_default()
+                .expect("--xla needs `make artifacts` and a `--features xla` build (vendored xla crate — see rust/Cargo.toml)"),
         );
         p = p.with_backend_factory(Arc::new(crate::runtime::XlaBackendFactory { engine }));
     }

@@ -13,8 +13,7 @@
 use std::sync::Arc;
 
 use super::{ExpOpts, FigureReport};
-use crate::coordinator::baselines::Baseline;
-use crate::coordinator::greedi::{Greedi, GreediConfig};
+use crate::coordinator::protocol::{self, Protocol};
 use crate::coordinator::FacilityProblem;
 use crate::data::synth::{gaussian_blobs, SynthConfig};
 use crate::util::stats::summarize;
@@ -28,7 +27,8 @@ pub fn run(opts: &ExpOpts) -> FigureReport {
     let mut problem = FacilityProblem::new(&ds);
     if opts.xla {
         let engine = Arc::new(
-            crate::runtime::Engine::load_default().expect("artifacts missing — `make artifacts`"),
+            crate::runtime::Engine::load_default()
+                .expect("--xla needs `make artifacts` and a `--features xla` build (vendored xla crate — see rust/Cargo.toml)"),
         );
         problem = problem.with_backend_factory(Arc::new(crate::runtime::XlaBackendFactory { engine }));
     }
@@ -43,6 +43,7 @@ pub fn run(opts: &ExpOpts) -> FigureReport {
         opts.trials
     );
 
+    let greedi = protocol::by_name("greedi").expect("greedi registered");
     for &k in &ks {
         let mut cells = vec![k.to_string()];
         // GreeDi reference value for normalization (paper plots raw values;
@@ -50,16 +51,18 @@ pub fn run(opts: &ExpOpts) -> FigureReport {
         let mut grd = Vec::new();
         for tdx in 0..opts.trials {
             let s = opts.seed.wrapping_add(tdx as u64 * 7919);
-            let run = Greedi::new(GreediConfig::new(m, k).local()).run(&problem, s);
+            let run = greedi.run(&problem, &opts.spec(m, k, true, "lazy").seed(s));
             grd.push(run.value);
         }
         let gref = summarize(&grd).mean;
         cells.push(format!("{:.3}", 1.0));
-        for b in Baseline::ALL {
+        for name in protocol::BASELINE_NAMES {
+            let proto = protocol::by_name(name).expect("baseline registered");
             let mut vals = Vec::new();
             for tdx in 0..opts.trials {
                 let s = opts.seed.wrapping_add(tdx as u64 * 7919);
-                vals.push(b.run(&problem, m, k, true, "lazy", s).value / gref.max(1e-12));
+                let run = proto.run(&problem, &opts.spec(m, k, true, "lazy").seed(s));
+                vals.push(run.value / gref.max(1e-12));
             }
             cells.push(format!("{:.3}", summarize(&vals).mean));
         }

@@ -33,7 +33,7 @@ pub fn run(opts: &ExpOpts) -> FigureReport {
             .iter()
             .map(|&k| {
                 let (cv, _) = central_ref(&problem, k, "lazy", opts.seed);
-                suite_ratios(&problem, m_fixed, k, &alphas, false, "lazy", opts.trials, opts.seed, cv)
+                suite_ratios(&problem, &opts.spec(m_fixed, k, false, "lazy"), &alphas, opts.trials, cv)
             })
             .collect();
         body.push_str(&render_sweep(
@@ -50,7 +50,7 @@ pub fn run(opts: &ExpOpts) -> FigureReport {
         let rows: Vec<_> = ms
             .iter()
             .map(|&m| {
-                suite_ratios(&problem, m, k_fixed, &alphas, false, "lazy", opts.trials, opts.seed, cv)
+                suite_ratios(&problem, &opts.spec(m, k_fixed, false, "lazy"), &alphas, opts.trials, cv)
             })
             .collect();
         body.push_str(&render_sweep(

@@ -27,7 +27,7 @@ pub fn run(opts: &ExpOpts) -> FigureReport {
         .iter()
         .map(|&k| {
             let (cv, _) = central_ref(&problem, k, "lazy", opts.seed);
-            suite_ratios(&problem, m, k, &[1.0], false, "lazy", opts.trials, opts.seed, cv)
+            suite_ratios(&problem, &opts.spec(m, k, false, "lazy"), &[1.0], opts.trials, cv)
         })
         .collect();
 

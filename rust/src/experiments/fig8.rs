@@ -14,7 +14,8 @@
 use std::sync::Arc;
 
 use super::{ExpOpts, FigureReport};
-use crate::coordinator::greedi::{centralized, Greedi, GreediConfig};
+use crate::coordinator::greedi::{centralized, Greedi};
+use crate::coordinator::protocol::Protocol;
 use crate::coordinator::InfoGainProblem;
 use crate::data::synth::yahoo_like;
 use crate::util::table::Table;
@@ -51,7 +52,7 @@ pub fn run(opts: &ExpOpts) -> FigureReport {
         for &m in ms {
             let mut cells = vec![m.to_string()];
             for (ki, &k) in ks.iter().enumerate() {
-                let run = Greedi::new(GreediConfig::new(m, k)).run(&problem, opts.seed);
+                let run = Greedi.run(&problem, &opts.spec(m, k, false, "lazy"));
                 cells.push(format!("{:.2}", run.speedup_vs(central[ki])));
             }
             t.row(&cells);

@@ -35,7 +35,11 @@ pub fn run(opts: &ExpOpts) -> FigureReport {
             .iter()
             .map(|&m| {
                 suite_ratios(
-                    &problem, m, k_fixed, &[1.0], true, "random_greedy", opts.trials, opts.seed, cv,
+                    &problem,
+                    &opts.spec(m, k_fixed, true, "random_greedy"),
+                    &[1.0],
+                    opts.trials,
+                    cv,
                 )
             })
             .collect();
@@ -54,7 +58,11 @@ pub fn run(opts: &ExpOpts) -> FigureReport {
             .map(|&k| {
                 let (cv, _) = central_ref(&problem, k, "random_greedy", opts.seed);
                 suite_ratios(
-                    &problem, m_fixed, k, &[1.0], true, "random_greedy", opts.trials, opts.seed, cv,
+                    &problem,
+                    &opts.spec(m_fixed, k, true, "random_greedy"),
+                    &[1.0],
+                    opts.trials,
+                    cv,
                 )
             })
             .collect();

@@ -4,6 +4,10 @@
 //! of the distributed to the centralized solution, per protocol, as m, k
 //! or α sweeps.
 //!
+//! Every harness drives protocols exclusively through the unified
+//! `protocol::by_name` + [`RunSpec`] API, so adding a protocol to the
+//! registry makes it sweepable here for free.
+//!
 //! Default sizes are scaled down from the paper's corpora so the full suite
 //! runs in minutes on one core (see DESIGN.md §3 for the substitutions);
 //! `--full` or explicit `--n` lifts them toward paper scale.
@@ -20,8 +24,8 @@ pub mod theory;
 
 use std::collections::BTreeMap;
 
-use crate::coordinator::baselines::Baseline;
-use crate::coordinator::greedi::{centralized, Greedi, GreediConfig};
+use crate::coordinator::greedi::centralized;
+use crate::coordinator::protocol::{self, PartitionStrategy, Protocol, RunSpec};
 use crate::coordinator::Problem;
 use crate::util::stats::summarize;
 use crate::util::table::Table;
@@ -33,6 +37,10 @@ pub struct ExpOpts {
     pub n: Option<usize>,
     pub trials: usize,
     pub seed: u64,
+    /// OS threads for every protocol's simulated cluster.
+    pub threads: usize,
+    /// Ground-set partitioning strategy for every protocol run.
+    pub partition: PartitionStrategy,
     /// Use the XLA facility-gain backend where applicable.
     pub xla: bool,
     /// Lift sizes toward paper scale.
@@ -43,7 +51,16 @@ pub struct ExpOpts {
 
 impl Default for ExpOpts {
     fn default() -> Self {
-        ExpOpts { n: None, trials: 3, seed: 42, xla: false, full: false, part: String::new() }
+        ExpOpts {
+            n: None,
+            trials: 3,
+            seed: 42,
+            threads: 1,
+            partition: PartitionStrategy::Random,
+            xla: false,
+            full: false,
+            part: String::new(),
+        }
     }
 }
 
@@ -55,34 +72,41 @@ impl ExpOpts {
     pub fn wants(&self, part: &str) -> bool {
         self.part.is_empty() || self.part == part
     }
+
+    /// Base [`RunSpec`] for one (m, k) sweep point under these options.
+    pub fn spec(&self, m: usize, k: usize, local: bool, algorithm: &str) -> RunSpec {
+        let mut spec = RunSpec::new(m, k)
+            .algorithm(algorithm)
+            .partition(self.partition)
+            .threads(self.threads)
+            .seed(self.seed);
+        if local {
+            spec = spec.local();
+        }
+        spec
+    }
 }
 
 /// One sweep point: protocol label → per-trial ratios vs centralized.
 pub type RatioRows = BTreeMap<String, Vec<f64>>;
 
 /// Run the full protocol suite (GreeDi per α + the 4 baselines) at one
-/// (m, k) setting and collect distributed/centralized value ratios.
-#[allow(clippy::too_many_arguments)]
+/// sweep point and collect distributed/centralized value ratios. The base
+/// spec fixes (m, k, mode, algorithm, threads); per-trial seeds fork from
+/// `base.seed`.
 pub fn suite_ratios(
     problem: &dyn Problem,
-    m: usize,
-    k: usize,
+    base: &RunSpec,
     alphas: &[f64],
-    local: bool,
-    algorithm: &str,
     trials: usize,
-    seed: u64,
     central_value: f64,
 ) -> RatioRows {
+    let greedi = protocol::by_name("greedi").expect("greedi registered");
     let mut rows: RatioRows = BTreeMap::new();
     for t in 0..trials {
-        let s = seed.wrapping_add(t as u64).wrapping_mul(0x9E37_79B9);
+        let s = base.seed.wrapping_add(t as u64).wrapping_mul(0x9E37_79B9);
         for &alpha in alphas {
-            let mut cfg = GreediConfig::new(m, k).alpha(alpha).algorithm(algorithm);
-            if local {
-                cfg = cfg.local();
-            }
-            let run = Greedi::new(cfg).run(problem, s);
+            let run = greedi.run(problem, &base.clone().alpha(alpha).seed(s));
             let label = if alphas.len() == 1 {
                 "greedi".to_string()
             } else {
@@ -90,9 +114,10 @@ pub fn suite_ratios(
             };
             rows.entry(label).or_default().push(run.ratio_vs(central_value));
         }
-        for b in Baseline::ALL {
-            let run = b.run(problem, m, k, local, algorithm, s);
-            rows.entry(b.label().to_string())
+        for name in protocol::BASELINE_NAMES {
+            let proto = protocol::by_name(name).expect("baseline registered");
+            let run = proto.run(problem, &base.clone().seed(s));
+            rows.entry(run.name.clone())
                 .or_default()
                 .push(run.ratio_vs(central_value));
         }
@@ -166,7 +191,8 @@ mod tests {
         let ds = Arc::new(gaussian_blobs(&SynthConfig::tiny_images(120, 8), 1));
         let p = FacilityProblem::new(&ds);
         let (cv, _) = central_ref(&p, 5, "lazy", 1);
-        let rows = suite_ratios(&p, 3, 5, &[1.0], false, "lazy", 2, 1, cv);
+        let base = RunSpec::new(3, 5).seed(1);
+        let rows = suite_ratios(&p, &base, &[1.0], 2, cv);
         assert!(rows.contains_key("greedi"));
         assert!(rows.contains_key("random/random"));
         assert_eq!(rows["greedi"].len(), 2);
@@ -196,5 +222,14 @@ mod tests {
         assert!(o.wants("a") && o.wants("b"));
         o.part = "a".into();
         assert!(o.wants("a") && !o.wants("b"));
+    }
+
+    #[test]
+    fn opts_spec_threads_and_mode() {
+        let o = ExpOpts { threads: 4, seed: 9, ..Default::default() };
+        let s = o.spec(6, 12, true, "greedy");
+        assert_eq!((s.m, s.k, s.threads, s.seed), (6, 12, 4, 9));
+        assert!(s.local_eval);
+        assert_eq!(s.algorithm, "greedy");
     }
 }

@@ -16,7 +16,8 @@ use super::{ExpOpts, FigureReport};
 use crate::algorithms::{cost_benefit::CostBenefitGreedy, greedy::Greedy, Maximizer};
 use crate::constraints::knapsack::Knapsack;
 use crate::constraints::matroid::PartitionMatroid;
-use crate::coordinator::greedi::{Greedi, GreediConfig, PartitionStrategy};
+use crate::coordinator::greedi::{Greedi, PartitionStrategy};
+use crate::coordinator::protocol::{Protocol, RunSpec};
 use crate::coordinator::OpaqueProblem;
 use crate::data::synth::{gaussian_blobs, SynthConfig};
 use crate::objective::entropy_worstcase::EntropyWorstCase;
@@ -44,15 +45,16 @@ pub fn run(opts: &ExpOpts) -> FigureReport {
         let f = EntropyWorstCase::new(m, k);
         let p = OpaqueProblem::new(&f);
         let opt = f.optimal_value(k);
-        let adv = Greedi::new(GreediConfig::new(m, k).partition(PartitionStrategy::Contiguous))
-            .run(&p, opts.seed);
+        let adv = Greedi.run(
+            &p,
+            &RunSpec::new(m, k)
+                .partition(PartitionStrategy::Contiguous)
+                .seed(opts.seed),
+        );
         let mut rnd_vals = Vec::new();
         for s in 0..opts.trials as u64 {
             rnd_vals.push(
-                Greedi::new(GreediConfig::new(m, k))
-                    .run(&p, opts.seed + s)
-                    .value
-                    / opt,
+                Greedi.run(&p, &RunSpec::new(m, k).seed(opts.seed + s)).value / opt,
             );
         }
         let rnd = crate::util::stats::mean(&rnd_vals);
@@ -92,7 +94,7 @@ pub fn run(opts: &ExpOpts) -> FigureReport {
     );
     for (m, k, alpha) in [(4, 8, 1.0), (8, 8, 1.0), (4, 8, 0.5), (4, 8, 2.0), (2, 16, 1.0)] {
         let central = crate::coordinator::greedi::centralized(&p, k, "lazy", opts.seed);
-        let run = Greedi::new(GreediConfig::new(m, k).alpha(alpha)).run(&p, opts.seed);
+        let run = Greedi.run(&p, &RunSpec::new(m, k).alpha(alpha).seed(opts.seed));
         let kappa = (alpha * k as f64).round();
         let bound = (1.0 - (-kappa / k as f64).exp()) / m.min(k) as f64;
         let ratio = run.value / central.value;

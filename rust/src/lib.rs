@@ -17,21 +17,34 @@
 //!   hot loops, lowered inside the L2 graphs (interpret mode for CPU PJRT).
 //!
 //! Python never runs at coordination time: `make artifacts` produces
-//! `artifacts/*.hlo.txt`, which [`runtime`] loads through the PJRT C API.
+//! `artifacts/*.hlo.txt`, which [`runtime`] loads through the PJRT C API
+//! (build with `--features xla`).
 //!
 //! ## Quickstart
 //!
+//! Every distributed coordinator — GreeDi, the tree-reduction variant, the
+//! four naive baselines, GreedyScaling, and the centralized reference — sits
+//! behind one trait ([`coordinator::protocol::Protocol`]), one spec
+//! ([`coordinator::protocol::RunSpec`]), and one registry
+//! (`coordinator::protocol::by_name`), mirroring `algorithms::by_name`:
+//!
 //! ```no_run
 //! use std::sync::Arc;
-//! use greedi::coordinator::greedi::{Greedi, GreediConfig};
+//! use greedi::coordinator::protocol::{self, Protocol, RunSpec};
 //! use greedi::coordinator::FacilityProblem;
 //! use greedi::data::synth::{gaussian_blobs, SynthConfig};
 //!
-//! // 10k points in 16-d, 50 exemplars, 10 machines.
+//! // 10k points in 16-d, 50 exemplars, 10 machines, 4 worker threads.
 //! let data = Arc::new(gaussian_blobs(&SynthConfig::tiny_images(10_000, 16), 42));
 //! let problem = FacilityProblem::new(&data);
-//! let run = Greedi::new(GreediConfig::new(10, 50)).run(&problem, 7);
-//! println!("distributed f(S) = {}", run.value);
+//! let spec = RunSpec::new(10, 50).threads(4).seed(7);
+//!
+//! // One spec drives any protocol in the registry, apples-to-apples.
+//! let central = protocol::by_name("centralized").unwrap().run(&problem, &spec);
+//! for name in ["greedi", "multiround", "greedy_max"] {
+//!     let run = protocol::by_name(name).unwrap().run(&problem, &spec);
+//!     println!("{name}: f(S) = {}, ratio = {:.4}", run.value, run.ratio_vs(central.value));
+//! }
 //! ```
 pub mod algorithms;
 pub mod config;
@@ -57,12 +70,15 @@ pub mod prelude {
     };
     pub use crate::coordinator::{
         baselines::Baseline,
-        greedi::{centralized, Greedi, GreediConfig},
+        greedi::{centralized, Greedi},
         greedy_scaling::GreedyScaling,
         metrics::RunMetrics,
+        multiround::MultiRoundGreedi,
+        protocol::{Protocol, RunSpec},
         CoverageProblem, CutProblem, FacilityProblem, InfoGainProblem, Problem,
     };
     pub use crate::data::{synth, synth::SynthConfig, Dataset};
+    pub use crate::mapreduce::partition::PartitionStrategy;
     pub use crate::objective::{
         coverage::Coverage, cut::GraphCut, facility::FacilityLocation, infogain::InfoGain,
         SubmodularFn,

@@ -5,22 +5,29 @@
 //! greedi <subcommand> [options]
 //!
 //! subcommands:
-//!   quickstart            tiny end-to-end GreeDi demo
+//!   quickstart            tiny end-to-end demo (any registered protocol)
+//!   protocols             sweep every registered protocol on one workload
 //!   fig4 … fig10          regenerate a figure from the paper's §6
 //!   theory                empirical checks of Theorems 3/4/11 + Table 1
 //!   all                   every figure + theory, in order
 //!   info                  artifact / build information
 //!
 //! common options:
-//!   --n <int>        ground-set size override
-//!   --trials <int>   repetitions per sweep point (default 3)
-//!   --seed <int>     base RNG seed (default 42)
-//!   --part <a|b|c|d> figure sub-part filter
-//!   --xla            use the AOT/PJRT gain oracle where applicable
-//!   --full           lift sizes toward paper scale
-//!   --config <path>  load an ExperimentConfig preset (configs/*.toml)
+//!   --n <int>          ground-set size override
+//!   --trials <int>     repetitions per sweep point (default 3)
+//!   --seed <int>       base RNG seed (default 42)
+//!   --threads <int>    OS threads for the simulated cluster (default 1)
+//!   --partition <s>    random | balanced | contiguous (default random)
+//!   --protocol <name>  protocol for `quickstart` (see `protocol::by_name`;
+//!                      default greedi — figure harnesses run their fixed suites)
+//!   --part <a|b|c|d>   figure sub-part filter
+//!   --xla              use the AOT/PJRT gain oracle where applicable
+//!   --full             lift sizes toward paper scale
+//!   --config <path>    load an ExperimentConfig preset (configs/*.toml)
 //! ```
 
+use greedi::config::ExperimentConfig;
+use greedi::coordinator::protocol::{self, PartitionStrategy, Protocol, RunSpec};
 use greedi::experiments::{self, ExpOpts, FigureReport};
 use greedi::util::args::Args;
 
@@ -29,6 +36,15 @@ fn opts_from(args: &Args) -> ExpOpts {
         n: args.get("n").map(|v| v.parse().expect("--n expects an integer")),
         trials: args.get_usize("trials", 3),
         seed: args.get_u64("seed", 42),
+        threads: args.get_usize("threads", 1),
+        partition: args
+            .get("partition")
+            .map(|s| {
+                PartitionStrategy::parse(s).unwrap_or_else(|| {
+                    panic!("--partition expects random|balanced|contiguous, got {s:?}")
+                })
+            })
+            .unwrap_or(PartitionStrategy::Random),
         xla: args.has_flag("xla"),
         full: args.has_flag("full"),
         part: args.get_str("part", ""),
@@ -50,29 +66,77 @@ fn run_figure(name: &str, opts: &ExpOpts) -> Option<FigureReport> {
     })
 }
 
-fn quickstart(opts: &ExpOpts) {
-    use greedi::coordinator::greedi::{centralized, Greedi, GreediConfig};
-    use greedi::coordinator::FacilityProblem;
+fn demo_problem(opts: &ExpOpts, n: usize) -> greedi::coordinator::FacilityProblem {
     use greedi::data::synth::{gaussian_blobs, SynthConfig};
     use std::sync::Arc;
-
-    let n = opts.n.unwrap_or(1_000);
-    println!("GreeDi quickstart: exemplar clustering, n={n}, d=16, m=5, k=10\n");
     let ds = Arc::new(gaussian_blobs(&SynthConfig::tiny_images(n, 16), opts.seed));
-    let problem = FacilityProblem::new(&ds);
-    let central = centralized(&problem, 10, "lazy", opts.seed);
+    greedi::coordinator::FacilityProblem::new(&ds)
+}
+
+/// Shared spec for the demo subcommands: preset keys (algorithm,
+/// local_eval, …) come from the config when one is loaded; CLI-merged
+/// options (seed/threads/partition) always win.
+fn base_spec(opts: &ExpOpts, cfg: Option<&ExperimentConfig>, m: usize, k: usize) -> RunSpec {
+    let mut spec = match cfg {
+        Some(c) => c.run_spec(m, k),
+        None => RunSpec::new(m, k),
+    };
+    spec.partition = opts.partition;
+    spec.threads = opts.threads;
+    spec.seed = opts.seed;
+    spec
+}
+
+fn quickstart(opts: &ExpOpts, cfg: Option<&ExperimentConfig>, proto_name: &str) {
+    let Some(proto) = protocol::by_name(proto_name) else {
+        eprintln!(
+            "unknown protocol {proto_name:?} — known: {}",
+            protocol::NAMES.join(", ")
+        );
+        std::process::exit(2);
+    };
+    let n = opts.n.unwrap_or(1_000);
+    println!(
+        "GreeDi quickstart: exemplar clustering, n={n}, d=16, m=5, k=10, protocol={proto_name}\n"
+    );
+    let problem = demo_problem(opts, n);
+    let spec = base_spec(opts, cfg, 5, 10);
+    let central = protocol::by_name("centralized").unwrap().run(&problem, &spec);
     println!("  {}", central.one_line());
-    let run = Greedi::new(GreediConfig::new(5, 10)).run(&problem, opts.seed);
+    let run = proto.run(&problem, &spec);
     println!("  {}", run.one_line());
     println!(
-        "\n  distributed/centralized ratio = {:.4} (paper: ≈0.98 for exemplar clustering)",
+        "\n  distributed/centralized ratio = {:.4} (paper: ≈0.98 for exemplar clustering with greedi)",
         run.ratio_vs(central.value)
     );
+}
+
+/// Sweep the whole protocol registry on one workload under one shared spec —
+/// the unified-API showcase.
+fn protocols(opts: &ExpOpts, cfg: Option<&ExperimentConfig>) {
+    let n = opts.n.unwrap_or(1_000);
+    let (m, k) = (5, 10);
+    println!(
+        "protocol sweep: exemplar clustering, n={n}, m={m}, k={k}, threads={}\n",
+        opts.threads
+    );
+    let problem = demo_problem(opts, n);
+    let spec = base_spec(opts, cfg, m, k);
+    let central = protocol::by_name("centralized").unwrap().run(&problem, &spec);
+    for name in protocol::NAMES {
+        let run = protocol::by_name(name).unwrap().run(&problem, &spec);
+        println!(
+            "  {name:<16} ratio={:.4}  {}",
+            run.ratio_vs(central.value),
+            run.one_line()
+        );
+    }
 }
 
 fn info() {
     println!("greedi — distributed submodular maximization (Mirzasoleiman et al., 2014)");
     println!("three-layer build: rust coordinator + JAX L2 graphs + Pallas L1 kernels (AOT)");
+    println!("registered protocols: {}", protocol::NAMES.join(", "));
     let dir = greedi::runtime::default_artifact_dir();
     match greedi::runtime::Manifest::load(&dir) {
         Ok(m) => {
@@ -88,24 +152,48 @@ fn info() {
 fn main() {
     let args = Args::from_env();
     let Some(cmd) = args.positional.first().cloned() else {
-        eprintln!("usage: greedi <quickstart|fig4..fig10|theory|ablations|all|info> [--n N] [--trials T] [--seed S] [--part P] [--xla] [--full]");
+        eprintln!("usage: greedi <quickstart|protocols|fig4..fig10|theory|ablations|all|info> [--n N] [--trials T] [--seed S] [--threads T] [--partition S] [--protocol P] [--part P] [--xla] [--full]");
         std::process::exit(2);
     };
     let mut opts = opts_from(&args);
+    let mut proto_name = args.get_str("protocol", "greedi");
+    let mut cfg_opt: Option<ExperimentConfig> = None;
     if let Some(path) = args.get("config") {
-        let cfg = greedi::config::ExperimentConfig::from_file(std::path::Path::new(path))
-            .unwrap_or_else(|e| {
-                eprintln!("config error: {e}");
-                std::process::exit(2);
-            });
-        opts.n = Some(cfg.n);
-        opts.trials = cfg.trials;
-        opts.seed = cfg.seed;
-        println!("loaded config preset {:?} (workload {})", cfg.name, cfg.workload.label());
+        let cfg = ExperimentConfig::from_file(std::path::Path::new(path)).unwrap_or_else(|e| {
+            eprintln!("config error: {e}");
+            std::process::exit(2);
+        });
+        // preset values apply only where the CLI didn't say otherwise
+        if args.get("n").is_none() {
+            opts.n = Some(cfg.n);
+        }
+        if args.get("trials").is_none() {
+            opts.trials = cfg.trials;
+        }
+        if args.get("seed").is_none() {
+            opts.seed = cfg.seed;
+        }
+        if args.get("threads").is_none() {
+            opts.threads = cfg.threads;
+        }
+        if args.get("partition").is_none() {
+            opts.partition = cfg.partition;
+        }
+        if args.get("protocol").is_none() {
+            proto_name = cfg.protocol.clone();
+        }
+        println!(
+            "loaded config preset {:?} (workload {}, protocol {})",
+            cfg.name,
+            cfg.workload.label(),
+            cfg.protocol
+        );
+        cfg_opt = Some(cfg);
     }
 
     match cmd.as_str() {
-        "quickstart" => quickstart(&opts),
+        "quickstart" => quickstart(&opts, cfg_opt.as_ref(), &proto_name),
+        "protocols" => protocols(&opts, cfg_opt.as_ref()),
         "info" => info(),
         "all" => {
             for f in ["fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "theory", "ablations"] {

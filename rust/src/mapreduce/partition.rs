@@ -2,8 +2,58 @@
 //! sets V₁ … V_m (arbitrarily or at random)"). Random uniform assignment is
 //! what Theorems 8–11 assume; round-robin and contiguous partitions exist
 //! for ablations of that assumption.
+//!
+//! [`PartitionStrategy`] is the enum every protocol's `RunSpec` carries; it
+//! lives here (not in the coordinator) because partitioning is a MapReduce
+//! concern, not a GreeDi-specific one.
 
 use crate::util::rng::Rng;
+
+/// How the ground set is spread over machines.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PartitionStrategy {
+    /// Uniform random assignment (the theory's assumption).
+    Random,
+    /// Shuffled round-robin (equal shard sizes).
+    Balanced,
+    /// Contiguous slices (no randomization — ablation / worst case).
+    Contiguous,
+}
+
+impl PartitionStrategy {
+    pub const ALL: [PartitionStrategy; 3] = [
+        PartitionStrategy::Random,
+        PartitionStrategy::Balanced,
+        PartitionStrategy::Contiguous,
+    ];
+
+    /// Parse a config/CLI spelling.
+    pub fn parse(s: &str) -> Option<PartitionStrategy> {
+        Some(match s {
+            "random" => PartitionStrategy::Random,
+            "balanced" => PartitionStrategy::Balanced,
+            "contiguous" => PartitionStrategy::Contiguous,
+            _ => return None,
+        })
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            PartitionStrategy::Random => "random",
+            PartitionStrategy::Balanced => "balanced",
+            PartitionStrategy::Contiguous => "contiguous",
+        }
+    }
+
+    /// Split `ground` into `m` shards under this strategy.
+    pub fn split(&self, ground: &[usize], m: usize, rng: &mut Rng) -> Vec<Vec<usize>> {
+        match self {
+            PartitionStrategy::Random => random_partition(ground, m, rng),
+            PartitionStrategy::Balanced => balanced_partition(ground, m, rng),
+            PartitionStrategy::Contiguous => contiguous_partition(ground, m),
+        }
+    }
+}
 
 /// Uniformly random assignment of each element to one of `m` machines.
 /// Shards can differ in size (multinomial), exactly as the theory assumes.
@@ -61,6 +111,7 @@ pub fn check_is_partition(ground: &[usize], shards: &[Vec<usize>]) -> bool {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::collections::HashSet;
 
     #[test]
     fn random_partition_covers_ground() {
@@ -104,5 +155,63 @@ mod tests {
         let shards = random_partition(&ground, 1, &mut Rng::new(3));
         assert_eq!(shards.len(), 1);
         assert_eq!(shards[0].len(), 20);
+    }
+
+    #[test]
+    fn all_strategies_disjoint_and_cover() {
+        // non-contiguous, non-sorted ground ids to rule out positional luck
+        let ground: Vec<usize> = (0..211).map(|i| i * 3 + 1).rev().collect();
+        for strat in PartitionStrategy::ALL {
+            let mut rng = Rng::new(17);
+            let shards = strat.split(&ground, 6, &mut rng);
+            assert_eq!(shards.len(), 6, "{}", strat.label());
+            // exact multiset equality ⇒ disjoint + covering (ground has no dups)
+            assert!(check_is_partition(&ground, &shards), "{}", strat.label());
+            let mut seen = HashSet::new();
+            for shard in &shards {
+                for &e in shard {
+                    assert!(seen.insert(e), "{}: duplicate element {e}", strat.label());
+                }
+            }
+            assert_eq!(seen.len(), ground.len(), "{}", strat.label());
+        }
+    }
+
+    #[test]
+    fn all_strategies_deterministic_per_seed() {
+        let ground: Vec<usize> = (0..300).collect();
+        for strat in PartitionStrategy::ALL {
+            let a = strat.split(&ground, 8, &mut Rng::new(21));
+            let b = strat.split(&ground, 8, &mut Rng::new(21));
+            assert_eq!(a, b, "{} not deterministic", strat.label());
+        }
+        // and a different seed must actually move the randomized strategies
+        for strat in [PartitionStrategy::Random, PartitionStrategy::Balanced] {
+            let a = strat.split(&ground, 8, &mut Rng::new(21));
+            let c = strat.split(&ground, 8, &mut Rng::new(22));
+            assert_ne!(a, c, "{} ignores the seed", strat.label());
+        }
+    }
+
+    #[test]
+    fn balanced_shard_sizes_differ_by_at_most_one() {
+        for (n, m) in [(103, 10), (64, 8), (7, 3), (5, 8)] {
+            let ground: Vec<usize> = (0..n).collect();
+            let shards = PartitionStrategy::Balanced.split(&ground, m, &mut Rng::new(4));
+            let sizes: Vec<usize> = shards.iter().map(|s| s.len()).collect();
+            let (lo, hi) = (
+                *sizes.iter().min().unwrap(),
+                *sizes.iter().max().unwrap(),
+            );
+            assert!(hi - lo <= 1, "n={n} m={m}: sizes {sizes:?}");
+        }
+    }
+
+    #[test]
+    fn strategy_parse_label_roundtrip() {
+        for strat in PartitionStrategy::ALL {
+            assert_eq!(PartitionStrategy::parse(strat.label()), Some(strat));
+        }
+        assert!(PartitionStrategy::parse("quantum").is_none());
     }
 }

@@ -6,13 +6,28 @@
 //! `xla` crate's PJRT C API. Interchange is HLO **text** because the
 //! crate's xla_extension 0.5.1 rejects jax≥0.5 serialized protos (64-bit
 //! instruction ids) — see DESIGN.md and /opt/xla-example/README.md.
+//!
+//! The PJRT path needs the vendored `xla` crate, which only exists in the
+//! offline dependency closure — it is therefore gated behind the `xla`
+//! cargo feature. Without the feature, [`stub`] provides API-compatible
+//! stand-ins whose constructors return errors, so every caller (experiment
+//! harnesses, examples, benches) compiles and falls back to the scalar
+//! gain oracle gracefully.
 
 pub mod artifact;
+#[cfg(feature = "xla")]
 pub mod engine;
+#[cfg(not(feature = "xla"))]
+pub mod stub;
+#[cfg(feature = "xla")]
 pub mod xla_facility;
 
 pub use artifact::{Manifest, ManifestEntry};
+#[cfg(feature = "xla")]
 pub use engine::Engine;
+#[cfg(not(feature = "xla"))]
+pub use stub::{Engine, XlaBackendFactory, XlaFacilityBackend};
+#[cfg(feature = "xla")]
 pub use xla_facility::{XlaBackendFactory, XlaFacilityBackend};
 
 /// Default artifact directory (relative to the repo root).

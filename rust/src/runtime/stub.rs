@@ -1,0 +1,84 @@
+//! API-compatible stand-ins for the PJRT engine when the `xla` feature is
+//! off (the default — the vendored `xla` crate only exists in the offline
+//! closure). Constructors return errors instead of engines, so callers
+//! keep compiling and take their scalar fallback paths; the execution
+//! methods are unreachable because no stub value can ever be constructed.
+
+use std::path::Path;
+use std::sync::atomic::AtomicU64;
+use std::sync::Arc;
+
+use super::artifact::Manifest;
+use crate::coordinator::BackendFactory;
+use crate::data::Dataset;
+use crate::objective::facility::GainBackend;
+use crate::util::error::{anyhow, Result};
+
+/// Stand-in for `runtime::engine::Engine`; `load` always errors.
+pub struct Engine {
+    pub manifest: Manifest,
+    /// Cumulative number of executions (perf accounting).
+    pub exec_count: AtomicU64,
+    _unconstructible: (),
+}
+
+impl Engine {
+    pub fn load(_dir: &Path) -> Result<Engine> {
+        Err(anyhow!(
+            "PJRT runtime disabled — vendor the `xla` crate (see rust/Cargo.toml [features]) and rebuild with `--features xla`"
+        ))
+    }
+
+    pub fn load_default() -> Result<Engine> {
+        Engine::load(&super::default_artifact_dir())
+    }
+
+    pub fn execute_f32(&self, _name: &str, _inputs: &[&[f32]]) -> Result<Vec<f32>> {
+        unreachable!("stub Engine cannot be constructed")
+    }
+}
+
+/// Stand-in for the batched facility-gain backend; `new` always errors.
+pub struct XlaFacilityBackend {
+    _unconstructible: (),
+}
+
+impl XlaFacilityBackend {
+    pub fn new(
+        _engine: &Arc<Engine>,
+        _data: &Arc<Dataset>,
+        _window: &[usize],
+    ) -> Result<Self> {
+        Err(anyhow!(
+            "XLA facility backend disabled — vendor the `xla` crate and rebuild with `--features xla`"
+        ))
+    }
+}
+
+impl GainBackend for XlaFacilityBackend {
+    fn batch_gain_sums(&self, _cands: &[usize], _curmin: &[f32]) -> Vec<f64> {
+        unreachable!("stub XlaFacilityBackend cannot be constructed")
+    }
+}
+
+/// Stand-in for the window-specific backend factory.
+pub struct XlaBackendFactory {
+    pub engine: Arc<Engine>,
+}
+
+impl BackendFactory for XlaBackendFactory {
+    fn make(&self, _data: &Arc<Dataset>, _window: &[usize]) -> Arc<dyn GainBackend> {
+        unreachable!("stub Engine cannot be constructed, so no factory can exist")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_engine_load_errors_helpfully() {
+        let err = Engine::load_default().unwrap_err();
+        assert!(err.to_string().contains("--features xla"), "{err}");
+    }
+}

@@ -16,7 +16,7 @@
 
 use std::sync::Arc;
 
-use anyhow::Result;
+use crate::util::error::{anyhow, Result};
 
 use super::engine::Engine;
 use crate::data::Dataset;
@@ -44,7 +44,7 @@ impl XlaFacilityBackend {
         let (entry, d_pad, block_b, block_n) = engine
             .manifest
             .facility_bucket(data.d)
-            .ok_or_else(|| anyhow::anyhow!("no facility_gain bucket for d={}", data.d))?;
+            .ok_or_else(|| anyhow!("no facility_gain bucket for d={}", data.d))?;
         let artifact = entry.name.clone();
 
         let mut data_blocks = Vec::new();

@@ -1,0 +1,115 @@
+//! Minimal `anyhow`-compatible error plumbing (the offline dependency
+//! closure has no `anyhow`; these four names — [`Error`], [`Result`],
+//! [`Context`], and the `anyhow!`/`bail!` macros — cover every use in the
+//! crate, so the default build needs zero external dependencies).
+
+use std::fmt;
+
+/// String-backed error value (the `anyhow::Error` stand-in).
+///
+/// Deliberately does NOT implement `std::error::Error`, so the blanket
+/// `From<E: std::error::Error>` below cannot conflict with the reflexive
+/// `From<T> for T` — the same trick `anyhow` itself uses.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn msg(m: impl fmt::Display) -> Error {
+        Error { msg: m.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(&e)
+    }
+}
+
+/// `Result` defaulting its error type to [`Error`], like `anyhow::Result`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to any displayable error, like `anyhow::Context`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{c}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+/// `anyhow!("...")` — build an [`Error`] from a format string.
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// `bail!("...")` — early-return an `Err` from a format string.
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::util::error::Error::msg(format!($($arg)*)))
+    };
+}
+
+pub(crate) use anyhow;
+pub(crate) use bail;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<String> {
+        let s = std::fs::read_to_string("/definitely/not/a/file")
+            .with_context(|| "reading config".to_string())?;
+        Ok(s)
+    }
+
+    fn bails(x: i32) -> Result<i32> {
+        if x < 0 {
+            bail!("negative input {x}");
+        }
+        Ok(x)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let e = io_fail().unwrap_err();
+        assert!(e.to_string().starts_with("reading config:"), "{e}");
+    }
+
+    #[test]
+    fn context_wraps_message() {
+        let r: std::result::Result<(), &str> = Err("boom");
+        let e = r.context("stage 2").unwrap_err();
+        assert_eq!(e.to_string(), "stage 2: boom");
+    }
+
+    #[test]
+    fn anyhow_and_bail_macros() {
+        let e = anyhow!("bad value {}", 7);
+        assert_eq!(format!("{e}"), "bad value 7");
+        assert_eq!(format!("{e:?}"), "bad value 7");
+        assert!(bails(-1).is_err());
+        assert_eq!(bails(3).unwrap(), 3);
+    }
+}

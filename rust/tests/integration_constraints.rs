@@ -1,6 +1,8 @@
 //! Integration: Algorithm 3 (GreeDi under general hereditary constraints)
 //! across matroid / knapsack / p-system / intersection systems, with
-//! feasibility verified on the final solutions (Theorem 12 setting).
+//! feasibility verified on the final solutions (Theorem 12 setting) — both
+//! through `Greedi::run_constrained` and through the `RunSpec` constraint
+//! slots of the unified protocol API.
 
 use std::sync::Arc;
 
@@ -10,7 +12,8 @@ use greedi::constraints::knapsack::Knapsack;
 use greedi::constraints::matroid::PartitionMatroid;
 use greedi::constraints::psystem::MatroidIntersection;
 use greedi::constraints::Constraint;
-use greedi::coordinator::greedi::{Greedi, GreediConfig};
+use greedi::coordinator::greedi::Greedi;
+use greedi::coordinator::protocol::{self, Protocol, RunSpec};
 use greedi::coordinator::FacilityProblem;
 use greedi::data::synth::{gaussian_blobs, SynthConfig};
 
@@ -26,7 +29,8 @@ fn greedi_under_partition_matroid() {
     // categories: 4 groups round-robin, 2 slots each => ρ = 8
     let cats: Vec<usize> = (0..ds.n).map(|i| i % 4).collect();
     let con = PartitionMatroid::new(cats, vec![2, 2, 2, 2]);
-    let r = Greedi::new(GreediConfig::new(4, con.rho())).run_constrained(&p, &con, &con, 3);
+    let spec = RunSpec::new(4, con.rho()).seed(3);
+    let r = Greedi.run_constrained(&p, &con, &con, &spec);
     assert!(con.is_feasible(&r.solution), "infeasible {:?}", r.solution);
     assert!(r.solution.len() <= 8);
     assert!(r.value > 0.0);
@@ -37,7 +41,8 @@ fn greedi_under_knapsack() {
     let (ds, p) = problem(150, 2);
     let costs: Vec<f64> = (0..ds.n).map(|i| 1.0 + (i % 3) as f64).collect();
     let con = Knapsack::new(costs, 10.0);
-    let r = Greedi::new(GreediConfig::new(3, con.rho())).run_constrained(&p, &con, &con, 4);
+    let spec = RunSpec::new(3, con.rho()).seed(4);
+    let r = Greedi.run_constrained(&p, &con, &con, &spec);
     assert!(con.is_feasible(&r.solution));
     assert!(r.value > 0.0);
 }
@@ -48,7 +53,8 @@ fn greedi_under_matroid_intersection() {
     let m1 = PartitionMatroid::new((0..ds.n).map(|i| i % 3).collect(), vec![2, 2, 2]);
     let m2 = PartitionMatroid::new((0..ds.n).map(|i| (i / 3) % 2).collect(), vec![3, 3]);
     let con = MatroidIntersection::new(vec![m1, m2]);
-    let r = Greedi::new(GreediConfig::new(3, con.rho())).run_constrained(&p, &con, &con, 5);
+    let spec = RunSpec::new(3, con.rho()).seed(5);
+    let r = Greedi.run_constrained(&p, &con, &con, &spec);
     assert!(con.is_feasible(&r.solution));
 }
 
@@ -59,7 +65,8 @@ fn greedi_under_psystem_plus_knapsack() {
     let matroid = PartitionMatroid::new((0..ds.n).map(|i| i % 5).collect(), vec![2; 5]);
     let knap = Knapsack::new((0..ds.n).map(|i| 1.0 + (i % 2) as f64).collect(), 8.0);
     let con = Intersection::new(vec![Box::new(matroid), Box::new(knap)]);
-    let r = Greedi::new(GreediConfig::new(3, con.rho())).run_constrained(&p, &con, &con, 6);
+    let spec = RunSpec::new(3, con.rho()).seed(6);
+    let r = Greedi.run_constrained(&p, &con, &con, &spec);
     assert!(con.is_feasible(&r.solution));
     assert!(r.value > 0.0);
 }
@@ -70,22 +77,38 @@ fn tighter_round2_constraint_respected() {
     let (_, p) = problem(200, 5);
     let r1 = Cardinality::new(16);
     let r2 = Cardinality::new(8);
-    let r = Greedi::new(GreediConfig::new(4, 8)).run_constrained(&p, &r1, &r2, 7);
+    let r = Greedi.run_constrained(&p, &r1, &r2, &RunSpec::new(4, 8).seed(7));
     assert!(r.solution.len() <= 8);
 }
 
 #[test]
 fn constrained_matches_plain_when_cardinality() {
-    // run() is sugar for run_constrained(Cardinality(κ), Cardinality(k)).
+    // Protocol::run is sugar for run_constrained(Cardinality(κ), Cardinality(k)).
     let (_, p) = problem(150, 6);
-    let a = Greedi::new(GreediConfig::new(4, 6)).run(&p, 8);
-    let b = Greedi::new(GreediConfig::new(4, 6)).run_constrained(
-        &p,
-        &Cardinality::new(6),
-        &Cardinality::new(6),
-        8,
-    );
+    let spec = RunSpec::new(4, 6).seed(8);
+    let a = Greedi.run(&p, &spec);
+    let b = Greedi.run_constrained(&p, &Cardinality::new(6), &Cardinality::new(6), &spec);
     assert_eq!(a.solution, b.solution);
+}
+
+#[test]
+fn spec_constraint_slots_drive_algorithm3_through_registry() {
+    // Arc'd constraints in the spec make Algorithm 3 reachable from
+    // protocol::by_name — no direct Greedi construction anywhere.
+    let (ds, p) = problem(160, 7);
+    let cats: Vec<usize> = (0..ds.n).map(|i| i % 4).collect();
+    let con: Arc<dyn Constraint + Send + Sync> =
+        Arc::new(PartitionMatroid::new(cats, vec![2, 2, 2, 2]));
+    let rho = con.rho();
+    let spec = RunSpec::new(4, rho)
+        .constraints(Arc::clone(&con), Arc::clone(&con))
+        .seed(9);
+    let r = protocol::by_name("greedi").unwrap().run(&p, &spec);
+    assert!(con.is_feasible(&r.solution), "infeasible {:?}", r.solution);
+    assert!(r.solution.len() <= rho);
+    // identical to the explicit run_constrained path
+    let direct = Greedi.run_constrained(&p, con.as_ref(), con.as_ref(), &spec);
+    assert_eq!(r.solution, direct.solution);
 }
 
 #[test]

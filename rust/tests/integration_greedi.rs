@@ -1,11 +1,13 @@
 //! Cross-module integration: GreeDi + baselines + GreedyScaling over every
-//! objective family, checking the paper's qualitative claims end-to-end.
+//! objective family, checking the paper's qualitative claims end-to-end —
+//! all driven through the unified `Protocol` + `RunSpec` API.
 
 use std::sync::Arc;
 
 use greedi::coordinator::baselines::Baseline;
-use greedi::coordinator::greedi::{centralized, Greedi, GreediConfig, PartitionStrategy};
+use greedi::coordinator::greedi::{centralized, Greedi, PartitionStrategy};
 use greedi::coordinator::greedy_scaling::GreedyScaling;
+use greedi::coordinator::protocol::{self, Protocol, RunSpec};
 use greedi::coordinator::{
     CoverageProblem, CutProblem, FacilityProblem, InfoGainProblem, Problem,
 };
@@ -27,9 +29,10 @@ fn facility_full_protocol_suite_ordering() {
     let mut gmax_vals = Vec::new();
     let mut rr_vals = Vec::new();
     for seed in 0..4 {
-        greedi_vals.push(Greedi::new(GreediConfig::new(m, k)).run(&p, seed).value);
-        gmax_vals.push(Baseline::GreedyMax.run(&p, m, k, false, "lazy", seed).value);
-        rr_vals.push(Baseline::RandomRandom.run(&p, m, k, false, "lazy", seed).value);
+        let spec = RunSpec::new(m, k).seed(seed);
+        greedi_vals.push(Greedi.run(&p, &spec).value);
+        gmax_vals.push(Baseline::GreedyMax.run(&p, &spec).value);
+        rr_vals.push(Baseline::RandomRandom.run(&p, &spec).value);
     }
     let (g, gm, rr) = (mean(&greedi_vals), mean(&gmax_vals), mean(&rr_vals));
     assert!(g / central > 0.93, "greedi ratio {}", g / central);
@@ -44,7 +47,7 @@ fn infogain_all_machine_counts() {
     let k = 10;
     let central = centralized(&p, k, "lazy", 3).value;
     for m in [2, 4, 8] {
-        let r = Greedi::new(GreediConfig::new(m, k)).run(&p, 3);
+        let r = Greedi.run(&p, &RunSpec::new(m, k).seed(3));
         assert!(
             r.value / central > 0.9,
             "m={m}: ratio {}",
@@ -59,7 +62,7 @@ fn yahoo_like_infogain_m32() {
     let ds = Arc::new(yahoo_like(1_000, 4));
     let p = InfoGainProblem::paper_params(&ds);
     let central = centralized(&p, 16, "lazy", 1).value;
-    let r = Greedi::new(GreediConfig::new(32, 16)).run(&p, 1);
+    let r = Greedi.run(&p, &RunSpec::new(32, 16).seed(1));
     assert!(r.value / central > 0.85, "ratio {}", r.value / central);
 }
 
@@ -72,8 +75,11 @@ fn cut_nonmonotone_distributed() {
         .collect();
     let grd: Vec<f64> = (0..3)
         .map(|s| {
-            Greedi::new(GreediConfig::new(5, 20).algorithm("random_greedy").local())
-                .run(&p, s)
+            Greedi
+                .run(
+                    &p,
+                    &RunSpec::new(5, 20).algorithm("random_greedy").local().seed(s),
+                )
                 .value
         })
         .collect();
@@ -91,8 +97,9 @@ fn coverage_greedi_beats_or_matches_greedy_scaling_with_fewer_rounds() {
     let p = CoverageProblem::new(&td);
     let k = 20;
     let central = centralized(&p, k, "lazy", 2).value;
-    let grd = Greedi::new(GreediConfig::new(8, k)).run(&p, 2);
-    let gs = GreedyScaling::new(k, 0.5, 8).run(&p, 2);
+    let spec = RunSpec::new(8, k).seed(2);
+    let grd = Greedi.run(&p, &spec);
+    let gs = GreedyScaling.run(&p, &spec.clone().delta(0.5));
     assert_eq!(grd.rounds, 2);
     assert!(gs.rounds >= grd.rounds, "gs rounds {}", gs.rounds);
     assert!(grd.value / central > 0.9);
@@ -112,10 +119,10 @@ fn local_mode_close_to_global_mode() {
     let p = FacilityProblem::new(&ds);
     let k = 10;
     let global: Vec<f64> = (0..3)
-        .map(|s| Greedi::new(GreediConfig::new(5, k)).run(&p, s).value)
+        .map(|s| Greedi.run(&p, &RunSpec::new(5, k).seed(s)).value)
         .collect();
     let local: Vec<f64> = (0..3)
-        .map(|s| Greedi::new(GreediConfig::new(5, k).local()).run(&p, s).value)
+        .map(|s| Greedi.run(&p, &RunSpec::new(5, k).local().seed(s)).value)
         .collect();
     assert!(
         mean(&local) > 0.9 * mean(&global),
@@ -134,7 +141,7 @@ fn partition_strategies_all_work() {
         PartitionStrategy::Balanced,
         PartitionStrategy::Contiguous,
     ] {
-        let r = Greedi::new(GreediConfig::new(4, 8).partition(strat)).run(&p, 1);
+        let r = Greedi.run(&p, &RunSpec::new(4, 8).partition(strat).seed(1));
         assert!(r.solution.len() <= 8);
         assert!(r.value > 0.0);
     }
@@ -144,8 +151,8 @@ fn partition_strategies_all_work() {
 fn deterministic_end_to_end() {
     let ds = Arc::new(gaussian_blobs(&SynthConfig::tiny_images(200, 8), 9));
     let p = FacilityProblem::new(&ds);
-    let a = Greedi::new(GreediConfig::new(4, 6)).run(&p, 33);
-    let b = Greedi::new(GreediConfig::new(4, 6)).run(&p, 33);
+    let a = Greedi.run(&p, &RunSpec::new(4, 6).seed(33));
+    let b = Greedi.run(&p, &RunSpec::new(4, 6).seed(33));
     assert_eq!(a.solution, b.solution);
     assert_eq!(a.oracle_calls, b.oracle_calls);
 }
@@ -157,7 +164,7 @@ fn stochastic_greedy_inside_greedi() {
     let ds = Arc::new(gaussian_blobs(&SynthConfig::tiny_images(500, 8), 10));
     let p = FacilityProblem::new(&ds);
     let central = centralized(&p, 10, "lazy", 4).value;
-    let r = Greedi::new(GreediConfig::new(5, 10).algorithm("stochastic")).run(&p, 4);
+    let r = Greedi.run(&p, &RunSpec::new(5, 10).algorithm("stochastic").seed(4));
     assert!(r.value / central > 0.85, "ratio {}", r.value / central);
 }
 
@@ -170,9 +177,37 @@ fn merge_objective_window_used_in_local_mode() {
     let ds = Arc::new(gaussian_blobs(&SynthConfig::tiny_images(400, 8), 11));
     let p = FacilityProblem::new(&ds);
     for m in [2, 8] {
-        let r = Greedi::new(GreediConfig::new(m, 8).local()).run(&p, 6);
+        let r = Greedi.run(&p, &RunSpec::new(m, 8).local().seed(6));
         assert!(r.solution.len() <= 8);
         let global_val = p.global().eval(&r.solution);
         assert!((global_val - r.value).abs() < 1e-9);
+    }
+}
+
+#[test]
+fn registry_suite_shares_one_spec_across_objectives() {
+    // The tentpole's promise: sweep the whole registry over heterogeneous
+    // problems with a single spec and no per-protocol plumbing.
+    let ds = Arc::new(gaussian_blobs(&SynthConfig::tiny_images(250, 8), 12));
+    let facility = FacilityProblem::new(&ds);
+    let td = Arc::new(accidents_like(500, 13));
+    let coverage = CoverageProblem::new(&td);
+    let problems: [&dyn Problem; 2] = [&facility, &coverage];
+    let spec = RunSpec::new(4, 6).seed(14);
+    for problem in problems {
+        let central = protocol::by_name("centralized").unwrap().run(problem, &spec);
+        for name in protocol::NAMES {
+            let run = protocol::by_name(name).unwrap().run(problem, &spec);
+            assert!(run.solution.len() <= 6, "{name}: budget");
+            assert!(run.value.is_finite() && run.value >= 0.0, "{name}: value");
+            // every heuristic is greedy-family; none should meaningfully
+            // beat the centralized reference (tiny slack for tie-breaks)
+            assert!(
+                run.value <= central.value * 1.02 + 1e-9,
+                "{name}: beat centralized ({} vs {})",
+                run.value,
+                central.value
+            );
+        }
     }
 }

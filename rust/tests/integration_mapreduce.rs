@@ -4,7 +4,8 @@
 
 use std::sync::Arc;
 
-use greedi::coordinator::greedi::{centralized, Greedi, GreediConfig};
+use greedi::coordinator::greedi::{centralized, Greedi};
+use greedi::coordinator::protocol::{self, Protocol, RunSpec};
 use greedi::coordinator::InfoGainProblem;
 use greedi::data::synth::yahoo_like;
 use greedi::mapreduce::{JobReport, MapReduce};
@@ -32,7 +33,7 @@ fn stage_timing_accounting() {
 fn greedi_two_stages_recorded() {
     let ds = Arc::new(yahoo_like(500, 1));
     let p = InfoGainProblem::paper_params(&ds);
-    let r = Greedi::new(GreediConfig::new(4, 8)).run(&p, 1);
+    let r = Greedi.run(&p, &RunSpec::new(4, 8).seed(1));
     assert_eq!(r.job.stages.len(), 2, "map + reduce");
     assert_eq!(r.job.stages[0].task_times.len(), 4, "one task per machine");
     assert_eq!(r.job.stages[1].task_times.len(), 1, "single merge task");
@@ -51,7 +52,7 @@ fn speedup_grows_then_saturates() {
 
     let mut speedups = Vec::new();
     for m in [2, 8, 32] {
-        let r = Greedi::new(GreediConfig::new(m, k)).run(&p, 1);
+        let r = Greedi.run(&p, &RunSpec::new(m, k).seed(1));
         speedups.push(central / r.sim_time());
     }
     // speedup at m=8 must beat m=2
@@ -61,7 +62,7 @@ fn speedup_grows_then_saturates() {
     );
     // and the round-2 share of time must grow with m
     let share = |m: usize| {
-        let r = Greedi::new(GreediConfig::new(m, k)).run(&p, 1);
+        let r = Greedi.run(&p, &RunSpec::new(m, k).seed(1));
         r.job.stages[1].max_task_time / r.sim_time()
     };
     let s2 = share(2);
@@ -84,8 +85,32 @@ fn job_report_shuffle_accumulates_across_protocols() {
 fn parallel_engine_matches_sequential_results() {
     let ds = Arc::new(yahoo_like(600, 3));
     let p = InfoGainProblem::paper_params(&ds);
-    let seq = Greedi::new(GreediConfig::new(4, 8).threads(1)).run(&p, 9);
-    let par = Greedi::new(GreediConfig::new(4, 8).threads(4)).run(&p, 9);
+    let seq = Greedi.run(&p, &RunSpec::new(4, 8).threads(1).seed(9));
+    let par = Greedi.run(&p, &RunSpec::new(4, 8).threads(4).seed(9));
     assert_eq!(seq.solution, par.solution, "thread count must not change results");
     assert_eq!(seq.value, par.value);
+}
+
+#[test]
+fn threads_honored_uniformly_across_registry() {
+    // Every protocol's map stage runs through the same MapReduce engine, so
+    // task counts and shuffle volumes must be identical at any thread count.
+    let ds = Arc::new(yahoo_like(400, 4));
+    let p = InfoGainProblem::paper_params(&ds);
+    for name in protocol::NAMES {
+        let proto = protocol::by_name(name).unwrap();
+        let seq = proto.run(&p, &RunSpec::new(4, 6).threads(1).seed(2));
+        let par = proto.run(&p, &RunSpec::new(4, 6).threads(3).seed(2));
+        assert_eq!(seq.solution, par.solution, "{name}");
+        assert_eq!(
+            seq.job.shuffled_elements, par.job.shuffled_elements,
+            "{name}: shuffle volume changed with threads"
+        );
+        assert_eq!(seq.rounds, par.rounds, "{name}");
+        assert_eq!(
+            seq.job.stages.len(),
+            par.job.stages.len(),
+            "{name}: stage count changed with threads"
+        );
+    }
 }

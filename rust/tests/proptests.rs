@@ -11,7 +11,8 @@ use greedi::constraints::cardinality::Cardinality;
 use greedi::constraints::knapsack::Knapsack;
 use greedi::constraints::matroid::PartitionMatroid;
 use greedi::constraints::Constraint;
-use greedi::coordinator::greedi::{Greedi, GreediConfig};
+use greedi::coordinator::greedi::Greedi;
+use greedi::coordinator::protocol::{Protocol, RunSpec};
 use greedi::coordinator::{CutProblem, FacilityProblem, Problem};
 use greedi::data::graph::social_network;
 use greedi::data::synth::{gaussian_blobs, SynthConfig};
@@ -89,7 +90,7 @@ fn prop_greedi_solution_feasible_and_within_bounds() {
         let m = 2 + rng.below(6);
         let k = 2 + rng.below(10);
         let alpha = [0.5, 1.0, 2.0][rng.below(3)];
-        let r = Greedi::new(GreediConfig::new(m, k).alpha(alpha)).run(&p, seed);
+        let r = Greedi.run(&p, &RunSpec::new(m, k).alpha(alpha).seed(seed));
         // feasibility: |S| <= k, S ⊆ V, no duplicates
         assert!(r.solution.len() <= k, "seed {seed}");
         let set: std::collections::HashSet<_> = r.solution.iter().collect();
@@ -218,8 +219,10 @@ fn prop_cut_protocol_state_consistent() {
     for seed in SEEDS {
         let g = Arc::new(social_network(100, 600, seed));
         let p = CutProblem::new(&g);
-        let r = Greedi::new(GreediConfig::new(4, 8).algorithm("random_greedy").local())
-            .run(&p, seed);
+        let r = Greedi.run(
+            &p,
+            &RunSpec::new(4, 8).algorithm("random_greedy").local().seed(seed),
+        );
         let fresh = p.global().eval(&r.solution);
         assert!((fresh - r.value).abs() < 1e-9, "seed {seed}");
     }
