@@ -22,37 +22,104 @@ use greedi::objective::SubmodularFn;
 use greedi::util::bench::{black_box, Bencher};
 use greedi::util::rng::Rng;
 
+/// The pre-PR serial scalar gain path, frozen here as the perf baseline the
+/// window-sharded engine is measured against: one running f32 accumulator
+/// per point (no lanes), full-window stream per candidate, no sharding.
+/// TIMING reference only — it returns unnormalized sums and its `curmin`
+/// below is seeded via f64 `sqdist`, so its values differ from the engine's
+/// in scale and low-order bits; don't cross-validate numbers against it.
+fn serial_scalar_gains(
+    packed: &[f32],
+    d: usize,
+    curmin: &[f64],
+    erows: &[&[f32]],
+) -> Vec<f64> {
+    erows
+        .iter()
+        .map(|&erow| {
+            let mut sum = 0.0f64;
+            for (idx, vrow) in packed.chunks_exact(d).enumerate() {
+                let mut d2 = 0.0f32;
+                for t in 0..d {
+                    let diff = vrow[t] - erow[t];
+                    d2 += diff * diff;
+                }
+                let gain = curmin[idx] - d2 as f64;
+                if gain > 0.0 {
+                    sum += gain;
+                }
+            }
+            sum
+        })
+        .collect()
+}
+
 fn main() {
     let fast = std::env::var("GREEDI_BENCH_FAST").ok().as_deref() == Some("1");
     let (n, k) = if fast { (800, 10) } else { (4_000, 32) };
     let mut b = Bencher::new(1, if fast { 2 } else { 5 });
 
-    println!("== hot-path benchmarks (n={n}, k={k}) ==\n");
+    // The gains section runs on a FIXED 4096-point window even in fast mode:
+    // shard_count caps window shards at |W|/256, so a smaller fast-mode
+    // window would starve the 4t/8t rows of parallelism and the CI perf
+    // trail would chart shard starvation instead of thread scaling.
+    let n_gain = 4_096usize;
+    println!("== hot-path benchmarks (n={n}, n_gain={n_gain}, k={k}) ==\n");
 
     // ---- 1. facility gains ------------------------------------------------
-    let ds = Arc::new(gaussian_blobs(&SynthConfig::tiny_images(n, 16), 1));
-    let fac = FacilityLocation::from_dataset(&ds);
+    let ds_gain = Arc::new(gaussian_blobs(&SynthConfig::tiny_images(n_gain, 16), 1));
+    let fac_gain = FacilityLocation::from_dataset(&ds_gain);
     let cands: Vec<usize> = (0..64).collect();
     {
-        let mut st = fac.state();
+        // Reconstruct the state {100} outside the objective so the pre-PR
+        // scalar loop streams a buffer of identical shape and occupancy.
+        let d = ds_gain.d;
+        let packed = ds_gain.xs.clone();
+        let mut curmin: Vec<f64> = (0..n_gain)
+            .map(|v| ds_gain.row(v).iter().map(|&x| (x as f64) * (x as f64)).sum())
+            .collect();
+        for v in 0..n_gain {
+            let d2 = ds_gain.sqdist(100, v);
+            if d2 < curmin[v] {
+                curmin[v] = d2;
+            }
+        }
+        let erows: Vec<&[f32]> = cands.iter().map(|&c| ds_gain.row(c)).collect();
+        b.bench("facility: 64 gains, serial scalar (pre-PR)", || {
+            black_box(serial_scalar_gains(&packed, d, &curmin, &erows))
+        });
+    }
+    {
+        let mut st = fac_gain.state();
         st.push(100);
         b.bench("facility: 64 gains, cached-curmin state", || {
             black_box(st.batch_gains(&cands))
         });
+        for threads in [1usize, 2, 4, 8] {
+            b.bench(
+                &format!("facility: 64 gains, sharded engine ({threads}t)"),
+                || black_box(st.par_batch_gains(&cands, threads)),
+            );
+        }
     }
     b.bench("facility: 64 gains, naive eval() diffs", || {
-        let base = fac.eval(&[100]);
+        let base = fac_gain.eval(&[100]);
         let mut out = Vec::with_capacity(64);
         for &c in &cands {
-            out.push(fac.eval(&[100, c]) - base);
+            out.push(fac_gain.eval(&[100, c]) - base);
         }
         black_box(out)
     });
+
+    // Sections 2+ run on the fast-mode-sized dataset.
+    let ds = Arc::new(gaussian_blobs(&SynthConfig::tiny_images(n, 16), 1));
+    let fac = FacilityLocation::from_dataset(&ds);
     if let Ok(engine) = greedi::runtime::Engine::load_default() {
         let engine = Arc::new(engine);
         let backend =
-            greedi::runtime::XlaFacilityBackend::new(&engine, &ds, &ds.ids()).unwrap();
-        let fac_xla = FacilityLocation::from_dataset(&ds).with_backend(Arc::new(backend));
+            greedi::runtime::XlaFacilityBackend::new(&engine, &ds_gain, &ds_gain.ids()).unwrap();
+        let fac_xla =
+            FacilityLocation::from_dataset(&ds_gain).with_backend(Arc::new(backend));
         let mut st = fac_xla.state();
         st.push(100);
         b.bench("facility: 64 gains, XLA artifact backend", || {
@@ -72,6 +139,13 @@ fn main() {
     let _ = plain;
     b.bench("greedy: lazy (Minoux)", || {
         black_box(LazyGreedy.maximize(&fac, &ground, &con, &mut rng).oracle_calls)
+    });
+    b.bench("greedy: lazy, 8 oracle threads", || {
+        black_box(
+            LazyGreedy
+                .maximize_threaded(&fac, &ground, &con, &mut rng, 8)
+                .oracle_calls,
+        )
     });
     b.bench("greedy: stochastic (ε=0.1)", || {
         black_box(
@@ -142,6 +216,14 @@ fn main() {
     ) {
         println!("cached-curmin speedup over naive eval: {s:.1}x");
     }
+    for threads in [1usize, 2, 4, 8] {
+        if let Some(s) = b.speedup(
+            "facility: 64 gains, serial scalar (pre-PR)",
+            &format!("facility: 64 gains, sharded engine ({threads}t)"),
+        ) {
+            println!("sharded gain engine ({threads}t) speedup over pre-PR serial scalar: {s:.1}x");
+        }
+    }
     if let Some(s) = b.speedup(
         "infogain: dense logdet eval",
         "infogain: incremental Cholesky eval",
@@ -154,4 +236,7 @@ fn main() {
     ) {
         println!("greedi wallclock speedup vs centralized (1 core, real time): {s:.2}x");
     }
+
+    // GREEDI_BENCH_JSON=path dumps `op -> ns/iter` for the CI perf trail.
+    b.maybe_write_json_env();
 }

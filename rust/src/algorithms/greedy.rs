@@ -24,22 +24,44 @@ impl Maximizer for Greedy {
         constraint: &dyn Constraint,
         rng: &mut Rng,
     ) -> RunResult {
+        self.maximize_threaded(f, ground, constraint, rng, 1)
+    }
+
+    fn maximize_threaded(
+        &self,
+        f: &dyn SubmodularFn,
+        ground: &[usize],
+        constraint: &dyn Constraint,
+        rng: &mut Rng,
+        threads: usize,
+    ) -> RunResult {
         let _ = rng;
         let mut state = f.state();
         let mut oracle_calls = 0u64;
         let mut remaining: Vec<usize> = ground.to_vec();
+        // Reusable feasibility buffers for the whole run (perf: the old
+        // per-round `collect` + O(n) `retain` were measurable on large
+        // shards). `feasible_pos` records each candidate's index in
+        // `remaining` during the scan, so the winner leaves via a true O(1)
+        // `swap_remove` — no relocation scan. Selection itself is
+        // order-independent: ties break on element id, never on position.
+        let mut feasible: Vec<usize> = Vec::with_capacity(remaining.len());
+        let mut feasible_pos: Vec<usize> = Vec::with_capacity(remaining.len());
 
         loop {
             // feasible candidates under the current prefix
-            let feasible: Vec<usize> = remaining
-                .iter()
-                .copied()
-                .filter(|&e| constraint.can_add(state.selected(), e))
-                .collect();
+            feasible.clear();
+            feasible_pos.clear();
+            for (pos, &e) in remaining.iter().enumerate() {
+                if constraint.can_add(state.selected(), e) {
+                    feasible.push(e);
+                    feasible_pos.push(pos);
+                }
+            }
             if feasible.is_empty() {
                 break;
             }
-            let gains = state.batch_gains(&feasible);
+            let gains = state.par_batch_gains(&feasible, threads);
             oracle_calls += feasible.len() as u64;
             // Ties broken toward the smallest element id — keeps plain and
             // lazy greedy bit-identical (they must agree up to ties).
@@ -60,7 +82,9 @@ impl Maximizer for Greedy {
             }
             let chosen = feasible[best_idx];
             state.push(chosen);
-            remaining.retain(|&e| e != chosen);
+            // `remaining` has not moved since the scan, so the recorded
+            // position is still the winner's slot.
+            remaining.swap_remove(feasible_pos[best_idx]);
         }
 
         RunResult {

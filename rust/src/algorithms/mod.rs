@@ -41,6 +41,24 @@ pub trait Maximizer: Sync {
         rng: &mut Rng,
     ) -> RunResult;
 
+    /// Maximize with `threads` OS threads available to the *oracle layer*:
+    /// algorithms that batch their pricing route candidate evaluation
+    /// through [`State::par_batch_gains`](crate::objective::State), whose
+    /// contract guarantees bit-identical results at any thread count — so
+    /// `maximize_threaded(.., t)` returns exactly `maximize(..)` for every
+    /// `t`, only faster. Default: ignore the hint (serial algorithms).
+    fn maximize_threaded(
+        &self,
+        f: &dyn SubmodularFn,
+        ground: &[usize],
+        constraint: &dyn Constraint,
+        rng: &mut Rng,
+        threads: usize,
+    ) -> RunResult {
+        let _ = threads;
+        self.maximize(f, ground, constraint, rng)
+    }
+
     /// Short identifier for reports.
     fn name(&self) -> &'static str;
 }

@@ -35,6 +35,17 @@ impl Maximizer for StochasticGreedy {
         constraint: &dyn Constraint,
         rng: &mut Rng,
     ) -> RunResult {
+        self.maximize_threaded(f, ground, constraint, rng, 1)
+    }
+
+    fn maximize_threaded(
+        &self,
+        f: &dyn SubmodularFn,
+        ground: &[usize],
+        constraint: &dyn Constraint,
+        rng: &mut Rng,
+        threads: usize,
+    ) -> RunResult {
         let mut state = f.state();
         let mut oracle_calls = 0u64;
         let mut remaining: Vec<usize> = ground.to_vec();
@@ -61,7 +72,10 @@ impl Maximizer for StochasticGreedy {
                     .map(|i| feasible[i])
                     .collect()
             };
-            let gains = state.batch_gains(&sample);
+            // NOTE: `remaining` keeps ground order (no swap_remove here) —
+            // the sampler draws positional indices, so reordering would
+            // change which elements a fixed seed samples.
+            let gains = state.par_batch_gains(&sample, threads);
             oracle_calls += sample.len() as u64;
             let (best_idx, &best_gain) = gains
                 .iter()

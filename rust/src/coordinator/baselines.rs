@@ -77,6 +77,7 @@ impl Protocol for Baseline {
         };
         let algorithm = spec.algorithm.clone();
         let inputs: Vec<(usize, Vec<usize>)> = shards.into_iter().enumerate().collect();
+        let oracle_threads = spec.oracle_threads(inputs.len());
         let (r1, stage1) = engine.run_stage(inputs, |_, (i, shard)| {
             let mut task_rng = base_rng.fork(100 + i as u64);
             match this {
@@ -96,11 +97,12 @@ impl Protocol for Baseline {
                     } else {
                         problem.global()
                     };
-                    let r = algo.maximize(
+                    let r = algo.maximize_threaded(
                         obj.as_ref(),
                         &shard,
                         &Cardinality::new(per_machine_k),
                         &mut task_rng,
+                        oracle_threads,
                     );
                     (r.solution, r.oracle_calls)
                 }
@@ -121,6 +123,7 @@ impl Protocol for Baseline {
         let candidates: Vec<Vec<usize>> = r1.iter().map(|(s, _)| s.clone()).collect();
         let merged_in = merged.clone();
         let algorithm2 = spec.algorithm.clone();
+        let merge_threads = spec.oracle_threads(1);
         let (mut out2, stage2) = engine.run_stage(vec![()], |_, ()| {
             let mut task_rng = base_rng.fork(999);
             match this {
@@ -140,11 +143,12 @@ impl Protocol for Baseline {
                     } else {
                         problem.global()
                     };
-                    let r = algo.maximize(
+                    let r = algo.maximize_threaded(
                         obj.as_ref(),
                         &merged_in,
                         &Cardinality::new(k),
                         &mut task_rng,
+                        merge_threads,
                     );
                     (r.solution, r.oracle_calls)
                 }

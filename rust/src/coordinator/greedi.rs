@@ -82,6 +82,9 @@ impl Greedi {
         let local_eval = spec.local_eval;
         let algo_name = spec.algorithm.clone();
         let inputs: Vec<(usize, Vec<usize>)> = shards.into_iter().enumerate().collect();
+        // Leftover pool threads feed each machine's gain engine (map-stage
+        // workers × oracle threads never exceeds spec.threads).
+        let oracle_threads = spec.oracle_threads(inputs.len());
         let (round1_results, stage1) = engine.run_stage(inputs, |_, (i, shard)| {
             let mut task_rng = base_rng.fork(1000 + i as u64);
             let algo = algorithms::by_name(&algo_name).expect("algorithm");
@@ -90,7 +93,7 @@ impl Greedi {
             } else {
                 problem.global()
             };
-            algo.maximize(obj.as_ref(), &shard, round1, &mut task_rng)
+            algo.maximize_threaded(obj.as_ref(), &shard, round1, &mut task_rng, oracle_threads)
         });
         job.stages.push(stage1);
 
@@ -111,6 +114,8 @@ impl Greedi {
         let merged_for_task = merged.clone();
         let algo_name2 = spec.algorithm.clone();
         let m = spec.m;
+        // The merge round is a single reducer — it gets the whole budget.
+        let merge_threads = spec.oracle_threads(1);
         let (mut round2_out, stage2) = engine.run_stage(vec![()], |_, ()| {
             let mut task_rng = base_rng.fork(2000);
             let obj = if local_eval {
@@ -119,7 +124,13 @@ impl Greedi {
                 problem.global()
             };
             let algo = algorithms::by_name(&algo_name2).expect("algorithm");
-            let run_b = algo.maximize(obj.as_ref(), &merged_for_task, round2, &mut task_rng);
+            let run_b = algo.maximize_threaded(
+                obj.as_ref(),
+                &merged_for_task,
+                round2,
+                &mut task_rng,
+                merge_threads,
+            );
             let mut extra_oracle = run_b.oracle_calls;
 
             // A^gc_max: the best round-1 set under this round's objective F,
@@ -173,12 +184,27 @@ impl Greedi {
 
 /// Centralized reference run (one machine, full ground set, budget k) —
 /// the denominator of every ratio the paper reports. Also exposed through
-/// the registry as the `"centralized"` protocol.
+/// the registry as the `"centralized"` protocol. Serial oracle; see
+/// [`centralized_threaded`] when thread budget should reach the gain engine.
 pub fn centralized(
     problem: &dyn Problem,
     k: usize,
     algorithm: &str,
     seed: u64,
+) -> RunMetrics {
+    centralized_threaded(problem, k, algorithm, seed, 1)
+}
+
+/// [`centralized`] with `threads` OS threads handed to the oracle layer
+/// (`State::par_batch_gains`). The single "machine" has the whole host to
+/// itself, so unlike the distributed map stages there is nothing to split
+/// the budget with. Results are bit-identical at any thread count.
+pub fn centralized_threaded(
+    problem: &dyn Problem,
+    k: usize,
+    algorithm: &str,
+    seed: u64,
+    threads: usize,
 ) -> RunMetrics {
     let engine = MapReduce::new(1);
     let mut job = JobReport::default();
@@ -188,7 +214,7 @@ pub fn centralized(
         let mut rng = base_rng.fork(1);
         let algo = algorithms::by_name(algorithm).expect("algorithm");
         let obj = problem.global();
-        algo.maximize(obj.as_ref(), &g, &Cardinality::new(k), &mut rng)
+        algo.maximize_threaded(obj.as_ref(), &g, &Cardinality::new(k), &mut rng, threads)
     });
     job.stages.push(stage);
     let r = out.pop().unwrap();

@@ -49,9 +49,10 @@ impl Protocol for GreedyScaling {
 
         // Round 0: distributed max-singleton-gain scan to seed τ.
         let chunks = chunk(&surviving, m);
+        let oracle_threads = spec.oracle_threads(chunks.len());
         let (maxima, stage0) = engine.run_stage(chunks, |_, chunk| {
             let mut st = obj.state();
-            let gains = st.batch_gains(&chunk);
+            let gains = st.par_batch_gains(&chunk, oracle_threads);
             let best = gains.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
             (best, chunk.len() as u64)
         });
@@ -74,20 +75,24 @@ impl Protocol for GreedyScaling {
             // -- distributed filter: survivors with gain >= τ ----------------
             let selected_now = state.selected().to_vec();
             let chunks = chunk(&surviving, m);
+            // Recomputed per round: `chunk` always yields m tasks today, but
+            // the budget split must track the stage actually submitted.
+            let oracle_threads = spec.oracle_threads(chunks.len());
             let (filtered, filter_stage) = engine.run_stage(chunks, |_, chunk| {
                 let mut st = obj.state();
                 for &s in &selected_now {
                     st.push(s);
                 }
-                let mut keep = Vec::new();
-                let mut calls = 0u64;
-                for &e in &chunk {
-                    if st.gain(e) >= tau {
-                        keep.push(e);
-                    }
-                    calls += 1;
-                }
-                (keep, calls)
+                // One wide batch through the parallel gain engine instead of
+                // a scalar per-element loop (values are bit-identical).
+                let gains = st.par_batch_gains(&chunk, oracle_threads);
+                let keep: Vec<usize> = chunk
+                    .iter()
+                    .zip(&gains)
+                    .filter(|&(_, &g)| g >= tau)
+                    .map(|(&e, _)| e)
+                    .collect();
+                (keep, chunk.len() as u64)
             });
             job.stages.push(filter_stage);
             let mut pool: Vec<usize> = Vec::new();

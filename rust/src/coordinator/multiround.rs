@@ -52,6 +52,7 @@ impl Protocol for MultiRoundGreedi {
         let local_eval = spec.local_eval;
         let algo_name = spec.algorithm.clone();
         let inputs: Vec<(usize, Vec<usize>)> = shards.into_iter().enumerate().collect();
+        let leaf_oracle_threads = spec.oracle_threads(inputs.len());
         let (leaf_results, stage) = engine.run_stage(inputs, |_, (i, shard)| {
             let mut task_rng = base_rng.fork(7_000 + i as u64);
             let algo = algorithms::by_name(&algo_name).expect("algorithm");
@@ -60,7 +61,13 @@ impl Protocol for MultiRoundGreedi {
             } else {
                 problem.global()
             };
-            algo.maximize(obj.as_ref(), &shard, &leaf_con, &mut task_rng)
+            algo.maximize_threaded(
+                obj.as_ref(),
+                &shard,
+                &leaf_con,
+                &mut task_rng,
+                leaf_oracle_threads,
+            )
         });
         job.stages.push(stage);
         rounds += 1;
@@ -86,6 +93,9 @@ impl Protocol for MultiRoundGreedi {
             };
             let m = spec.m;
             let algo_name = spec.algorithm.clone();
+            // Fewer merge tasks each level => more oracle threads per task
+            // (the root merge runs on the full budget).
+            let oracle_threads = spec.oracle_threads(groups.len());
             let (next, stage) = engine.run_stage(groups, |_, (gi, sets)| {
                 let mut task_rng = base_rng.fork(8_000 + level * 100 + gi as u64);
                 let mut pool: Vec<usize> = sets.iter().flatten().copied().collect();
@@ -97,7 +107,8 @@ impl Protocol for MultiRoundGreedi {
                 } else {
                     problem.global()
                 };
-                let run = algo.maximize(obj.as_ref(), &pool, &con, &mut task_rng);
+                let run =
+                    algo.maximize_threaded(obj.as_ref(), &pool, &con, &mut task_rng, oracle_threads);
                 // keep the better of the merged re-run and the best input set
                 // (trimmed to the level constraint), mirroring Algorithm 2.
                 let mut best_set = run.solution;

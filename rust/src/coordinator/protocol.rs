@@ -25,7 +25,7 @@ use std::fmt;
 use std::sync::Arc;
 
 use super::baselines::Baseline;
-use super::greedi::{centralized, Greedi};
+use super::greedi::{centralized_threaded, Greedi};
 use super::greedy_scaling::GreedyScaling;
 use super::metrics::RunMetrics;
 use super::multiround::MultiRoundGreedi;
@@ -158,6 +158,19 @@ impl RunSpec {
         self
     }
 
+    /// Oracle-layer thread budget for one task of a stage running `tasks`
+    /// concurrent tasks: the map stage already occupies `min(tasks,
+    /// threads)` pool workers, so each task's gain engine
+    /// ([`State::par_batch_gains`](crate::objective::State)) gets the
+    /// leftover parallelism. Guarantees `concurrent tasks × oracle threads
+    /// ≤ threads` — intra-machine parallelism composes with the
+    /// across-machine map stage without oversubscribing the host. A
+    /// single-task stage (GreeDi's merge round, the centralized reference)
+    /// therefore receives the full `threads`.
+    pub fn oracle_threads(&self, tasks: usize) -> usize {
+        (self.threads / tasks.clamp(1, self.threads.max(1))).max(1)
+    }
+
     /// Per-round hereditary constraints (Algorithm 3). Protocols without a
     /// general-constraint path fall back to their cardinality behavior.
     pub fn constraints(
@@ -229,7 +242,7 @@ pub struct Centralized;
 
 impl Protocol for Centralized {
     fn run(&self, problem: &dyn Problem, spec: &RunSpec) -> RunMetrics {
-        centralized(problem, spec.k, &spec.algorithm, spec.seed)
+        centralized_threaded(problem, spec.k, &spec.algorithm, spec.seed, spec.threads)
     }
 
     fn name(&self) -> &'static str {
@@ -320,6 +333,25 @@ mod tests {
         assert_eq!(s.fanout, 2, "fanout clamps to 2");
         assert_eq!(s.partition, PartitionStrategy::Contiguous);
         assert_eq!(s.seed, 99);
+    }
+
+    #[test]
+    fn oracle_threads_never_oversubscribe() {
+        for threads in [1usize, 2, 4, 8, 16] {
+            for tasks in [1usize, 2, 3, 8, 32] {
+                let s = RunSpec::new(4, 5).threads(threads);
+                let ot = s.oracle_threads(tasks);
+                assert!(ot >= 1);
+                assert!(
+                    ot * tasks.min(threads) <= threads,
+                    "threads={threads} tasks={tasks}: {ot} oversubscribes"
+                );
+            }
+        }
+        // single-task stages get the whole budget
+        assert_eq!(RunSpec::new(4, 5).threads(8).oracle_threads(1), 8);
+        // saturated map stage leaves one thread per task
+        assert_eq!(RunSpec::new(4, 5).threads(4).oracle_threads(8), 1);
     }
 
     #[test]

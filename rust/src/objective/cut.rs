@@ -8,6 +8,7 @@ use std::sync::Arc;
 
 use super::{State, SubmodularFn};
 use crate::data::graph::Digraph;
+use crate::util::threadpool::parallel_gains;
 
 /// Directed cut function, optionally restricted to an induced subgraph.
 pub struct GraphCut {
@@ -97,6 +98,19 @@ impl<'a> State for CutState<'a> {
         self.delta(e)
     }
 
+    fn batch_gains(&mut self, es: &[usize]) -> Vec<f64> {
+        es.iter().map(|&e| self.delta(e)).collect()
+    }
+
+    /// Parallel gains shard the candidate list across workers via
+    /// [`parallel_gains`]; `delta` only reads the membership flags and the
+    /// (immutable) adjacency lists, so every thread count yields
+    /// bit-identical results.
+    fn par_batch_gains(&mut self, es: &[usize], threads: usize) -> Vec<f64> {
+        let this: &CutState<'a> = self;
+        parallel_gains(es, threads, |e| this.delta(e))
+    }
+
     fn push(&mut self, e: usize) -> f64 {
         let d = self.delta(e);
         if !self.in_s[e] {
@@ -176,6 +190,21 @@ mod tests {
         assert_eq!(f.eval(&[0]), 2.0);
         assert_eq!(f.eval(&[1]), 0.0); // 1->2 invisible
         assert_eq!(f.eval(&[0, 1]), 0.0);
+    }
+
+    #[test]
+    fn par_batch_gains_bit_identical_across_threads() {
+        let g = Arc::new(social_network(200, 1_500, 6));
+        let f = GraphCut::new(&g);
+        let mut st = f.state();
+        st.push(10);
+        st.push(77);
+        let cands: Vec<usize> = (0..200).collect();
+        let serial = st.batch_gains(&cands);
+        for threads in [1usize, 2, 8] {
+            let par = st.par_batch_gains(&cands, threads);
+            assert_eq!(serial, par, "threads={threads} changed cut gains");
+        }
     }
 
     #[test]

@@ -14,11 +14,30 @@
 //!
 //! `W` (the evaluation window) is the full dataset in global mode or the
 //! local shard in the paper's decomposable mode (§4.5).
+//!
+//! ## Perf pass §A, iteration 5: the window-sharded parallel gain engine
+//!
+//! `Σ_v max(curmin[v] − ‖e−v‖², 0)` is embarrassingly parallel over `v`, so
+//! [`State::par_batch_gains`] splits the packed window into **contiguous
+//! shards** and has each worker stream *its own* shard for all candidates —
+//! the sequential-stream inner loop that made iteration 2 fast stays intact
+//! per thread (unlike the reverted loop interchange of iteration 4), and
+//! there is no early-exit branch in the inner loop (reverted iteration 3).
+//! The shard boundaries are a fixed function of `|W|` only — never the
+//! thread count — and per-shard partials reduce in shard order, so gains are
+//! bit-identical at 1, 2 or 64 threads; the serial `batch_gains`/`gain`
+//! paths run the *same* sharded reduction on one thread, keeping every
+//! evaluation path bit-identical to every other. The inner distance loop
+//! accumulates in [`LANES`] independent f32 lanes so LLVM auto-vectorizes
+//! the d-loop, and `push` maintains an f32 mirror of `curmin` so the XLA
+//! backend path never re-allocates or converts per call.
 
+use std::ops::Range;
 use std::sync::Arc;
 
 use super::{State, SubmodularFn};
 use crate::data::Dataset;
+use crate::util::threadpool::{parallel_map, shard_ranges};
 
 /// Pluggable batched-gain backend (implemented by `runtime::xla_facility`).
 pub trait GainBackend: Sync + Send {
@@ -26,6 +45,48 @@ pub trait GainBackend: Sync + Send {
     /// `Σ_{v∈W} max(curmin[v] − l(cand, v), 0)`, where `curmin` is indexed
     /// by position in the evaluation window.
     fn batch_gain_sums(&self, cands: &[usize], curmin: &[f32]) -> Vec<f64>;
+}
+
+/// Independent f32 accumulator lanes in the distance inner loop (perf §A,
+/// iteration 5): enough independent chains for LLVM to keep a full SIMD
+/// register busy, reduced in a fixed tree order for determinism.
+const LANES: usize = 8;
+
+/// Window points per shard below which sharding stops paying for itself;
+/// also bounds the shard count so tiny windows stay one serial stream.
+const MIN_SHARD_POINTS: usize = 256;
+
+/// Hard cap on window shards (reduction cost is `shards × candidates`).
+const MAX_SHARDS: usize = 16;
+
+/// Number of window shards the gain engine uses — a fixed function of the
+/// window length ONLY (never the thread count), which is what makes the
+/// parallel path bit-identical across thread counts.
+fn shard_count(window_len: usize) -> usize {
+    (window_len / MIN_SHARD_POINTS).clamp(1, MAX_SHARDS)
+}
+
+/// Squared Euclidean distance in f32 with [`LANES`] independent accumulator
+/// chains and a deterministic tree reduction.
+#[inline]
+fn sq_dist(a: &[f32], b: &[f32]) -> f32 {
+    let mut lanes = [0.0f32; LANES];
+    let mut ca = a.chunks_exact(LANES);
+    let mut cb = b.chunks_exact(LANES);
+    for (xa, xb) in ca.by_ref().zip(cb.by_ref()) {
+        for l in 0..LANES {
+            let diff = xa[l] - xb[l];
+            lanes[l] += diff * diff;
+        }
+    }
+    let mut tail = 0.0f32;
+    for (x, y) in ca.remainder().iter().zip(cb.remainder()) {
+        let diff = x - y;
+        tail += diff * diff;
+    }
+    let q0 = (lanes[0] + lanes[4]) + (lanes[1] + lanes[5]);
+    let q1 = (lanes[2] + lanes[6]) + (lanes[3] + lanes[7]);
+    (q0 + q1) + tail
 }
 
 /// Facility-location / exemplar clustering objective.
@@ -36,6 +97,9 @@ pub struct FacilityLocation {
     /// Distance from the phantom exemplar (= squared norm of each window
     /// point, since e₀ is the origin), precomputed.
     phantom: Vec<f64>,
+    /// f32 image of `phantom` — seeds each state's `curmin32` mirror without
+    /// a per-state conversion pass.
+    phantom32: Vec<f32>,
     /// Window rows packed contiguously (row-major |W|×d) — the gain loop
     /// streams this sequentially instead of gathering `data.row(window[i])`
     /// (perf pass §A: ~2× on the scalar hot path from cache locality).
@@ -54,10 +118,11 @@ impl FacilityLocation {
     /// local/decomposable evaluation, §4.5 — `window` is a machine's shard
     /// or the random subset U used in GreeDi's second stage).
     pub fn with_window(data: &Arc<Dataset>, window: Vec<usize>) -> Self {
-        let phantom = window
+        let phantom: Vec<f64> = window
             .iter()
             .map(|&v| data.row(v).iter().map(|&x| (x as f64) * (x as f64)).sum())
             .collect();
+        let phantom32 = phantom.iter().map(|&x| x as f32).collect();
         let mut packed = Vec::with_capacity(window.len() * data.d);
         for &v in &window {
             packed.extend_from_slice(data.row(v));
@@ -66,6 +131,7 @@ impl FacilityLocation {
             data: Arc::clone(data),
             window,
             phantom,
+            phantom32,
             packed,
             backend: None,
         }
@@ -91,6 +157,7 @@ impl SubmodularFn for FacilityLocation {
         Box::new(FacilityState {
             obj: self,
             curmin: self.phantom.clone(),
+            curmin32: self.phantom32.clone(),
             selected: Vec::new(),
             value: 0.0,
         })
@@ -101,33 +168,33 @@ impl SubmodularFn for FacilityLocation {
     }
 }
 
-/// Incremental state: cached min squared distance per window point.
+/// Incremental state: cached min squared distance per window point, plus an
+/// f32 mirror kept in sync by `push` (consumed zero-copy by [`GainBackend`]).
 pub struct FacilityState<'a> {
     obj: &'a FacilityLocation,
     curmin: Vec<f64>,
+    curmin32: Vec<f32>,
     selected: Vec<usize>,
     value: f64,
 }
 
 impl<'a> FacilityState<'a> {
-    /// Scalar-loop gain sum for one candidate (reference hot path):
-    /// streams the packed window buffer sequentially.
-    fn gain_sum(&self, e: usize) -> f64 {
+    /// Unnormalized gain of one candidate over window rows `rows` — the
+    /// worker kernel of the sharded engine. Streams its contiguous slice of
+    /// the packed buffer sequentially; per-point distances accumulate in f32
+    /// lanes (data is f32; relative error ~1e-6 ≪ the f32 kernel's own
+    /// noise); the cross-point sum stays f64.
+    /// NOTE(perf §A, iteration 3): an early-exit variant (break once the
+    /// partial d² passes curmin) was tried and REVERTED — the branch in the
+    /// inner loop defeated auto-vectorization and cost 2.2×.
+    fn gain_partial(&self, e: usize, rows: &Range<usize>) -> f64 {
         let d = self.obj.data.d;
         let erow = self.obj.data.row(e);
-        let mut sum = 0.0;
-        // per-point distance accumulates in f32 (data is f32; relative error
-        // ~1e-6 ≪ the f32 kernel's own noise); the cross-point sum stays f64.
-        // NOTE(perf §A, iteration 3): an early-exit variant (break once the
-        // partial d² passes curmin) was tried and REVERTED — the branch in
-        // the inner loop defeated auto-vectorization and cost 2.2×.
-        for (idx, vrow) in self.obj.packed.chunks_exact(d).enumerate() {
-            let mut d2 = 0.0f32;
-            for t in 0..d {
-                let diff = vrow[t] - erow[t];
-                d2 += diff * diff;
-            }
-            let gain = self.curmin[idx] - d2 as f64;
+        let packed = &self.obj.packed[rows.start * d..rows.end * d];
+        let curmin = &self.curmin[rows.start..rows.end];
+        let mut sum = 0.0f64;
+        for (idx, vrow) in packed.chunks_exact(d).enumerate() {
+            let gain = curmin[idx] - sq_dist(vrow, erow) as f64;
             if gain > 0.0 {
                 sum += gain;
             }
@@ -135,9 +202,39 @@ impl<'a> FacilityState<'a> {
         sum
     }
 
-    /// Expose curmin as f32 (what the XLA backend consumes).
-    fn curmin_f32(&self) -> Vec<f32> {
-        self.curmin.iter().map(|&x| x as f32).collect()
+    /// The window-sharded gain engine (perf §A, iteration 5): per-shard
+    /// partial sums for all candidates, reduced in deterministic shard
+    /// order. `threads == 1` runs the identical shard loop serially, so
+    /// every thread count produces bit-identical sums.
+    fn gain_sums(&self, es: &[usize], threads: usize) -> Vec<f64> {
+        let shards = shard_ranges(self.obj.window.len(), shard_count(self.obj.window.len()));
+        let partials: Vec<Vec<f64>> = if threads > 1 && shards.len() > 1 && !es.is_empty() {
+            parallel_map(shards, threads, |_, rows| {
+                es.iter().map(|&e| self.gain_partial(e, &rows)).collect()
+            })
+        } else {
+            shards
+                .into_iter()
+                .map(|rows| es.iter().map(|&e| self.gain_partial(e, &rows)).collect())
+                .collect()
+        };
+        let mut out = vec![0.0f64; es.len()];
+        for partial in &partials {
+            for (acc, p) in out.iter_mut().zip(partial) {
+                *acc += p;
+            }
+        }
+        out
+    }
+
+    /// Single-candidate gain sum through the same sharded reduction (keeps
+    /// `gain` bit-identical to `batch_gains`/`par_batch_gains`).
+    fn gain_sum(&self, e: usize) -> f64 {
+        let len = self.obj.window.len();
+        shard_ranges(len, shard_count(len))
+            .into_iter()
+            .map(|rows| self.gain_partial(e, &rows))
+            .sum()
     }
 }
 
@@ -151,37 +248,33 @@ impl<'a> State for FacilityState<'a> {
     }
 
     fn batch_gains(&mut self, es: &[usize]) -> Vec<f64> {
+        self.par_batch_gains(es, 1)
+    }
+
+    fn par_batch_gains(&mut self, es: &[usize], threads: usize) -> Vec<f64> {
         let n = self.obj.window.len().max(1) as f64;
         if let Some(backend) = &self.obj.backend {
-            let cm = self.curmin_f32();
+            // The incrementally-maintained f32 mirror goes straight to the
+            // backend — no per-call allocation or f64→f32 conversion pass.
             return backend
-                .batch_gain_sums(es, &cm)
+                .batch_gain_sums(es, &self.curmin32)
                 .into_iter()
                 .map(|s| s / n)
                 .collect();
         }
-        // Scalar path: per-candidate streaming of the packed window.
-        // NOTE(perf §A, iteration 4): a blocked loop interchange (window
-        // outer, 64-candidate block inner) was tried and REVERTED — the
-        // per-point stores into the per-candidate accumulators cost more
-        // than the window re-streams they saved (2.4 ms vs 1.7 ms).
-        es.iter().map(|&e| self.gain_sum(e) / n).collect()
+        self.gain_sums(es, threads).into_iter().map(|s| s / n).collect()
     }
 
     fn push(&mut self, e: usize) -> f64 {
         let d = self.obj.data.d;
         let erow = self.obj.data.row(e);
-        let mut sum = 0.0;
+        let mut sum = 0.0f64;
         for (idx, vrow) in self.obj.packed.chunks_exact(d).enumerate() {
-            let mut d2f = 0.0f32;
-            for t in 0..d {
-                let diff = vrow[t] - erow[t];
-                d2f += diff * diff;
-            }
-            let d2 = d2f as f64;
+            let d2 = sq_dist(vrow, erow) as f64;
             if d2 < self.curmin[idx] {
                 sum += self.curmin[idx] - d2;
                 self.curmin[idx] = d2;
+                self.curmin32[idx] = d2 as f32;
             }
         }
         let gain = sum / self.obj.window.len().max(1) as f64;
@@ -291,6 +384,36 @@ mod tests {
         }
     }
 
+    #[test]
+    fn par_batch_gains_bit_identical_across_threads() {
+        // Big enough window for several shards (shard_count > 1), so the
+        // parallel path genuinely fans out.
+        let ds = Arc::new(gaussian_blobs(&SynthConfig::tiny_images(1200, 8), 13));
+        let f = FacilityLocation::from_dataset(&ds);
+        let mut st = f.state();
+        st.push(7);
+        st.push(311);
+        let cands: Vec<usize> = (0..64).map(|i| i * 17 % 1200).collect();
+        let serial = st.batch_gains(&cands);
+        for threads in [1usize, 2, 3, 8] {
+            let par = st.par_batch_gains(&cands, threads);
+            assert_eq!(serial, par, "threads={threads} changed gain bits");
+        }
+    }
+
+    #[test]
+    fn gain_bit_identical_to_batch_paths() {
+        let ds = Arc::new(gaussian_blobs(&SynthConfig::tiny_images(900, 8), 14));
+        let f = FacilityLocation::from_dataset(&ds);
+        let mut st = f.state();
+        st.push(1);
+        for e in [0usize, 5, 250, 899] {
+            let single = st.gain(e);
+            let batched = st.par_batch_gains(&[e], 4)[0];
+            assert_eq!(single, batched, "gain({e}) diverged from batch path");
+        }
+    }
+
     struct FakeBackend;
     impl GainBackend for FakeBackend {
         fn batch_gain_sums(&self, cands: &[usize], _curmin: &[f32]) -> Vec<f64> {
@@ -306,5 +429,39 @@ mod tests {
         let gains = st.batch_gains(&[4, 8]);
         assert!((gains[0] - 4.0 / 20.0).abs() < 1e-12);
         assert!((gains[1] - 8.0 / 20.0).abs() < 1e-12);
+    }
+
+    /// Backend that echoes the curmin snapshot it was handed, so tests can
+    /// observe the f32 mirror without reaching into private state.
+    struct EchoBackend;
+    impl GainBackend for EchoBackend {
+        fn batch_gain_sums(&self, cands: &[usize], curmin: &[f32]) -> Vec<f64> {
+            cands.iter().map(|&c| curmin[c] as f64).collect()
+        }
+    }
+
+    #[test]
+    fn f32_mirror_tracks_pushes() {
+        let ds = dataset(30);
+        let mirrored = FacilityLocation::from_dataset(&ds).with_backend(Arc::new(EchoBackend));
+        let mut st = mirrored.state();
+        for &e in &[4usize, 21, 9] {
+            st.push(e);
+        }
+        // EchoBackend reports curmin32[c]·30 / 30 = curmin32[c]; the mirror
+        // must match the f64 cache at f32 precision WITHOUT any refresh call
+        // between pushes (it is maintained incrementally).
+        let probe: Vec<usize> = (0..30).collect();
+        let echoed = st.batch_gains(&probe);
+        for (v, &g) in probe.iter().map(|&c| {
+            // recompute the f64 curmin for window point c
+            let phantom: f64 = ds.row(c).iter().map(|&x| (x as f64).powi(2)).sum();
+            [4usize, 21, 9]
+                .iter()
+                .map(|&e| sq_dist(ds.row(c), ds.row(e)) as f64)
+                .fold(phantom, f64::min)
+        }).zip(echoed.iter()) {
+            assert!((g * 30.0 - v).abs() < 1e-3, "mirror stale: {} vs {v}", g * 30.0);
+        }
     }
 }

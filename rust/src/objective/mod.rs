@@ -35,6 +35,17 @@ pub trait State {
         es.iter().map(|&e| self.gain(e)).collect()
     }
 
+    /// Data-parallel batched gains: price `es` using up to `threads` OS
+    /// threads from `util::threadpool::parallel_map`. Implementations MUST
+    /// return bit-identical results for every `threads` value (the engine
+    /// shards work along boundaries that depend only on problem shape, never
+    /// on the thread count), so algorithms stay deterministic under any
+    /// parallelism. Default: the serial [`State::batch_gains`] path.
+    fn par_batch_gains(&mut self, es: &[usize], threads: usize) -> Vec<f64> {
+        let _ = threads;
+        self.batch_gains(es)
+    }
+
     /// Commit `e` into the solution, returning the realized gain.
     fn push(&mut self, e: usize) -> f64;
 

@@ -97,6 +97,63 @@ impl Bencher {
         let fb = self.results.iter().find(|r| r.name == b)?.mean_s;
         Some(fa / fb)
     }
+
+    /// Serialize results as a flat JSON object `op name -> ns/iter` (mean),
+    /// in recording order — the machine-readable trail CI archives so the
+    /// perf trajectory is diffable across PRs.
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\n");
+        for (i, r) in self.results.iter().enumerate() {
+            let sep = if i + 1 == self.results.len() { "" } else { "," };
+            out.push_str(&format!(
+                "  \"{}\": {:.1}{}\n",
+                json_escape(&r.name),
+                r.mean_s * 1e9,
+                sep
+            ));
+        }
+        out.push_str("}\n");
+        out
+    }
+
+    /// Write [`Bencher::to_json`] to `path`.
+    pub fn write_json(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json())
+    }
+
+    /// Honour `GREEDI_BENCH_JSON=path`: if set, dump the ns/iter table
+    /// there. Returns the path written, if any.
+    pub fn maybe_write_json_env(&self) -> Option<String> {
+        let path = std::env::var("GREEDI_BENCH_JSON").ok()?;
+        if path.is_empty() {
+            return None;
+        }
+        match self.write_json(&path) {
+            Ok(()) => {
+                println!("(wrote bench JSON to {path})");
+                Some(path)
+            }
+            Err(e) => {
+                eprintln!("warning: could not write bench JSON to {path}: {e}");
+                None
+            }
+        }
+    }
+}
+
+/// Minimal JSON string escaping for bench op names (quotes, backslashes,
+/// control chars — names are ASCII labels, nothing fancier needed).
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
 }
 
 #[cfg(test)]
@@ -110,6 +167,17 @@ mod tests {
         assert_eq!(b.results.len(), 1);
         assert_eq!(b.results[0].iters, 3);
         assert!(b.results[0].mean_s >= 0.0);
+    }
+
+    #[test]
+    fn json_output_parses_and_keys_match() {
+        let mut b = Bencher::new(0, 2);
+        b.bench("op one", || 1);
+        b.bench("op \"two\"", || 2);
+        let json = b.to_json();
+        let parsed = crate::util::json::parse(&json).expect("bench JSON must parse");
+        assert!((parsed.get("op one").and_then(|v| v.as_f64())).is_some());
+        assert!((parsed.get("op \"two\"").and_then(|v| v.as_f64())).is_some());
     }
 
     #[test]

@@ -70,6 +70,54 @@ impl Drop for ThreadPool {
     }
 }
 
+/// Split `0..len` into `parts` contiguous near-equal ranges (longer ranges
+/// first), clamped to at most `len` non-empty parts. Deterministic: the
+/// boundaries depend only on `(len, parts)` — the parallel gain engine
+/// relies on this to reduce per-shard partial sums in a fixed order no
+/// matter how many workers execute the shards.
+pub fn shard_ranges(len: usize, parts: usize) -> Vec<std::ops::Range<usize>> {
+    let parts = parts.max(1).min(len.max(1));
+    let base = len / parts;
+    let extra = len % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0usize;
+    for i in 0..parts {
+        let size = base + usize::from(i < extra);
+        out.push(start..start + size);
+        start += size;
+    }
+    out
+}
+
+/// Candidate-count floor below which [`parallel_gains`] stays serial: when
+/// each candidate's pricing touches only a few cache lines (coverage's one
+/// transaction, cut's one adjacency list), fan-out only pays off for wide
+/// batches.
+pub const MIN_PAR_CANDIDATES: usize = 64;
+
+/// Price every candidate id in `es` through `f`, sharding the *candidate
+/// list* across up to `threads` workers once it is at least
+/// [`MIN_PAR_CANDIDATES`] long. `f` must be a pure function of the
+/// candidate (given the caller's frozen state), so the output equals the
+/// serial map bit-for-bit at any thread count. This is the shared engine
+/// behind the coverage and cut `State::par_batch_gains` implementations —
+/// objectives whose per-candidate work has no window to shard.
+pub fn parallel_gains<F>(es: &[usize], threads: usize, f: F) -> Vec<f64>
+where
+    F: Fn(usize) -> f64 + Sync,
+{
+    if threads <= 1 || es.len() < MIN_PAR_CANDIDATES {
+        return es.iter().map(|&e| f(e)).collect();
+    }
+    let ranges = shard_ranges(es.len(), threads);
+    parallel_map(ranges, threads, |_, r| {
+        es[r].iter().map(|&e| f(e)).collect::<Vec<f64>>()
+    })
+    .into_iter()
+    .flatten()
+    .collect()
+}
+
 /// Run `f` over `items` in parallel on a temporary scoped pool, returning
 /// results in input order. Panics in any task are re-raised on the caller.
 ///
@@ -173,6 +221,44 @@ mod tests {
             }
             x
         });
+    }
+
+    #[test]
+    fn shard_ranges_cover_exactly_once() {
+        for (len, parts) in [(0usize, 4usize), (1, 4), (7, 3), (100, 8), (8, 8), (5, 16)] {
+            let ranges = shard_ranges(len, parts);
+            assert!(ranges.len() <= parts.max(1));
+            let mut next = 0usize;
+            for r in &ranges {
+                assert_eq!(r.start, next, "gap at {r:?} (len={len}, parts={parts})");
+                next = r.end;
+            }
+            assert_eq!(next, len, "ranges must cover 0..{len}");
+        }
+    }
+
+    #[test]
+    fn parallel_gains_matches_serial_map_any_threads() {
+        let es: Vec<usize> = (0..500).collect();
+        let f = |e: usize| (e as f64).sqrt() * 3.0 - 1.0;
+        let serial: Vec<f64> = es.iter().map(|&e| f(e)).collect();
+        for threads in [1usize, 2, 5, 16] {
+            assert_eq!(serial, parallel_gains(&es, threads, f), "threads={threads}");
+        }
+        // short batches stay serial but still produce the same values
+        let short: Vec<usize> = (0..10).collect();
+        let expect: Vec<f64> = short.iter().map(|&e| f(e)).collect();
+        assert_eq!(expect, parallel_gains(&short, 8, f));
+    }
+
+    #[test]
+    fn shard_ranges_deterministic_and_balanced() {
+        let a = shard_ranges(1000, 7);
+        let b = shard_ranges(1000, 7);
+        assert_eq!(a, b);
+        let sizes: Vec<usize> = a.iter().map(|r| r.end - r.start).collect();
+        let (min, max) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+        assert!(max - min <= 1, "near-equal shards, got {sizes:?}");
     }
 
     #[test]

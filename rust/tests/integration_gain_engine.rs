@@ -1,0 +1,156 @@
+//! Cross-layer guarantees of the window-sharded parallel gain engine
+//! (perf pass §A, iteration 5):
+//!
+//! 1. `State::par_batch_gains` is **bit-identical** across thread counts on
+//!    every objective that implements it (shard boundaries depend only on
+//!    problem shape, and per-shard partials reduce in a fixed order);
+//! 2. batch-repriced `LazyGreedy` selects **exactly** the plain-`Greedy`
+//!    set, serial or parallel, standalone or inside a protocol round-trip;
+//! 3. threading a full protocol (`RunSpec::threads`) is invisible in its
+//!    results — only in its wallclock.
+
+use std::sync::Arc;
+
+use greedi::algorithms::{greedy::Greedy, lazy::LazyGreedy, Maximizer};
+use greedi::constraints::cardinality::Cardinality;
+use greedi::coordinator::protocol::{self, RunSpec};
+use greedi::coordinator::{CoverageProblem, CutProblem, FacilityProblem, Problem};
+use greedi::data::graph::social_network;
+use greedi::data::synth::{gaussian_blobs, SynthConfig};
+use greedi::data::transactions::zipf_transactions;
+use greedi::objective::coverage::Coverage;
+use greedi::objective::cut::GraphCut;
+use greedi::objective::facility::FacilityLocation;
+use greedi::objective::SubmodularFn;
+use greedi::util::rng::Rng;
+
+const THREAD_SWEEP: [usize; 4] = [1, 2, 4, 8];
+
+#[test]
+fn facility_gain_engine_thread_invariant() {
+    // n = 1500 guarantees several window shards, so parallelism is real.
+    let ds = Arc::new(gaussian_blobs(&SynthConfig::tiny_images(1500, 8), 3));
+    let f = FacilityLocation::from_dataset(&ds);
+    let mut st = f.state();
+    st.push(42);
+    st.push(901);
+    let cands: Vec<usize> = (0..128).map(|i| (i * 11) % 1500).collect();
+    let reference = st.batch_gains(&cands);
+    for threads in THREAD_SWEEP {
+        assert_eq!(
+            reference,
+            st.par_batch_gains(&cands, threads),
+            "facility gains changed at {threads} threads"
+        );
+    }
+}
+
+#[test]
+fn coverage_gain_engine_thread_invariant() {
+    let td = Arc::new(zipf_transactions(500, 400, 9, 1.1, 4));
+    let f = Coverage::new(&td);
+    let mut st = f.state();
+    st.push(17);
+    let cands: Vec<usize> = (0..500).collect();
+    let reference = st.batch_gains(&cands);
+    for threads in THREAD_SWEEP {
+        assert_eq!(
+            reference,
+            st.par_batch_gains(&cands, threads),
+            "coverage gains changed at {threads} threads"
+        );
+    }
+}
+
+#[test]
+fn cut_gain_engine_thread_invariant() {
+    let g = Arc::new(social_network(300, 2_000, 5));
+    let f = GraphCut::new(&g);
+    let mut st = f.state();
+    st.push(3);
+    st.push(120);
+    let cands: Vec<usize> = (0..300).collect();
+    let reference = st.batch_gains(&cands);
+    for threads in THREAD_SWEEP {
+        assert_eq!(
+            reference,
+            st.par_batch_gains(&cands, threads),
+            "cut gains changed at {threads} threads"
+        );
+    }
+}
+
+#[test]
+fn batch_repriced_lazy_equals_plain_greedy_across_objectives_and_threads() {
+    let ds = Arc::new(gaussian_blobs(&SynthConfig::tiny_images(400, 8), 6));
+    let facility = FacilityLocation::from_dataset(&ds);
+    let td = Arc::new(zipf_transactions(200, 250, 8, 1.1, 7));
+    let coverage = Coverage::new(&td);
+    let g = Arc::new(social_network(180, 1_200, 8));
+    let cut = GraphCut::new(&g);
+
+    let cases: [(&str, &dyn SubmodularFn, usize); 3] = [
+        ("facility", &facility, 400),
+        ("coverage", &coverage, 200),
+        ("cut", &cut, 180),
+    ];
+    for (label, f, n) in cases {
+        let ground: Vec<usize> = (0..n).collect();
+        let con = Cardinality::new(12);
+        let mut rng = Rng::new(0);
+        let plain = Greedy.maximize(f, &ground, &con, &mut rng);
+        for threads in THREAD_SWEEP {
+            let lazy = LazyGreedy.maximize_threaded(f, &ground, &con, &mut rng, threads);
+            assert_eq!(
+                plain.solution, lazy.solution,
+                "{label}: lazy({threads}t) diverged from plain greedy"
+            );
+            assert_eq!(plain.value, lazy.value, "{label}: value diverged");
+        }
+    }
+}
+
+#[test]
+fn protocol_round_trip_greedy_vs_lazy_bit_identical() {
+    // The acceptance check: swapping the black box between plain and
+    // batch-repriced lazy greedy must not move a single element of any
+    // protocol's output (they agree up to ties, and ties break identically).
+    let ds = Arc::new(gaussian_blobs(&SynthConfig::tiny_images(350, 8), 9));
+    let facility = FacilityProblem::new(&ds);
+    let td = Arc::new(zipf_transactions(300, 260, 8, 1.1, 10));
+    let coverage = CoverageProblem::new(&td);
+    let problems: [&dyn Problem; 2] = [&facility, &coverage];
+    for problem in problems {
+        for name in ["greedi", "multiround", "centralized", "greedy_max"] {
+            let spec = RunSpec::new(4, 8).seed(11);
+            let with_greedy = protocol::by_name(name)
+                .unwrap()
+                .run(problem, &spec.clone().algorithm("greedy"));
+            let with_lazy = protocol::by_name(name)
+                .unwrap()
+                .run(problem, &spec.algorithm("lazy"));
+            assert_eq!(
+                with_greedy.solution, with_lazy.solution,
+                "{name}: lazy black box changed the solution"
+            );
+            assert_eq!(with_greedy.value, with_lazy.value, "{name}");
+        }
+    }
+}
+
+#[test]
+fn protocol_threads_only_change_wallclock_cut_problem() {
+    // Non-monotone path: random_greedy black box on the cut objective, with
+    // local evaluation — the stack the paper's §6.3 runs — at 1 vs 8
+    // threads.
+    let g = Arc::new(social_network(250, 1_800, 12));
+    let p = CutProblem::new(&g);
+    let base = RunSpec::new(5, 10).algorithm("random_greedy").local().seed(13);
+    let serial = protocol::by_name("greedi").unwrap().run(&p, &base);
+    let par = protocol::by_name("greedi")
+        .unwrap()
+        .run(&p, &base.clone().threads(8));
+    assert_eq!(serial.solution, par.solution);
+    assert_eq!(serial.value, par.value);
+    assert_eq!(serial.oracle_calls, par.oracle_calls);
+}
