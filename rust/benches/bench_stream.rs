@@ -1,0 +1,104 @@
+//! `cargo bench` target: streaming-subsystem throughput — elements/sec of
+//! the one-pass batched sieve as the batch size sweeps (the batched ladder
+//! pricing amortizing over wider `par_batch_gains` calls), thread scaling
+//! at a fixed batch, and the `stream_greedi` protocol end-to-end against
+//! two-round GreeDi.
+//!
+//! `GREEDI_BENCH_FAST=1` shrinks sizes for CI;
+//! `GREEDI_BENCH_JSON=BENCH_stream.json` dumps `op -> ns/iter` for the
+//! machine-readable perf trail (uploaded as a CI artifact alongside
+//! `BENCH_hotpath.json`).
+
+use std::sync::Arc;
+
+use greedi::coordinator::protocol::{self, Protocol, RunSpec};
+use greedi::coordinator::FacilityProblem;
+use greedi::data::synth::{gaussian_blobs, SynthConfig};
+use greedi::objective::facility::FacilityLocation;
+use greedi::stream::{sieve_stream, VecSource};
+use greedi::util::bench::{black_box, Bencher};
+
+fn main() {
+    let fast = std::env::var("GREEDI_BENCH_FAST").ok().as_deref() == Some("1");
+    let (n, k) = if fast { (1_200, 12) } else { (8_000, 24) };
+    let d = 16;
+    let epsilon = 0.2;
+    let mut b = Bencher::new(1, if fast { 2 } else { 5 });
+
+    println!("== streaming benchmarks (n={n}, d={d}, k={k}, ε={epsilon}) ==\n");
+
+    let ds = Arc::new(gaussian_blobs(&SynthConfig::tiny_images(n, d), 1));
+    let fac = FacilityLocation::from_dataset(&ds);
+    let order = ds.ids();
+
+    // ---- 1. elements/sec vs batch size (the headline curve) --------------
+    for batch in [1usize, 16, 256, 4_096] {
+        let mean_s = b
+            .bench(&format!("stream: sieve one pass (batch={batch})"), || {
+                let mut src = VecSource::new(order.clone());
+                black_box(sieve_stream(&fac, &mut src, k, epsilon, batch, 1).value)
+            })
+            .mean_s;
+        if mean_s > 0.0 {
+            println!("  -> {:.0} elements/sec", n as f64 / mean_s);
+        }
+    }
+
+    // ---- 2. thread scaling at a fixed batch -------------------------------
+    for threads in [1usize, 2, 4, 8] {
+        b.bench(&format!("stream: sieve one pass (batch=256, {threads}t)"), || {
+            let mut src = VecSource::new(order.clone());
+            black_box(sieve_stream(&fac, &mut src, k, epsilon, 256, threads).value)
+        });
+    }
+
+    // ---- 3. protocol end-to-end: one-pass sieve→merge vs two-round --------
+    let problem = FacilityProblem::new(&ds);
+    let spec = RunSpec::new(8, k).epsilon(epsilon).batch(256).seed(1);
+    let mut peak = 0usize;
+    let mut bound = 0usize;
+    b.bench("protocol: stream_greedi (m=8)", || {
+        let r = protocol::by_name("stream_greedi")
+            .expect("registry")
+            .run(&problem, &spec);
+        if let Some(s) = &r.stream {
+            peak = s.peak_live();
+            bound = s.live_bound;
+        }
+        black_box(r.value)
+    });
+    println!("  -> peak live candidates per machine: {peak} (bound {bound})");
+    b.bench("protocol: stream_greedi (m=8, 4 threads)", || {
+        black_box(
+            protocol::by_name("stream_greedi")
+                .expect("registry")
+                .run(&problem, &spec.clone().threads(4))
+                .value,
+        )
+    });
+    b.bench("protocol: greedi 2-round (m=8)", || {
+        black_box(
+            protocol::by_name("greedi")
+                .expect("registry")
+                .run(&problem, &spec)
+                .value,
+        )
+    });
+
+    println!("\n== summary ==");
+    if let Some(s) = b.speedup(
+        "stream: sieve one pass (batch=1)",
+        "stream: sieve one pass (batch=256)",
+    ) {
+        println!("batched ladder pricing speedup (batch 256 vs 1): {s:.1}x");
+    }
+    if let Some(s) = b.speedup(
+        "stream: sieve one pass (batch=256, 1t)",
+        "stream: sieve one pass (batch=256, 8t)",
+    ) {
+        println!("sieve thread scaling (8t vs 1t, batch 256): {s:.1}x");
+    }
+
+    // GREEDI_BENCH_JSON=path dumps `op -> ns/iter` for the CI perf trail.
+    b.maybe_write_json_env();
+}

@@ -4,39 +4,48 @@
 //! constrained monotone maximization with O((k log k)/ε) memory and **one**
 //! pass, no assumptions on stream order.
 //!
-//! Mechanics: lazily maintain candidate thresholds
-//! `v ∈ {(1+ε)^i : m ≤ (1+ε)^i ≤ 2·k·m}` where m is the best singleton seen
-//! so far; each sieve greedily keeps elements whose marginal gain exceeds
-//! `(v/2 − f(S_v))/(k − |S_v|)`; return the best sieve at the end.
+//! Since the streaming subsystem landed, this is a thin [`Maximizer`]
+//! wrapper over [`crate::stream::sieve`]: the ground slice becomes a
+//! fixed-order [`VecSource`] and the batched engine does the work, pricing
+//! [`Self::batch`] elements per oracle round through
+//! [`State::par_batch_gains`](crate::objective::State) instead of the old
+//! one-element-at-a-time loop. The engine's output is provably identical
+//! to element-at-a-time processing (see the `stream::sieve` module docs),
+//! so this wrapper preserves the classic algorithm's selections exactly
+//! while `maximize_threaded` actually reaches the parallel gain engine.
 
 use super::{Maximizer, RunResult};
 use crate::constraints::Constraint;
-use crate::objective::{State, SubmodularFn};
+use crate::objective::SubmodularFn;
+use crate::stream::sieve::sieve_stream;
+use crate::stream::source::VecSource;
 use crate::util::rng::Rng;
 
 /// Single-pass sieve-streaming for cardinality constraints.
 pub struct SieveStreaming {
     pub epsilon: f64,
+    /// Elements priced per batched oracle round (purely mechanical: any
+    /// value yields the same output; wider batches feed the gain engine
+    /// better).
+    pub batch: usize,
 }
 
 impl Default for SieveStreaming {
     fn default() -> Self {
-        SieveStreaming { epsilon: 0.1 }
+        SieveStreaming { epsilon: 0.1, batch: 64 }
     }
 }
 
 impl SieveStreaming {
     pub fn new(epsilon: f64) -> Self {
         assert!(epsilon > 0.0 && epsilon < 1.0);
-        SieveStreaming { epsilon }
+        SieveStreaming { epsilon, ..Default::default() }
     }
 
-    /// Threshold grid index range covering [lo, hi].
-    fn grid(&self, lo: f64, hi: f64) -> std::ops::RangeInclusive<i64> {
-        let base = 1.0 + self.epsilon;
-        let i_lo = (lo.max(1e-12).ln() / base.ln()).floor() as i64;
-        let i_hi = (hi.max(1e-12).ln() / base.ln()).ceil() as i64;
-        i_lo..=i_hi
+    /// Explicit batch width (output-invariant; see the `batch` field).
+    pub fn batched(epsilon: f64, batch: usize) -> Self {
+        assert!(epsilon > 0.0 && epsilon < 1.0);
+        SieveStreaming { epsilon, batch: batch.max(1) }
     }
 }
 
@@ -48,56 +57,22 @@ impl Maximizer for SieveStreaming {
         constraint: &dyn Constraint,
         rng: &mut Rng,
     ) -> RunResult {
+        self.maximize_threaded(f, ground, constraint, rng, 1)
+    }
+
+    fn maximize_threaded(
+        &self,
+        f: &dyn SubmodularFn,
+        ground: &[usize],
+        constraint: &dyn Constraint,
+        rng: &mut Rng,
+        threads: usize,
+    ) -> RunResult {
         let _ = rng;
         let k = constraint.rho().max(1);
-        let base = 1.0 + self.epsilon;
-        let mut oracle_calls = 0u64;
-
-        // sieves keyed by grid index i (threshold v = base^i)
-        let mut sieves: std::collections::BTreeMap<i64, Box<dyn State + '_>> =
-            std::collections::BTreeMap::new();
-        let mut best_singleton = 0.0f64;
-
-        for &e in ground {
-            // singleton value (for the lazy threshold grid)
-            let mut probe = f.state();
-            let fe = probe.gain(e);
-            oracle_calls += 1;
-            if fe > best_singleton {
-                best_singleton = fe;
-                // instantiate newly needed sieves; drop stale ones
-                let range = self.grid(best_singleton, 2.0 * k as f64 * best_singleton);
-                sieves.retain(|i, _| range.contains(i));
-                for i in range {
-                    sieves.entry(i).or_insert_with(|| f.state());
-                }
-            }
-            for (&i, sieve) in sieves.iter_mut() {
-                let sel = sieve.selected().len();
-                if sel >= k {
-                    continue;
-                }
-                let v = base.powi(i as i32);
-                let needed = (v / 2.0 - sieve.value()) / (k - sel) as f64;
-                let g = sieve.gain(e);
-                oracle_calls += 1;
-                if g >= needed && g > 0.0 {
-                    sieve.push(e);
-                }
-            }
-        }
-
-        let best = sieves
-            .into_values()
-            .max_by(|a, b| a.value().partial_cmp(&b.value()).unwrap());
-        match best {
-            Some(s) => RunResult {
-                value: s.value(),
-                solution: s.selected().to_vec(),
-                oracle_calls,
-            },
-            None => RunResult { value: 0.0, solution: vec![], oracle_calls },
-        }
+        let mut src = VecSource::new(ground.to_vec());
+        let r = sieve_stream(f, &mut src, k, self.epsilon, self.batch, threads);
+        RunResult { value: r.value, solution: r.solution, oracle_calls: r.oracle_calls }
     }
 
     fn name(&self) -> &'static str {
@@ -150,6 +125,24 @@ mod tests {
         let greedy = Greedy.maximize(&f, &fwd, &c, &mut rng);
         assert!(a.value >= 0.45 * greedy.value);
         assert!(b.value >= 0.45 * greedy.value);
+    }
+
+    #[test]
+    fn batch_width_and_threads_do_not_move_the_output() {
+        let ds = Arc::new(gaussian_blobs(&SynthConfig::tiny_images(180, 6), 4));
+        let f = FacilityLocation::from_dataset(&ds);
+        let ground: Vec<usize> = (0..180).collect();
+        let c = Cardinality::new(7);
+        let mut rng = Rng::new(0);
+        let reference = SieveStreaming::batched(0.1, 1).maximize(&f, &ground, &c, &mut rng);
+        for batch in [2usize, 64, 4096] {
+            for threads in [1usize, 4] {
+                let r = SieveStreaming::batched(0.1, batch)
+                    .maximize_threaded(&f, &ground, &c, &mut rng, threads);
+                assert_eq!(reference.solution, r.solution, "batch={batch} threads={threads}");
+                assert_eq!(reference.value, r.value, "batch={batch} threads={threads}");
+            }
+        }
     }
 
     #[test]

@@ -78,6 +78,11 @@ pub struct ExperimentConfig {
     pub partition: PartitionStrategy,
     /// OS threads for the simulated cluster.
     pub threads: usize,
+    /// Stream batch size (`protocol = "stream_greedi"`; output-invariant).
+    pub batch: usize,
+    /// Approximation slack ε ∈ (0, 1): greedy_scaling's threshold decay and
+    /// stream_greedi's sieve-ladder resolution.
+    pub epsilon: f64,
     /// Repetitions (figures show mean ± std).
     pub trials: usize,
     pub seed: u64,
@@ -98,6 +103,8 @@ impl Default for ExperimentConfig {
             algorithm: "lazy".into(),
             partition: PartitionStrategy::Random,
             threads: 1,
+            batch: 256,
+            epsilon: 0.5,
             trials: 3,
             seed: 42,
         }
@@ -147,6 +154,8 @@ impl ExperimentConfig {
                         .ok_or_else(|| format!("unknown partition strategy {s}"))?;
                 }
                 "threads" => cfg.threads = value.as_usize().ok_or("threads: int")?,
+                "batch" => cfg.batch = value.as_usize().ok_or("batch: int")?,
+                "epsilon" => cfg.epsilon = value.as_f64().ok_or("epsilon: float")?,
                 "trials" => cfg.trials = value.as_usize().ok_or("trials: int")?,
                 "seed" => cfg.seed = value.as_i64().ok_or("seed: int")? as u64,
                 other => return Err(format!("unknown config key {other:?}")),
@@ -178,6 +187,12 @@ impl ExperimentConfig {
         if self.threads == 0 {
             return Err("threads must be > 0".into());
         }
+        if self.batch == 0 {
+            return Err("batch must be > 0".into());
+        }
+        if !(self.epsilon > 0.0 && self.epsilon < 1.0) {
+            return Err("epsilon must be in (0, 1)".into());
+        }
         if self.trials == 0 {
             return Err("trials must be > 0".into());
         }
@@ -191,6 +206,8 @@ impl ExperimentConfig {
             .algorithm(&self.algorithm)
             .partition(self.partition)
             .threads(self.threads)
+            .batch(self.batch)
+            .epsilon(self.epsilon)
             .seed(self.seed);
         if self.local_eval {
             spec = spec.local();
@@ -270,6 +287,31 @@ mod tests {
     #[test]
     fn bad_partition_rejected() {
         assert!(ExperimentConfig::from_toml(r#"partition = "psychic""#).is_err());
+    }
+
+    #[test]
+    fn stream_preset_parses_and_reaches_spec() {
+        let cfg = ExperimentConfig::from_toml(
+            r#"
+            protocol = "stream_greedi"
+            batch = 64
+            epsilon = 0.2
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.protocol, "stream_greedi");
+        assert_eq!(cfg.batch, 64);
+        assert!((cfg.epsilon - 0.2).abs() < 1e-12);
+        let spec = cfg.run_spec(4, 10);
+        assert_eq!(spec.batch, 64);
+        assert!((spec.epsilon - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bad_stream_keys_rejected() {
+        assert!(ExperimentConfig::from_toml("batch = 0").is_err());
+        assert!(ExperimentConfig::from_toml("epsilon = 0.0").is_err());
+        assert!(ExperimentConfig::from_toml("epsilon = 1.5").is_err());
     }
 
     #[test]

@@ -187,6 +187,7 @@ impl Protocol for Baseline {
             oracle_calls,
             job,
             rounds: 2,
+            stream: None,
         }
     }
 }

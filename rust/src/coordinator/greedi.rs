@@ -178,6 +178,7 @@ impl Greedi {
             oracle_calls,
             job,
             rounds: 2,
+            stream: None,
         }
     }
 }
@@ -225,6 +226,7 @@ pub fn centralized_threaded(
         oracle_calls: r.oracle_calls,
         job,
         rounds: 1,
+        stream: None,
     }
 }
 

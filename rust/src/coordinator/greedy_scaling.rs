@@ -169,6 +169,7 @@ fn finish(
         oracle_calls,
         job,
         rounds,
+        stream: None,
     }
 }
 

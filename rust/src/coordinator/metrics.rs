@@ -4,6 +4,36 @@
 
 use crate::mapreduce::JobReport;
 
+/// Bounded-memory accounting for streaming protocols (`stream_greedi`):
+/// the realized per-machine memory footprint of the one-pass sieve stage,
+/// reported against its theoretical O(k·log(k)/ε) candidate ceiling.
+#[derive(Debug, Clone, Default)]
+pub struct StreamStats {
+    /// Peak live sieve candidates on each machine (map-task order).
+    pub peak_live_per_machine: Vec<usize>,
+    /// The candidate ceiling every machine must respect
+    /// ([`crate::stream::sieve::candidate_bound`]).
+    pub live_bound: usize,
+    /// Elements each machine consumed from its shard stream.
+    pub elements_per_machine: Vec<usize>,
+    /// Stream batch size used by the map stage.
+    pub batch: usize,
+    /// Map/merge task retries under the run's fault plan (0 without faults).
+    pub retries: usize,
+}
+
+impl StreamStats {
+    /// Largest per-machine peak (the number the memory bound gates on).
+    pub fn peak_live(&self) -> usize {
+        self.peak_live_per_machine.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Whether every machine stayed within the candidate ceiling.
+    pub fn within_bound(&self) -> bool {
+        self.peak_live() <= self.live_bound
+    }
+}
+
 /// Outcome of one distributed (or centralized) protocol run.
 #[derive(Debug, Clone, Default)]
 pub struct RunMetrics {
@@ -19,6 +49,8 @@ pub struct RunMetrics {
     pub job: JobReport,
     /// Synchronous MapReduce rounds used (GreeDi: 2; GreedyScaling: many).
     pub rounds: usize,
+    /// Streaming-stage memory accounting (`None` for batch protocols).
+    pub stream: Option<StreamStats>,
 }
 
 impl RunMetrics {
@@ -45,15 +77,20 @@ impl RunMetrics {
     }
 
     pub fn one_line(&self) -> String {
+        let stream = match &self.stream {
+            Some(s) => format!(" peak_live={}/{}", s.peak_live(), s.live_bound),
+            None => String::new(),
+        };
         format!(
-            "{:<16} f(S)={:<12.5} |S|={:<4} oracle={:<10} rounds={} simt={:.4}s comm={}",
+            "{:<16} f(S)={:<12.5} |S|={:<4} oracle={:<10} rounds={} simt={:.4}s comm={}{}",
             self.name,
             self.value,
             self.solution.len(),
             self.oracle_calls,
             self.rounds,
             self.sim_time(),
-            self.job.shuffled_elements
+            self.job.shuffled_elements,
+            stream
         )
     }
 }
@@ -87,5 +124,24 @@ mod tests {
         let s = m.one_line();
         assert!(s.contains("greedi"));
         assert!(s.contains("rounds=2"));
+        assert!(!s.contains("peak_live"), "batch protocols carry no stream stats");
+    }
+
+    #[test]
+    fn stream_stats_peak_and_bound() {
+        let s = StreamStats {
+            peak_live_per_machine: vec![12, 30, 7],
+            live_bound: 40,
+            elements_per_machine: vec![100, 100, 99],
+            batch: 64,
+            retries: 0,
+        };
+        assert_eq!(s.peak_live(), 30);
+        assert!(s.within_bound());
+        let over = StreamStats { live_bound: 20, ..s.clone() };
+        assert!(!over.within_bound());
+        assert_eq!(StreamStats::default().peak_live(), 0);
+        let m = RunMetrics { name: "stream_greedi".into(), stream: Some(s), ..Default::default() };
+        assert!(m.one_line().contains("peak_live=30/40"));
     }
 }

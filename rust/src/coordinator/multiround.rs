@@ -156,6 +156,7 @@ impl Protocol for MultiRoundGreedi {
             oracle_calls,
             job,
             rounds,
+            stream: None,
         }
     }
 }

@@ -62,8 +62,15 @@ pub struct RunSpec {
     pub fanout: usize,
     /// Memory exponent δ: driver pool μ = ⌈k·n^δ·ln n⌉ (`greedy_scaling`).
     pub delta: f64,
-    /// Threshold decay τ ← τ·(1−ε) between rounds (`greedy_scaling`).
+    /// Approximation slack ε ∈ (0, 1): `greedy_scaling`'s threshold decay
+    /// τ ← τ·(1−ε), and `stream_greedi`'s sieve-ladder resolution (rung
+    /// ratio 1+ε — finer ε means more live sieves, tighter guarantee).
     pub epsilon: f64,
+    /// Stream batch size: elements priced per oracle round by the one-pass
+    /// sieve stage (`stream_greedi`). Purely mechanical — the protocol
+    /// output is identical at any batch size; wider batches feed the
+    /// parallel gain engine better.
+    pub batch: usize,
     /// Decomposable local evaluation (paper §4.5).
     pub local_eval: bool,
     /// Black-box algorithm name (see `algorithms::by_name`).
@@ -89,6 +96,7 @@ impl RunSpec {
             fanout: 2,
             delta: 0.5,
             epsilon: 0.5,
+            batch: 256,
             local_eval: false,
             algorithm: "lazy".to_string(),
             threads: 1,
@@ -151,10 +159,17 @@ impl RunSpec {
         self
     }
 
-    /// GreedyScaling threshold decay ε ∈ (0, 1).
+    /// Approximation slack ε ∈ (0, 1) (`greedy_scaling` threshold decay /
+    /// `stream_greedi` sieve-ladder resolution).
     pub fn epsilon(mut self, eps: f64) -> Self {
         assert!(eps > 0.0 && eps < 1.0, "epsilon must be in (0, 1)");
         self.epsilon = eps;
+        self
+    }
+
+    /// Stream batch size (`stream_greedi`; output-invariant, ≥ 1).
+    pub fn batch(mut self, batch: usize) -> Self {
+        self.batch = batch.max(1);
         self
     }
 
@@ -193,6 +208,7 @@ impl fmt::Debug for RunSpec {
             .field("fanout", &self.fanout)
             .field("delta", &self.delta)
             .field("epsilon", &self.epsilon)
+            .field("batch", &self.batch)
             .field("local_eval", &self.local_eval)
             .field("algorithm", &self.algorithm)
             .field("threads", &self.threads)
@@ -205,10 +221,11 @@ impl fmt::Debug for RunSpec {
 }
 
 /// Every registered protocol name, in canonical report order.
-pub const NAMES: [&str; 8] = [
+pub const NAMES: [&str; 9] = [
     "greedi",
     "multiround",
     "greedy_scaling",
+    "stream_greedi",
     "random_random",
     "random_greedy",
     "greedy_merge",
@@ -227,6 +244,7 @@ pub fn by_name(name: &str) -> Option<Box<dyn Protocol + Send>> {
         "greedi" => Some(Box::new(Greedi)),
         "multiround" => Some(Box::new(MultiRoundGreedi)),
         "greedy_scaling" => Some(Box::new(GreedyScaling)),
+        "stream_greedi" => Some(Box::new(crate::stream::distributed::StreamGreedi)),
         "random_random" => Some(Box::new(Baseline::RandomRandom)),
         "random_greedy" => Some(Box::new(Baseline::RandomGreedy)),
         "greedy_merge" => Some(Box::new(Baseline::GreedyMerge)),
@@ -319,18 +337,21 @@ mod tests {
         assert_eq!(s.kappa, 10, "κ defaults to k");
         assert_eq!(s.algorithm, "lazy");
         assert_eq!(s.threads, 1);
+        assert_eq!(s.batch, 256, "stream batch defaults to 256");
         assert!(!s.local_eval);
         let s = RunSpec::new(4, 10)
             .alpha(2.0)
             .local()
             .threads(0)
             .fanout(1)
+            .batch(0)
             .partition(PartitionStrategy::Contiguous)
             .seed(99);
         assert_eq!(s.kappa, 20);
         assert!(s.local_eval);
         assert_eq!(s.threads, 1, "threads clamps to 1");
         assert_eq!(s.fanout, 2, "fanout clamps to 2");
+        assert_eq!(s.batch, 1, "batch clamps to 1");
         assert_eq!(s.partition, PartitionStrategy::Contiguous);
         assert_eq!(s.seed, 99);
     }

@@ -71,6 +71,84 @@ pub fn load_csv(path: &Path) -> Result<Dataset> {
     Ok(Dataset { n, d, xs })
 }
 
+/// Incremental bounded-memory reader for the same headerless-CSV format as
+/// [`load_csv`]: rows are pulled `max_rows` at a time, so arbitrarily large
+/// files stream through a fixed-size buffer. This is the ingestion path of
+/// the `stream::` subsystem ([`crate::stream::source::ChunkedCsvSource`]).
+///
+/// Validation matches [`load_csv`] (finite values, rectangular rows, blank
+/// lines skipped), applied chunk by chunk.
+pub struct ChunkedCsvReader {
+    lines: std::io::Lines<std::io::BufReader<std::fs::File>>,
+    path: std::path::PathBuf,
+    /// Columns per row; fixed by the first non-empty row.
+    d: Option<usize>,
+    rows_read: usize,
+    lineno: usize,
+}
+
+impl ChunkedCsvReader {
+    pub fn open(path: &Path) -> Result<Self> {
+        let file = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+        Ok(ChunkedCsvReader {
+            lines: std::io::BufReader::new(file).lines(),
+            path: path.to_path_buf(),
+            d: None,
+            rows_read: 0,
+            lineno: 0,
+        })
+    }
+
+    /// Row width, once the first row has been read.
+    pub fn d(&self) -> Option<usize> {
+        self.d
+    }
+
+    /// Rows successfully parsed so far.
+    pub fn rows_read(&self) -> usize {
+        self.rows_read
+    }
+
+    /// Parse up to `max_rows` further rows. The returned chunk has
+    /// `chunk.n == 0` exactly at end of file.
+    pub fn next_chunk(&mut self, max_rows: usize) -> Result<Dataset> {
+        let path = &self.path;
+        let mut xs: Vec<f32> = Vec::new();
+        let mut n = 0usize;
+        while n < max_rows.max(1) {
+            let Some(line) = self.lines.next() else { break };
+            self.lineno += 1;
+            let line = line?;
+            let trimmed = line.trim();
+            if trimmed.is_empty() {
+                continue;
+            }
+            let mut count = 0usize;
+            for tok in trimmed.split(',') {
+                let v: f32 = tok
+                    .trim()
+                    .parse()
+                    .with_context(|| format!("{path:?}:{}: bad value {tok:?}", self.lineno))?;
+                if !v.is_finite() {
+                    bail!("{path:?}:{}: non-finite value", self.lineno);
+                }
+                xs.push(v);
+                count += 1;
+            }
+            match self.d {
+                None => self.d = Some(count),
+                Some(d) if count != d => {
+                    bail!("{path:?}:{}: ragged row ({count} cols, expected {d})", self.lineno)
+                }
+                Some(_) => {}
+            }
+            n += 1;
+        }
+        self.rows_read += n;
+        Ok(Dataset { n, d: self.d.unwrap_or(0), xs })
+    }
+}
+
 /// Load from cache if present, else generate and cache. The workhorse for
 /// `--full`-scale experiment reruns.
 pub fn load_or_generate(path: &Path, generate: impl FnOnce() -> Dataset) -> Result<Dataset> {
@@ -128,6 +206,46 @@ mod tests {
         let p = tmp("empty");
         std::fs::write(&p, "\n\n").unwrap();
         assert!(load_csv(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn chunked_reader_matches_bulk_load() {
+        let ds = gaussian_blobs(&SynthConfig::tiny_images(53, 5), 9);
+        let p = tmp("chunked");
+        save_csv(&ds, &p).unwrap();
+        let bulk = load_csv(&p).unwrap();
+        for chunk_rows in [1usize, 7, 53, 200] {
+            let mut r = ChunkedCsvReader::open(&p).unwrap();
+            let mut xs: Vec<f32> = Vec::new();
+            let mut n = 0usize;
+            loop {
+                let c = r.next_chunk(chunk_rows).unwrap();
+                if c.n == 0 {
+                    break;
+                }
+                assert!(c.n <= chunk_rows, "chunk over-filled");
+                assert_eq!(c.d, bulk.d);
+                xs.extend_from_slice(&c.xs);
+                n += c.n;
+            }
+            assert_eq!(n, bulk.n, "chunk_rows={chunk_rows}");
+            assert_eq!(xs, bulk.xs, "chunk_rows={chunk_rows}");
+            assert_eq!(r.rows_read(), bulk.n);
+            assert_eq!(r.d(), Some(bulk.d));
+            // EOF is sticky
+            assert_eq!(r.next_chunk(chunk_rows).unwrap().n, 0);
+        }
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn chunked_reader_rejects_ragged_mid_stream() {
+        let p = tmp("chunked_ragged");
+        std::fs::write(&p, "1,2\n3,4\n5\n").unwrap();
+        let mut r = ChunkedCsvReader::open(&p).unwrap();
+        assert_eq!(r.next_chunk(2).unwrap().n, 2);
+        assert!(r.next_chunk(2).is_err(), "ragged row must surface as an error");
         std::fs::remove_file(&p).ok();
     }
 

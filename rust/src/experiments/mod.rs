@@ -20,6 +20,7 @@ pub mod fig6;
 pub mod fig7;
 pub mod fig8;
 pub mod fig9;
+pub mod streaming;
 pub mod theory;
 
 use std::collections::BTreeMap;

@@ -23,7 +23,9 @@
 //! ## Quickstart
 //!
 //! Every distributed coordinator — GreeDi, the tree-reduction variant, the
-//! four naive baselines, GreedyScaling, and the centralized reference — sits
+//! four naive baselines, GreedyScaling, the bounded-memory streaming
+//! sieve→merge protocol (`"stream_greedi"`, see [`stream`]), and the
+//! centralized reference — sits
 //! behind one trait ([`coordinator::protocol::Protocol`]), one spec
 //! ([`coordinator::protocol::RunSpec`]), and one registry
 //! (`coordinator::protocol::by_name`), mirroring `algorithms::by_name`:
@@ -56,6 +58,7 @@ pub mod linalg;
 pub mod mapreduce;
 pub mod objective;
 pub mod runtime;
+pub mod stream;
 pub mod util;
 
 pub mod prelude {
@@ -82,6 +85,10 @@ pub mod prelude {
     pub use crate::objective::{
         coverage::Coverage, cut::GraphCut, facility::FacilityLocation, infogain::InfoGain,
         SubmodularFn,
+    };
+    pub use crate::stream::{
+        candidate_bound, sieve_stream, BatchedSieve, ChunkedCsvSource, SieveResult,
+        StreamGreedi, StreamSource, VecSource,
     };
     pub use crate::util::rng::Rng;
 }

@@ -9,6 +9,7 @@
 //!   protocols             sweep every registered protocol on one workload
 //!   fig4 … fig10          regenerate a figure from the paper's §6
 //!   theory                empirical checks of Theorems 3/4/11 + Table 1
+//!   streaming             bounded-memory sieve→merge vs GreeDi (stream_greedi)
 //!   all                   every figure + theory, in order
 //!   info                  artifact / build information
 //!
@@ -62,6 +63,7 @@ fn run_figure(name: &str, opts: &ExpOpts) -> Option<FigureReport> {
         "fig10" => experiments::fig10::run(opts),
         "theory" => experiments::theory::run(opts),
         "ablations" => experiments::ablations::run(opts),
+        "streaming" => experiments::streaming::run(opts),
         _ => return None,
     })
 }
@@ -152,7 +154,7 @@ fn info() {
 fn main() {
     let args = Args::from_env();
     let Some(cmd) = args.positional.first().cloned() else {
-        eprintln!("usage: greedi <quickstart|protocols|fig4..fig10|theory|ablations|all|info> [--n N] [--trials T] [--seed S] [--threads T] [--partition S] [--protocol P] [--part P] [--xla] [--full]");
+        eprintln!("usage: greedi <quickstart|protocols|fig4..fig10|theory|ablations|streaming|all|info> [--n N] [--trials T] [--seed S] [--threads T] [--partition S] [--protocol P] [--part P] [--xla] [--full]");
         std::process::exit(2);
     };
     let mut opts = opts_from(&args);
@@ -196,7 +198,7 @@ fn main() {
         "protocols" => protocols(&opts, cfg_opt.as_ref()),
         "info" => info(),
         "all" => {
-            for f in ["fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "theory", "ablations"] {
+            for f in ["fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "theory", "ablations", "streaming"] {
                 run_figure(f, &opts).unwrap().print();
             }
         }

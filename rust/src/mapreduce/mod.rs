@@ -118,6 +118,33 @@ impl MapReduce {
         }
         (outputs, StageReport::from_times(times))
     }
+
+    /// [`MapReduce::run_stage`] under a [`fault::FaultPlan`]: with no
+    /// injected faults the tasks run on the pool exactly as `run_stage`
+    /// does (zero retries); with faults enabled, execution delegates to
+    /// [`fault::run_stage_with_faults`] — serial, so each attempt's
+    /// wallclock stays interference-free, exactly like the fault module's
+    /// own accounting. For pure task functions the outputs are identical
+    /// on both paths, which is what lets protocols expose a fault-injected
+    /// run mode without forking their stage logic. Returns the retry count
+    /// alongside the outputs and stage report.
+    pub fn run_stage_faulted<T, R, F>(
+        &self,
+        inputs: Vec<T>,
+        plan: &fault::FaultPlan,
+        f: F,
+    ) -> Result<(Vec<R>, StageReport, usize), fault::StageFailed>
+    where
+        T: Send + Clone,
+        R: Send,
+        F: Fn(usize, T) -> R + Sync,
+    {
+        if plan.fail_prob <= 0.0 {
+            let (out, rep) = self.run_stage(inputs, f);
+            return Ok((out, rep, 0));
+        }
+        fault::run_stage_with_faults(inputs, plan, f)
+    }
 }
 
 #[cfg(test)]
@@ -156,6 +183,25 @@ mod tests {
         assert_eq!(job.shuffled_elements, 12);
         assert!(job.sim_parallel_time() > 0.0);
         assert!(job.total_cpu_time() >= job.sim_parallel_time() - 1e-12);
+    }
+
+    #[test]
+    fn faulted_stage_matches_clean_stage_outputs() {
+        let mr = MapReduce::new(4);
+        let clean = mr.run_stage((0..40).collect(), |i, x: i32| x * 3 + i as i32).0;
+        let (none_out, _, r0) = mr
+            .run_stage_faulted((0..40).collect(), &fault::FaultPlan::none(), |i, x: i32| {
+                x * 3 + i as i32
+            })
+            .unwrap();
+        assert_eq!(none_out, clean);
+        assert_eq!(r0, 0, "no plan, no retries");
+        let plan = fault::FaultPlan::new(0.4, 25, 9);
+        let (faulty_out, _, retries) = mr
+            .run_stage_faulted((0..40).collect(), &plan, |i, x: i32| x * 3 + i as i32)
+            .unwrap();
+        assert_eq!(faulty_out, clean, "retries must not change outputs");
+        assert!(retries > 0, "p=0.4 over 40 tasks must retry sometimes");
     }
 
     #[test]

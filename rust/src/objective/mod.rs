@@ -67,6 +67,18 @@ pub trait SubmodularFn: Sync {
         st.value()
     }
 
+    /// Batched singleton values `f({e})` for each `e` in `es` — the
+    /// streaming sieve's threshold-ladder pricing entry point (every
+    /// incoming batch is priced once to drive the `(1+ε)^i` ladder).
+    /// Default: one [`State::par_batch_gains`] call on a fresh state, which
+    /// is exact (gains from ∅ *are* the singletons) and inherits that
+    /// method's bit-identical-across-threads contract. Objectives with a
+    /// closed-form singleton may override to skip the state setup.
+    fn singleton_gains(&self, es: &[usize], threads: usize) -> Vec<f64> {
+        let mut st = self.state();
+        st.par_batch_gains(es, threads)
+    }
+
     /// Whether f is monotone (greedy stopping rules differ).
     fn is_monotone(&self) -> bool {
         true

@@ -1,0 +1,281 @@
+//! StreamGreedi — the two-stage distributed sieve→merge protocol: each of
+//! the m machines makes **one bounded-memory pass** over its shard stream
+//! with the batched sieve engine, then a single merge round runs the
+//! configured black box (lazy greedy by default) over the union of the
+//! machines' sieve summaries, exactly like GreeDi's second round.
+//!
+//! This is the composition Barbosa et al. (randomized composable core-sets,
+//! arXiv:1507.03719) and Lucic et al. (horizontally scalable submodular
+//! maximization, arXiv:1605.09619) analyze: a constant-factor one-pass
+//! local stage whose output is a composable core-set, merged by a
+//! constant-factor sequential stage, keeps a constant-factor guarantee
+//! end-to-end under randomized partitioning — while each machine holds only
+//! O(κ·log(κ)/ε) candidates instead of its whole shard
+//! ([`crate::stream::sieve`] module docs give the ladder argument).
+//!
+//! Execution rides the simulated MapReduce engine, so the run inherits
+//! per-stage [`StageReport`](crate::mapreduce::StageReport) timing, the
+//! [`FaultPlan`] retry model (map tasks are pure functions of
+//! (shard, seed), so retries cannot change the output — asserted by
+//! `tests/integration_stream`), and the shared [`RunSpec`] threading: map
+//! tasks split `spec.threads` with the oracle layer through
+//! [`RunSpec::oracle_threads`], and the merge round gets the full budget.
+//!
+//! Registered as `"stream_greedi"`; reads m, k, κ (per-machine sieve
+//! budget), `batch`, `epsilon` (ladder resolution), algorithm (merge
+//! round), local/global mode, partition, threads and seed from the spec.
+
+use super::sieve::{candidate_bound, sieve_stream};
+use super::source::VecSource;
+use crate::algorithms;
+use crate::constraints::cardinality::Cardinality;
+use crate::constraints::Constraint;
+use crate::coordinator::metrics::{RunMetrics, StreamStats};
+use crate::coordinator::protocol::{Protocol, RunSpec};
+use crate::coordinator::Problem;
+use crate::mapreduce::fault::{FaultPlan, StageFailed};
+use crate::mapreduce::{JobReport, MapReduce};
+use crate::util::rng::Rng;
+
+/// The distributed sieve→merge protocol.
+pub struct StreamGreedi;
+
+impl Protocol for StreamGreedi {
+    fn run(&self, problem: &dyn Problem, spec: &RunSpec) -> RunMetrics {
+        self.run_with_faults(problem, spec, &FaultPlan::none())
+            .expect("fault-free run cannot exhaust attempts")
+    }
+
+    fn name(&self) -> &'static str {
+        "stream_greedi"
+    }
+}
+
+impl StreamGreedi {
+    /// Run under an explicit fault plan: every map/merge task is retried per
+    /// the plan and, being a pure function of (input, seed), produces the
+    /// identical protocol output — only the stage timings and the retry
+    /// count move. `Err` only when a task exhausts `plan.max_attempts`.
+    pub fn run_with_faults(
+        &self,
+        problem: &dyn Problem,
+        spec: &RunSpec,
+        plan: &FaultPlan,
+    ) -> Result<RunMetrics, StageFailed> {
+        let base_rng = Rng::new(spec.seed);
+        let mut rng = base_rng.clone();
+        let ground = problem.ground();
+        let shards = spec.partition.split(&ground, spec.m, &mut rng);
+
+        let engine = MapReduce::new(spec.threads);
+        let mut job = JobReport::default();
+        let local_eval = spec.local_eval;
+        let batch = spec.batch.max(1);
+        let epsilon = spec.epsilon;
+        let kappa = spec.kappa.max(1);
+
+        // ---- Stage 1: one-pass sieve per machine -------------------------
+        // Arrival order is a deterministic per-machine shuffle (the random
+        // order the streaming analysis assumes), forked from the base seed
+        // so retries replay the identical stream.
+        let inputs: Vec<(usize, Vec<usize>)> = shards.into_iter().enumerate().collect();
+        let oracle_threads = spec.oracle_threads(inputs.len());
+        let (results, stage1, retries1) =
+            engine.run_stage_faulted(inputs, plan, |_, (i, shard)| {
+                let mut task_rng = base_rng.fork(3_000 + i as u64);
+                let obj = if local_eval {
+                    problem.local(&shard, &mut task_rng)
+                } else {
+                    problem.global()
+                };
+                let mut src = VecSource::shuffled_with(shard, &mut task_rng);
+                sieve_stream(obj.as_ref(), &mut src, kappa, epsilon, batch, oracle_threads)
+            })?;
+        job.stages.push(stage1);
+        let mut oracle_calls: u64 = results.iter().map(|r| r.oracle_calls).sum();
+
+        // The union of sieve summaries is the only shuffled data — at most
+        // m·candidate_bound(κ, ε) ids, independent of n.
+        let mut merged: Vec<usize> = Vec::new();
+        for r in &results {
+            merged.extend_from_slice(&r.union);
+        }
+        merged.sort_unstable();
+        merged.dedup();
+        job.record_shuffle(merged.len());
+
+        // ---- Stage 2: merge round (single reducer, full thread budget) ---
+        let candidates: Vec<Vec<usize>> = results.iter().map(|r| r.solution.clone()).collect();
+        let merged_in = merged;
+        let algo_name = spec.algorithm.clone();
+        let (m, k) = (spec.m, spec.k);
+        let merge_threads = spec.oracle_threads(1);
+        let (mut out2, stage2, retries2) = engine.run_stage_faulted(vec![()], plan, |_, ()| {
+            let mut task_rng = base_rng.fork(4_000);
+            let obj = if local_eval {
+                problem.merge(m, &mut task_rng)
+            } else {
+                problem.global()
+            };
+            let merge_con = Cardinality::new(k);
+            let algo = algorithms::by_name(&algo_name).expect("algorithm");
+            let run_b = algo.maximize_threaded(
+                obj.as_ref(),
+                &merged_in,
+                &merge_con,
+                &mut task_rng,
+                merge_threads,
+            );
+            let mut extra_oracle = run_b.oracle_calls;
+
+            // Like GreeDi's A^gc_max: keep the best machine-local sieve
+            // solution under this round's objective as a floor (κ-budget
+            // sets trim to the k-prefix, feasible by heredity — sieves
+            // commit greedily in stream order).
+            let mut best: Option<(Vec<usize>, f64)> = None;
+            for cand in &candidates {
+                let mut trimmed: Vec<usize> = Vec::new();
+                for &e in cand {
+                    if merge_con.can_add(&trimmed, e) {
+                        trimmed.push(e);
+                    }
+                }
+                let v = obj.eval(&trimmed);
+                extra_oracle += trimmed.len() as u64;
+                if best.as_ref().map(|(_, bv)| v > *bv).unwrap_or(true) {
+                    best = Some((trimmed, v));
+                }
+            }
+            let (max_sol, max_val) = best.unwrap_or((Vec::new(), f64::NEG_INFINITY));
+            let winner = if run_b.value >= max_val {
+                run_b.solution
+            } else {
+                max_sol
+            };
+            (winner, extra_oracle)
+        })?;
+        job.stages.push(stage2);
+        let (solution, extra) = out2.pop().expect("merge stage yields one task");
+        oracle_calls += extra;
+
+        // Reported value: always the true global objective.
+        let value = problem.global().eval(&solution);
+        let stream = StreamStats {
+            peak_live_per_machine: results.iter().map(|r| r.peak_live).collect(),
+            live_bound: candidate_bound(kappa, epsilon),
+            elements_per_machine: results.iter().map(|r| r.elements).collect(),
+            batch,
+            retries: retries1 + retries2,
+        };
+
+        Ok(RunMetrics {
+            name: format!(
+                "stream_greedi[m={},k={},κ={},b={},ε={}{}]",
+                spec.m,
+                spec.k,
+                kappa,
+                batch,
+                epsilon,
+                if local_eval { ",local" } else { "" }
+            ),
+            solution,
+            value,
+            oracle_calls,
+            job,
+            rounds: 2,
+            stream: Some(stream),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::protocol;
+    use crate::coordinator::FacilityProblem;
+    use crate::data::synth::{gaussian_blobs, SynthConfig};
+    use std::sync::Arc;
+
+    fn problem(n: usize, seed: u64) -> FacilityProblem {
+        let ds = Arc::new(gaussian_blobs(&SynthConfig::tiny_images(n, 8), seed));
+        FacilityProblem::new(&ds)
+    }
+
+    fn spec(m: usize, k: usize) -> RunSpec {
+        RunSpec::new(m, k).epsilon(0.2).batch(32)
+    }
+
+    #[test]
+    fn respects_budget_and_reports_stream_stats() {
+        let p = problem(240, 61);
+        let r = StreamGreedi.run(&p, &spec(4, 8).seed(5));
+        assert!(r.solution.len() <= 8);
+        assert!(r.value.is_finite() && r.value >= 0.0);
+        assert_eq!(r.rounds, 2);
+        let s = r.stream.expect("stream stats must be reported");
+        assert_eq!(s.peak_live_per_machine.len(), 4);
+        assert_eq!(s.elements_per_machine.iter().sum::<usize>(), 240);
+        assert!(s.within_bound(), "peak {} vs bound {}", s.peak_live(), s.live_bound);
+        assert_eq!(s.retries, 0);
+        assert_eq!(s.batch, 32);
+    }
+
+    #[test]
+    fn registered_and_round_trips() {
+        let proto = protocol::by_name("stream_greedi").expect("registered");
+        assert_eq!(proto.name(), "stream_greedi");
+        let p = problem(120, 62);
+        let run = proto.run(&p, &spec(3, 5).seed(1));
+        let direct = StreamGreedi.run(&p, &spec(3, 5).seed(1));
+        assert_eq!(run.solution, direct.solution);
+        assert_eq!(run.value, direct.value);
+        assert_eq!(run.oracle_calls, direct.oracle_calls);
+    }
+
+    #[test]
+    fn deterministic_given_seed_and_batch_independent() {
+        let p = problem(200, 63);
+        let a = StreamGreedi.run(&p, &spec(4, 6).seed(9));
+        let b = StreamGreedi.run(&p, &spec(4, 6).seed(9));
+        assert_eq!(a.solution, b.solution);
+        assert_eq!(a.value, b.value);
+        // the per-machine stream ORDER is fixed by the seed, so the batch
+        // size is pure mechanics — output must not move
+        for bs in [1usize, 7, 1024] {
+            let c = StreamGreedi.run(&p, &spec(4, 6).seed(9).batch(bs));
+            assert_eq!(a.solution, c.solution, "batch={bs} changed the protocol output");
+            assert_eq!(a.value, c.value, "batch={bs}");
+        }
+    }
+
+    #[test]
+    fn communication_bounded_by_summaries() {
+        let p = problem(300, 64);
+        let sp = spec(6, 5).seed(3);
+        let r = StreamGreedi.run(&p, &sp);
+        let bound = candidate_bound(sp.kappa, sp.epsilon);
+        assert!(
+            r.job.shuffled_elements <= 6 * bound,
+            "shuffle {} exceeds m·bound {}",
+            r.job.shuffled_elements,
+            6 * bound
+        );
+    }
+
+    #[test]
+    fn local_mode_runs_and_stays_feasible() {
+        let p = problem(200, 65);
+        let r = StreamGreedi.run(&p, &spec(4, 6).local().seed(2));
+        assert!(r.solution.len() <= 6);
+        assert!(r.value >= 0.0);
+        let set: std::collections::HashSet<_> = r.solution.iter().collect();
+        assert_eq!(set.len(), r.solution.len(), "duplicate ids");
+    }
+
+    #[test]
+    fn kappa_over_selection_trims_to_k() {
+        let p = problem(180, 66);
+        let r = StreamGreedi.run(&p, &spec(3, 5).alpha(2.0).seed(4));
+        assert!(r.solution.len() <= 5, "κ>k must still respect the final budget");
+    }
+}

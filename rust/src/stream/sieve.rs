@@ -1,0 +1,472 @@
+//! The batched sieve-streaming engine — one-pass, bounded-memory
+//! cardinality-constrained maximization over a [`StreamSource`], with every
+//! hot pricing routed through the parallel gain engine
+//! ([`State::par_batch_gains`]).
+//!
+//! ## Algorithm
+//!
+//! Classic Sieve-Streaming (Badanidiyuru et al. 2014): maintain a geometric
+//! threshold ladder `v = (1+ε)^i` lazily covering `[m, 2·k·m]`, where `m`
+//! is the best singleton value seen so far; the sieve at threshold `v`
+//! keeps an element iff its marginal gain is at least
+//! `(v/2 − f(S_v)) / (k − |S_v|)`; the best sieve at end of stream is a
+//! `(1/2 − ε)`-approximation in **one pass**, for any arrival order.
+//!
+//! ## Batching without changing a single answer
+//!
+//! The one-at-a-time formulation starves a batched/parallel oracle. This
+//! engine prices a whole incoming batch at once and still produces output
+//! **identical to element-at-a-time processing**, by exploiting
+//! submodularity twice per batch:
+//!
+//! 1. **Singletons** `f({e})` do not depend on any sieve state, so the
+//!    ladder bookkeeping for the whole batch is driven by one batched call.
+//! 2. Per sieve, gains priced at batch start are **upper bounds** once the
+//!    sieve grows mid-batch. Walking the batch in arrival order: a cached
+//!    gain below the admission threshold proves the true gain is below it
+//!    (reject with zero extra oracle work); a cached gain above it is exact
+//!    if the sieve has not grown since pricing, and is otherwise re-priced
+//!    with one fresh `gain` call before the test. Since at most `k`
+//!    elements ever commit per sieve, re-pricings are rare and the oracle
+//!    sees wide batches almost exclusively.
+//!
+//! Both batched paths honor the `par_batch_gains` bit-identical-across-
+//! threads contract, so the engine's output is invariant to **both** the
+//! batch size and the thread count (asserted by `tests/integration_stream`).
+//!
+//! ## Memory bound
+//!
+//! Live state is one incremental [`State`] per ladder rung, each holding at
+//! most `k` committed elements. The lazily instantiated ladder spans
+//! `[m, 2·k·m]`, i.e. at most `⌈log_{1+ε}(2k)⌉ + 2` rungs regardless of the
+//! data scale Δ (rungs below a risen `m` are dropped), so the peak number
+//! of live candidates is at most [`candidate_bound`]`(k, ε) =
+//! k·(⌈log_{1+ε}(2k)⌉ + 2) = O(k·log(k)/ε)` — the engine tracks the
+//! realized peak ([`SieveResult::peak_live`]) and reports it against this
+//! bound.
+
+use std::collections::BTreeMap;
+use std::ops::RangeInclusive;
+
+use super::source::StreamSource;
+use crate::objective::{State, SubmodularFn};
+
+/// Outcome of one single-pass sieve run.
+#[derive(Debug, Clone, Default)]
+pub struct SieveResult {
+    /// Best sieve's selection, in commit order.
+    pub solution: Vec<usize>,
+    /// f(solution) as tracked incrementally by the winning sieve.
+    pub value: f64,
+    /// Union of every live sieve's committed elements (sorted, deduped) —
+    /// the machine's summary in the distributed sieve→merge protocol.
+    pub union: Vec<usize>,
+    /// Marginal-gain oracle evaluations issued (batched calls count their
+    /// width).
+    pub oracle_calls: u64,
+    /// Peak live committed candidates across the ladder at any batch
+    /// boundary — must stay ≤ [`SieveResult::bound`].
+    pub peak_live: usize,
+    /// The O(k·log(k)/ε) candidate bound ([`candidate_bound`]).
+    pub bound: usize,
+    /// Elements consumed from the stream.
+    pub elements: usize,
+    /// Batches consumed from the stream.
+    pub batches: usize,
+}
+
+/// Hard ceiling on live committed candidates: `k` per rung times the
+/// maximum number of simultaneously live rungs, `⌈log_{1+ε}(2k)⌉ + 2`
+/// (the lazy ladder spans `[m, 2km]`, a fixed ratio of `2k` — independent
+/// of the data's value scale).
+pub fn candidate_bound(k: usize, epsilon: f64) -> usize {
+    let k = k.max(1);
+    assert!(epsilon > 0.0 && epsilon < 1.0, "epsilon must be in (0, 1)");
+    let rungs = ((2.0 * k as f64).ln() / (1.0 + epsilon).ln()).ceil() as usize + 2;
+    k * rungs.max(1)
+}
+
+/// One ladder rung: an incremental state plus, transiently, the position in
+/// the current batch at which this rung was instantiated (elements before
+/// it must not be offered — they were already gone when it was born).
+struct Rung<'a> {
+    state: Box<dyn State + 'a>,
+    birth: usize,
+}
+
+/// The batched sieve engine. Feed batches with
+/// [`BatchedSieve::process_batch`], close with [`BatchedSieve::finish`];
+/// or drive a whole [`StreamSource`] through [`sieve_stream`].
+pub struct BatchedSieve<'a> {
+    f: &'a dyn SubmodularFn,
+    k: usize,
+    epsilon: f64,
+    threads: usize,
+    sieves: BTreeMap<i64, Rung<'a>>,
+    best_singleton: f64,
+    oracle_calls: u64,
+    peak_live: usize,
+    elements: usize,
+    batches: usize,
+}
+
+impl<'a> BatchedSieve<'a> {
+    pub fn new(f: &'a dyn SubmodularFn, k: usize, epsilon: f64, threads: usize) -> Self {
+        assert!(epsilon > 0.0 && epsilon < 1.0, "epsilon must be in (0, 1)");
+        BatchedSieve {
+            f,
+            k: k.max(1),
+            epsilon,
+            threads: threads.max(1),
+            sieves: BTreeMap::new(),
+            best_singleton: 0.0,
+            oracle_calls: 0,
+            peak_live: 0,
+            elements: 0,
+            batches: 0,
+        }
+    }
+
+    /// Ladder rung indices covering `[lo, hi]` (same grid as the classic
+    /// sieve: rung `i` is threshold `(1+ε)^i`).
+    fn grid(&self, lo: f64, hi: f64) -> RangeInclusive<i64> {
+        let base = 1.0 + self.epsilon;
+        let i_lo = (lo.max(1e-12).ln() / base.ln()).floor() as i64;
+        let i_hi = (hi.max(1e-12).ln() / base.ln()).ceil() as i64;
+        i_lo..=i_hi
+    }
+
+    /// Live committed candidates across the ladder right now.
+    pub fn live_candidates(&self) -> usize {
+        self.sieves.values().map(|r| r.state.selected().len()).sum()
+    }
+
+    /// Peak of [`BatchedSieve::live_candidates`] over all processed batches.
+    pub fn peak_live(&self) -> usize {
+        self.peak_live
+    }
+
+    /// Process one arrival batch (order within the batch is arrival order).
+    /// Output after any prefix of batches is identical to processing the
+    /// same elements one at a time (see module docs).
+    pub fn process_batch(&mut self, es: &[usize]) {
+        if es.is_empty() {
+            return;
+        }
+        self.batches += 1;
+        self.elements += es.len();
+
+        // ---- Phase A: ladder bookkeeping off one batched singleton call.
+        // Singleton values are state-independent, so pricing them up front
+        // is exact, not an upper bound.
+        let singles = self.f.singleton_gains(es, self.threads);
+        self.oracle_calls += es.len() as u64;
+        // Rungs born mid-batch, keyed by ladder index → birth position.
+        let mut births: BTreeMap<i64, usize> = BTreeMap::new();
+        for (pos, &fe) in singles.iter().enumerate() {
+            if fe > self.best_singleton {
+                self.best_singleton = fe;
+                let range =
+                    self.grid(self.best_singleton, 2.0 * self.k as f64 * self.best_singleton);
+                // Rungs that fell below the risen floor are discarded — in
+                // the element-at-a-time reference they would never be read
+                // again either, so dropping them before pricing only skips
+                // wasted work.
+                self.sieves.retain(|i, _| range.contains(i));
+                births.retain(|i, _| range.contains(i));
+                for i in range {
+                    if !self.sieves.contains_key(&i) && !births.contains_key(&i) {
+                        births.insert(i, pos);
+                    }
+                }
+            }
+        }
+        for (&i, &pos) in &births {
+            self.sieves.insert(i, Rung { state: self.f.state(), birth: pos });
+        }
+
+        // ---- Phase B: per rung, one batched pricing + an in-order walk.
+        // Rungs are independent of each other (only `m` couples them, and
+        // `m` was fully resolved in phase A), so rung-major order here is
+        // output-identical to the element-major reference interleaving.
+        let base = 1.0 + self.epsilon;
+        let k = self.k;
+        let threads = self.threads;
+        let mut calls = 0u64;
+        for (&i, rung) in self.sieves.iter_mut() {
+            let start = rung.birth;
+            rung.birth = 0; // transient: next batch offers everything
+            let sub = &es[start..];
+            if sub.is_empty() || rung.state.selected().len() >= k {
+                continue;
+            }
+            let v = base.powi(i as i32);
+            // A rung that has committed nothing yet prices every element at
+            // its singleton value, which phase A already computed through
+            // the identical fresh-state path — reuse it instead of issuing
+            // a duplicate batched call (bit-identical, and newborn rungs
+            // churn on exactly the adversarial streams where this matters).
+            let cached_owned;
+            let cached: &[f64] = if rung.state.selected().is_empty() {
+                &singles[start..]
+            } else {
+                cached_owned = rung.state.par_batch_gains(sub, threads);
+                calls += sub.len() as u64;
+                &cached_owned
+            };
+            // `dirty` flips on the first commit after pricing: from then on
+            // `cached` entries are upper bounds, exact before.
+            let mut dirty = false;
+            for (off, &e) in sub.iter().enumerate() {
+                let sel = rung.state.selected().len();
+                if sel >= k {
+                    break;
+                }
+                let needed = (v / 2.0 - rung.state.value()) / (k - sel) as f64;
+                let ub = cached[off];
+                if ub < needed || ub <= 0.0 {
+                    // true gain ≤ cached upper bound < threshold: reject
+                    // without touching the oracle.
+                    continue;
+                }
+                if dirty {
+                    let g = rung.state.gain(e);
+                    calls += 1;
+                    if g >= needed && g > 0.0 {
+                        rung.state.push(e);
+                    }
+                } else {
+                    // state unchanged since pricing ⇒ cached value is exact
+                    rung.state.push(e);
+                    dirty = true;
+                }
+            }
+        }
+        self.oracle_calls += calls;
+        self.peak_live = self.peak_live.max(self.live_candidates());
+    }
+
+    /// Close the stream: pick the best sieve (ties resolve to the highest
+    /// rung, matching the classic implementation) and assemble the summary.
+    pub fn finish(self) -> SieveResult {
+        let mut best: Option<(f64, Vec<usize>)> = None;
+        let mut union: Vec<usize> = Vec::new();
+        for rung in self.sieves.values() {
+            let v = rung.state.value();
+            let sel = rung.state.selected().to_vec();
+            union.extend_from_slice(&sel);
+            if best.as_ref().map(|(bv, _)| v >= *bv).unwrap_or(true) {
+                best = Some((v, sel));
+            }
+        }
+        union.sort_unstable();
+        union.dedup();
+        let (value, solution) = best.unwrap_or((0.0, Vec::new()));
+        SieveResult {
+            solution,
+            value,
+            union,
+            oracle_calls: self.oracle_calls,
+            peak_live: self.peak_live,
+            bound: candidate_bound(self.k, self.epsilon),
+            elements: self.elements,
+            batches: self.batches,
+        }
+    }
+}
+
+/// Drive `source` to its end through a [`BatchedSieve`] — the one-pass
+/// local stage of the distributed protocol, and the engine behind the
+/// `sieve_streaming` algorithm wrapper.
+///
+/// A stream ends on exhaustion *or* on a source error; fallible sources
+/// (disk ingest) retain the error, so callers that must not accept a
+/// result computed on a truncated corpus should check
+/// [`StreamSource::error`] afterwards (the end-to-end tests and the
+/// streaming example do).
+pub fn sieve_stream(
+    f: &dyn SubmodularFn,
+    source: &mut dyn StreamSource,
+    k: usize,
+    epsilon: f64,
+    batch: usize,
+    threads: usize,
+) -> SieveResult {
+    let mut engine = BatchedSieve::new(f, k, epsilon, threads);
+    loop {
+        let es = source.next_batch(batch.max(1));
+        if es.is_empty() {
+            break;
+        }
+        engine.process_batch(&es);
+    }
+    engine.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::constraints::cardinality::Cardinality;
+    use crate::constraints::Constraint;
+    use crate::data::synth::{gaussian_blobs, SynthConfig};
+    use crate::data::transactions::zipf_transactions;
+    use crate::objective::coverage::Coverage;
+    use crate::objective::facility::FacilityLocation;
+    use crate::stream::source::VecSource;
+    use std::sync::Arc;
+
+    /// The classic element-at-a-time sieve (the pre-refactor
+    /// `algorithms::sieve_streaming` loop, verbatim semantics) — the oracle
+    /// the batched engine must match exactly.
+    fn reference_sieve(
+        f: &dyn SubmodularFn,
+        ground: &[usize],
+        k: usize,
+        epsilon: f64,
+    ) -> (Vec<usize>, f64) {
+        let base = 1.0 + epsilon;
+        let grid = |lo: f64, hi: f64| {
+            let i_lo = (lo.max(1e-12).ln() / base.ln()).floor() as i64;
+            let i_hi = (hi.max(1e-12).ln() / base.ln()).ceil() as i64;
+            i_lo..=i_hi
+        };
+        let mut sieves: BTreeMap<i64, Box<dyn State + '_>> = BTreeMap::new();
+        let mut best_singleton = 0.0f64;
+        for &e in ground {
+            let mut probe = f.state();
+            let fe = probe.gain(e);
+            if fe > best_singleton {
+                best_singleton = fe;
+                let range = grid(best_singleton, 2.0 * k as f64 * best_singleton);
+                sieves.retain(|i, _| range.contains(i));
+                for i in range {
+                    sieves.entry(i).or_insert_with(|| f.state());
+                }
+            }
+            for (&i, sieve) in sieves.iter_mut() {
+                let sel = sieve.selected().len();
+                if sel >= k {
+                    continue;
+                }
+                let v = base.powi(i as i32);
+                let needed = (v / 2.0 - sieve.value()) / (k - sel) as f64;
+                let g = sieve.gain(e);
+                if g >= needed && g > 0.0 {
+                    sieve.push(e);
+                }
+            }
+        }
+        match sieves
+            .into_values()
+            .max_by(|a, b| a.value().partial_cmp(&b.value()).unwrap())
+        {
+            Some(s) => (s.selected().to_vec(), s.value()),
+            None => (Vec::new(), 0.0),
+        }
+    }
+
+    #[test]
+    fn engine_matches_element_at_a_time_reference_exactly() {
+        // facility
+        let ds = Arc::new(gaussian_blobs(&SynthConfig::tiny_images(220, 6), 17));
+        let fac = FacilityLocation::from_dataset(&ds);
+        // coverage
+        let td = Arc::new(zipf_transactions(180, 160, 7, 1.1, 4));
+        let cov = Coverage::new(&td);
+        let cases: [(&str, &dyn SubmodularFn, usize); 2] =
+            [("facility", &fac, 220), ("coverage", &cov, 180)];
+        for (label, f, n) in cases {
+            let ground: Vec<usize> = (0..n).rev().collect(); // non-trivial order
+            let (ref_sol, ref_val) = reference_sieve(f, &ground, 8, 0.1);
+            for batch in [1usize, 7, 64, 4096] {
+                let mut src = VecSource::new(ground.clone());
+                let r = sieve_stream(f, &mut src, 8, 0.1, batch, 1);
+                assert_eq!(r.solution, ref_sol, "{label}: batch={batch} changed the solution");
+                assert_eq!(r.value, ref_val, "{label}: batch={batch} changed the value");
+                assert_eq!(r.elements, n);
+            }
+        }
+    }
+
+    #[test]
+    fn peak_live_within_bound_even_on_adversarial_order() {
+        // Ascending singleton values force maximal ladder churn.
+        use crate::stream::source::{DriftSource, StreamOrder};
+        let ds = Arc::new(gaussian_blobs(&SynthConfig::tiny_images(300, 6), 23));
+        let f = FacilityLocation::from_dataset(&ds);
+        for (k, eps) in [(5usize, 0.1f64), (10, 0.2), (20, 0.5)] {
+            let mut src = DriftSource::new(&ds, ds.ids(), StreamOrder::ValueAscending);
+            let r = sieve_stream(&f, &mut src, k, eps, 32, 1);
+            assert!(
+                r.peak_live <= r.bound,
+                "k={k} ε={eps}: peak {} exceeds bound {}",
+                r.peak_live,
+                r.bound
+            );
+            assert!(r.peak_live > 0, "sieve committed nothing");
+            assert!(r.union.len() <= r.bound);
+            assert!(r.solution.len() <= k);
+        }
+    }
+
+    #[test]
+    fn union_contains_solution_and_is_deduped() {
+        let ds = Arc::new(gaussian_blobs(&SynthConfig::tiny_images(150, 6), 29));
+        let f = FacilityLocation::from_dataset(&ds);
+        let mut src = VecSource::shuffled(ds.ids(), 3);
+        let r = sieve_stream(&f, &mut src, 6, 0.2, 16, 1);
+        let union: std::collections::HashSet<_> = r.union.iter().collect();
+        assert_eq!(union.len(), r.union.len(), "union must be deduped");
+        for e in &r.solution {
+            assert!(union.contains(e), "solution must be inside the union");
+        }
+        let mut sorted = r.union.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, r.union, "union must be sorted");
+    }
+
+    #[test]
+    fn quality_at_least_half_of_greedy_minus_eps() {
+        use crate::algorithms::{greedy::Greedy, Maximizer};
+        let ds = Arc::new(gaussian_blobs(&SynthConfig::tiny_images(200, 8), 31));
+        let f = FacilityLocation::from_dataset(&ds);
+        let ground = ds.ids();
+        let c = Cardinality::new(10);
+        let mut rng = crate::util::rng::Rng::new(0);
+        let greedy = Greedy.maximize(&f, &ground, &c, &mut rng);
+        let mut src = VecSource::new(ground.clone());
+        let r = sieve_stream(&f, &mut src, c.rho(), 0.1, 64, 1);
+        assert!(
+            r.value >= 0.45 * greedy.value,
+            "sieve {} vs greedy {}",
+            r.value,
+            greedy.value
+        );
+    }
+
+    #[test]
+    fn empty_stream_and_degenerate_inputs() {
+        let ds = Arc::new(gaussian_blobs(&SynthConfig::tiny_images(20, 4), 5));
+        let f = FacilityLocation::from_dataset(&ds);
+        let mut src = VecSource::new(Vec::new());
+        let r = sieve_stream(&f, &mut src, 4, 0.2, 8, 1);
+        assert!(r.solution.is_empty());
+        assert_eq!(r.value, 0.0);
+        assert_eq!(r.elements, 0);
+        assert_eq!(r.peak_live, 0);
+    }
+
+    #[test]
+    fn candidate_bound_monotonicity() {
+        // Finer ladders and larger budgets can only raise the bound.
+        assert!(candidate_bound(10, 0.1) >= candidate_bound(10, 0.5));
+        assert!(candidate_bound(20, 0.1) >= candidate_bound(10, 0.1));
+        assert!(candidate_bound(1, 0.5) >= 1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_epsilon_rejected() {
+        candidate_bound(5, 1.0);
+    }
+}

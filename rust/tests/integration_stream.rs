@@ -1,0 +1,186 @@
+//! Cross-layer guarantees of the bounded-memory streaming subsystem:
+//!
+//! 1. the batched sieve's output is **identical** across batch sizes
+//!    {1, 64, 4096} and thread counts on a fixed-order stream;
+//! 2. peak live candidates never exceed the O(k·log(k)/ε) ladder bound,
+//!    even under adversarial (value-ascending) arrival orders;
+//! 3. `stream_greedi` is deterministic under `FaultPlan` retries — map
+//!    tasks are pure functions of (shard, seed), so rescheduling loses
+//!    nothing;
+//! 4. the protocol runs end-to-end on a chunked disk source and reports
+//!    its per-machine memory peaks in `RunMetrics`;
+//! 5. on the Fig. 4 facility-location setup the one-pass protocol reaches
+//!    ≥ 85% of two-round GreeDi's objective at equal (m, k).
+
+use std::sync::Arc;
+
+use greedi::coordinator::protocol::{self, Protocol, RunSpec};
+use greedi::coordinator::{FacilityProblem, Problem};
+use greedi::data::loader::save_csv;
+use greedi::data::synth::{gaussian_blobs, SynthConfig};
+use greedi::mapreduce::fault::FaultPlan;
+use greedi::objective::facility::FacilityLocation;
+use greedi::stream::{
+    candidate_bound, sieve_stream, ChunkedCsvSource, DriftSource, StreamGreedi, StreamOrder,
+    StreamSource, VecSource,
+};
+
+const BATCH_SWEEP: [usize; 3] = [1, 64, 4096];
+const THREAD_SWEEP: [usize; 3] = [1, 2, 8];
+
+#[test]
+fn sieve_identical_across_batch_sizes_and_threads_on_fixed_order() {
+    // n = 600 gives the facility window multiple shards (|W|/256 ≥ 2), so
+    // the parallel gain engine genuinely fans out inside the sieve pricing.
+    let ds = Arc::new(gaussian_blobs(&SynthConfig::tiny_images(600, 8), 41));
+    let f = FacilityLocation::from_dataset(&ds);
+    let order: Vec<usize> = VecSource::shuffled(ds.ids(), 7).next_batch(600);
+    assert_eq!(order.len(), 600);
+
+    let mut reference_src = VecSource::new(order.clone());
+    let reference = sieve_stream(&f, &mut reference_src, 10, 0.2, 1, 1);
+    assert!(!reference.solution.is_empty(), "sieve must select something");
+
+    for batch in BATCH_SWEEP {
+        for threads in THREAD_SWEEP {
+            let mut src = VecSource::new(order.clone());
+            let r = sieve_stream(&f, &mut src, 10, 0.2, batch, threads);
+            assert_eq!(
+                reference.solution, r.solution,
+                "batch={batch} threads={threads} changed the selection"
+            );
+            assert_eq!(reference.value, r.value, "batch={batch} threads={threads}");
+            assert_eq!(
+                reference.union, r.union,
+                "batch={batch} threads={threads} changed the summary"
+            );
+            assert_eq!(r.elements, 600);
+        }
+    }
+}
+
+#[test]
+fn peak_live_candidates_respect_ladder_bound() {
+    let ds = Arc::new(gaussian_blobs(&SynthConfig::tiny_images(500, 8), 43));
+    let f = FacilityLocation::from_dataset(&ds);
+    // Value-ascending order is the ladder's worst case: every improvement
+    // of the best singleton reshapes the rung range.
+    for order in [StreamOrder::ValueAscending, StreamOrder::Drift, StreamOrder::ValueDescending] {
+        for (k, eps) in [(5usize, 0.1f64), (15, 0.2), (25, 0.5)] {
+            let mut src = DriftSource::new(&ds, ds.ids(), order);
+            let r = sieve_stream(&f, &mut src, k, eps, 64, 1);
+            let bound = candidate_bound(k, eps);
+            assert_eq!(r.bound, bound);
+            assert!(
+                r.peak_live <= bound,
+                "{order:?} k={k} ε={eps}: peak {} > bound {bound}",
+                r.peak_live
+            );
+            assert!(r.union.len() <= bound, "{order:?}: summary exceeds the bound");
+        }
+    }
+}
+
+#[test]
+fn stream_greedi_deterministic_under_fault_plan_retries() {
+    let ds = Arc::new(gaussian_blobs(&SynthConfig::tiny_images(400, 8), 47));
+    let p = FacilityProblem::new(&ds);
+    let spec = RunSpec::new(5, 8).epsilon(0.2).batch(32).seed(11);
+
+    let clean = StreamGreedi.run(&p, &spec);
+    let cs = clean.stream.clone().expect("stats");
+    assert_eq!(cs.retries, 0);
+
+    // Several deterministic fault plans: every one must reproduce the clean
+    // run exactly, and collectively they must actually inject retries.
+    let mut total_retries = 0usize;
+    for plan_seed in 1..=5u64 {
+        let faulty = StreamGreedi
+            .run_with_faults(&p, &spec, &FaultPlan::new(0.5, 30, plan_seed))
+            .expect("30 attempts at p=0.5 cannot plausibly exhaust");
+        assert_eq!(clean.solution, faulty.solution, "plan {plan_seed}: retries changed the solution");
+        assert_eq!(clean.value, faulty.value, "plan {plan_seed}");
+        assert_eq!(
+            clean.oracle_calls, faulty.oracle_calls,
+            "plan {plan_seed}: oracle accounting must not see retries"
+        );
+        let fs = faulty.stream.expect("stats");
+        assert_eq!(cs.peak_live_per_machine, fs.peak_live_per_machine, "plan {plan_seed}");
+        assert_eq!(cs.elements_per_machine, fs.elements_per_machine, "plan {plan_seed}");
+        total_retries += fs.retries;
+    }
+    assert!(total_retries > 0, "p=0.5 across 5 plans and 6 tasks must retry somewhere");
+}
+
+#[test]
+fn stream_greedi_end_to_end_on_chunked_disk_source() {
+    // The full bounded-memory story: the corpus streams off disk in chunks
+    // feeding the sieve, and the protocol run over the same data reports
+    // per-machine peaks within the bound.
+    let ds = Arc::new(gaussian_blobs(&SynthConfig::tiny_images(300, 8), 53));
+    let path = std::env::temp_dir().join("greedi_stream_e2e.csv");
+    save_csv(&ds, &path).unwrap();
+
+    // (a) single-machine pass directly off the chunked source
+    let f = FacilityLocation::from_dataset(&ds);
+    let mut src = ChunkedCsvSource::open(&path).unwrap();
+    let r = sieve_stream(&f, &mut src, 10, 0.2, 64, 1);
+    assert!(src.error().is_none());
+    assert_eq!(src.rows_read(), 300, "one pass must consume the whole file");
+    assert_eq!(r.elements, 300);
+    assert!(!r.solution.is_empty());
+    assert!(r.peak_live <= r.bound);
+    // identical to the same pass over an in-memory source in file order
+    let mut mem = VecSource::new(ds.ids());
+    let rm = sieve_stream(&f, &mut mem, 10, 0.2, 64, 1);
+    assert_eq!(r.solution, rm.solution, "ingest path must not change the math");
+    assert_eq!(r.value, rm.value);
+
+    // (b) the registered protocol end-to-end with memory accounting
+    let p = FacilityProblem::new(&ds);
+    let run = protocol::by_name("stream_greedi")
+        .unwrap()
+        .run(&p, &RunSpec::new(4, 10).epsilon(0.2).batch(64).seed(3));
+    assert!(run.solution.len() <= 10);
+    assert!((run.value - p.global().eval(&run.solution)).abs() < 1e-9);
+    let stats = run.stream.expect("protocol must report stream stats");
+    assert_eq!(stats.peak_live_per_machine.len(), 4);
+    assert!(stats.within_bound(), "peak {} vs bound {}", stats.peak_live(), stats.live_bound);
+    assert_eq!(stats.elements_per_machine.iter().sum::<usize>(), 300);
+
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn stream_greedi_within_85_percent_of_greedi_on_fig4_setup() {
+    // Scaled Fig. 4 exemplar-clustering setup (tiny-images surrogate),
+    // equal (m, k) for both protocols — the acceptance criterion.
+    let ds = Arc::new(gaussian_blobs(&SynthConfig::tiny_images(500, 16), 42));
+    let p = FacilityProblem::new(&ds);
+    let (m, k) = (5, 15);
+    let spec = RunSpec::new(m, k).epsilon(0.1).batch(64).seed(42);
+    let greedi = protocol::by_name("greedi").unwrap().run(&p, &spec);
+    let stream = protocol::by_name("stream_greedi").unwrap().run(&p, &spec);
+    assert!(
+        stream.value >= 0.85 * greedi.value,
+        "stream_greedi {} < 85% of greedi {}",
+        stream.value,
+        greedi.value
+    );
+    // and the memory story must hold while quality does
+    assert!(stream.stream.expect("stats").within_bound());
+}
+
+#[test]
+fn protocol_threads_do_not_change_stream_greedi_results() {
+    let ds = Arc::new(gaussian_blobs(&SynthConfig::tiny_images(400, 8), 59));
+    let p = FacilityProblem::new(&ds);
+    let base = RunSpec::new(4, 6).epsilon(0.2).batch(32).seed(17);
+    let serial = StreamGreedi.run(&p, &base);
+    for threads in [2usize, 4, 8] {
+        let par = StreamGreedi.run(&p, &base.clone().threads(threads));
+        assert_eq!(serial.solution, par.solution, "threads={threads}");
+        assert_eq!(serial.value, par.value, "threads={threads}");
+        assert_eq!(serial.oracle_calls, par.oracle_calls, "threads={threads}");
+    }
+}
