@@ -7,7 +7,8 @@
 //!   3. incremental Cholesky vs dense log-det for info-gain;
 //!   4. the two-round protocol end-to-end.
 
-use std::sync::Arc;
+use std::ops::Range;
+use std::sync::{Arc, Mutex};
 
 use greedi::algorithms::{greedy::Greedy, lazy::LazyGreedy, stochastic::StochasticGreedy, Maximizer};
 use greedi::constraints::cardinality::Cardinality;
@@ -16,10 +17,13 @@ use greedi::coordinator::protocol::{Protocol, RunSpec};
 use greedi::coordinator::FacilityProblem;
 use greedi::data::synth::{gaussian_blobs, parkinsons_like, SynthConfig};
 use greedi::linalg::{IncrementalCholesky, Matrix};
-use greedi::objective::facility::FacilityLocation;
+use greedi::objective::facility::{
+    kernel_name, kernel_sq_dist, kernel_sq_dist_scalar, FacilityLocation,
+};
 use greedi::objective::infogain::InfoGain;
 use greedi::objective::SubmodularFn;
 use greedi::util::bench::{black_box, Bencher};
+use greedi::util::executor::{parallel_map, shard_ranges};
 use greedi::util::rng::Rng;
 
 /// The pre-PR serial scalar gain path, frozen here as the perf baseline the
@@ -52,6 +56,36 @@ fn serial_scalar_gains(
             sum
         })
         .collect()
+}
+
+/// The pre-PR-4 fan-out model, frozen as a timing baseline: scoped OS
+/// threads spawned per batch (what `util::threadpool::parallel_map` did
+/// before the persistent executor). The ~10 µs-per-batch launch cost this
+/// pays is exactly what the executor's small-window rows measure against.
+fn scoped_spawn_map<T: Send, R: Send, F: Fn(usize, T) -> R + Sync>(
+    items: Vec<T>,
+    workers: usize,
+    f: F,
+) -> Vec<R> {
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let work: Mutex<std::vec::IntoIter<(usize, T)>> =
+        Mutex::new(items.into_iter().enumerate().collect::<Vec<_>>().into_iter());
+    let mut results: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    let slots: Vec<Mutex<&mut Option<R>>> = results.iter_mut().map(Mutex::new).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..workers.max(1).min(n) {
+            scope.spawn(|| loop {
+                let next = { work.lock().unwrap().next() };
+                let Some((idx, item)) = next else { break };
+                **slots[idx].lock().unwrap() = Some(f(idx, item));
+            });
+        }
+    });
+    drop(slots);
+    results.into_iter().map(|r| r.expect("task did not complete")).collect()
 }
 
 fn main() {
@@ -109,6 +143,88 @@ fn main() {
             out.push(fac_gain.eval(&[100, c]) - base);
         }
         black_box(out)
+    });
+
+    // ---- 1b. small-window sweep: executor vs per-batch scoped spawn ------
+    // |W| ∈ {1k, 10k, 100k} × threads {1, 2, 4, 8} on narrow 16-candidate
+    // batches — exactly the shape where the old per-batch thread launch
+    // dominated and bounded the speedup. "scoped-spawn" rows run the same
+    // shard boundaries + shard-ordered scalar reduction through per-batch
+    // `thread::scope` fan-out (the frozen pre-PR engine shape); "executor"
+    // rows are the live `par_batch_gains` path on the persistent pool.
+    println!("\n(facility distance kernel: {})\n", kernel_name());
+    let cands16: Vec<usize> = (0..16).collect();
+    for &w in &[1_000usize, 10_000, 100_000] {
+        let ds_w = Arc::new(gaussian_blobs(&SynthConfig::tiny_images(w, 16), 7));
+        let fw = FacilityLocation::from_dataset(&ds_w);
+        let mut st = fw.state();
+        st.push(0);
+        // frozen-baseline state {0}, same buffer shape/occupancy as `st`
+        let d = ds_w.d;
+        let packed = ds_w.xs.clone();
+        let mut curmin: Vec<f64> = (0..w)
+            .map(|v| ds_w.row(v).iter().map(|&x| (x as f64) * (x as f64)).sum())
+            .collect();
+        for v in 0..w {
+            let d2 = ds_w.sqdist(0, v);
+            if d2 < curmin[v] {
+                curmin[v] = d2;
+            }
+        }
+        let erows: Vec<&[f32]> = cands16.iter().map(|&c| ds_w.row(c)).collect();
+        // mirror the engine's shard_count(|W|): |W|/256 clamped to [1, 16]
+        let shards = shard_ranges(w, (w / 256).clamp(1, 16));
+        for &t in &[1usize, 2, 4, 8] {
+            b.bench(&format!("smallwin |W|={w}: 16 gains, scoped-spawn ({t}t)"), || {
+                let partials = scoped_spawn_map(shards.clone(), t, |_, r: Range<usize>| {
+                    serial_scalar_gains(
+                        &packed[r.start * d..r.end * d],
+                        d,
+                        &curmin[r.start..r.end],
+                        &erows,
+                    )
+                });
+                let mut out = vec![0.0f64; erows.len()];
+                for p in &partials {
+                    for (acc, v) in out.iter_mut().zip(p) {
+                        *acc += v;
+                    }
+                }
+                black_box(out)
+            });
+            b.bench(&format!("smallwin |W|={w}: 16 gains, executor ({t}t)"), || {
+                black_box(st.par_batch_gains(&cands16, t))
+            });
+        }
+    }
+
+    // Pure launch-overhead isolation: trivial tasks, so the row measures
+    // fan-out machinery only (thread spawn+join vs deque submit+wake).
+    for &t in &[2usize, 4, 8] {
+        b.bench(&format!("spawn overhead: scoped thread::scope ({t} tasks)"), || {
+            black_box(scoped_spawn_map((0..t).collect::<Vec<usize>>(), t, |_, x| x))
+        });
+        b.bench(&format!("spawn overhead: persistent executor ({t} tasks)"), || {
+            black_box(parallel_map((0..t).collect::<Vec<usize>>(), t, |_, x| x))
+        });
+    }
+
+    // ---- 1c. SIMD vs scalar distance kernel -------------------------------
+    let ka: Vec<f32> = (0..64).map(|i| (i as f32 * 0.37).sin()).collect();
+    let kb: Vec<f32> = (0..64).map(|i| (i as f32 * 0.11).cos()).collect();
+    b.bench("kernel: sq_dist dispatched, d=64 x 10k", || {
+        let mut acc = 0.0f32;
+        for _ in 0..10_000 {
+            acc += kernel_sq_dist(black_box(&ka), black_box(&kb));
+        }
+        black_box(acc)
+    });
+    b.bench("kernel: sq_dist scalar, d=64 x 10k", || {
+        let mut acc = 0.0f32;
+        for _ in 0..10_000 {
+            acc += kernel_sq_dist_scalar(black_box(&ka), black_box(&kb));
+        }
+        black_box(acc)
     });
 
     // Sections 2+ run on the fast-mode-sized dataset.
@@ -223,6 +339,22 @@ fn main() {
         ) {
             println!("sharded gain engine ({threads}t) speedup over pre-PR serial scalar: {s:.1}x");
         }
+    }
+    for &w in &[1_000usize, 10_000, 100_000] {
+        for &t in &[1usize, 2, 4, 8] {
+            if let Some(s) = b.speedup(
+                &format!("smallwin |W|={w}: 16 gains, scoped-spawn ({t}t)"),
+                &format!("smallwin |W|={w}: 16 gains, executor ({t}t)"),
+            ) {
+                println!("executor vs scoped-spawn (|W|={w}, {t}t): {s:.2}x");
+            }
+        }
+    }
+    if let Some(s) = b.speedup(
+        "kernel: sq_dist scalar, d=64 x 10k",
+        "kernel: sq_dist dispatched, d=64 x 10k",
+    ) {
+        println!("dispatched distance kernel ({}) speedup over scalar: {s:.2}x", kernel_name());
     }
     if let Some(s) = b.speedup(
         "infogain: dense logdet eval",

@@ -12,33 +12,44 @@
 //!
 //! The classic formulation reprices ONE stale heap entry per oracle call,
 //! which starves any batched/parallel gain backend — the oracle never sees
-//! more than one candidate at a time. This implementation pops up to
-//! [`REPRICE_BLOCK`] stale entries and reprices them with a single
+//! more than one candidate at a time. This implementation pops a *block* of
+//! stale entries and reprices them with a single
 //! [`State::par_batch_gains`](crate::objective::State) call; the winner
 //! commits only when its *fresh* bound resurfaces at the top of the heap,
 //! so the selected set is bit-identical to plain greedy (and to the
 //! one-at-a-time lazy variant) up to ties, at any thread count.
 //!
-//! `B = 16` balances two costs that move in opposite directions: below
-//! ~8 the batch is too narrow for the sharded engine (and for any wide
-//! backend) to amortize its launch overhead, while above ~32 the extra
-//! repricings clearly exceed what a round typically consumes — on benign
-//! data the classic variant refreshes only a handful of entries per
-//! commit, so every additional block slot is speculative oracle work the
-//! lazy heap existed to avoid. 16 stays well under plain greedy's call
-//! count (`fewer_oracle_calls_than_plain` guards the economics);
-//! `bench_hotpath` records the wallclock so the choice can be re-examined
-//! against measurements as the perf trail accumulates. Note the parallel
-//! payoff applies to *window-sharded* objectives (facility location fans
-//! its window out for any batch width); candidate-sharded objectives
-//! (coverage, cut) price a 16-wide batch serially by design — their
-//! per-candidate work is far too small to amortize a fan-out
-//! (`threadpool::MIN_PAR_CANDIDATES`), and their parallel win comes from
-//! the wide initial full-ground pass instead. The block size
-//! must NOT depend on the thread count: repriced-but-unused entries carry
-//! fresh stamps, and although they never change the selected set, the
-//! oracle-call count is part of the reported metrics and has to stay
-//! thread-invariant.
+//! ## Perf pass §B: adaptive reprice block
+//!
+//! A fixed `B = 16` (the PR-2 sweep winner) overpays on easy instances —
+//! on benign data the classic variant refreshes only a handful of entries
+//! per commit, so most of a wide block is speculative oracle work the lazy
+//! heap existed to avoid — and underpays on adversarial ones, where the
+//! top of the heap stays stale for many consecutive reprice rounds and a
+//! narrow block starves the batched engine. The block width now *adapts to
+//! the observed fresh-hit sequence and nothing else*:
+//!
+//! * start at [`MIN_REPRICE_BLOCK`];
+//! * **grow** (double, capped at [`MAX_REPRICE_BLOCK`]) when a reprice
+//!   round is followed by another reprice round with no commit in between
+//!   — the freshly priced bounds failed to reach the top, so the heap is
+//!   churning and wider batches amortize better;
+//! * **shrink** (halve, floored at [`MIN_REPRICE_BLOCK`]) after every
+//!   commit — the heap is settling and narrow blocks waste less.
+//!
+//! The fresh/stale pop sequence is a pure function of the cached bounds,
+//! which are bit-identical at every thread count (the gain engine's
+//! contract), so the block trajectory — and with it the reported
+//! oracle-call count — stays **thread-invariant**: the width never reads
+//! the thread count, pool size, or any timing. Selection is untouched (a
+//! winner still commits only when its *fresh* bound resurfaces at the top),
+//! so lazy == greedy bit-identically up to ties, exactly as before. Note
+//! the parallel payoff applies to *window-sharded* objectives (facility
+//! location fans its window out for any batch width); candidate-sharded
+//! objectives (coverage, cut) price narrow batches serially by design —
+//! their per-candidate work is far too small to amortize a fan-out
+//! (`executor::MIN_PAR_CANDIDATES`), and their parallel win comes from the
+//! wide initial full-ground pass instead.
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
@@ -48,9 +59,11 @@ use crate::constraints::Constraint;
 use crate::objective::SubmodularFn;
 use crate::util::rng::Rng;
 
-/// Stale heap entries repriced per batched oracle call (see module docs for
-/// the rationale; fixed so runs are thread-count invariant).
-const REPRICE_BLOCK: usize = 16;
+/// Smallest (and initial) reprice block — also the post-commit reset floor.
+const MIN_REPRICE_BLOCK: usize = 4;
+
+/// Widest reprice block the stale-streak doubling may reach.
+const MAX_REPRICE_BLOCK: usize = 64;
 
 /// Heap entry: cached upper bound for an element, stamped with the solution
 /// size at which it was computed.
@@ -118,7 +131,12 @@ impl Maximizer for LazyGreedy {
             .collect();
 
         let mut round = 0usize;
-        let mut batch: Vec<usize> = Vec::with_capacity(REPRICE_BLOCK);
+        let mut batch: Vec<usize> = Vec::with_capacity(MAX_REPRICE_BLOCK);
+        // Adaptive block width, driven ONLY by the fresh/stale pop sequence
+        // (module docs) — never by the thread count, so oracle-call metrics
+        // stay thread-invariant.
+        let mut block = MIN_REPRICE_BLOCK;
+        let mut repriced_since_commit = false;
         while let Some(top) = heap.pop() {
             if !constraint.can_add(state.selected(), top.element) {
                 // infeasible *now*; it can become feasible again only for
@@ -137,17 +155,24 @@ impl Maximizer for LazyGreedy {
                 }
                 state.push(top.element);
                 round += 1;
+                block = (block / 2).max(MIN_REPRICE_BLOCK);
+                repriced_since_commit = false;
                 continue;
             }
-            // Stale: batch-reprice. Collect up to REPRICE_BLOCK stale
-            // feasible entries from the top of the heap (stopping at the
-            // first fresh one — its bound is already exact), price them all
-            // with ONE batched call, and push the fresh bounds back. The
-            // winner commits on a later pop iff its fresh bound still tops
-            // the heap.
+            // Stale: batch-reprice. A stale top right after a reprice means
+            // the fresh bounds failed to surface — widen; a commit between
+            // reprices resets the streak (and halved the block above).
+            if repriced_since_commit {
+                block = (block * 2).min(MAX_REPRICE_BLOCK);
+            }
+            // Collect up to `block` stale feasible entries from the top of
+            // the heap (stopping at the first fresh one — its bound is
+            // already exact), price them all with ONE batched call, and
+            // push the fresh bounds back. The winner commits on a later pop
+            // iff its fresh bound still tops the heap.
             batch.clear();
             batch.push(top.element);
-            while batch.len() < REPRICE_BLOCK {
+            while batch.len() < block {
                 match heap.peek() {
                     Some(next) if next.stamp != round => {
                         let next = heap.pop().expect("peeked entry");
@@ -165,6 +190,7 @@ impl Maximizer for LazyGreedy {
             for (&e, &g) in batch.iter().zip(fresh.iter()) {
                 heap.push(Entry { bound: g, element: e, stamp: round });
             }
+            repriced_since_commit = true;
         }
 
         RunResult {
@@ -274,6 +300,27 @@ mod tests {
             assert_eq!(serial.solution, par.solution, "threads={threads}");
             assert_eq!(serial.value, par.value, "threads={threads}");
             assert_eq!(serial.oracle_calls, par.oracle_calls, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn adaptive_block_deterministic_across_runs_and_threads() {
+        // The block width derives only from the fresh/stale pop sequence,
+        // so repeated runs AND different thread counts must agree on the
+        // oracle-call count exactly (it is part of reported metrics).
+        let ds = Arc::new(gaussian_blobs(&SynthConfig::tiny_images(400, 8), 31));
+        let f = FacilityLocation::from_dataset(&ds);
+        let ground: Vec<usize> = (0..400).collect();
+        let c = Cardinality::new(12);
+        let mut rng = Rng::new(0);
+        let a = LazyGreedy.maximize_threaded(&f, &ground, &c, &mut rng, 1);
+        let b = LazyGreedy.maximize_threaded(&f, &ground, &c, &mut rng, 1);
+        assert_eq!(a.oracle_calls, b.oracle_calls);
+        assert_eq!(a.solution, b.solution);
+        for t in [2usize, 8] {
+            let p = LazyGreedy.maximize_threaded(&f, &ground, &c, &mut rng, t);
+            assert_eq!(a.oracle_calls, p.oracle_calls, "threads={t}");
+            assert_eq!(a.solution, p.solution, "threads={t}");
         }
     }
 

@@ -6,8 +6,10 @@
 //! as an independent unit of work whose own wallclock is measured, and a
 //! stage's **simulated parallel time** is the maximum task time (every
 //! machine runs its task concurrently in the modeled cluster) plus the
-//! driver-side shuffle cost. Tasks execute on a thread pool when real
-//! parallelism is available, or sequentially when `threads == 1` — the
+//! driver-side shuffle cost. Tasks multiplex onto the persistent
+//! work-stealing pool (`util::executor`) when `threads > 1` — no per-stage
+//! thread launch, and nested oracle fan-out inside a task shares the same
+//! workers — or run sequentially inline when `threads == 1`; the
 //! accounting is identical either way, and sequential execution keeps the
 //! per-task timings interference-free on small hosts.
 //!
@@ -19,7 +21,7 @@ pub mod partition;
 
 use std::time::Instant;
 
-use crate::util::threadpool::parallel_map;
+use crate::util::executor::parallel_map;
 
 /// Per-stage execution report (the paper's per-stage metrics).
 #[derive(Debug, Clone, Default)]

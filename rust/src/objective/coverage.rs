@@ -8,7 +8,7 @@ use std::sync::Arc;
 
 use super::{State, SubmodularFn};
 use crate::data::transactions::TransactionData;
-use crate::util::threadpool::parallel_gains;
+use crate::util::executor::parallel_gains;
 
 /// Weighted coverage over a transaction database.
 pub struct Coverage {

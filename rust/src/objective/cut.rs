@@ -8,7 +8,7 @@ use std::sync::Arc;
 
 use super::{State, SubmodularFn};
 use crate::data::graph::Digraph;
-use crate::util::threadpool::parallel_gains;
+use crate::util::executor::parallel_gains;
 
 /// Directed cut function, optionally restricted to an induced subgraph.
 pub struct GraphCut {

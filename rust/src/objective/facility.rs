@@ -30,14 +30,38 @@
 //! evaluation path bit-identical to every other. The inner distance loop
 //! accumulates in [`LANES`] independent f32 lanes so LLVM auto-vectorizes
 //! the d-loop, and `push` maintains an f32 mirror of `curmin` so the XLA
-//! backend path never re-allocates or converts per call.
+//! backend path never re-allocates or converts per call. The shards
+//! execute on the persistent work-stealing pool (`util::executor`), so the
+//! fan-out pays no per-batch thread-launch cost.
+//!
+//! ## Perf pass §B: runtime-dispatched explicit SIMD distance kernel
+//!
+//! On `x86_64` the distance kernel has a hand-rolled **AVX2 + FMA**
+//! implementation ([`kernel_sq_dist`] and the fused per-shard loops in
+//! `kernel_x86`), selected once per process via `is_x86_feature_detected!`
+//! with the [`LANES`]-lane scalar loop as the portable fallback (and as the
+//! forced path under `GREEDI_NO_SIMD=1`, which CI exercises). Auto-
+//! vectorization already kept a SIMD register busy; the explicit kernel
+//! additionally fuses the multiply-add (`vfmadd231ps`) and removes the
+//! epilogue LLVM generates for the generic lane loop.
+//!
+//! **Determinism contract (per dispatch path).** Every evaluation surface —
+//! `gain`, `batch_gains`, `par_batch_gains`, `push`, and through them
+//! `eval` — routes through the *same* dispatched kernel, the same shard
+//! boundaries, and the same shard-ordered reduction, so results remain
+//! bit-identical across 1/2/N threads and across repeated runs on the same
+//! machine. SIMD vs scalar may differ in the last ulp (FMA keeps the
+//! intermediate product unrounded; the scalar path rounds twice), so runs
+//! are comparable across ISAs/dispatch paths only to f32 tolerance — the
+//! contract is *per dispatch path*, and the path is fixed for the life of
+//! the process (detection is cached).
 
 use std::ops::Range;
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 
 use super::{State, SubmodularFn};
 use crate::data::Dataset;
-use crate::util::threadpool::{parallel_map, shard_ranges};
+use crate::util::executor::{parallel_map, shard_ranges};
 
 /// Pluggable batched-gain backend (implemented by `runtime::xla_facility`).
 pub trait GainBackend: Sync + Send {
@@ -67,9 +91,10 @@ fn shard_count(window_len: usize) -> usize {
 }
 
 /// Squared Euclidean distance in f32 with [`LANES`] independent accumulator
-/// chains and a deterministic tree reduction.
+/// chains and a deterministic tree reduction — the portable kernel, and the
+/// fallback whenever AVX2+FMA is unavailable or disabled.
 #[inline]
-fn sq_dist(a: &[f32], b: &[f32]) -> f32 {
+fn sq_dist_scalar(a: &[f32], b: &[f32]) -> f32 {
     let mut lanes = [0.0f32; LANES];
     let mut ca = a.chunks_exact(LANES);
     let mut cb = b.chunks_exact(LANES);
@@ -87,6 +112,213 @@ fn sq_dist(a: &[f32], b: &[f32]) -> f32 {
     let q0 = (lanes[0] + lanes[4]) + (lanes[1] + lanes[5]);
     let q1 = (lanes[2] + lanes[6]) + (lanes[3] + lanes[7]);
     (q0 + q1) + tail
+}
+
+/// Whether the explicit AVX2+FMA kernel is active for this process.
+/// Detected once and cached: `GREEDI_NO_SIMD` (any value but `0`) forces the
+/// scalar path; otherwise `x86_64` hosts with AVX2 *and* FMA take the
+/// intrinsics path. Fixing the path per process is what keeps repeated runs
+/// on one machine bit-identical (the determinism contract in the module
+/// docs is per dispatch path).
+#[allow(unreachable_code)]
+pub fn simd_active() -> bool {
+    static ACTIVE: OnceLock<bool> = OnceLock::new();
+    *ACTIVE.get_or_init(|| {
+        if std::env::var_os("GREEDI_NO_SIMD").is_some_and(|v| v != "0") {
+            return false;
+        }
+        #[cfg(target_arch = "x86_64")]
+        {
+            return is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma");
+        }
+        false
+    })
+}
+
+/// Bench/test-facing label for the dispatched kernel.
+pub fn kernel_name() -> &'static str {
+    if simd_active() {
+        "avx2+fma"
+    } else {
+        "scalar-8lane"
+    }
+}
+
+/// Squared Euclidean distance through the runtime-dispatched kernel — the
+/// single distance primitive every facility evaluation path shares.
+#[inline]
+fn sq_dist(a: &[f32], b: &[f32]) -> f32 {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if simd_active() {
+            // SAFETY: `simd_active` returned true only after
+            // `is_x86_feature_detected!` confirmed AVX2 and FMA.
+            return unsafe { kernel_x86::sq_dist_avx2(a, b) };
+        }
+    }
+    sq_dist_scalar(a, b)
+}
+
+/// Public (bench-facing) dispatched distance kernel — see [`kernel_name`]
+/// for which path it resolves to on this host.
+#[inline]
+pub fn kernel_sq_dist(a: &[f32], b: &[f32]) -> f32 {
+    sq_dist(a, b)
+}
+
+/// Public (bench-facing) portable scalar kernel, for SIMD-vs-scalar
+/// microbenches and cross-path tolerance tests.
+#[inline]
+pub fn kernel_sq_dist_scalar(a: &[f32], b: &[f32]) -> f32 {
+    sq_dist_scalar(a, b)
+}
+
+/// Scalar per-shard gain loop (the worker kernel of the sharded engine on
+/// the portable path). See `FacilityState::gain_partial` for dispatch.
+fn gain_partial_scalar(packed: &[f32], d: usize, curmin: &[f64], erow: &[f32]) -> f64 {
+    let mut sum = 0.0f64;
+    for (idx, vrow) in packed.chunks_exact(d).enumerate() {
+        let gain = curmin[idx] - sq_dist_scalar(vrow, erow) as f64;
+        if gain > 0.0 {
+            sum += gain;
+        }
+    }
+    sum
+}
+
+/// Dispatched commit scan: commits MUST use the same kernel as gains —
+/// `curmin` is the cross-call carrier, so mixing kernels would make a gain
+/// disagree with the eval-difference it promises.
+fn push_scan(
+    packed: &[f32],
+    d: usize,
+    curmin: &mut [f64],
+    curmin32: &mut [f32],
+    erow: &[f32],
+) -> f64 {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if simd_active() {
+            // SAFETY: `simd_active` gates on `is_x86_feature_detected!`.
+            return unsafe { kernel_x86::push_scan_avx2(packed, d, curmin, curmin32, erow) };
+        }
+    }
+    push_scan_scalar(packed, d, curmin, curmin32, erow)
+}
+
+/// Scalar commit scan: lower `curmin`/`curmin32` where the new exemplar is
+/// closer, returning the summed reduction. See `FacilityState::push`.
+fn push_scan_scalar(
+    packed: &[f32],
+    d: usize,
+    curmin: &mut [f64],
+    curmin32: &mut [f32],
+    erow: &[f32],
+) -> f64 {
+    let mut sum = 0.0f64;
+    for (idx, vrow) in packed.chunks_exact(d).enumerate() {
+        let d2 = sq_dist_scalar(vrow, erow) as f64;
+        if d2 < curmin[idx] {
+            sum += curmin[idx] - d2;
+            curmin[idx] = d2;
+            curmin32[idx] = d2 as f32;
+        }
+    }
+    sum
+}
+
+/// Explicit AVX2+FMA kernels (perf pass §B). The whole per-shard loop lives
+/// inside one `#[target_feature]` function so the 8-wide distance body
+/// inlines into it — dispatch happens once per shard / per push, never per
+/// window point. Reduction order mirrors the scalar kernel's lane-pair tree
+/// (`(l0+l4)+(l1+l5)` …), but FMA keeps products unrounded, so values may
+/// differ from the scalar path in the last ulp (documented contract).
+#[cfg(target_arch = "x86_64")]
+mod kernel_x86 {
+    use std::arch::x86_64::*;
+
+    #[target_feature(enable = "avx2")]
+    #[target_feature(enable = "fma")]
+    unsafe fn hsum256(v: __m256) -> f32 {
+        // pair lanes (l0+l4, l1+l5, l2+l6, l3+l7), then the 4→1 tree —
+        // the same pairing the scalar kernel reduces with.
+        let hi = _mm256_extractf128_ps::<1>(v);
+        let lo = _mm256_castps256_ps128(v);
+        let pairs = _mm_add_ps(lo, hi);
+        let shuf = _mm_movehdup_ps(pairs); // [p1, p1, p3, p3]
+        let sums = _mm_add_ps(pairs, shuf); // [p0+p1, _, p2+p3, _]
+        let hi2 = _mm_movehl_ps(sums, sums); // lane0 = p2+p3
+        _mm_cvtss_f32(_mm_add_ss(sums, hi2))
+    }
+
+    /// 8-wide FMA squared distance; scalar tail handled after the reduce.
+    #[target_feature(enable = "avx2")]
+    #[target_feature(enable = "fma")]
+    pub unsafe fn sq_dist_avx2(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let pa = a.as_ptr();
+        let pb = b.as_ptr();
+        let mut acc = _mm256_setzero_ps();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let va = _mm256_loadu_ps(pa.add(i));
+            let vb = _mm256_loadu_ps(pb.add(i));
+            let diff = _mm256_sub_ps(va, vb);
+            acc = _mm256_fmadd_ps(diff, diff, acc);
+            i += 8;
+        }
+        let mut sum = hsum256(acc);
+        while i < n {
+            let diff = *pa.add(i) - *pb.add(i);
+            sum += diff * diff;
+            i += 1;
+        }
+        sum
+    }
+
+    /// AVX2 per-shard gain loop (same shape as `gain_partial_scalar`; the
+    /// cross-point accumulator stays f64, so only the per-point distance
+    /// differs from the portable path).
+    #[target_feature(enable = "avx2")]
+    #[target_feature(enable = "fma")]
+    pub unsafe fn gain_partial_avx2(
+        packed: &[f32],
+        d: usize,
+        curmin: &[f64],
+        erow: &[f32],
+    ) -> f64 {
+        let mut sum = 0.0f64;
+        for (idx, vrow) in packed.chunks_exact(d).enumerate() {
+            let gain = curmin[idx] - sq_dist_avx2(vrow, erow) as f64;
+            if gain > 0.0 {
+                sum += gain;
+            }
+        }
+        sum
+    }
+
+    /// AVX2 commit scan (same shape as `push_scan_scalar`).
+    #[target_feature(enable = "avx2")]
+    #[target_feature(enable = "fma")]
+    pub unsafe fn push_scan_avx2(
+        packed: &[f32],
+        d: usize,
+        curmin: &mut [f64],
+        curmin32: &mut [f32],
+        erow: &[f32],
+    ) -> f64 {
+        let mut sum = 0.0f64;
+        for (idx, vrow) in packed.chunks_exact(d).enumerate() {
+            let d2 = sq_dist_avx2(vrow, erow) as f64;
+            if d2 < curmin[idx] {
+                sum += curmin[idx] - d2;
+                curmin[idx] = d2;
+                curmin32[idx] = d2 as f32;
+            }
+        }
+        sum
+    }
 }
 
 /// Facility-location / exemplar clustering objective.
@@ -187,19 +419,22 @@ impl<'a> FacilityState<'a> {
     /// NOTE(perf §A, iteration 3): an early-exit variant (break once the
     /// partial d² passes curmin) was tried and REVERTED — the branch in the
     /// inner loop defeated auto-vectorization and cost 2.2×.
+    /// NOTE(perf §B): SIMD dispatch happens HERE, once per shard — the whole
+    /// shard loop runs inside one `#[target_feature]` function so the
+    /// intrinsics inline and the inner loop carries no dispatch branch.
     fn gain_partial(&self, e: usize, rows: &Range<usize>) -> f64 {
         let d = self.obj.data.d;
         let erow = self.obj.data.row(e);
         let packed = &self.obj.packed[rows.start * d..rows.end * d];
         let curmin = &self.curmin[rows.start..rows.end];
-        let mut sum = 0.0f64;
-        for (idx, vrow) in packed.chunks_exact(d).enumerate() {
-            let gain = curmin[idx] - sq_dist(vrow, erow) as f64;
-            if gain > 0.0 {
-                sum += gain;
+        #[cfg(target_arch = "x86_64")]
+        {
+            if simd_active() {
+                // SAFETY: `simd_active` gates on `is_x86_feature_detected!`.
+                return unsafe { kernel_x86::gain_partial_avx2(packed, d, curmin, erow) };
             }
         }
-        sum
+        gain_partial_scalar(packed, d, curmin, erow)
     }
 
     /// The window-sharded gain engine (perf §A, iteration 5): per-shard
@@ -266,18 +501,11 @@ impl<'a> State for FacilityState<'a> {
     }
 
     fn push(&mut self, e: usize) -> f64 {
-        let d = self.obj.data.d;
-        let erow = self.obj.data.row(e);
-        let mut sum = 0.0f64;
-        for (idx, vrow) in self.obj.packed.chunks_exact(d).enumerate() {
-            let d2 = sq_dist(vrow, erow) as f64;
-            if d2 < self.curmin[idx] {
-                sum += self.curmin[idx] - d2;
-                self.curmin[idx] = d2;
-                self.curmin32[idx] = d2 as f32;
-            }
-        }
-        let gain = sum / self.obj.window.len().max(1) as f64;
+        let obj = self.obj;
+        let d = obj.data.d;
+        let erow = obj.data.row(e);
+        let sum = push_scan(&obj.packed, d, &mut self.curmin, &mut self.curmin32, erow);
+        let gain = sum / obj.window.len().max(1) as f64;
         self.value += gain;
         self.selected.push(e);
         gain
@@ -438,6 +666,46 @@ mod tests {
         fn batch_gain_sums(&self, cands: &[usize], curmin: &[f32]) -> Vec<f64> {
             cands.iter().map(|&c| curmin[c] as f64).collect()
         }
+    }
+
+    #[test]
+    fn dispatched_kernel_agrees_with_scalar_to_f32_tolerance() {
+        // On AVX2+FMA hosts this cross-checks the intrinsics against the
+        // portable kernel; on other hosts (or under GREEDI_NO_SIMD=1) both
+        // sides are the scalar kernel and the test pins exact equality.
+        let mut rng = Rng::new(17);
+        for d in [1usize, 3, 7, 8, 15, 16, 22, 64] {
+            let a: Vec<f32> = (0..d).map(|_| rng.f32() - 0.5).collect();
+            let b: Vec<f32> = (0..d).map(|_| rng.f32() - 0.5).collect();
+            let dispatched = kernel_sq_dist(&a, &b);
+            let scalar = kernel_sq_dist_scalar(&a, &b);
+            let tol = 1e-5f32 * scalar.abs().max(1.0);
+            assert!(
+                (dispatched - scalar).abs() <= tol,
+                "d={d}: dispatched {dispatched} vs scalar {scalar} (kernel {})",
+                kernel_name()
+            );
+            if !simd_active() {
+                assert_eq!(dispatched, scalar, "scalar dispatch must be the scalar kernel");
+            }
+        }
+    }
+
+    #[test]
+    fn simd_dispatch_is_stable_and_consistent_across_paths() {
+        // The dispatch decision is cached per process, and gain/push/eval
+        // all ride the same kernel: gain must equal the eval difference at
+        // f64 noise (not merely f32), which fails if push and gain ever
+        // resolve to different kernels.
+        assert_eq!(simd_active(), simd_active());
+        assert!(!kernel_name().is_empty());
+        let ds = dataset(80);
+        let f = FacilityLocation::from_dataset(&ds);
+        let mut st = f.state();
+        st.push(11);
+        let g = st.gain(42);
+        let brute = f.eval(&[11, 42]) - f.eval(&[11]);
+        assert!((g - brute).abs() < 1e-9, "gain {g} vs eval diff {brute}");
     }
 
     #[test]

@@ -35,8 +35,8 @@ pub trait State {
         es.iter().map(|&e| self.gain(e)).collect()
     }
 
-    /// Data-parallel batched gains: price `es` using up to `threads` OS
-    /// threads from `util::threadpool::parallel_map`. Implementations MUST
+    /// Data-parallel batched gains: price `es` using up to `threads`
+    /// workers of the persistent `util::executor` pool. Implementations MUST
     /// return bit-identical results for every `threads` value (the engine
     /// shards work along boundaries that depend only on problem shape, never
     /// on the thread count), so algorithms stay deterministic under any

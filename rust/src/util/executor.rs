@@ -1,0 +1,753 @@
+//! Persistent work-stealing oracle executor (perf pass §B).
+//!
+//! Every parallel surface in the crate — the facility/coverage/cut
+//! `State::par_batch_gains` engines, `MapReduce::run_stage{,_faulted}` (and
+//! through it all nine protocols), the `stream::sieve` batch pricing and
+//! `LazyGreedy`'s batch repricing — used to fan out through
+//! `util::threadpool::parallel_map`, which spawned **scoped OS threads per
+//! batch**. Thread launch costs ~10 µs, paid once per greedy round × per
+//! reprice block × per sieve batch, and that launch floor bounded the
+//! speedup on small windows no matter how fast the kernel got (ROADMAP
+//! "Persistent oracle pool").
+//!
+//! This module replaces the per-batch spawn model with **one long-lived
+//! pool of parked workers**:
+//!
+//! * **Per-worker deques + stealing.** Each worker owns a deque; submission
+//!   round-robins across deques; a worker pops its own deque LIFO (cache
+//!   locality) and steals FIFO from the others in a fixed scan order.
+//!   Idle workers park on a condvar and are woken per submitted task, so an
+//!   idle pool costs nothing between protocol runs.
+//! * **Scoped submission.** [`Executor::scope`] mirrors `std::thread::scope`:
+//!   tasks may borrow the caller's stack (gain shards reference the packed
+//!   dataset window), and `scope` does not return until every spawned task
+//!   has finished, which is what makes the lifetime erasure sound.
+//! * **Helping waiters, so nesting cannot deadlock.** A thread blocked in
+//!   `scope` does not sleep while its own tasks sit in a queue — it pops
+//!   and runs them itself. Protocol map tasks therefore may open nested
+//!   gain scopes (map stage × oracle threads) on a bounded pool: every
+//!   blocked waiter makes progress on exactly the work it is waiting for,
+//!   by induction down the nesting depth no cycle of waits can starve.
+//! * **Deterministic panic surfacing.** The *first* panic (first in item
+//!   order on the serial path, first observed under real concurrency) is
+//!   captured; remaining queued work of the failing scope is drained
+//!   without running (cancellation), later panics are swallowed, and the
+//!   captured payload is re-raised on the caller once the scope has fully
+//!   quiesced. A panicking task never kills a pool worker.
+//!
+//! ## Determinism contract
+//!
+//! [`parallel_map`] returns results in input order and every item is mapped
+//! by a pure function, so outputs are identical to the serial map at any
+//! worker count — the same contract the scoped-spawn implementation had.
+//! Work *placement* (which worker runs which item) is nondeterministic;
+//! nothing in this crate may let placement leak into results. Shard
+//! boundaries come from [`shard_ranges`], a pure function of the length, and
+//! reductions happen in shard order on the caller. (The facility kernel's
+//! SIMD dispatch adds one caveat one layer down: see
+//! `objective::facility` — values are bit-identical across thread counts
+//! *per dispatch path*, and the path is fixed per process.)
+//!
+//! ## Sizing and escape hatches
+//!
+//! The global pool ([`Executor::global`]) is lazily created on first
+//! parallel call, sized by `GREEDI_POOL_THREADS` if set, else
+//! `available_parallelism`. Call-site `threads` arguments (from
+//! `RunSpec::threads` / `RunSpec::oracle_threads`) bound the *concurrency of
+//! that call* (how many runner tasks are submitted), not the pool size — the
+//! pool is the machine-wide resource, the spec is the per-stage budget, and
+//! oversubscription is impossible because tasks multiplex onto the fixed
+//! workers. `threads <= 1` never touches the pool (inline serial execution,
+//! exact timings for the MapReduce accounting), and
+//! `GREEDI_EXECUTOR_SERIAL=1` forces that serial path process-wide — the
+//! test/debug escape hatch.
+//!
+//! Follow-on (ROADMAP): NUMA pinning now has a natural home — pin each
+//! worker thread to the socket whose memory holds its shard of the packed
+//! window at pool construction.
+
+use std::collections::VecDeque;
+use std::marker::PhantomData;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread;
+use std::time::Duration;
+
+/// Total worker threads ever spawned by any [`Executor`] in this process —
+/// the reuse tests assert this stays flat across back-to-back protocol runs
+/// (a leaking pool would re-spawn workers per run).
+static SPAWNED_WORKERS: AtomicUsize = AtomicUsize::new(0);
+
+/// One queued unit of work: the lifetime-erased closure plus the scope it
+/// belongs to (helpers filter by scope identity).
+struct Task {
+    scope: Arc<ScopeState>,
+    run: Box<dyn FnOnce() + Send + 'static>,
+}
+
+/// Bookkeeping for one [`Executor::scope`] invocation.
+struct ScopeState {
+    /// Tasks spawned and not yet finished (guarded: condvar partner).
+    remaining: Mutex<usize>,
+    done: Condvar,
+    /// Set by the first panicking task; cancelled tasks skip their closure
+    /// but still count down `remaining`.
+    cancelled: AtomicBool,
+    /// First panic payload (first-wins under the lock).
+    panic: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+}
+
+impl ScopeState {
+    fn new() -> Self {
+        ScopeState {
+            remaining: Mutex::new(0),
+            done: Condvar::new(),
+            cancelled: AtomicBool::new(false),
+            panic: Mutex::new(None),
+        }
+    }
+}
+
+/// Shared pool state.
+struct Inner {
+    /// Per-worker deques (owner pops back, thieves pop front).
+    deques: Vec<Mutex<VecDeque<Task>>>,
+    /// Tasks currently queued (≥ actual, transiently) — parking gate.
+    queued: AtomicUsize,
+    /// Round-robin submission cursor.
+    rr: AtomicUsize,
+    park: Mutex<()>,
+    alarm: Condvar,
+    shutdown: AtomicBool,
+}
+
+impl Inner {
+    fn submit(&self, task: Task) {
+        let i = self.rr.fetch_add(1, Ordering::Relaxed) % self.deques.len();
+        // Increment BEFORE the push: workers treat `queued == 0` as "safe to
+        // park", so the counter must never under-report. (It may transiently
+        // over-report between this increment and the push — a worker that
+        // races in just re-scans.)
+        self.queued.fetch_add(1, Ordering::Release);
+        self.deques[i].lock().unwrap().push_back(task);
+        let _g = self.park.lock().unwrap();
+        self.alarm.notify_one();
+    }
+
+    /// Pop the back of worker `idx`'s own deque.
+    fn pop_own(&self, idx: usize) -> Option<Task> {
+        let task = self.deques[idx].lock().unwrap().pop_back();
+        if task.is_some() {
+            self.queued.fetch_sub(1, Ordering::Release);
+        }
+        task
+    }
+
+    /// Steal the front of someone else's deque, scanning from `idx + 1` in
+    /// a fixed wrap-around order.
+    fn steal(&self, idx: usize) -> Option<Task> {
+        let n = self.deques.len();
+        for off in 1..n {
+            let j = (idx + off) % n;
+            let task = self.deques[j].lock().unwrap().pop_front();
+            if task.is_some() {
+                self.queued.fetch_sub(1, Ordering::Release);
+                return task;
+            }
+        }
+        None
+    }
+
+    /// Remove one queued task belonging to `scope` (helping waiter path).
+    fn take_scope_task(&self, scope: &Arc<ScopeState>) -> Option<Task> {
+        for dq in &self.deques {
+            let mut q = dq.lock().unwrap();
+            if let Some(pos) = q.iter().position(|t| Arc::ptr_eq(&t.scope, scope)) {
+                let task = q.remove(pos);
+                drop(q);
+                if task.is_some() {
+                    self.queued.fetch_sub(1, Ordering::Release);
+                }
+                return task;
+            }
+        }
+        None
+    }
+
+    fn worker_loop(self: Arc<Self>, idx: usize) {
+        loop {
+            if let Some(task) = self.pop_own(idx).or_else(|| self.steal(idx)) {
+                // The closure does its own catch_unwind; a task panic can
+                // never unwind through (and kill) a pool worker.
+                (task.run)();
+                continue;
+            }
+            let guard = self.park.lock().unwrap();
+            if self.shutdown.load(Ordering::Acquire) {
+                return;
+            }
+            if self.queued.load(Ordering::Acquire) == 0 {
+                // Park. The timeout is a belt-and-braces backstop only; the
+                // queued-counter handshake above already prevents lost
+                // wakeups (submitters notify under the same lock).
+                let _ = self
+                    .alarm
+                    .wait_timeout(guard, Duration::from_millis(50))
+                    .unwrap();
+            }
+        }
+    }
+}
+
+/// A persistent pool of parked worker threads with per-worker deques and
+/// work stealing. See the module docs for the full design.
+pub struct Executor {
+    inner: Arc<Inner>,
+    handles: Vec<thread::JoinHandle<()>>,
+}
+
+impl Executor {
+    /// Create a pool with `workers` threads (min 1).
+    pub fn new(workers: usize) -> Self {
+        let workers = workers.max(1);
+        let inner = Arc::new(Inner {
+            deques: (0..workers).map(|_| Mutex::new(VecDeque::new())).collect(),
+            queued: AtomicUsize::new(0),
+            rr: AtomicUsize::new(0),
+            park: Mutex::new(()),
+            alarm: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+        });
+        let handles = (0..workers)
+            .map(|i| {
+                let inner = Arc::clone(&inner);
+                SPAWNED_WORKERS.fetch_add(1, Ordering::Relaxed);
+                thread::Builder::new()
+                    .name(format!("greedi-exec-{i}"))
+                    .spawn(move || inner.worker_loop(i))
+                    .expect("spawn executor worker")
+            })
+            .collect();
+        Executor { inner, handles }
+    }
+
+    /// The process-wide pool, lazily created on first use: sized by
+    /// `GREEDI_POOL_THREADS` if set, else `available_parallelism`. Every
+    /// `parallel_map`/`parallel_gains` call multiplexes onto this one pool,
+    /// so back-to-back protocol runs reuse the same parked workers.
+    pub fn global() -> &'static Executor {
+        static GLOBAL: OnceLock<Executor> = OnceLock::new();
+        GLOBAL.get_or_init(|| {
+            let n = std::env::var("GREEDI_POOL_THREADS")
+                .ok()
+                .and_then(|v| v.parse::<usize>().ok())
+                .filter(|&n| n > 0)
+                .unwrap_or_else(|| {
+                    thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+                });
+            Executor::new(n)
+        })
+    }
+
+    /// Worker threads in this pool.
+    pub fn workers(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Total worker threads ever spawned by executors in this process
+    /// (monotone; flat across runs ⇔ the pool is being reused, not leaked).
+    pub fn total_spawned_workers() -> usize {
+        SPAWNED_WORKERS.load(Ordering::Relaxed)
+    }
+
+    /// Run `f` with a [`Scope`] on which tasks borrowing the caller's stack
+    /// may be spawned. Does not return until every spawned task finished.
+    /// If `f` itself panics, its panic is re-raised after the tasks
+    /// quiesce; otherwise the first task panic (if any) is re-raised.
+    pub fn scope<'env, F, R>(&'env self, f: F) -> R
+    where
+        F: for<'scope> FnOnce(&'scope Scope<'scope, 'env>) -> R,
+    {
+        let state = Arc::new(ScopeState::new());
+        let scope = Scope {
+            exec: self,
+            state: Arc::clone(&state),
+            _scope: PhantomData,
+            _env: PhantomData,
+        };
+        let result = catch_unwind(AssertUnwindSafe(|| f(&scope)));
+        self.wait_scope(&state);
+        match result {
+            Err(payload) => resume_unwind(payload),
+            Ok(r) => {
+                let first = state.panic.lock().unwrap().take();
+                if let Some(payload) = first {
+                    resume_unwind(payload);
+                }
+                r
+            }
+        }
+    }
+
+    /// Block until `scope` has no unfinished tasks, HELPING while blocked:
+    /// queued tasks of this scope are popped and run on the waiting thread.
+    /// This is what makes nested scopes on a bounded pool deadlock-free —
+    /// and it means `scope` works even with zero free workers.
+    fn wait_scope(&self, state: &Arc<ScopeState>) {
+        loop {
+            if let Some(task) = self.inner.take_scope_task(state) {
+                (task.run)();
+                continue;
+            }
+            let guard = state.remaining.lock().unwrap();
+            if *guard == 0 {
+                return;
+            }
+            // All of this scope's tasks are in flight on workers; sleep
+            // until one finishes (finishers notify under `remaining`'s
+            // lock, so this cannot miss the last decrement).
+            let (guard, _) = state
+                .done
+                .wait_timeout(guard, Duration::from_millis(10))
+                .unwrap();
+            drop(guard);
+        }
+    }
+}
+
+impl Drop for Executor {
+    fn drop(&mut self) {
+        self.inner.shutdown.store(true, Ordering::Release);
+        {
+            let _g = self.inner.park.lock().unwrap();
+            self.inner.alarm.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Handle for spawning borrowing tasks inside [`Executor::scope`].
+///
+/// Mirrors `std::thread::Scope`: `'scope` is the scope's own lifetime,
+/// `'env` the environment it may borrow from. Spawn only from within the
+/// scope closure itself (tasks spawning onto their own scope is not
+/// supported — every call site in this crate submits its fan-out up front).
+pub struct Scope<'scope, 'env: 'scope> {
+    exec: &'env Executor,
+    state: Arc<ScopeState>,
+    _scope: PhantomData<&'scope mut &'scope ()>,
+    _env: PhantomData<&'env mut &'env ()>,
+}
+
+impl<'scope, 'env> Scope<'scope, 'env> {
+    /// Submit a task that may borrow `'scope` data. Panics inside `f` are
+    /// captured (first one wins) and re-raised when the scope closes; a
+    /// panic also cancels this scope's still-queued tasks (drained without
+    /// running, deterministic bookkeeping).
+    pub fn spawn<F>(&self, f: F)
+    where
+        F: FnOnce() + Send + 'scope,
+    {
+        *self.state.remaining.lock().unwrap() += 1;
+        let state = Arc::clone(&self.state);
+        let wrapped: Box<dyn FnOnce() + Send + 'scope> = Box::new(move || {
+            if !state.cancelled.load(Ordering::Acquire) {
+                if let Err(payload) = catch_unwind(AssertUnwindSafe(f)) {
+                    state.cancelled.store(true, Ordering::Release);
+                    let mut slot = state.panic.lock().unwrap();
+                    if slot.is_none() {
+                        *slot = Some(payload);
+                    }
+                }
+            }
+            let mut g = state.remaining.lock().unwrap();
+            *g -= 1;
+            if *g == 0 {
+                state.done.notify_all();
+            }
+        });
+        // SAFETY: `Executor::scope` blocks in `wait_scope` until `remaining`
+        // reaches zero before returning (on the panic path too), so this
+        // closure — and everything it borrows from `'scope`/`'env` — is
+        // guaranteed to have finished running before those borrows expire.
+        // This is the same argument `std::thread::scope` makes; only the
+        // execution vehicle (pool task vs OS thread) differs.
+        let wrapped: Box<dyn FnOnce() + Send + 'static> =
+            unsafe { std::mem::transmute(wrapped) };
+        self.exec.inner.submit(Task { scope: Arc::clone(&self.state), run: wrapped });
+    }
+}
+
+/// Best-effort human-readable text from a caught panic payload.
+fn panic_message(payload: &Box<dyn std::any::Any + Send>) -> String {
+    payload
+        .downcast_ref::<String>()
+        .cloned()
+        .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+        .unwrap_or_else(|| "task panicked".into())
+}
+
+/// `GREEDI_EXECUTOR_SERIAL=1` forces every [`parallel_map`]/
+/// [`parallel_gains`] call onto the inline serial path (no pool, no worker
+/// threads) — the explicit escape hatch for tests and debugging. Read once
+/// and cached for the life of the process.
+pub fn serial_forced() -> bool {
+    static SERIAL: OnceLock<bool> = OnceLock::new();
+    *SERIAL.get_or_init(|| {
+        std::env::var("GREEDI_EXECUTOR_SERIAL").ok().as_deref() == Some("1")
+    })
+}
+
+/// Split `0..len` into `parts` contiguous near-equal ranges (longer ranges
+/// first), clamped to at most `len` non-empty parts. Deterministic: the
+/// boundaries depend only on `(len, parts)` — the parallel gain engine
+/// relies on this to reduce per-shard partial sums in a fixed order no
+/// matter how many workers execute the shards.
+pub fn shard_ranges(len: usize, parts: usize) -> Vec<std::ops::Range<usize>> {
+    let parts = parts.max(1).min(len.max(1));
+    let base = len / parts;
+    let extra = len % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0usize;
+    for i in 0..parts {
+        let size = base + usize::from(i < extra);
+        out.push(start..start + size);
+        start += size;
+    }
+    out
+}
+
+/// Candidate-count floor below which [`parallel_gains`] stays serial: when
+/// each candidate's pricing touches only a few cache lines (coverage's one
+/// transaction, cut's one adjacency list), fan-out only pays off for wide
+/// batches.
+pub const MIN_PAR_CANDIDATES: usize = 64;
+
+/// Price every candidate id in `es` through `f`, sharding the *candidate
+/// list* across up to `threads` runner tasks once it is at least
+/// [`MIN_PAR_CANDIDATES`] long. `f` must be a pure function of the
+/// candidate (given the caller's frozen state), so the output equals the
+/// serial map bit-for-bit at any thread count. This is the shared engine
+/// behind the coverage and cut `State::par_batch_gains` implementations —
+/// objectives whose per-candidate work has no window to shard.
+pub fn parallel_gains<F>(es: &[usize], threads: usize, f: F) -> Vec<f64>
+where
+    F: Fn(usize) -> f64 + Sync,
+{
+    if threads <= 1 || es.len() < MIN_PAR_CANDIDATES {
+        return es.iter().map(|&e| f(e)).collect();
+    }
+    let ranges = shard_ranges(es.len(), threads);
+    parallel_map(ranges, threads, |_, r| {
+        es[r].iter().map(|&e| f(e)).collect::<Vec<f64>>()
+    })
+    .into_iter()
+    .flatten()
+    .collect()
+}
+
+/// Run `f` over `items` on the process-wide [`Executor`], returning results
+/// in input order. At most `workers` items are in flight at once (the
+/// stage's thread budget); `workers <= 1`, a single item, or
+/// [`serial_forced`] short-circuit to inline serial execution. Panics in
+/// any task cancel the remaining queued items (drained, never run) and the
+/// *first* panic is re-raised on the caller — deterministically the
+/// lowest-index item's panic on the serial path, the first observed one
+/// under real concurrency; later panics are swallowed, and the pool's
+/// workers survive to serve the next call.
+pub fn parallel_map<T, R, F>(items: Vec<T>, workers: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(usize, T) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = workers.max(1).min(n);
+    if workers == 1 || n == 1 || serial_forced() {
+        // Same panic contract as the pooled path (one wrapped message), and
+        // trivially the lowest-index panic: serial execution stops at the
+        // first failing item.
+        return match catch_unwind(AssertUnwindSafe(|| {
+            items.into_iter().enumerate().map(|(i, x)| f(i, x)).collect::<Vec<R>>()
+        })) {
+            Ok(out) => out,
+            Err(payload) => {
+                panic!("parallel_map task panicked: {}", panic_message(&payload))
+            }
+        };
+    }
+
+    let work: Mutex<std::vec::IntoIter<(usize, T)>> =
+        Mutex::new(items.into_iter().enumerate().collect::<Vec<_>>().into_iter());
+    let mut results: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    let slots: Vec<Mutex<&mut Option<R>>> =
+        results.iter_mut().map(Mutex::new).collect();
+    let cancelled = AtomicBool::new(false);
+    let first_panic: Mutex<Option<Box<dyn std::any::Any + Send>>> = Mutex::new(None);
+
+    // Each runner drains the shared work list item by item. Per-ITEM
+    // catch_unwind (not per-runner) is what fixes the old panic path: a
+    // panic records the payload (first wins), flips `cancelled`, and every
+    // runner stops pulling new items — queued work is abandoned
+    // deterministically instead of racing a half-poisoned slot array.
+    let runner = || loop {
+        if cancelled.load(Ordering::Acquire) {
+            break;
+        }
+        let next = { work.lock().unwrap().next() };
+        let Some((idx, item)) = next else { break };
+        match catch_unwind(AssertUnwindSafe(|| f(idx, item))) {
+            Ok(r) => {
+                **slots[idx].lock().unwrap() = Some(r);
+            }
+            Err(payload) => {
+                {
+                    let mut slot = first_panic.lock().unwrap();
+                    if slot.is_none() {
+                        *slot = Some(payload);
+                    }
+                }
+                cancelled.store(true, Ordering::Release);
+                break;
+            }
+        }
+    };
+
+    Executor::global().scope(|s| {
+        for _ in 0..workers {
+            s.spawn(&runner);
+        }
+    });
+
+    if let Some(payload) = first_panic.into_inner().unwrap() {
+        panic!("parallel_map task panicked: {}", panic_message(&payload));
+    }
+    drop(slots);
+    results
+        .into_iter()
+        .map(|r| r.expect("task did not complete"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn scope_runs_borrowing_tasks() {
+        let exec = Executor::new(3);
+        let data = vec![1.0f64; 128];
+        let sums: Vec<Mutex<f64>> = (0..8).map(|_| Mutex::new(0.0)).collect();
+        exec.scope(|s| {
+            for slot in &sums {
+                s.spawn(|| {
+                    *slot.lock().unwrap() = data.iter().sum::<f64>();
+                });
+            }
+        });
+        for slot in &sums {
+            assert!((*slot.lock().unwrap() - 128.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn scope_returns_closure_value() {
+        let exec = Executor::new(2);
+        let out = exec.scope(|s| {
+            s.spawn(|| {});
+            41 + 1
+        });
+        assert_eq!(out, 42);
+    }
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let out = parallel_map((0..1000).collect(), 8, |_, x: i32| x * 2);
+        assert_eq!(out, (0..1000).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn parallel_map_empty() {
+        let out: Vec<i32> = parallel_map(Vec::<i32>::new(), 4, |_, x| x);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn parallel_map_borrows_environment() {
+        let data = vec![1.0f64; 100];
+        let sums = parallel_map(vec![0usize, 1, 2, 3], 2, |_, _| data.iter().sum::<f64>());
+        assert!(sums.iter().all(|&s| (s - 100.0).abs() < 1e-12));
+    }
+
+    #[test]
+    fn parallel_map_serial_path_matches() {
+        let par = parallel_map((0..100).collect(), 4, |i, x: i32| x * 3 + i as i32);
+        let ser = parallel_map((0..100).collect(), 1, |i, x: i32| x * 3 + i as i32);
+        assert_eq!(par, ser);
+    }
+
+    #[test]
+    #[should_panic(expected = "parallel_map task panicked")]
+    fn parallel_map_propagates_panic() {
+        parallel_map(vec![1, 2, 3], 2, |_, x: i32| {
+            if x == 2 {
+                panic!("boom");
+            }
+            x
+        });
+    }
+
+    #[test]
+    fn parallel_map_serial_surfaces_first_panic_by_index() {
+        let err = std::panic::catch_unwind(|| {
+            parallel_map((0..8).collect(), 1, |i, _x: i32| -> i32 {
+                panic!("boom-{i}");
+            })
+        })
+        .expect_err("must panic");
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_default();
+        assert!(msg.contains("boom-0"), "serial path must surface item 0's panic, got {msg}");
+    }
+
+    #[test]
+    fn parallel_map_every_item_panicking_surfaces_exactly_one() {
+        // The old scoped implementation could overwrite the recorded panic
+        // with a later one and, with unlucky interleaving, lose the message
+        // entirely. Now: exactly one payload, always a real task message.
+        let err = std::panic::catch_unwind(|| {
+            parallel_map((0..64).collect(), 8, |i, _x: i32| -> i32 {
+                panic!("boom-{i}");
+            })
+        })
+        .expect_err("must panic");
+        let msg = err.downcast_ref::<String>().cloned().unwrap_or_default();
+        assert!(
+            msg.contains("parallel_map task panicked: boom-"),
+            "panic message lost: {msg}"
+        );
+    }
+
+    #[test]
+    fn pool_survives_task_panics() {
+        // A panicking task must neither kill its worker nor poison the pool.
+        // (The global pool's worker-count-flat-across-runs assertion lives in
+        // tests/integration_executor.rs, where no local pools run alongside.)
+        let exec = Executor::new(2);
+        let err = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            exec.scope(|s| {
+                s.spawn(|| panic!("kaboom"));
+            })
+        }));
+        assert!(err.is_err(), "scope must re-raise the task panic");
+        let counter = AtomicUsize::new(0);
+        exec.scope(|s| {
+            for _ in 0..8 {
+                s.spawn(|| {
+                    counter.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+        });
+        assert_eq!(counter.load(Ordering::SeqCst), 8, "pool must keep serving");
+        assert_eq!(exec.workers(), 2);
+    }
+
+    #[test]
+    fn nested_parallel_map_completes() {
+        // Map tasks opening nested gain scopes is the protocol shape
+        // (map stage × oracle threads); helping waiters make it safe on a
+        // bounded pool.
+        let out = parallel_map((0..6).collect(), 4, |_, x: i32| {
+            parallel_map((0..6).collect(), 4, |_, y: i32| x * 10 + y)
+                .into_iter()
+                .sum::<i32>()
+        });
+        let expect: Vec<i32> = (0..6).map(|x| (0..6).map(|y| x * 10 + y).sum()).collect();
+        assert_eq!(out, expect);
+    }
+
+    #[test]
+    fn scope_works_on_tiny_local_pool() {
+        // Even a 1-worker pool must serve nested scopes (the owner helps).
+        let exec = Executor::new(1);
+        let counter = AtomicUsize::new(0);
+        exec.scope(|s| {
+            for _ in 0..16 {
+                s.spawn(|| {
+                    counter.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+        });
+        assert_eq!(counter.load(Ordering::SeqCst), 16);
+        assert_eq!(exec.workers(), 1);
+    }
+
+    #[test]
+    fn local_executor_drop_joins_workers() {
+        let exec = Executor::new(2);
+        let counter = Arc::new(AtomicUsize::new(0));
+        exec.scope(|s| {
+            for _ in 0..50 {
+                let c = Arc::clone(&counter);
+                s.spawn(move || {
+                    c.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+        });
+        drop(exec); // joins without hanging
+        assert_eq!(counter.load(Ordering::SeqCst), 50);
+    }
+
+    #[test]
+    fn shard_ranges_cover_exactly_once() {
+        for (len, parts) in [(0usize, 4usize), (1, 4), (7, 3), (100, 8), (8, 8), (5, 16)] {
+            let ranges = shard_ranges(len, parts);
+            assert!(ranges.len() <= parts.max(1));
+            let mut next = 0usize;
+            for r in &ranges {
+                assert_eq!(r.start, next, "gap at {r:?} (len={len}, parts={parts})");
+                next = r.end;
+            }
+            assert_eq!(next, len, "ranges must cover 0..{len}");
+        }
+    }
+
+    #[test]
+    fn shard_ranges_deterministic_and_balanced() {
+        let a = shard_ranges(1000, 7);
+        let b = shard_ranges(1000, 7);
+        assert_eq!(a, b);
+        let sizes: Vec<usize> = a.iter().map(|r| r.end - r.start).collect();
+        let (min, max) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+        assert!(max - min <= 1, "near-equal shards, got {sizes:?}");
+    }
+
+    #[test]
+    fn parallel_gains_matches_serial_map_any_threads() {
+        let es: Vec<usize> = (0..500).collect();
+        let f = |e: usize| (e as f64).sqrt() * 3.0 - 1.0;
+        let serial: Vec<f64> = es.iter().map(|&e| f(e)).collect();
+        for threads in [1usize, 2, 5, 16] {
+            assert_eq!(serial, parallel_gains(&es, threads, f), "threads={threads}");
+        }
+        // short batches stay serial but still produce the same values
+        let short: Vec<usize> = (0..10).collect();
+        let expect: Vec<f64> = short.iter().map(|&e| f(e)).collect();
+        assert_eq!(expect, parallel_gains(&short, 8, f));
+    }
+
+    #[test]
+    fn executor_min_one_worker() {
+        let exec = Executor::new(0);
+        assert_eq!(exec.workers(), 1);
+    }
+}

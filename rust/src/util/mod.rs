@@ -1,13 +1,15 @@
 //! Infrastructure substrates built from scratch for the offline environment:
-//! deterministic RNG, thread pool, CLI parsing, a TOML-subset config reader,
-//! summary statistics, wallclock timing, ASCII table rendering and a
-//! micro-benchmark harness (criterion/clap/serde/tokio are unavailable in
-//! the vendored dependency closure — each is replaced by a purpose-built
+//! deterministic RNG, a persistent work-stealing executor (plus its
+//! `threadpool` compatibility facade), CLI parsing, a TOML-subset config
+//! reader, summary statistics, wallclock timing, ASCII table rendering and a
+//! micro-benchmark harness (criterion/clap/serde/tokio/rayon are unavailable
+//! in the vendored dependency closure — each is replaced by a purpose-built
 //! module below).
 
 pub mod args;
 pub mod bench;
 pub mod error;
+pub mod executor;
 pub mod json;
 pub mod rng;
 pub mod stats;

@@ -1,269 +1,41 @@
-//! Fixed-size worker thread pool (no tokio in the offline closure).
+//! Compatibility facade over [`util::executor`](super::executor).
 //!
-//! The simulated MapReduce engine runs map/reduce tasks on this pool. The
-//! design is the classic channel-of-boxed-closures worker pool plus a scoped
-//! `parallel_map` helper that preserves input order and propagates panics.
+//! Historically this module owned the crate's parallelism: a
+//! channel-of-boxed-closures `ThreadPool` plus a `parallel_map` that spawned
+//! **scoped OS threads per batch**. The per-batch spawn cost (~10 µs) was
+//! paid once per greedy round × per reprice block × per sieve batch and
+//! bounded the speedup on small windows, so the whole surface moved to the
+//! persistent work-stealing [`Executor`](super::executor::Executor) — parked
+//! workers, per-worker deques + stealing, scoped borrowing submission,
+//! deterministic first-panic propagation.
+//!
+//! The names below are re-exports so existing call sites and downstream
+//! users keep compiling; new code should import from `util::executor`
+//! directly. Semantics are unchanged: input-order results, bit-identical
+//! outputs at any thread count, panics re-raised on the caller (see the
+//! executor module docs for the determinism contract and the pool
+//! lifecycle).
 
-use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
-use std::thread;
-
-type Job = Box<dyn FnOnce() + Send + 'static>;
-
-/// A fixed pool of worker threads executing boxed jobs.
-pub struct ThreadPool {
-    workers: Vec<thread::JoinHandle<()>>,
-    sender: Option<mpsc::Sender<Job>>,
-}
-
-impl ThreadPool {
-    /// Create a pool with `size` workers (min 1).
-    pub fn new(size: usize) -> Self {
-        let size = size.max(1);
-        let (sender, receiver) = mpsc::channel::<Job>();
-        let receiver = Arc::new(Mutex::new(receiver));
-        let workers = (0..size)
-            .map(|i| {
-                let rx = Arc::clone(&receiver);
-                thread::Builder::new()
-                    .name(format!("greedi-worker-{i}"))
-                    .spawn(move || loop {
-                        let job = { rx.lock().unwrap().recv() };
-                        match job {
-                            Ok(job) => job(),
-                            Err(_) => break, // channel closed
-                        }
-                    })
-                    .expect("spawn worker")
-            })
-            .collect();
-        ThreadPool { workers, sender: Some(sender) }
-    }
-
-    /// Pool sized to the machine (`available_parallelism`, >= 1).
-    pub fn default_size() -> Self {
-        let n = thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-        ThreadPool::new(n)
-    }
-
-    /// Submit a fire-and-forget job.
-    pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
-        self.sender
-            .as_ref()
-            .expect("pool shut down")
-            .send(Box::new(job))
-            .expect("worker channel closed");
-    }
-
-    pub fn size(&self) -> usize {
-        self.workers.len()
-    }
-}
-
-impl Drop for ThreadPool {
-    fn drop(&mut self) {
-        drop(self.sender.take()); // close channel => workers exit
-        for w in self.workers.drain(..) {
-            let _ = w.join();
-        }
-    }
-}
-
-/// Split `0..len` into `parts` contiguous near-equal ranges (longer ranges
-/// first), clamped to at most `len` non-empty parts. Deterministic: the
-/// boundaries depend only on `(len, parts)` — the parallel gain engine
-/// relies on this to reduce per-shard partial sums in a fixed order no
-/// matter how many workers execute the shards.
-pub fn shard_ranges(len: usize, parts: usize) -> Vec<std::ops::Range<usize>> {
-    let parts = parts.max(1).min(len.max(1));
-    let base = len / parts;
-    let extra = len % parts;
-    let mut out = Vec::with_capacity(parts);
-    let mut start = 0usize;
-    for i in 0..parts {
-        let size = base + usize::from(i < extra);
-        out.push(start..start + size);
-        start += size;
-    }
-    out
-}
-
-/// Candidate-count floor below which [`parallel_gains`] stays serial: when
-/// each candidate's pricing touches only a few cache lines (coverage's one
-/// transaction, cut's one adjacency list), fan-out only pays off for wide
-/// batches.
-pub const MIN_PAR_CANDIDATES: usize = 64;
-
-/// Price every candidate id in `es` through `f`, sharding the *candidate
-/// list* across up to `threads` workers once it is at least
-/// [`MIN_PAR_CANDIDATES`] long. `f` must be a pure function of the
-/// candidate (given the caller's frozen state), so the output equals the
-/// serial map bit-for-bit at any thread count. This is the shared engine
-/// behind the coverage and cut `State::par_batch_gains` implementations —
-/// objectives whose per-candidate work has no window to shard.
-pub fn parallel_gains<F>(es: &[usize], threads: usize, f: F) -> Vec<f64>
-where
-    F: Fn(usize) -> f64 + Sync,
-{
-    if threads <= 1 || es.len() < MIN_PAR_CANDIDATES {
-        return es.iter().map(|&e| f(e)).collect();
-    }
-    let ranges = shard_ranges(es.len(), threads);
-    parallel_map(ranges, threads, |_, r| {
-        es[r].iter().map(|&e| f(e)).collect::<Vec<f64>>()
-    })
-    .into_iter()
-    .flatten()
-    .collect()
-}
-
-/// Run `f` over `items` in parallel on a temporary scoped pool, returning
-/// results in input order. Panics in any task are re-raised on the caller.
-///
-/// This uses `std::thread::scope` rather than the long-lived pool so that
-/// `f` may borrow from the caller's stack (shards reference the dataset).
-pub fn parallel_map<T, R, F>(items: Vec<T>, workers: usize, f: F) -> Vec<R>
-where
-    T: Send,
-    R: Send,
-    F: Fn(usize, T) -> R + Sync,
-{
-    let workers = workers.max(1);
-    let n = items.len();
-    let mut results: Vec<Option<R>> = (0..n).map(|_| None).collect();
-    if n == 0 {
-        return Vec::new();
-    }
-    let work: Mutex<std::vec::IntoIter<(usize, T)>> =
-        Mutex::new(items.into_iter().enumerate().collect::<Vec<_>>().into_iter());
-    let slots: Vec<Mutex<&mut Option<R>>> =
-        results.iter_mut().map(Mutex::new).collect();
-    let panicked = Mutex::new(None::<String>);
-
-    thread::scope(|scope| {
-        for _ in 0..workers.min(n) {
-            scope.spawn(|| loop {
-                let next = { work.lock().unwrap().next() };
-                let Some((idx, item)) = next else { break };
-                let out = catch_unwind(AssertUnwindSafe(|| f(idx, item)));
-                match out {
-                    Ok(r) => {
-                        **slots[idx].lock().unwrap() = Some(r);
-                    }
-                    Err(e) => {
-                        let msg = e
-                            .downcast_ref::<String>()
-                            .cloned()
-                            .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
-                            .unwrap_or_else(|| "task panicked".into());
-                        *panicked.lock().unwrap() = Some(msg);
-                        break;
-                    }
-                }
-            });
-        }
-    });
-
-    if let Some(msg) = panicked.into_inner().unwrap() {
-        panic!("parallel_map task panicked: {msg}");
-    }
-    results
-        .into_iter()
-        .map(|r| r.expect("task did not complete"))
-        .collect()
-}
+pub use super::executor::{
+    parallel_gains, parallel_map, serial_forced, shard_ranges, Executor,
+    MIN_PAR_CANDIDATES,
+};
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::atomic::{AtomicUsize, Ordering};
 
     #[test]
-    fn pool_runs_all_jobs() {
-        let pool = ThreadPool::new(4);
-        let counter = Arc::new(AtomicUsize::new(0));
-        for _ in 0..100 {
-            let c = Arc::clone(&counter);
-            pool.execute(move || {
-                c.fetch_add(1, Ordering::SeqCst);
-            });
-        }
-        drop(pool); // join
-        assert_eq!(counter.load(Ordering::SeqCst), 100);
-    }
-
-    #[test]
-    fn parallel_map_preserves_order() {
-        let out = parallel_map((0..1000).collect(), 8, |_, x: i32| x * 2);
-        assert_eq!(out, (0..1000).map(|x| x * 2).collect::<Vec<_>>());
-    }
-
-    #[test]
-    fn parallel_map_empty() {
-        let out: Vec<i32> = parallel_map(Vec::<i32>::new(), 4, |_, x| x);
-        assert!(out.is_empty());
-    }
-
-    #[test]
-    fn parallel_map_borrows_environment() {
-        let data = vec![1.0f64; 100];
-        let sums = parallel_map(vec![0usize, 1, 2, 3], 2, |_, _| data.iter().sum::<f64>());
-        assert!(sums.iter().all(|&s| (s - 100.0).abs() < 1e-12));
-    }
-
-    #[test]
-    #[should_panic(expected = "parallel_map task panicked")]
-    fn parallel_map_propagates_panic() {
-        parallel_map(vec![1, 2, 3], 2, |_, x: i32| {
-            if x == 2 {
-                panic!("boom");
-            }
-            x
-        });
-    }
-
-    #[test]
-    fn shard_ranges_cover_exactly_once() {
-        for (len, parts) in [(0usize, 4usize), (1, 4), (7, 3), (100, 8), (8, 8), (5, 16)] {
-            let ranges = shard_ranges(len, parts);
-            assert!(ranges.len() <= parts.max(1));
-            let mut next = 0usize;
-            for r in &ranges {
-                assert_eq!(r.start, next, "gap at {r:?} (len={len}, parts={parts})");
-                next = r.end;
-            }
-            assert_eq!(next, len, "ranges must cover 0..{len}");
-        }
-    }
-
-    #[test]
-    fn parallel_gains_matches_serial_map_any_threads() {
-        let es: Vec<usize> = (0..500).collect();
-        let f = |e: usize| (e as f64).sqrt() * 3.0 - 1.0;
-        let serial: Vec<f64> = es.iter().map(|&e| f(e)).collect();
-        for threads in [1usize, 2, 5, 16] {
-            assert_eq!(serial, parallel_gains(&es, threads, f), "threads={threads}");
-        }
-        // short batches stay serial but still produce the same values
-        let short: Vec<usize> = (0..10).collect();
-        let expect: Vec<f64> = short.iter().map(|&e| f(e)).collect();
-        assert_eq!(expect, parallel_gains(&short, 8, f));
-    }
-
-    #[test]
-    fn shard_ranges_deterministic_and_balanced() {
-        let a = shard_ranges(1000, 7);
-        let b = shard_ranges(1000, 7);
-        assert_eq!(a, b);
-        let sizes: Vec<usize> = a.iter().map(|r| r.end - r.start).collect();
-        let (min, max) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
-        assert!(max - min <= 1, "near-equal shards, got {sizes:?}");
-    }
-
-    #[test]
-    fn pool_min_one_worker() {
-        let pool = ThreadPool::new(0);
-        assert_eq!(pool.size(), 1);
+    fn facade_reexports_are_live() {
+        // One smoke assertion per re-export family so a facade regression
+        // (e.g. dropping a name) fails here, closest to the contract.
+        let out = parallel_map((0..100).collect(), 4, |_, x: i32| x * 2);
+        assert_eq!(out, (0..100).map(|x| x * 2).collect::<Vec<_>>());
+        let es: Vec<usize> = (0..MIN_PAR_CANDIDATES * 2).collect();
+        let gains = parallel_gains(&es, 4, |e| e as f64);
+        assert_eq!(gains.len(), es.len());
+        assert_eq!(shard_ranges(10, 3).len(), 3);
+        assert!(Executor::global().workers() >= 1);
+        let _ = serial_forced();
     }
 }

@@ -1,0 +1,95 @@
+#!/usr/bin/env python3
+"""Warn-only before/after comparison of util::bench JSON files.
+
+Usage: bench_compare.py BASELINE.json CURRENT.json [--threshold 1.5]
+
+Both files are the flat ``{"op name": ns_per_iter, ...}`` objects written by
+``GREEDI_BENCH_JSON=path cargo bench``. The baseline is the committed copy
+(or a CI artifact from the base branch); the current file is the run that
+just finished. Prints a per-op ratio table and a WARN line for every op
+slower than ``threshold`` x baseline.
+
+ALWAYS exits 0: CI bench runners are noisy shared machines, and the
+committed baselines started life as stubs (the PR-2..4 authoring containers
+had no Rust toolchain), so this step is a perf *trail*, not a gate. Ops
+missing on either side are reported and skipped; a stub / empty baseline
+(no numeric ops, e.g. only a ``_meta`` note) short-circuits with a notice —
+regenerate the committed baseline from the CI artifact to arm the
+comparison.
+"""
+
+import json
+import sys
+
+
+def load_ops(path):
+    try:
+        with open(path) as f:
+            raw = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"bench_compare: cannot read {path}: {e} — skipping comparison")
+        return None
+    return {
+        k: float(v)
+        for k, v in raw.items()
+        if isinstance(v, (int, float)) and not k.startswith("_")
+    }
+
+
+def main(argv):
+    threshold = 1.5
+    args = []
+    i = 1
+    while i < len(argv):
+        a = argv[i]
+        if a.startswith("--threshold"):
+            if "=" in a:
+                threshold = float(a.split("=", 1)[1])
+            elif i + 1 < len(argv):
+                i += 1
+                threshold = float(argv[i])
+        else:
+            args.append(a)
+        i += 1
+    if len(args) != 2:
+        print(__doc__)
+        return 0
+    base, cur = load_ops(args[0]), load_ops(args[1])
+    if base is None or cur is None:
+        return 0
+    if not base:
+        print(f"bench_compare: baseline {args[0]} has no numeric ops (stub?) — "
+              "nothing to compare; commit a CI-generated baseline to arm this step")
+        return 0
+    if not cur:
+        print(f"bench_compare: current {args[1]} has no numeric ops — skipping")
+        return 0
+
+    shared = [op for op in cur if op in base]
+    gone = sorted(op for op in base if op not in cur)
+    new = sorted(op for op in cur if op not in base)
+    warns = 0
+    width = max((len(op) for op in shared), default=8)
+    print(f"{'op':<{width}}  {'base ns':>12}  {'cur ns':>12}  ratio")
+    for op in shared:
+        b, c = base[op], cur[op]
+        ratio = c / b if b > 0 else float("inf")
+        flag = ""
+        if ratio > threshold:
+            flag = f"  WARN >{threshold}x"
+            warns += 1
+        print(f"{op:<{width}}  {b:>12.1f}  {c:>12.1f}  {ratio:>5.2f}{flag}")
+    for op in new:
+        print(f"(new op, no baseline: {op})")
+    for op in gone:
+        print(f"(op dropped since baseline: {op})")
+    if warns:
+        print(f"bench_compare: {warns} op(s) slower than {threshold}x baseline "
+              "(warn-only; CI runners are noisy — investigate if it persists)")
+    else:
+        print("bench_compare: no regressions beyond threshold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
