@@ -17,8 +17,9 @@ use greedi::coordinator::protocol::{Protocol, RunSpec};
 use greedi::coordinator::FacilityProblem;
 use greedi::data::synth::{gaussian_blobs, parkinsons_like, SynthConfig};
 use greedi::linalg::{IncrementalCholesky, Matrix};
+use greedi::objective::dpp::DppLogDet;
 use greedi::objective::facility::{
-    kernel_name, kernel_sq_dist, kernel_sq_dist_scalar, FacilityLocation,
+    kernel_name, kernel_sq_dist, kernel_sq_dist_scalar, window_shards, FacilityLocation,
 };
 use greedi::objective::infogain::InfoGain;
 use greedi::objective::SubmodularFn;
@@ -172,8 +173,9 @@ fn main() {
             }
         }
         let erows: Vec<&[f32]> = cands16.iter().map(|&c| ds_w.row(c)).collect();
-        // mirror the engine's shard_count(|W|): |W|/256 clamped to [1, 16]
-        let shards = shard_ranges(w, (w / 256).clamp(1, 16));
+        // mirror the engine's window shard rule exactly (its boundaries are
+        // shape-only, so the frozen baseline shards identically)
+        let shards = shard_ranges(w, window_shards(w));
         for &t in &[1usize, 2, 4, 8] {
             b.bench(&format!("smallwin |W|={w}: 16 gains, scoped-spawn ({t}t)"), || {
                 let partials = scoped_spawn_map(shards.clone(), t, |_, r: Range<usize>| {
@@ -226,6 +228,38 @@ fn main() {
         }
         black_box(acc)
     });
+
+    // ---- 1d. engine-path rows: the newly parallel Cholesky objectives ----
+    // infogain/dpp went from serial element-at-a-time pricing to
+    // candidate-sharded engine batches in the gain-engine refactor; these
+    // rows give the next perf PR a thread-scaling baseline in the JSON
+    // trail. k = 24 committed elements → every candidate pays an O(k²)
+    // forward solve (per-shard probe columns / Schur complements).
+    {
+        let pk_n = if fast { 600 } else { 2_000 };
+        let pk = Arc::new(parkinsons_like(pk_n, 22, 4));
+        let chol_cands: Vec<usize> = (0..64).map(|i| (i * 13) % pk_n).collect();
+        let ig = InfoGain::paper_params(&pk);
+        let mut ig_st = ig.state();
+        for i in 0..24 {
+            ig_st.push((i * 17 + 64) % pk_n);
+        }
+        for &t in &[1usize, 4, 8] {
+            b.bench(&format!("infogain: 64 gains, engine ({t}t)"), || {
+                black_box(ig_st.par_batch_gains(&chol_cands, t))
+            });
+        }
+        let dpp = DppLogDet::new(&pk, 1.0, 0.5);
+        let mut dpp_st = dpp.state();
+        for i in 0..24 {
+            dpp_st.push((i * 17 + 64) % pk_n);
+        }
+        for &t in &[1usize, 4, 8] {
+            b.bench(&format!("dpp: 64 gains, engine ({t}t)"), || {
+                black_box(dpp_st.par_batch_gains(&chol_cands, t))
+            });
+        }
+    }
 
     // Sections 2+ run on the fast-mode-sized dataset.
     let ds = Arc::new(gaussian_blobs(&SynthConfig::tiny_images(n, 16), 1));
@@ -355,6 +389,16 @@ fn main() {
         "kernel: sq_dist dispatched, d=64 x 10k",
     ) {
         println!("dispatched distance kernel ({}) speedup over scalar: {s:.2}x", kernel_name());
+    }
+    for op in ["infogain", "dpp"] {
+        for &t in &[4usize, 8] {
+            if let Some(s) = b.speedup(
+                &format!("{op}: 64 gains, engine (1t)"),
+                &format!("{op}: 64 gains, engine ({t}t)"),
+            ) {
+                println!("{op} engine thread scaling ({t}t vs 1t): {s:.2}x");
+            }
+        }
     }
     if let Some(s) = b.speedup(
         "infogain: dense logdet eval",

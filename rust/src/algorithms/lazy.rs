@@ -44,12 +44,15 @@
 //! the thread count, pool size, or any timing. Selection is untouched (a
 //! winner still commits only when its *fresh* bound resurfaces at the top),
 //! so lazy == greedy bit-identically up to ties, exactly as before. Note
-//! the parallel payoff applies to *window-sharded* objectives (facility
-//! location fans its window out for any batch width); candidate-sharded
-//! objectives (coverage, cut) price narrow batches serially by design —
-//! their per-candidate work is far too small to amortize a fan-out
-//! (`executor::MIN_PAR_CANDIDATES`), and their parallel win comes from the
-//! wide initial full-ground pass instead.
+//! the parallel payoff depends on the objective's shard shape
+//! (`objective::engine::ShardSpec`): window-sharded objectives (facility
+//! location) fan their window out for any batch width; cheap
+//! candidate-sharded objectives (coverage, cut, modular, entropy) price
+//! narrow batches serially by design — their per-candidate work is far too
+//! small to amortize a fan-out (`engine::MIN_CANDIDATES_PER_SHARD`), and
+//! their parallel win comes from the wide initial full-ground pass instead
+//! — while the heavy Cholesky objectives (info-gain, DPP) shard even
+//! narrow reprice blocks (`engine::MIN_HEAVY_CANDIDATES_PER_SHARD`).
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;

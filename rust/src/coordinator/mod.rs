@@ -33,7 +33,8 @@ use crate::data::transactions::TransactionData;
 use crate::data::Dataset;
 use crate::objective::coverage::Coverage;
 use crate::objective::cut::GraphCut;
-use crate::objective::facility::{FacilityLocation, GainBackend};
+use crate::objective::engine::GainBackend;
+use crate::objective::facility::FacilityLocation;
 use crate::objective::infogain::InfoGain;
 use crate::objective::SubmodularFn;
 use crate::util::rng::Rng;
@@ -72,7 +73,8 @@ pub trait Problem: Sync {
     }
 }
 
-/// Builds a [`GainBackend`] for a given evaluation window — implemented by
+/// Builds a [`GainBackend`] (the gain engine's accelerator seam,
+/// `objective::engine`) for a given evaluation window — implemented by
 /// `runtime::Engine` (the XLA path). Window-specific because the batched
 /// artifact streams pre-packed data blocks of exactly that window.
 pub trait BackendFactory: Sync + Send {
@@ -244,6 +246,13 @@ impl<'a> SubmodularFn for ForwardFn<'a> {
 
     fn eval(&self, s: &[usize]) -> f64 {
         self.f.eval(s)
+    }
+
+    fn singleton_gains(&self, es: &[usize], threads: usize) -> Vec<f64> {
+        // Forward explicitly: the trait default would rebuild a fresh state
+        // and miss the inner objective's closed-form override (modular,
+        // coverage), silently re-pricing the sieve ladder the slow way.
+        self.f.singleton_gains(es, threads)
     }
 
     fn is_monotone(&self) -> bool {

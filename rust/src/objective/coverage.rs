@@ -3,12 +3,23 @@
 //! transactions maximizing the size of their union. Monotone submodular
 //! (maximum coverage); this is the objective the GreeDi-vs-GreedyScaling
 //! comparison (Fig. 10) runs on.
+//!
+//! Pricing rides the shared [`ShardedGainEngine`]: [`CoverageKernel`] is a
+//! candidate-sharded kernel (each candidate's gain is one transaction scan
+//! against the read-only covered bitset, so the engine splits the candidate
+//! *list*; the pre-refactor module carried its own `parallel_gains` fan-out
+//! for this). Singletons have the closed form `Σ_{it∈t(e)} w(it)` — no
+//! covered bitset needed — so [`Coverage::singleton_gains`] skips state
+//! construction entirely for the streaming sieve's ladder pricing
+//! (bit-identical to the fresh-state path: same items, same summation
+//! order).
 
+use std::ops::Range;
 use std::sync::Arc;
 
+use super::engine::{GainKernel, ShardSpec, ShardedGainEngine, MIN_CANDIDATES_PER_SHARD};
 use super::{State, SubmodularFn};
 use crate::data::transactions::TransactionData;
-use crate::util::executor::parallel_gains;
 
 /// Weighted coverage over a transaction database.
 pub struct Coverage {
@@ -35,6 +46,14 @@ impl Coverage {
         }
     }
 
+    /// Closed-form f({e}): the transaction's total item weight (on a fresh
+    /// state nothing is covered, so every item of `e` counts — the same
+    /// items in the same iteration/summation order as the state path).
+    #[inline]
+    fn singleton_value(&self, e: usize) -> f64 {
+        self.td.transactions[e].iter().map(|&it| self.weight(it)).sum()
+    }
+
     pub fn transactions(&self) -> &Arc<TransactionData> {
         &self.td
     }
@@ -42,12 +61,18 @@ impl Coverage {
 
 impl SubmodularFn for Coverage {
     fn state(&self) -> Box<dyn State + '_> {
-        Box::new(CoverageState {
+        Box::new(ShardedGainEngine::new(CoverageKernel {
             obj: self,
             covered: vec![false; self.td.n_items],
             selected: Vec::new(),
             value: 0.0,
-        })
+        }))
+    }
+
+    /// Ladder pricing without any state construction (satellite of the
+    /// engine refactor): maps the closed-form singleton directly.
+    fn singleton_gains(&self, es: &[usize], _threads: usize) -> Vec<f64> {
+        es.iter().map(|&e| self.singleton_value(e)).collect()
     }
 
     fn ground_size(&self) -> usize {
@@ -55,15 +80,18 @@ impl SubmodularFn for Coverage {
     }
 }
 
-/// Incremental state: covered-item bitset.
-pub struct CoverageState<'a> {
+/// Candidate-sharded coverage kernel: covered-item bitset + running value.
+pub struct CoverageKernel<'a> {
     obj: &'a Coverage,
     covered: Vec<bool>,
     selected: Vec<usize>,
     value: f64,
 }
 
-impl<'a> CoverageState<'a> {
+/// Pre-refactor name for the coverage state, preserved as the engine alias.
+pub type CoverageState<'a> = ShardedGainEngine<CoverageKernel<'a>>;
+
+impl<'a> CoverageKernel<'a> {
     /// Read-only gain (shared by the serial and parallel paths: each
     /// candidate's gain depends only on the covered bitset, so candidates
     /// price independently and in any order).
@@ -76,31 +104,20 @@ impl<'a> CoverageState<'a> {
     }
 }
 
-impl<'a> State for CoverageState<'a> {
-    fn value(&self) -> f64 {
-        self.value
+impl<'a> GainKernel for CoverageKernel<'a> {
+    fn shard_spec(&self) -> ShardSpec {
+        ShardSpec::Candidates { min_per_shard: MIN_CANDIDATES_PER_SHARD }
     }
 
-    fn gain(&mut self, e: usize) -> f64 {
-        self.gain_at(e)
+    fn shard_gain_partial(&self, es: &[usize], rows: &Range<usize>) -> Vec<f64> {
+        es[rows.clone()].iter().map(|&e| self.gain_at(e)).collect()
     }
 
-    fn batch_gains(&mut self, es: &[usize]) -> Vec<f64> {
-        es.iter().map(|&e| self.gain_at(e)).collect()
+    fn singleton(&self, e: usize) -> Option<f64> {
+        Some(self.obj.singleton_value(e))
     }
 
-    /// Parallel gains shard the *candidate list* across workers via
-    /// [`parallel_gains`] (the per-candidate work is a single transaction
-    /// scan, so the window-style sharding used by facility location has
-    /// nothing to split). Each candidate's value is computed independently
-    /// from the read-only covered bitset, hence results are bit-identical
-    /// at any thread count.
-    fn par_batch_gains(&mut self, es: &[usize], threads: usize) -> Vec<f64> {
-        let this: &CoverageState<'a> = self;
-        parallel_gains(es, threads, |e| this.gain_at(e))
-    }
-
-    fn push(&mut self, e: usize) -> f64 {
+    fn apply_push(&mut self, e: usize) -> f64 {
         let mut gain = 0.0;
         for &it in &self.obj.td.transactions[e] {
             if !self.covered[it as usize] {
@@ -111,6 +128,10 @@ impl<'a> State for CoverageState<'a> {
         self.value += gain;
         self.selected.push(e);
         gain
+    }
+
+    fn value(&self) -> f64 {
+        self.value
     }
 
     fn selected(&self) -> &[usize] {
@@ -172,17 +193,18 @@ mod tests {
     }
 
     #[test]
-    fn par_batch_gains_bit_identical_across_threads() {
-        let td = Arc::new(zipf_transactions(300, 200, 8, 1.1, 17));
-        let f = Coverage::new(&td);
-        let mut st = f.state();
-        st.push(3);
-        st.push(150);
-        let cands: Vec<usize> = (0..300).collect();
-        let serial = st.batch_gains(&cands);
-        for threads in [1usize, 2, 8] {
-            let par = st.par_batch_gains(&cands, threads);
-            assert_eq!(serial, par, "threads={threads} changed coverage gains");
+    fn closed_form_singletons_match_state_path() {
+        // The override must be bit-identical to a fresh state's gains (the
+        // sieve ladder reuses singletons in place of state pricing).
+        let td = db();
+        for f in [Coverage::new(&td), Coverage::weighted(&td, (0..60).map(|i| 0.5 + i as f64).collect())] {
+            let es: Vec<usize> = (0..td.n()).collect();
+            let closed = f.singleton_gains(&es, 1);
+            let mut fresh = f.state();
+            for (i, &e) in es.iter().enumerate() {
+                assert_eq!(closed[i], fresh.gain(e), "singleton({e}) diverged");
+                assert_eq!(closed[i], f.eval(&[e]), "singleton({e}) != eval");
+            }
         }
     }
 

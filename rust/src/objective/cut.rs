@@ -3,12 +3,19 @@
 //! (Buchbinder et al. 2014) on a Facebook-like message network, evaluating
 //! the function *locally* on each partition (cross-partition links
 //! disconnected), which [`GraphCut::restricted`] reproduces.
+//!
+//! Pricing rides the shared [`ShardedGainEngine`]: [`CutKernel`] is a
+//! candidate-sharded kernel — `delta` only reads the membership flags and
+//! the (immutable) adjacency lists, so the engine splits the candidate list
+//! and every thread count yields bit-identical results (the pre-refactor
+//! module carried its own `parallel_gains` fan-out for this).
 
+use std::ops::Range;
 use std::sync::Arc;
 
+use super::engine::{GainKernel, ShardSpec, ShardedGainEngine, MIN_CANDIDATES_PER_SHARD};
 use super::{State, SubmodularFn};
 use crate::data::graph::Digraph;
-use crate::util::executor::parallel_gains;
 
 /// Directed cut function, optionally restricted to an induced subgraph.
 pub struct GraphCut {
@@ -40,12 +47,12 @@ impl GraphCut {
 
 impl SubmodularFn for GraphCut {
     fn state(&self) -> Box<dyn State + '_> {
-        Box::new(CutState {
+        Box::new(ShardedGainEngine::new(CutKernel {
             obj: self,
             in_s: vec![false; self.g.n],
             selected: Vec::new(),
             value: 0.0,
-        })
+        }))
     }
 
     fn is_monotone(&self) -> bool {
@@ -57,15 +64,18 @@ impl SubmodularFn for GraphCut {
     }
 }
 
-/// Incremental state: membership flags + running cut value.
-pub struct CutState<'a> {
+/// Candidate-sharded cut kernel: membership flags + running cut value.
+pub struct CutKernel<'a> {
     obj: &'a GraphCut,
     in_s: Vec<bool>,
     selected: Vec<usize>,
     value: f64,
 }
 
-impl<'a> CutState<'a> {
+/// Pre-refactor name for the cut state, preserved as the engine alias.
+pub type CutState<'a> = ShardedGainEngine<CutKernel<'a>>;
+
+impl<'a> CutKernel<'a> {
     /// Marginal change of adding `e`:
     ///  + outgoing edges e→v with v ∉ S
     ///  + 0 for outgoing edges into S
@@ -89,29 +99,16 @@ impl<'a> CutState<'a> {
     }
 }
 
-impl<'a> State for CutState<'a> {
-    fn value(&self) -> f64 {
-        self.value
+impl<'a> GainKernel for CutKernel<'a> {
+    fn shard_spec(&self) -> ShardSpec {
+        ShardSpec::Candidates { min_per_shard: MIN_CANDIDATES_PER_SHARD }
     }
 
-    fn gain(&mut self, e: usize) -> f64 {
-        self.delta(e)
+    fn shard_gain_partial(&self, es: &[usize], rows: &Range<usize>) -> Vec<f64> {
+        es[rows.clone()].iter().map(|&e| self.delta(e)).collect()
     }
 
-    fn batch_gains(&mut self, es: &[usize]) -> Vec<f64> {
-        es.iter().map(|&e| self.delta(e)).collect()
-    }
-
-    /// Parallel gains shard the candidate list across workers via
-    /// [`parallel_gains`]; `delta` only reads the membership flags and the
-    /// (immutable) adjacency lists, so every thread count yields
-    /// bit-identical results.
-    fn par_batch_gains(&mut self, es: &[usize], threads: usize) -> Vec<f64> {
-        let this: &CutState<'a> = self;
-        parallel_gains(es, threads, |e| this.delta(e))
-    }
-
-    fn push(&mut self, e: usize) -> f64 {
+    fn apply_push(&mut self, e: usize) -> f64 {
         let d = self.delta(e);
         if !self.in_s[e] {
             self.in_s[e] = true;
@@ -119,6 +116,10 @@ impl<'a> State for CutState<'a> {
             self.selected.push(e);
         }
         d
+    }
+
+    fn value(&self) -> f64 {
+        self.value
     }
 
     fn selected(&self) -> &[usize] {
@@ -190,21 +191,6 @@ mod tests {
         assert_eq!(f.eval(&[0]), 2.0);
         assert_eq!(f.eval(&[1]), 0.0); // 1->2 invisible
         assert_eq!(f.eval(&[0, 1]), 0.0);
-    }
-
-    #[test]
-    fn par_batch_gains_bit_identical_across_threads() {
-        let g = Arc::new(social_network(200, 1_500, 6));
-        let f = GraphCut::new(&g);
-        let mut st = f.state();
-        st.push(10);
-        st.push(77);
-        let cands: Vec<usize> = (0..200).collect();
-        let serial = st.batch_gains(&cands);
-        for threads in [1usize, 2, 8] {
-            let par = st.par_batch_gains(&cands, threads);
-            assert_eq!(serial, par, "threads={threads} changed cut gains");
-        }
     }
 
     #[test]

@@ -6,9 +6,20 @@
 //! To keep f finite we require K to be positive definite (the generators add
 //! a ridge). Gains are priced through the same incremental-Cholesky trick
 //! as info-gain, on K_S itself (no +I).
+//!
+//! Pricing rides the shared [`ShardedGainEngine`] as a candidate-sharded
+//! [`GainKernel`] — like info-gain, this objective gains real parallel
+//! batching for the first time: each candidate shard computes its **own
+//! Schur complements** (the pivot `d_e = a_ee − ‖w‖²` from a per-shard
+//! forward-solve scratch) against the shared read-only Cholesky factor of
+//! K_S, bit-identical across shard/thread counts.
 
+use std::ops::Range;
 use std::sync::Arc;
 
+use super::engine::{
+    GainKernel, ShardSpec, ShardedGainEngine, MIN_HEAVY_CANDIDATES_PER_SHARD,
+};
 use super::{State, SubmodularFn};
 use crate::data::Dataset;
 use crate::linalg::IncrementalCholesky;
@@ -41,11 +52,11 @@ impl DppLogDet {
 
 impl SubmodularFn for DppLogDet {
     fn state(&self) -> Box<dyn State + '_> {
-        Box::new(DppState {
+        Box::new(ShardedGainEngine::new(DppKernel {
             obj: self,
             chol: IncrementalCholesky::new(),
             selected: Vec::new(),
-        })
+        }))
     }
 
     fn is_monotone(&self) -> bool {
@@ -57,13 +68,17 @@ impl SubmodularFn for DppLogDet {
     }
 }
 
-pub struct DppState<'a> {
+/// Candidate-sharded DPP kernel: incremental Cholesky of K_S.
+pub struct DppKernel<'a> {
     obj: &'a DppLogDet,
     chol: IncrementalCholesky,
     selected: Vec<usize>,
 }
 
-impl<'a> DppState<'a> {
+/// Pre-refactor name for the DPP state, preserved as the engine alias.
+pub type DppState<'a> = ShardedGainEngine<DppKernel<'a>>;
+
+impl<'a> DppKernel<'a> {
     fn terms(&self, e: usize) -> (f64, Vec<f64>) {
         let a_ee = self.obj.kernel(e, e);
         let a_se = self
@@ -75,21 +90,39 @@ impl<'a> DppState<'a> {
     }
 }
 
-impl<'a> State for DppState<'a> {
-    fn value(&self) -> f64 {
-        self.chol.logdet()
+impl<'a> GainKernel for DppKernel<'a> {
+    fn shard_spec(&self) -> ShardSpec {
+        // O(k²) per candidate: even narrow batches amortize a shard.
+        ShardSpec::Candidates { min_per_shard: MIN_HEAVY_CANDIDATES_PER_SHARD }
     }
 
-    fn gain(&mut self, e: usize) -> f64 {
-        let (a_ee, a_se) = self.terms(e);
-        self.chol.gain(a_ee, &a_se)
+    /// Per-shard Schur complements: one cross-term + forward-solve scratch
+    /// pair per shard invocation, reused across the shard's candidates —
+    /// the same pivot arithmetic (`gain_with`) as the serial path.
+    fn shard_gain_partial(&self, es: &[usize], rows: &Range<usize>) -> Vec<f64> {
+        let mut a_se: Vec<f64> = Vec::with_capacity(self.selected.len());
+        let mut solve: Vec<f64> = Vec::with_capacity(self.selected.len());
+        es[rows.clone()]
+            .iter()
+            .map(|&e| {
+                a_se.clear();
+                for &s in &self.selected {
+                    a_se.push(self.obj.kernel(s, e));
+                }
+                self.chol.gain_with(self.obj.kernel(e, e), &a_se, &mut solve)
+            })
+            .collect()
     }
 
-    fn push(&mut self, e: usize) -> f64 {
+    fn apply_push(&mut self, e: usize) -> f64 {
         let (a_ee, a_se) = self.terms(e);
         let inc = self.chol.push(a_ee, &a_se);
         self.selected.push(e);
         inc
+    }
+
+    fn value(&self) -> f64 {
+        self.chol.logdet()
     }
 
     fn selected(&self) -> &[usize] {
@@ -153,5 +186,25 @@ mod tests {
         let g = st.gain(9);
         let realized = st.push(9);
         assert!((g - realized).abs() < 1e-10);
+    }
+
+    #[test]
+    fn batched_gains_bit_identical_to_serial() {
+        // The first parallel path this objective ever had: per-shard Schur
+        // complements must reproduce the serial gains exactly.
+        let ds = Arc::new(gaussian_blobs(&SynthConfig::unstructured(90, 6), 19));
+        let f = DppLogDet::new(&ds, 1.0, 0.5);
+        let mut st = f.state();
+        for e in [0usize, 31, 62] {
+            st.push(e);
+        }
+        let cands: Vec<usize> = (0..90).collect();
+        let serial = st.batch_gains(&cands);
+        for threads in [2usize, 8] {
+            assert_eq!(serial, st.par_batch_gains(&cands, threads), "threads={threads}");
+        }
+        for (i, &e) in cands.iter().enumerate() {
+            assert_eq!(serial[i], st.gain(e), "gain({e}) diverged from batch");
+        }
     }
 }

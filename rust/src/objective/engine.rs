@@ -1,0 +1,475 @@
+//! The sharded gain engine — ONE deterministic batch-pricing core under
+//! every objective.
+//!
+//! Before this module existed, `FacilityLocation` privately owned the whole
+//! fast path (window sharding, shard-ordered reduction, SIMD dispatch, the
+//! `curmin` backend mirror), coverage/cut re-derived their own candidate
+//! sharding, and the Cholesky-priced objectives (info-gain, DPP) plus the
+//! analytic ones (entropy worst-case, modular) fell back to serial
+//! element-at-a-time pricing. [`ShardedGainEngine`] lifts the shared
+//! machinery out so an objective only supplies a small [`GainKernel`]:
+//!
+//! * **shard-boundary computation** — a pure function of *problem shape*
+//!   (window length or candidate count), NEVER the thread count;
+//! * **submission** to the persistent work-stealing pool
+//!   (`util::executor`), bounded by the caller's per-stage thread budget;
+//! * **shard-ordered deterministic reduction** — window-sharded partial
+//!   sums fold in shard order, candidate-sharded outputs concatenate in
+//!   shard order (= input order), so results are bit-identical at 1, 2 or
+//!   64 threads;
+//! * **oracle-call accounting** — every state carries an
+//!   [`OracleCounter`](super::OracleCounter) maintained here, exposed via
+//!   [`State::oracle_counter`](super::State::oracle_counter);
+//! * **the runtime-dispatch seam** — [`GainKernel::backend_batch`] lets an
+//!   accelerator ([`GainBackend`], today the XLA facility artifact,
+//!   tomorrow a CUDA/Pallas or NUMA-pinned backend) intercept whole
+//!   batches, while per-shard CPU kernels keep their own ISA dispatch
+//!   (facility's AVX2+FMA path) inside [`GainKernel::shard_gain_partial`].
+//!
+//! ## Two shard shapes
+//!
+//! [`ShardSpec::Window`] — the objective's per-candidate work streams a
+//! large evaluation buffer (facility location's packed window): the window
+//! is cut into contiguous shards, every shard prices *every* candidate over
+//! its slice, and the per-candidate partials are summed in shard order.
+//!
+//! [`ShardSpec::Candidates`] — the per-candidate work is self-contained
+//! (coverage's one transaction scan, cut's one adjacency scan, info-gain's
+//! probe-column forward solve, DPP's Schur complement, modular's weight
+//! lookup, entropy's group lookup): the candidate *list* is cut into
+//! contiguous shards and each shard prices its own slice completely. Each
+//! kernel declares how many candidates one shard must hold to amortize the
+//! fan-out (`min_per_shard`): cheap lookups use
+//! [`MIN_CANDIDATES_PER_SHARD`], the O(k²)-per-candidate Cholesky kernels
+//! use [`MIN_HEAVY_CANDIDATES_PER_SHARD`].
+//!
+//! ## Determinism rules (the thread-invariance contract)
+//!
+//! 1. Shard boundaries come from [`shard_ranges`] with a shard *count* that
+//!    is a pure function of problem shape ([`window_shard_count`] /
+//!    [`candidate_shard_count`]) — never of `threads`, pool size, or
+//!    timing. `threads` only bounds how many shards are in flight at once.
+//! 2. [`GainKernel::shard_gain_partial`] must be a pure read-only function
+//!    of the kernel state and its shard (it is called concurrently); any
+//!    scratch space is allocated per shard invocation.
+//! 3. Reduction happens on the calling thread in shard order — work
+//!    *placement* can never leak into results.
+//! 4. `gain`, `batch_gains` and `par_batch_gains` all run the identical
+//!    sharded reduction (serial execution of the same shard loop), so every
+//!    pricing surface is bit-identical to every other. The one documented
+//!    carve-out: single-element [`State::gain`](super::State::gain) stays on
+//!    the CPU kernel even when a [`GainBackend`] is installed — the backend
+//!    is a *batched* accelerator and may differ from the CPU kernel at f32
+//!    tolerance, so mixing it into single-gain pricing would break the
+//!    gain-equals-eval-difference contract the scalar path guarantees.
+//!
+//! ## Adding an objective (~50 lines)
+//!
+//! Implement [`GainKernel`] for a struct holding your incremental state:
+//! `shard_spec` (shape only), `shard_gain_partial` (read-only pricing of a
+//! shard), `apply_push` (commit + realized gain), `value`/`selected`
+//! getters, and optionally `normalize` (post-reduction scaling),
+//! `singleton` (closed-form f({e})) and `backend_batch` (accelerator hook).
+//! Then `SubmodularFn::state` returns
+//! `Box::new(ShardedGainEngine::new(kernel))` and your objective inherits
+//! batched, parallel, thread-invariant pricing plus oracle accounting —
+//! see `objective::modular` for the smallest complete example.
+
+use std::ops::Range;
+
+use super::{OracleCounter, State};
+use crate::util::executor::{parallel_map, shard_ranges};
+
+/// Pluggable batched-gain accelerator backend (implemented by
+/// `runtime::xla_facility`, and the seam a CUDA/Pallas backend will use).
+/// Lives here — not in any one objective — because the engine owns the
+/// dispatch decision; facility re-exports it for compatibility.
+pub trait GainBackend: Sync + Send {
+    /// For each candidate id, the UNNORMALIZED gain
+    /// `Σ_{v∈W} max(curmin[v] − l(cand, v), 0)`, where `curmin` is indexed
+    /// by position in the evaluation window.
+    fn batch_gain_sums(&self, cands: &[usize], curmin: &[f32]) -> Vec<f64>;
+}
+
+/// Window points per shard below which sharding stops paying for itself;
+/// also bounds the shard count so tiny windows stay one serial stream.
+pub const MIN_SHARD_POINTS: usize = 256;
+
+/// Hard cap on shards per pricing call (window reduction cost is
+/// `shards × candidates`; candidate-shard joins are `shards` appends).
+pub const MAX_SHARDS: usize = 16;
+
+/// Default candidate-shard floor for kernels whose per-candidate work is a
+/// few cache lines (coverage, cut, modular, entropy): fan-out only pays for
+/// itself on wide batches.
+pub const MIN_CANDIDATES_PER_SHARD: usize = 64;
+
+/// Candidate-shard floor for heavy kernels (info-gain, DPP): each candidate
+/// costs an O(k²) forward solve, so even narrow batches amortize a shard.
+pub const MIN_HEAVY_CANDIDATES_PER_SHARD: usize = 8;
+
+/// How a kernel's batched pricing splits across the executor — a pure
+/// function of problem shape (see the module-level determinism rules).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardSpec {
+    /// Split the evaluation window of `len` points: every shard prices
+    /// every candidate over its window slice, partial sums reduce in shard
+    /// order, then [`GainKernel::normalize`] runs per candidate.
+    Window { len: usize },
+    /// Split the candidate list, at least `min_per_shard` candidates per
+    /// shard: each shard returns final gains for its own slice, and slices
+    /// concatenate in shard order (= input order).
+    Candidates { min_per_shard: usize },
+}
+
+/// Number of window shards for a window of `len` points — a fixed function
+/// of the window length ONLY (never the thread count), which is what makes
+/// the parallel path bit-identical across thread counts.
+pub fn window_shard_count(len: usize) -> usize {
+    (len / MIN_SHARD_POINTS).clamp(1, MAX_SHARDS)
+}
+
+/// Number of candidate shards for a batch of `n_cands` candidates with a
+/// per-shard floor of `min_per_shard` — again a function of batch shape
+/// only. (Concatenation in shard order makes thread-independence trivial
+/// here, but keeping boundaries shape-only means the engine has ONE rule.)
+pub fn candidate_shard_count(n_cands: usize, min_per_shard: usize) -> usize {
+    (n_cands / min_per_shard.max(1)).clamp(1, MAX_SHARDS)
+}
+
+/// The per-objective contract: everything the engine cannot know. All
+/// pricing entry points of [`State`] are derived from these few methods.
+pub trait GainKernel: Sync {
+    /// Shard shape for batched pricing — pure function of problem shape.
+    fn shard_spec(&self) -> ShardSpec;
+
+    /// Price candidates against one shard. Read-only (called concurrently
+    /// on the executor); scratch space must be local to the invocation.
+    ///
+    /// [`ShardSpec::Window`]: `rows` is the window slice; return one
+    /// *partial, unnormalized* sum per candidate in `es` (all of them).
+    /// [`ShardSpec::Candidates`]: `rows` indexes into `es`; return the
+    /// *final* gains of `es[rows]` only.
+    fn shard_gain_partial(&self, es: &[usize], rows: &Range<usize>) -> Vec<f64>;
+
+    /// Commit `e` into the solution, returning the realized gain. Must use
+    /// the same arithmetic/kernel as pricing (the incremental caches are
+    /// the cross-call carriers — mixing kernels would make a gain disagree
+    /// with the eval-difference it promises).
+    fn apply_push(&mut self, e: usize) -> f64;
+
+    /// Current f(S).
+    fn value(&self) -> f64;
+
+    /// Elements committed so far, in insertion order.
+    fn selected(&self) -> &[usize];
+
+    /// Per-candidate normalization applied after the window-shard
+    /// reduction (facility divides by |W|). Candidate-sharded kernels
+    /// return final gains and never see this. Must be a pure function.
+    fn normalize(&self, sum: f64) -> f64 {
+        sum
+    }
+
+    /// Closed-form singleton value f({e}), when it can be computed without
+    /// any state — MUST be bit-identical to pricing `e` through a fresh
+    /// kernel (the sieve ladder and the empty-state fast path rely on
+    /// exact agreement). Default: none.
+    fn singleton(&self, _e: usize) -> Option<f64> {
+        None
+    }
+
+    /// Accelerator seam: whole-batch override returning NORMALIZED gains
+    /// (the facility XLA artifact; a GPU backend tomorrow). When `Some`,
+    /// the engine skips CPU sharding entirely for batch pricing. Default:
+    /// none.
+    fn backend_batch(&self, _es: &[usize]) -> Option<Vec<f64>> {
+        None
+    }
+}
+
+/// Closed-form singletons for a whole batch — `Some` only if the kernel
+/// prices *every* candidate in closed form.
+pub fn closed_form_singletons<K: GainKernel + ?Sized>(
+    kernel: &K,
+    es: &[usize],
+) -> Option<Vec<f64>> {
+    let mut out = Vec::with_capacity(es.len());
+    for &e in es {
+        out.push(kernel.singleton(e)?);
+    }
+    Some(out)
+}
+
+/// The engine: wraps a [`GainKernel`] into a full [`State`], owning shard
+/// planning, executor submission, deterministic reduction, the accelerator
+/// seam and oracle accounting. Every objective's `state()` returns one of
+/// these.
+pub struct ShardedGainEngine<K: GainKernel> {
+    kernel: K,
+    counter: OracleCounter,
+}
+
+impl<K: GainKernel> ShardedGainEngine<K> {
+    pub fn new(kernel: K) -> Self {
+        ShardedGainEngine { kernel, counter: OracleCounter::default() }
+    }
+
+    /// The wrapped kernel (tests/benches peek at objective-specific state).
+    pub fn kernel(&self) -> &K {
+        &self.kernel
+    }
+
+    /// The sharded CPU pricing path — shared verbatim by `gain`,
+    /// `batch_gains` and `par_batch_gains` (`threads` only bounds in-flight
+    /// shards; boundaries and reduction order never move).
+    fn sharded_price(&self, es: &[usize], threads: usize) -> Vec<f64> {
+        if es.is_empty() {
+            return Vec::new();
+        }
+        let (shards, windowed) = match self.kernel.shard_spec() {
+            ShardSpec::Window { len } => (shard_ranges(len, window_shard_count(len)), true),
+            ShardSpec::Candidates { min_per_shard } => (
+                shard_ranges(es.len(), candidate_shard_count(es.len(), min_per_shard)),
+                false,
+            ),
+        };
+        let kernel = &self.kernel;
+        let partials: Vec<Vec<f64>> = if threads > 1 && shards.len() > 1 {
+            parallel_map(shards, threads, |_, rows| kernel.shard_gain_partial(es, &rows))
+        } else {
+            shards
+                .into_iter()
+                .map(|rows| kernel.shard_gain_partial(es, &rows))
+                .collect()
+        };
+        if windowed {
+            let mut out = vec![0.0f64; es.len()];
+            for partial in &partials {
+                for (acc, p) in out.iter_mut().zip(partial) {
+                    *acc += p;
+                }
+            }
+            out.into_iter().map(|s| self.kernel.normalize(s)).collect()
+        } else {
+            let mut out = Vec::with_capacity(es.len());
+            for partial in partials {
+                out.extend(partial);
+            }
+            out
+        }
+    }
+
+    /// Single-candidate pricing without the batch machinery's planning
+    /// allocations — the exact same per-shard computation and reduction
+    /// order as [`ShardedGainEngine::sharded_price`] on a one-element
+    /// batch, so `gain` stays bit-identical to the batch surfaces while
+    /// hot single-gain loops (greedy-scaling commits, sieve re-pricing)
+    /// avoid the Vec-of-partials round trip.
+    fn sharded_gain_single(&self, e: usize) -> f64 {
+        match self.kernel.shard_spec() {
+            ShardSpec::Window { len } => {
+                let sum: f64 = shard_ranges(len, window_shard_count(len))
+                    .into_iter()
+                    .map(|rows| self.kernel.shard_gain_partial(&[e], &rows)[0])
+                    .sum();
+                self.kernel.normalize(sum)
+            }
+            // shard_ranges(1, _) is always the single shard 0..1.
+            ShardSpec::Candidates { .. } => self.kernel.shard_gain_partial(&[e], &(0..1))[0],
+        }
+    }
+
+    /// Batched pricing entry: accelerator seam first, then the empty-state
+    /// closed-form fast path (exact by the [`GainKernel::singleton`]
+    /// contract — this is what makes sieve ladder pricing skip state work
+    /// on objectives with analytic singletons), then the sharded path.
+    fn price(&mut self, es: &[usize], threads: usize) -> Vec<f64> {
+        self.counter.count_batch();
+        self.counter.count_gain(es.len());
+        if let Some(out) = self.kernel.backend_batch(es) {
+            return out;
+        }
+        if self.kernel.selected().is_empty() {
+            if let Some(out) = closed_form_singletons(&self.kernel, es) {
+                return out;
+            }
+        }
+        self.sharded_price(es, threads)
+    }
+}
+
+impl<K: GainKernel> State for ShardedGainEngine<K> {
+    fn value(&self) -> f64 {
+        self.kernel.value()
+    }
+
+    fn gain(&mut self, e: usize) -> f64 {
+        // Single-gain pricing stays on the CPU kernel path even with a
+        // backend installed (module docs, determinism rule 4).
+        self.counter.count_gain(1);
+        self.sharded_gain_single(e)
+    }
+
+    fn batch_gains(&mut self, es: &[usize]) -> Vec<f64> {
+        self.price(es, 1)
+    }
+
+    fn par_batch_gains(&mut self, es: &[usize], threads: usize) -> Vec<f64> {
+        self.price(es, threads)
+    }
+
+    fn push(&mut self, e: usize) -> f64 {
+        self.kernel.apply_push(e)
+    }
+
+    fn selected(&self) -> &[usize] {
+        self.kernel.selected()
+    }
+
+    fn oracle_counter(&self) -> OracleCounter {
+        self.counter.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Minimal window kernel: f(S) = Σ_w base[w]·|S| over a fake window,
+    /// normalized by window length — exercises shard reduction + normalize.
+    struct ToyWindowKernel {
+        base: Vec<f64>,
+        selected: Vec<usize>,
+    }
+
+    impl GainKernel for ToyWindowKernel {
+        fn shard_spec(&self) -> ShardSpec {
+            ShardSpec::Window { len: self.base.len() }
+        }
+        fn shard_gain_partial(&self, es: &[usize], rows: &Range<usize>) -> Vec<f64> {
+            let slice: f64 = self.base[rows.clone()].iter().sum();
+            es.iter().map(|&e| slice * (1.0 + e as f64)).collect()
+        }
+        fn apply_push(&mut self, e: usize) -> f64 {
+            self.selected.push(e);
+            0.0
+        }
+        fn value(&self) -> f64 {
+            0.0
+        }
+        fn selected(&self) -> &[usize] {
+            &self.selected
+        }
+        fn normalize(&self, sum: f64) -> f64 {
+            sum / self.base.len().max(1) as f64
+        }
+    }
+
+    /// Minimal candidate kernel with a closed-form singleton.
+    struct ToyCandKernel {
+        weights: Vec<f64>,
+        selected: Vec<usize>,
+    }
+
+    impl GainKernel for ToyCandKernel {
+        fn shard_spec(&self) -> ShardSpec {
+            ShardSpec::Candidates { min_per_shard: 4 }
+        }
+        fn shard_gain_partial(&self, es: &[usize], rows: &Range<usize>) -> Vec<f64> {
+            es[rows.clone()].iter().map(|&e| self.weights[e]).collect()
+        }
+        fn apply_push(&mut self, e: usize) -> f64 {
+            self.selected.push(e);
+            self.weights[e]
+        }
+        fn value(&self) -> f64 {
+            self.selected.iter().map(|&e| self.weights[e]).sum()
+        }
+        fn selected(&self) -> &[usize] {
+            &self.selected
+        }
+        fn singleton(&self, e: usize) -> Option<f64> {
+            Some(self.weights[e])
+        }
+    }
+
+    #[test]
+    fn shard_counts_are_shape_only_and_clamped() {
+        assert_eq!(window_shard_count(0), 1);
+        assert_eq!(window_shard_count(255), 1);
+        assert_eq!(window_shard_count(512), 2);
+        assert_eq!(window_shard_count(1 << 20), MAX_SHARDS);
+        assert_eq!(candidate_shard_count(10, 64), 1);
+        assert_eq!(candidate_shard_count(128, 64), 2);
+        assert_eq!(candidate_shard_count(100_000, 64), MAX_SHARDS);
+        assert_eq!(candidate_shard_count(64, 0), MAX_SHARDS.min(64));
+    }
+
+    #[test]
+    fn window_reduction_thread_invariant() {
+        let mut st = ShardedGainEngine::new(ToyWindowKernel {
+            base: (0..2_000).map(|i| (i as f64).sin()).collect(),
+            selected: Vec::new(),
+        });
+        let es: Vec<usize> = (0..37).collect();
+        let serial = st.batch_gains(&es);
+        for threads in [1usize, 2, 3, 8] {
+            assert_eq!(serial, st.par_batch_gains(&es, threads), "threads={threads}");
+        }
+        for (i, &e) in es.iter().enumerate() {
+            assert_eq!(serial[i], st.gain(e), "gain({e}) diverged from batch");
+        }
+    }
+
+    #[test]
+    fn candidate_concat_preserves_input_order() {
+        let mut st = ShardedGainEngine::new(ToyCandKernel {
+            weights: (0..500).map(|i| i as f64 * 0.5).collect(),
+            selected: vec![0], // defeat the singleton fast path
+        });
+        let es: Vec<usize> = (0..500).rev().collect();
+        let serial = st.batch_gains(&es);
+        let expect: Vec<f64> = es.iter().map(|&e| e as f64 * 0.5).collect();
+        assert_eq!(serial, expect);
+        for threads in [2usize, 8] {
+            assert_eq!(serial, st.par_batch_gains(&es, threads));
+        }
+    }
+
+    #[test]
+    fn empty_state_uses_closed_form_singletons() {
+        let mut st = ShardedGainEngine::new(ToyCandKernel {
+            weights: vec![1.0, 2.0, 3.0],
+            selected: Vec::new(),
+        });
+        assert_eq!(st.batch_gains(&[2, 0]), vec![3.0, 1.0]);
+        st.push(1);
+        // after a commit the sharded path takes over (same values here)
+        assert_eq!(st.batch_gains(&[2, 0]), vec![3.0, 1.0]);
+    }
+
+    #[test]
+    fn oracle_counter_tracks_batches_and_gains() {
+        let mut st = ShardedGainEngine::new(ToyCandKernel {
+            weights: vec![1.0; 100],
+            selected: Vec::new(),
+        });
+        st.batch_gains(&(0..100).collect::<Vec<_>>());
+        st.par_batch_gains(&[1, 2, 3], 4);
+        st.gain(5);
+        let c = st.oracle_counter();
+        assert_eq!(c.batches, 2);
+        assert_eq!(c.gains, 104);
+    }
+
+    #[test]
+    fn empty_batch_prices_to_empty() {
+        let mut st = ShardedGainEngine::new(ToyWindowKernel {
+            base: vec![1.0; 10],
+            selected: Vec::new(),
+        });
+        assert!(st.batch_gains(&[]).is_empty());
+        assert!(st.par_batch_gains(&[], 8).is_empty());
+    }
+}

@@ -10,7 +10,15 @@
 //!
 //! Element numbering: group i occupies ids `i·(k+1) .. i·(k+1)+k`, the
 //! last id of a group being its `Y_i`.
+//!
+//! Pricing rides the shared [`ShardedGainEngine`] as a candidate-sharded
+//! [`GainKernel`] (each candidate's gain is an O(1) group lookup against
+//! read-only membership counters) — pre-refactor this objective priced
+//! serially, element at a time.
 
+use std::ops::Range;
+
+use super::engine::{GainKernel, ShardSpec, ShardedGainEngine, MIN_CANDIDATES_PER_SHARD};
 use super::{State, SubmodularFn};
 
 /// The Θ(min(m,k)) tightness instance for the two-round protocol.
@@ -61,13 +69,13 @@ impl EntropyWorstCase {
 
 impl SubmodularFn for EntropyWorstCase {
     fn state(&self) -> Box<dyn State + '_> {
-        Box::new(EntropyState {
+        Box::new(ShardedGainEngine::new(EntropyKernel {
             obj: self,
             y_in: vec![false; self.m],
             x_count: vec![0usize; self.m],
             x_in: vec![false; self.m * (self.k + 1)],
             selected: Vec::new(),
-        })
+        }))
     }
 
     fn ground_size(&self) -> usize {
@@ -75,7 +83,8 @@ impl SubmodularFn for EntropyWorstCase {
     }
 }
 
-pub struct EntropyState<'a> {
+/// Candidate-sharded entropy kernel: per-group membership counters.
+pub struct EntropyKernel<'a> {
     obj: &'a EntropyWorstCase,
     y_in: Vec<bool>,
     x_count: Vec<usize>,
@@ -83,7 +92,10 @@ pub struct EntropyState<'a> {
     selected: Vec<usize>,
 }
 
-impl<'a> EntropyState<'a> {
+/// Pre-refactor name for the entropy state, preserved as the engine alias.
+pub type EntropyState<'a> = ShardedGainEngine<EntropyKernel<'a>>;
+
+impl<'a> EntropyKernel<'a> {
     fn group_value(&self, g: usize) -> usize {
         if self.y_in[g] {
             self.obj.k
@@ -91,14 +103,9 @@ impl<'a> EntropyState<'a> {
             self.x_count[g]
         }
     }
-}
 
-impl<'a> State for EntropyState<'a> {
-    fn value(&self) -> f64 {
-        (0..self.obj.m).map(|g| self.group_value(g)).sum::<usize>() as f64
-    }
-
-    fn gain(&mut self, e: usize) -> f64 {
+    /// Read-only marginal gain (the pre-refactor `gain` body verbatim).
+    fn gain_at(&self, e: usize) -> f64 {
         let g = self.obj.group(e);
         if self.x_in[e] {
             return 0.0;
@@ -111,9 +118,19 @@ impl<'a> State for EntropyState<'a> {
             1.0
         }
     }
+}
 
-    fn push(&mut self, e: usize) -> f64 {
-        let gain = self.gain(e);
+impl<'a> GainKernel for EntropyKernel<'a> {
+    fn shard_spec(&self) -> ShardSpec {
+        ShardSpec::Candidates { min_per_shard: MIN_CANDIDATES_PER_SHARD }
+    }
+
+    fn shard_gain_partial(&self, es: &[usize], rows: &Range<usize>) -> Vec<f64> {
+        es[rows.clone()].iter().map(|&e| self.gain_at(e)).collect()
+    }
+
+    fn apply_push(&mut self, e: usize) -> f64 {
+        let gain = self.gain_at(e);
         if !self.x_in[e] {
             self.x_in[e] = true;
             let g = self.obj.group(e);
@@ -125,6 +142,10 @@ impl<'a> State for EntropyState<'a> {
             self.selected.push(e);
         }
         gain
+    }
+
+    fn value(&self) -> f64 {
+        (0..self.obj.m).map(|g| self.group_value(g)).sum::<usize>() as f64
     }
 
     fn selected(&self) -> &[usize] {
@@ -164,6 +185,20 @@ mod tests {
         assert_eq!(f.optimal_value(3), 15.0); // 3 Y's
         assert_eq!(f.optimal_value(4), 20.0);
         assert_eq!(f.optimal_value(6), 20.0); // 4 Y's; stray bits add nothing
+    }
+
+    #[test]
+    fn batched_gains_match_serial(){
+        let f = EntropyWorstCase::new(16, 12);
+        let mut st = f.state();
+        st.push(12); // Y_0
+        st.push(13); // X_{1,0}
+        let cands: Vec<usize> = (0..f.ground_size()).collect();
+        let serial = st.batch_gains(&cands);
+        assert_eq!(serial, st.par_batch_gains(&cands, 8));
+        for (i, &e) in cands.iter().enumerate() {
+            assert_eq!(serial[i], st.gain(e));
+        }
     }
 
     #[test]

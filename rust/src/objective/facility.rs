@@ -15,26 +15,24 @@
 //! `W` (the evaluation window) is the full dataset in global mode or the
 //! local shard in the paper's decomposable mode (§4.5).
 //!
-//! ## Perf pass §A, iteration 5: the window-sharded parallel gain engine
+//! ## The engine refactor: facility as a thin [`GainKernel`]
 //!
-//! `Σ_v max(curmin[v] − ‖e−v‖², 0)` is embarrassingly parallel over `v`, so
-//! [`State::par_batch_gains`] splits the packed window into **contiguous
-//! shards** and has each worker stream *its own* shard for all candidates —
-//! the sequential-stream inner loop that made iteration 2 fast stays intact
-//! per thread (unlike the reverted loop interchange of iteration 4), and
-//! there is no early-exit branch in the inner loop (reverted iteration 3).
-//! The shard boundaries are a fixed function of `|W|` only — never the
-//! thread count — and per-shard partials reduce in shard order, so gains are
-//! bit-identical at 1, 2 or 64 threads; the serial `batch_gains`/`gain`
-//! paths run the *same* sharded reduction on one thread, keeping every
-//! evaluation path bit-identical to every other. The inner distance loop
-//! accumulates in [`LANES`] independent f32 lanes so LLVM auto-vectorizes
-//! the d-loop, and `push` maintains an f32 mirror of `curmin` so the XLA
-//! backend path never re-allocates or converts per call. The shards
-//! execute on the persistent work-stealing pool (`util::executor`), so the
-//! fan-out pays no per-batch thread-launch cost.
+//! `Σ_v max(curmin[v] − ‖e−v‖², 0)` is embarrassingly parallel over `v`.
+//! Window sharding, executor submission, shard-ordered reduction and the
+//! backend seam all moved to [`engine::ShardedGainEngine`] — this module
+//! now only supplies [`FacilityKernel`]: the `curmin` caches, the
+//! per-shard distance loop ([`FacilityKernel::gain_partial`]), the commit
+//! scan, and the `/|W|` normalization. Shard boundaries are the engine's
+//! [`engine::window_shard_count`] — the same `(|W|/256).clamp(1, 16)`
+//! rule this module used pre-refactor, a fixed function of `|W|` only —
+//! and per-shard partials still reduce in shard order, so gains remain
+//! bit-identical at 1, 2 or 64 threads and bit-for-bit unchanged vs. the
+//! pre-refactor module per dispatch path. The sequential-stream inner loop
+//! that made perf iteration 2 fast stays intact per shard (the loop
+//! interchange of iteration 4 and the early-exit of iteration 3 remain
+//! reverted — see the NOTE on [`FacilityKernel::gain_partial`]).
 //!
-//! ## Perf pass §B: runtime-dispatched explicit SIMD distance kernel
+//! ## Runtime-dispatched explicit SIMD distance kernel (perf pass §B)
 //!
 //! On `x86_64` the distance kernel has a hand-rolled **AVX2 + FMA**
 //! implementation ([`kernel_sq_dist`] and the fused per-shard loops in
@@ -59,36 +57,18 @@
 use std::ops::Range;
 use std::sync::{Arc, OnceLock};
 
+use super::engine::{self, GainKernel, ShardSpec, ShardedGainEngine};
 use super::{State, SubmodularFn};
 use crate::data::Dataset;
-use crate::util::executor::{parallel_map, shard_ranges};
 
-/// Pluggable batched-gain backend (implemented by `runtime::xla_facility`).
-pub trait GainBackend: Sync + Send {
-    /// For each candidate id, the UNNORMALIZED gain
-    /// `Σ_{v∈W} max(curmin[v] − l(cand, v), 0)`, where `curmin` is indexed
-    /// by position in the evaluation window.
-    fn batch_gain_sums(&self, cands: &[usize], curmin: &[f32]) -> Vec<f64>;
-}
+/// Re-exported accelerator seam (canonical home: [`engine::GainBackend`];
+/// kept here so pre-refactor import paths keep compiling).
+pub use super::engine::GainBackend;
 
 /// Independent f32 accumulator lanes in the distance inner loop (perf §A,
 /// iteration 5): enough independent chains for LLVM to keep a full SIMD
 /// register busy, reduced in a fixed tree order for determinism.
 const LANES: usize = 8;
-
-/// Window points per shard below which sharding stops paying for itself;
-/// also bounds the shard count so tiny windows stay one serial stream.
-const MIN_SHARD_POINTS: usize = 256;
-
-/// Hard cap on window shards (reduction cost is `shards × candidates`).
-const MAX_SHARDS: usize = 16;
-
-/// Number of window shards the gain engine uses — a fixed function of the
-/// window length ONLY (never the thread count), which is what makes the
-/// parallel path bit-identical across thread counts.
-fn shard_count(window_len: usize) -> usize {
-    (window_len / MIN_SHARD_POINTS).clamp(1, MAX_SHARDS)
-}
 
 /// Squared Euclidean distance in f32 with [`LANES`] independent accumulator
 /// chains and a deterministic tree reduction — the portable kernel, and the
@@ -174,7 +154,7 @@ pub fn kernel_sq_dist_scalar(a: &[f32], b: &[f32]) -> f32 {
 }
 
 /// Scalar per-shard gain loop (the worker kernel of the sharded engine on
-/// the portable path). See `FacilityState::gain_partial` for dispatch.
+/// the portable path). See [`FacilityKernel::gain_partial`] for dispatch.
 fn gain_partial_scalar(packed: &[f32], d: usize, curmin: &[f64], erow: &[f32]) -> f64 {
     let mut sum = 0.0f64;
     for (idx, vrow) in packed.chunks_exact(d).enumerate() {
@@ -207,7 +187,7 @@ fn push_scan(
 }
 
 /// Scalar commit scan: lower `curmin`/`curmin32` where the new exemplar is
-/// closer, returning the summed reduction. See `FacilityState::push`.
+/// closer, returning the summed reduction. See [`FacilityKernel::apply_push`].
 fn push_scan_scalar(
     packed: &[f32],
     d: usize,
@@ -386,13 +366,13 @@ impl FacilityLocation {
 
 impl SubmodularFn for FacilityLocation {
     fn state(&self) -> Box<dyn State + '_> {
-        Box::new(FacilityState {
+        Box::new(ShardedGainEngine::new(FacilityKernel {
             obj: self,
             curmin: self.phantom.clone(),
             curmin32: self.phantom32.clone(),
             selected: Vec::new(),
             value: 0.0,
-        })
+        }))
     }
 
     fn ground_size(&self) -> usize {
@@ -400,9 +380,11 @@ impl SubmodularFn for FacilityLocation {
     }
 }
 
-/// Incremental state: cached min squared distance per window point, plus an
-/// f32 mirror kept in sync by `push` (consumed zero-copy by [`GainBackend`]).
-pub struct FacilityState<'a> {
+/// The facility [`GainKernel`]: cached min squared distance per window
+/// point, plus an f32 mirror kept in sync by `apply_push` (consumed
+/// zero-copy by [`GainBackend`]). Sharding, reduction, accounting and the
+/// backend dispatch live in [`ShardedGainEngine`].
+pub struct FacilityKernel<'a> {
     obj: &'a FacilityLocation,
     curmin: Vec<f64>,
     curmin32: Vec<f32>,
@@ -410,7 +392,11 @@ pub struct FacilityState<'a> {
     value: f64,
 }
 
-impl<'a> FacilityState<'a> {
+/// Pre-refactor name for the facility state, preserved as the engine-typed
+/// alias (`SubmodularFn::state` boxes one of these).
+pub type FacilityState<'a> = ShardedGainEngine<FacilityKernel<'a>>;
+
+impl<'a> FacilityKernel<'a> {
     /// Unnormalized gain of one candidate over window rows `rows` — the
     /// worker kernel of the sharded engine. Streams its contiguous slice of
     /// the packed buffer sequentially; per-point distances accumulate in f32
@@ -436,71 +422,36 @@ impl<'a> FacilityState<'a> {
         }
         gain_partial_scalar(packed, d, curmin, erow)
     }
-
-    /// The window-sharded gain engine (perf §A, iteration 5): per-shard
-    /// partial sums for all candidates, reduced in deterministic shard
-    /// order. `threads == 1` runs the identical shard loop serially, so
-    /// every thread count produces bit-identical sums.
-    fn gain_sums(&self, es: &[usize], threads: usize) -> Vec<f64> {
-        let shards = shard_ranges(self.obj.window.len(), shard_count(self.obj.window.len()));
-        let partials: Vec<Vec<f64>> = if threads > 1 && shards.len() > 1 && !es.is_empty() {
-            parallel_map(shards, threads, |_, rows| {
-                es.iter().map(|&e| self.gain_partial(e, &rows)).collect()
-            })
-        } else {
-            shards
-                .into_iter()
-                .map(|rows| es.iter().map(|&e| self.gain_partial(e, &rows)).collect())
-                .collect()
-        };
-        let mut out = vec![0.0f64; es.len()];
-        for partial in &partials {
-            for (acc, p) in out.iter_mut().zip(partial) {
-                *acc += p;
-            }
-        }
-        out
-    }
-
-    /// Single-candidate gain sum through the same sharded reduction (keeps
-    /// `gain` bit-identical to `batch_gains`/`par_batch_gains`).
-    fn gain_sum(&self, e: usize) -> f64 {
-        let len = self.obj.window.len();
-        shard_ranges(len, shard_count(len))
-            .into_iter()
-            .map(|rows| self.gain_partial(e, &rows))
-            .sum()
-    }
 }
 
-impl<'a> State for FacilityState<'a> {
-    fn value(&self) -> f64 {
-        self.value
+impl<'a> GainKernel for FacilityKernel<'a> {
+    fn shard_spec(&self) -> ShardSpec {
+        ShardSpec::Window { len: self.obj.window.len() }
     }
 
-    fn gain(&mut self, e: usize) -> f64 {
-        self.gain_sum(e) / self.obj.window.len().max(1) as f64
+    fn shard_gain_partial(&self, es: &[usize], rows: &Range<usize>) -> Vec<f64> {
+        es.iter().map(|&e| self.gain_partial(e, rows)).collect()
     }
 
-    fn batch_gains(&mut self, es: &[usize]) -> Vec<f64> {
-        self.par_batch_gains(es, 1)
+    fn normalize(&self, sum: f64) -> f64 {
+        sum / self.obj.window.len().max(1) as f64
     }
 
-    fn par_batch_gains(&mut self, es: &[usize], threads: usize) -> Vec<f64> {
+    fn backend_batch(&self, es: &[usize]) -> Option<Vec<f64>> {
+        let backend = self.obj.backend.as_ref()?;
+        // The incrementally-maintained f32 mirror goes straight to the
+        // backend — no per-call allocation or f64→f32 conversion pass.
         let n = self.obj.window.len().max(1) as f64;
-        if let Some(backend) = &self.obj.backend {
-            // The incrementally-maintained f32 mirror goes straight to the
-            // backend — no per-call allocation or f64→f32 conversion pass.
-            return backend
+        Some(
+            backend
                 .batch_gain_sums(es, &self.curmin32)
                 .into_iter()
                 .map(|s| s / n)
-                .collect();
-        }
-        self.gain_sums(es, threads).into_iter().map(|s| s / n).collect()
+                .collect(),
+        )
     }
 
-    fn push(&mut self, e: usize) -> f64 {
+    fn apply_push(&mut self, e: usize) -> f64 {
         let obj = self.obj;
         let d = obj.data.d;
         let erow = obj.data.row(e);
@@ -511,9 +462,20 @@ impl<'a> State for FacilityState<'a> {
         gain
     }
 
+    fn value(&self) -> f64 {
+        self.value
+    }
+
     fn selected(&self) -> &[usize] {
         &self.selected
     }
+}
+
+/// Window shards the engine will use for this window length — bench-facing
+/// mirror of [`engine::window_shard_count`] (kept so perf harnesses shard
+/// their frozen baselines identically).
+pub fn window_shards(window_len: usize) -> usize {
+    engine::window_shard_count(window_len)
 }
 
 #[cfg(test)]
@@ -609,23 +571,6 @@ mod tests {
         let batch = st.batch_gains(&cands);
         for (i, &e) in cands.iter().enumerate() {
             assert!((batch[i] - st.gain(e)).abs() < 1e-12);
-        }
-    }
-
-    #[test]
-    fn par_batch_gains_bit_identical_across_threads() {
-        // Big enough window for several shards (shard_count > 1), so the
-        // parallel path genuinely fans out.
-        let ds = Arc::new(gaussian_blobs(&SynthConfig::tiny_images(1200, 8), 13));
-        let f = FacilityLocation::from_dataset(&ds);
-        let mut st = f.state();
-        st.push(7);
-        st.push(311);
-        let cands: Vec<usize> = (0..64).map(|i| i * 17 % 1200).collect();
-        let serial = st.batch_gains(&cands);
-        for threads in [1usize, 2, 3, 8] {
-            let par = st.par_batch_gains(&cands, threads);
-            assert_eq!(serial, par, "threads={threads} changed gain bits");
         }
     }
 

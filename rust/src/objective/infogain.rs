@@ -5,9 +5,23 @@
 //! Monotone submodular (Krause & Guestrin 2005). Marginal gains are priced
 //! through the incremental Cholesky factor (`linalg::cholesky`): O(k·d) for
 //! the kernel row plus an O(k²) forward solve — never an O(k³) log-det.
+//!
+//! Pricing rides the shared [`ShardedGainEngine`] as a candidate-sharded
+//! [`GainKernel`] — the objective the paper's 45M-record GP-inference
+//! experiments bottleneck on gains real parallel batching here for the
+//! first time. Each candidate shard builds its **own probe columns**
+//! (`a_se` cross-terms + forward-solve scratch, allocated once per shard
+//! and reused across that shard's candidates) against the shared read-only
+//! Cholesky factor, so shards price concurrently with bit-identical
+//! results at any thread count. Commits keep the kernel-owned scratch
+//! (`apply_push` is exclusive), exactly as fast as before.
 
+use std::ops::Range;
 use std::sync::Arc;
 
+use super::engine::{
+    GainKernel, ShardSpec, ShardedGainEngine, MIN_HEAVY_CANDIDATES_PER_SHARD,
+};
 use super::{State, SubmodularFn};
 use crate::data::Dataset;
 use crate::linalg::IncrementalCholesky;
@@ -42,13 +56,12 @@ impl InfoGain {
 
 impl SubmodularFn for InfoGain {
     fn state(&self) -> Box<dyn State + '_> {
-        Box::new(InfoGainState {
+        Box::new(ShardedGainEngine::new(InfoGainKernel {
             obj: self,
             chol: IncrementalCholesky::new(),
             selected: Vec::new(),
             a_se: Vec::new(),
-            solve: Vec::new(),
-        })
+        }))
     }
 
     fn ground_size(&self) -> usize {
@@ -56,20 +69,23 @@ impl SubmodularFn for InfoGain {
     }
 }
 
-/// Incremental state: Cholesky factor of I + σ⁻² K_SS. Scratch buffers
-/// (`a_se`, `solve`) are reused across gain calls — pricing a candidate
-/// allocates nothing (perf pass §B).
-pub struct InfoGainState<'a> {
+/// Candidate-sharded info-gain kernel: Cholesky factor of I + σ⁻² K_SS.
+/// The `a_se` scratch buffer is reused across *commits* (which are
+/// exclusive); concurrent shard pricing allocates per-shard probe columns
+/// instead (see [`GainKernel::shard_gain_partial`]).
+pub struct InfoGainKernel<'a> {
     obj: &'a InfoGain,
     chol: IncrementalCholesky,
     selected: Vec<usize>,
     a_se: Vec<f64>,
-    solve: Vec<f64>,
 }
 
-impl<'a> InfoGainState<'a> {
+/// Pre-refactor name for the info-gain state, preserved as the engine alias.
+pub type InfoGainState<'a> = ShardedGainEngine<InfoGainKernel<'a>>;
+
+impl<'a> InfoGainKernel<'a> {
     /// Fill `self.a_se` with σ⁻²K(s, e) for the current selection and
-    /// return a_ee.
+    /// return a_ee (commit path only — pricing builds per-shard columns).
     fn fill_cross_terms(&mut self, e: usize) -> f64 {
         self.a_se.clear();
         for &s in &self.selected {
@@ -79,27 +95,43 @@ impl<'a> InfoGainState<'a> {
     }
 }
 
-impl<'a> State for InfoGainState<'a> {
-    fn value(&self) -> f64 {
-        0.5 * self.chol.logdet()
+impl<'a> GainKernel for InfoGainKernel<'a> {
+    fn shard_spec(&self) -> ShardSpec {
+        // O(k²) per candidate: even narrow batches amortize a shard.
+        ShardSpec::Candidates { min_per_shard: MIN_HEAVY_CANDIDATES_PER_SHARD }
     }
 
-    fn gain(&mut self, e: usize) -> f64 {
-        let a_ee = self.fill_cross_terms(e);
-        // split borrows: take a_se out to appease the borrow checker
-        let a_se = std::mem::take(&mut self.a_se);
-        let g = 0.5 * self.chol.gain_with(a_ee, &a_se, &mut self.solve);
-        self.a_se = a_se;
-        g
+    /// Per-shard Cholesky probe columns: one `a_se`/`solve` pair allocated
+    /// per shard invocation and reused for every candidate in the shard —
+    /// the same arithmetic (`gain_with`) the serial path has always run,
+    /// so gains are bit-identical across shard/thread counts.
+    fn shard_gain_partial(&self, es: &[usize], rows: &Range<usize>) -> Vec<f64> {
+        let mut a_se: Vec<f64> = Vec::with_capacity(self.selected.len());
+        let mut solve: Vec<f64> = Vec::with_capacity(self.selected.len());
+        es[rows.clone()]
+            .iter()
+            .map(|&e| {
+                a_se.clear();
+                for &s in &self.selected {
+                    a_se.push(self.obj.scaled_kernel(s, e));
+                }
+                let a_ee = 1.0 + self.obj.scaled_kernel(e, e);
+                0.5 * self.chol.gain_with(a_ee, &a_se, &mut solve)
+            })
+            .collect()
     }
 
-    fn push(&mut self, e: usize) -> f64 {
+    fn apply_push(&mut self, e: usize) -> f64 {
         let a_ee = self.fill_cross_terms(e);
         let a_se = std::mem::take(&mut self.a_se);
         let inc = 0.5 * self.chol.push(a_ee, &a_se);
         self.a_se = a_se;
         self.selected.push(e);
         inc
+    }
+
+    fn value(&self) -> f64 {
+        0.5 * self.chol.logdet()
     }
 
     fn selected(&self) -> &[usize] {
@@ -156,6 +188,26 @@ mod tests {
         let g = st.gain(14);
         let diff = brute(&f, &[1, 8, 14]) - brute(&f, &[1, 8]);
         assert!((g - diff).abs() < 1e-8, "{g} vs {diff}");
+    }
+
+    #[test]
+    fn batched_gains_bit_identical_to_serial() {
+        // The first parallel path this objective ever had: per-shard probe
+        // columns must reproduce the serial gains exactly.
+        let ds = dataset(120);
+        let f = InfoGain::paper_params(&ds);
+        let mut st = f.state();
+        for e in [1usize, 8, 40, 77] {
+            st.push(e);
+        }
+        let cands: Vec<usize> = (0..120).collect();
+        let serial = st.batch_gains(&cands);
+        for threads in [2usize, 8] {
+            assert_eq!(serial, st.par_batch_gains(&cands, threads), "threads={threads}");
+        }
+        for (i, &e) in cands.iter().enumerate() {
+            assert_eq!(serial[i], st.gain(e), "gain({e}) diverged from batch");
+        }
     }
 
     #[test]

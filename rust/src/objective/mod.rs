@@ -1,12 +1,55 @@
-//! Submodular objective functions.
+//! Submodular objective functions, all served by ONE batch-pricing core.
 //!
-//! The central abstraction is [`SubmodularFn`], which hands out *incremental
-//! evaluation states* ([`State`]): greedy algorithms price candidates through
-//! `State::gain` / `State::batch_gains` and commit with `State::push`. This
-//! is what makes the paper's experiments tractable — facility location keeps
-//! a cached `curmin` vector (O(n) gains instead of O(n·k)), information gain
-//! keeps an incremental Cholesky factor (O(k²) instead of O(k³)), coverage
-//! keeps a covered bitset, and the cut function keeps membership flags.
+//! ## Architecture: kernels under an engine
+//!
+//! The central abstraction is [`SubmodularFn`], which hands out
+//! *incremental evaluation states* ([`State`]): greedy algorithms price
+//! candidates through `State::gain` / `State::batch_gains` /
+//! `State::par_batch_gains` and commit with `State::push`. Since the
+//! engine refactor, **no objective implements those pricing surfaces
+//! itself**. Each objective supplies a small [`engine::GainKernel`] — its
+//! incremental caches plus a read-only per-shard pricing function — and
+//! `state()` returns an [`engine::ShardedGainEngine`] wrapping it. The
+//! engine owns, for every objective uniformly:
+//!
+//! * shard-boundary computation (pure function of problem shape, never the
+//!   thread count),
+//! * submission to the persistent work-stealing pool (`util::executor`),
+//! * shard-ordered deterministic reduction,
+//! * oracle-call accounting ([`State::oracle_counter`]),
+//! * the runtime-dispatch seam ([`engine::GainBackend`] batches to the XLA
+//!   facility artifact today; the GPU/NUMA backends ROADMAP names plug in
+//!   at the same hook).
+//!
+//! The per-objective caches are what make the paper's experiments
+//! tractable — facility location keeps a cached `curmin` vector (O(n)
+//! gains instead of O(n·k)), information gain and DPP keep an incremental
+//! Cholesky factor (O(k²) probe columns / Schur complements instead of
+//! O(k³) log-dets), coverage keeps a covered bitset, the cut function
+//! keeps membership flags, and modular/entropy are analytic.
+//!
+//! ## Determinism rules
+//!
+//! Every pricing surface of every objective is **bit-identical across
+//! thread counts** and across `gain`/`batch_gains`/`par_batch_gains`:
+//! shard boundaries depend only on problem shape, per-shard pricing is
+//! read-only, and reduction happens in shard order on the caller (the full
+//! contract is spelled out in [`engine`]'s module docs; the facility SIMD
+//! dispatch adds a per-dispatch-path caveat documented in [`facility`]).
+//! `tests/integration_gain_engine.rs` sweeps the whole matrix — every
+//! objective × threads {1, 2, 8} × the serial-executor escape hatch — and
+//! CI re-runs it under `GREEDI_NO_SIMD=1` and `GREEDI_EXECUTOR_SERIAL=1`.
+//!
+//! ## Adding an objective
+//!
+//! Implement [`engine::GainKernel`] (~50 lines: shard spec, one read-only
+//! shard pricer, one commit, two getters) and return
+//! `Box::new(ShardedGainEngine::new(kernel))` from `state()`. See
+//! [`modular`] for the smallest complete example and [`engine`]'s module
+//! docs for the full walk-through. Objectives with an analytic f({e})
+//! should also override [`SubmodularFn::singleton_gains`] (and
+//! [`engine::GainKernel::singleton`]) so streaming-sieve ladder pricing
+//! skips state construction — [`modular`] and [`coverage`] do.
 //!
 //! Every objective supports *restriction* to a subset of the data for the
 //! decomposable/local evaluation mode of the paper's §4.5 (function
@@ -16,6 +59,7 @@ pub mod coverage;
 pub mod curvature;
 pub mod cut;
 pub mod dpp;
+pub mod engine;
 pub mod entropy_worstcase;
 pub mod facility;
 pub mod infogain;
@@ -51,6 +95,15 @@ pub trait State {
 
     /// Elements committed so far, in insertion order.
     fn selected(&self) -> &[usize];
+
+    /// Oracle-call accounting maintained by the gain engine (gains priced
+    /// and batched calls issued through this state). Counts are a pure
+    /// function of the call sequence, hence thread-invariant. Default:
+    /// zeros, for states not routed through
+    /// [`engine::ShardedGainEngine`].
+    fn oracle_counter(&self) -> OracleCounter {
+        OracleCounter::default()
+    }
 }
 
 /// A non-negative submodular set function over ground set `0..n`.
@@ -71,9 +124,13 @@ pub trait SubmodularFn: Sync {
     /// streaming sieve's threshold-ladder pricing entry point (every
     /// incoming batch is priced once to drive the `(1+ε)^i` ladder).
     /// Default: one [`State::par_batch_gains`] call on a fresh state, which
-    /// is exact (gains from ∅ *are* the singletons) and inherits that
-    /// method's bit-identical-across-threads contract. Objectives with a
-    /// closed-form singleton may override to skip the state setup.
+    /// is exact (gains from ∅ *are* the singletons), inherits the engine's
+    /// bit-identical-across-threads contract, and — for kernels with a
+    /// closed-form [`engine::GainKernel::singleton`] — already skips the
+    /// sharded scan. Objectives whose singletons need no state at all
+    /// (modular weights, coverage set sizes) override this to also skip
+    /// state *construction*; overrides MUST stay bit-identical to the
+    /// default path.
     fn singleton_gains(&self, es: &[usize], threads: usize) -> Vec<f64> {
         let mut st = self.state();
         st.par_batch_gains(es, threads)
@@ -89,7 +146,8 @@ pub trait SubmodularFn: Sync {
 }
 
 /// Gain-oracle call counter, shared by algorithms to report the metric the
-/// paper's speedup plots are driven by.
+/// paper's speedup plots are driven by. Maintained for every objective by
+/// [`engine::ShardedGainEngine`] (see [`State::oracle_counter`]).
 #[derive(Debug, Default, Clone)]
 pub struct OracleCounter {
     pub gains: u64,

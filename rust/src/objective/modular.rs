@@ -1,7 +1,12 @@
 //! Modular (additive) function `f(S) = Σ_{e∈S} w(e)` — the degenerate case
 //! where GreeDi is *exactly* optimal (paper §4.1 discussion). Used heavily
-//! in tests as the analytically solvable objective.
+//! in tests as the analytically solvable objective — and, since the engine
+//! refactor, as the smallest complete [`GainKernel`] example: one shard
+//! spec, one read-only shard pricer, one commit, a closed-form singleton.
 
+use std::ops::Range;
+
+use super::engine::{GainKernel, ShardSpec, ShardedGainEngine, MIN_CANDIDATES_PER_SHARD};
 use super::{State, SubmodularFn};
 
 /// Additive objective with non-negative weights.
@@ -25,7 +30,16 @@ impl Modular {
 
 impl SubmodularFn for Modular {
     fn state(&self) -> Box<dyn State + '_> {
-        Box::new(ModularState { obj: self, selected: Vec::new(), value: 0.0 })
+        Box::new(ShardedGainEngine::new(ModularKernel {
+            obj: self,
+            selected: Vec::new(),
+            value: 0.0,
+        }))
+    }
+
+    /// Ladder pricing without any state construction: f({e}) = w(e).
+    fn singleton_gains(&self, es: &[usize], _threads: usize) -> Vec<f64> {
+        es.iter().map(|&e| self.weights[e]).collect()
     }
 
     fn ground_size(&self) -> usize {
@@ -33,32 +47,50 @@ impl SubmodularFn for Modular {
     }
 }
 
-pub struct ModularState<'a> {
+/// Candidate-sharded modular kernel.
+pub struct ModularKernel<'a> {
     obj: &'a Modular,
     selected: Vec<usize>,
     value: f64,
 }
 
-impl<'a> State for ModularState<'a> {
-    fn value(&self) -> f64 {
-        self.value
-    }
+/// Pre-refactor name for the modular state, preserved as the engine alias.
+pub type ModularState<'a> = ShardedGainEngine<ModularKernel<'a>>;
 
-    fn gain(&mut self, e: usize) -> f64 {
+impl<'a> ModularKernel<'a> {
+    fn gain_at(&self, e: usize) -> f64 {
         if self.selected.contains(&e) {
             0.0
         } else {
             self.obj.weights[e]
         }
     }
+}
 
-    fn push(&mut self, e: usize) -> f64 {
+impl<'a> GainKernel for ModularKernel<'a> {
+    fn shard_spec(&self) -> ShardSpec {
+        ShardSpec::Candidates { min_per_shard: MIN_CANDIDATES_PER_SHARD }
+    }
+
+    fn shard_gain_partial(&self, es: &[usize], rows: &Range<usize>) -> Vec<f64> {
+        es[rows.clone()].iter().map(|&e| self.gain_at(e)).collect()
+    }
+
+    fn singleton(&self, e: usize) -> Option<f64> {
+        Some(self.obj.weights[e])
+    }
+
+    fn apply_push(&mut self, e: usize) -> f64 {
         if self.selected.contains(&e) {
             return 0.0;
         }
         self.selected.push(e);
         self.value += self.obj.weights[e];
         self.obj.weights[e]
+    }
+
+    fn value(&self) -> f64 {
+        self.value
     }
 
     fn selected(&self) -> &[usize] {
@@ -88,6 +120,27 @@ mod tests {
         let f = Modular::new(vec![5.0, 1.0, 3.0, 2.0]);
         assert_eq!(f.opt_cardinality(2), 8.0);
         assert_eq!(f.opt_cardinality(10), 11.0);
+    }
+
+    #[test]
+    fn closed_form_singletons_match_state_path() {
+        let f = Modular::new(vec![5.0, 1.0, 3.0, 2.0]);
+        let es = [3usize, 0, 2];
+        let closed = f.singleton_gains(&es, 1);
+        let mut fresh = f.state();
+        for (i, &e) in es.iter().enumerate() {
+            assert_eq!(closed[i], fresh.gain(e));
+            assert_eq!(closed[i], f.eval(&[e]));
+        }
+    }
+
+    #[test]
+    fn batched_gains_skip_committed_elements() {
+        let f = Modular::new(vec![1.0, 2.0, 3.0, 4.0]);
+        let mut st = f.state();
+        st.push(1);
+        assert_eq!(st.batch_gains(&[0, 1, 2, 3]), vec![1.0, 0.0, 3.0, 4.0]);
+        assert_eq!(st.par_batch_gains(&[0, 1, 2, 3], 8), vec![1.0, 0.0, 3.0, 4.0]);
     }
 
     #[test]

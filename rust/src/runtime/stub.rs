@@ -11,7 +11,7 @@ use std::sync::Arc;
 use super::artifact::Manifest;
 use crate::coordinator::BackendFactory;
 use crate::data::Dataset;
-use crate::objective::facility::GainBackend;
+use crate::objective::engine::GainBackend;
 use crate::util::error::{anyhow, Result};
 
 /// Stand-in for `runtime::engine::Engine`; `load` always errors.

@@ -1,8 +1,11 @@
 //! XLA-backed facility-location gain oracle — the batched hot path.
 //!
-//! Implements [`GainBackend`](crate::objective::facility::GainBackend) by
-//! streaming fixed-shape blocks through the `facility_gain_*` artifact
-//! (the Pallas kernel lowered into the L2 graph):
+//! Implements [`GainBackend`](crate::objective::engine::GainBackend) — the
+//! gain engine's accelerator seam: `objective::engine::ShardedGainEngine`
+//! dispatches whole batches here via `GainKernel::backend_batch` before
+//! any CPU sharding — by streaming fixed-shape blocks through the
+//! `facility_gain_*` artifact (the Pallas kernel lowered into the L2
+//! graph):
 //!
 //! * candidates are packed into `B`-row blocks (last block padded by
 //!   repeating the first candidate; surplus outputs are dropped);
@@ -20,7 +23,7 @@ use crate::util::error::{anyhow, Result};
 
 use super::engine::Engine;
 use crate::data::Dataset;
-use crate::objective::facility::GainBackend;
+use crate::objective::engine::GainBackend;
 
 /// Batched facility-gain executor over one evaluation window.
 pub struct XlaFacilityBackend {

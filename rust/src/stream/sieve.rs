@@ -1,7 +1,11 @@
 //! The batched sieve-streaming engine — one-pass, bounded-memory
 //! cardinality-constrained maximization over a [`StreamSource`], with every
-//! hot pricing routed through the parallel gain engine
-//! ([`State::par_batch_gains`]).
+//! hot pricing routed through the shared sharded gain engine
+//! (`objective::engine::ShardedGainEngine`, behind
+//! [`State::par_batch_gains`] and [`SubmodularFn::singleton_gains`]): the
+//! ladder inherits the engine's bit-identical-across-threads contract for
+//! every objective, and objectives with closed-form singletons (modular
+//! weights, coverage set sizes) price the ladder with no state work at all.
 //!
 //! ## Algorithm
 //!
@@ -30,9 +34,11 @@
 //!    elements ever commit per sieve, re-pricings are rare and the oracle
 //!    sees wide batches almost exclusively.
 //!
-//! Both batched paths honor the `par_batch_gains` bit-identical-across-
-//! threads contract, so the engine's output is invariant to **both** the
-//! batch size and the thread count (asserted by `tests/integration_stream`).
+//! Both batched paths honor the gain engine's bit-identical-across-threads
+//! contract — which since the engine refactor holds for EVERY objective,
+//! not just facility/coverage/cut — so this engine's output is invariant to
+//! **both** the batch size and the thread count (asserted by
+//! `tests/integration_stream`).
 //!
 //! ## Memory bound
 //!

@@ -1,7 +1,8 @@
 //! Persistent work-stealing oracle executor (perf pass §B).
 //!
-//! Every parallel surface in the crate — the facility/coverage/cut
-//! `State::par_batch_gains` engines, `MapReduce::run_stage{,_faulted}` (and
+//! Every parallel surface in the crate — the sharded gain engine
+//! (`objective::engine::ShardedGainEngine`, serving every objective's
+//! `State::par_batch_gains`), `MapReduce::run_stage{,_faulted}` (and
 //! through it all nine protocols), the `stream::sieve` batch pricing and
 //! `LazyGreedy`'s batch repricing — used to fan out through
 //! `util::threadpool::parallel_map`, which spawned **scoped OS threads per
@@ -430,9 +431,10 @@ pub const MIN_PAR_CANDIDATES: usize = 64;
 /// list* across up to `threads` runner tasks once it is at least
 /// [`MIN_PAR_CANDIDATES`] long. `f` must be a pure function of the
 /// candidate (given the caller's frozen state), so the output equals the
-/// serial map bit-for-bit at any thread count. This is the shared engine
-/// behind the coverage and cut `State::par_batch_gains` implementations —
-/// objectives whose per-candidate work has no window to shard.
+/// serial map bit-for-bit at any thread count. (Pre-refactor this was the
+/// fan-out behind the coverage/cut `par_batch_gains`; objectives now route
+/// through `objective::engine::ShardedGainEngine`, which owns its own
+/// candidate sharding — this helper stays as a general-purpose utility.)
 pub fn parallel_gains<F>(es: &[usize], threads: usize, f: F) -> Vec<f64>
 where
     F: Fn(usize) -> f64 + Sync,

@@ -1,83 +1,188 @@
-//! Cross-layer guarantees of the window-sharded parallel gain engine
-//! (perf pass §A, iteration 5):
+//! Cross-layer guarantees of the sharded gain engine
+//! (`objective::engine::ShardedGainEngine`) — ONE shared harness instead of
+//! the three copy-pasted per-objective unit tests it replaced:
 //!
-//! 1. `State::par_batch_gains` is **bit-identical** across thread counts on
-//!    every objective that implements it (shard boundaries depend only on
-//!    problem shape, and per-shard partials reduce in a fixed order);
-//! 2. batch-repriced `LazyGreedy` selects **exactly** the plain-`Greedy`
+//! 1. every objective in the crate prices **bit-identically** across
+//!    thread counts {1, 2, 8} and across every pricing surface
+//!    (`gain` == `batch_gains` == `par_batch_gains`), because shard
+//!    boundaries depend only on problem shape and per-shard partials
+//!    reduce in a fixed order;
+//! 2. `singleton_gains` (the sieve's ladder entry, including the
+//!    closed-form overrides on modular/coverage and the `ForwardFn`
+//!    forwarding shim) is bit-identical to fresh-state pricing;
+//! 3. `eval`-replay consistency: a state's accumulated `value()` equals
+//!    `f.eval(selected)` exactly (eval IS a push replay);
+//! 4. batch-repriced `LazyGreedy` selects **exactly** the plain-`Greedy`
 //!    set, serial or parallel, standalone or inside a protocol round-trip;
-//! 3. threading a full protocol (`RunSpec::threads`) is invisible in its
-//!    results — only in its wallclock.
+//! 5. threading a full protocol (`RunSpec::threads`) is invisible in its
+//!    results — only in its wallclock — and fixed seeds reproduce.
+//!
+//! CI re-runs this suite under `GREEDI_NO_SIMD=1`, under
+//! `GREEDI_EXECUTOR_SERIAL=1`, and under both combined, so the matrix in
+//! the module docs of `objective::engine` is exercised end to end.
 
 use std::sync::Arc;
 
 use greedi::algorithms::{greedy::Greedy, lazy::LazyGreedy, Maximizer};
 use greedi::constraints::cardinality::Cardinality;
 use greedi::coordinator::protocol::{self, RunSpec};
-use greedi::coordinator::{CoverageProblem, CutProblem, FacilityProblem, Problem};
+use greedi::coordinator::{
+    CoverageProblem, CutProblem, FacilityProblem, OpaqueProblem, Problem,
+};
 use greedi::data::graph::social_network;
-use greedi::data::synth::{gaussian_blobs, SynthConfig};
+use greedi::data::synth::{gaussian_blobs, parkinsons_like, SynthConfig};
 use greedi::data::transactions::zipf_transactions;
 use greedi::objective::coverage::Coverage;
 use greedi::objective::cut::GraphCut;
+use greedi::objective::dpp::DppLogDet;
+use greedi::objective::entropy_worstcase::EntropyWorstCase;
 use greedi::objective::facility::FacilityLocation;
+use greedi::objective::infogain::InfoGain;
+use greedi::objective::modular::Modular;
 use greedi::objective::SubmodularFn;
 use greedi::util::rng::Rng;
 
-const THREAD_SWEEP: [usize; 4] = [1, 2, 4, 8];
+const THREAD_SWEEP: [usize; 3] = [1, 2, 8];
+
+/// The shared invariance harness: every objective instance must satisfy
+/// the engine contract on a seeded state (after `pushes`) AND on a fresh
+/// state (the singleton path).
+fn assert_engine_invariants(
+    label: &str,
+    f: &dyn SubmodularFn,
+    pushes: &[usize],
+    cands: &[usize],
+) {
+    // --- singleton path: bit-identical to a fresh state, at any threads.
+    // The reference is priced through `gain()`, which always runs the real
+    // sharded kernel path — batch_gains on an empty state would take the
+    // same closed-form fast path the singleton override uses, making the
+    // comparison tautological for modular/coverage.
+    let mut fresh = f.state();
+    let fresh_ref: Vec<f64> = cands.iter().map(|&e| fresh.gain(e)).collect();
+    for threads in THREAD_SWEEP {
+        assert_eq!(
+            fresh_ref,
+            f.singleton_gains(cands, threads),
+            "{label}: singleton_gains diverged from fresh-state kernel pricing at {threads} threads"
+        );
+    }
+    // ...and the engine's empty-state fast path must agree with the same
+    // kernel reference too.
+    assert_eq!(
+        fresh_ref,
+        f.state().batch_gains(cands),
+        "{label}: empty-state batch pricing diverged from the kernel path"
+    );
+
+    // --- seeded state: gain == batch_gains == par_batch_gains, bitwise.
+    let mut st = f.state();
+    for &e in pushes {
+        st.push(e);
+    }
+    let reference = st.batch_gains(cands);
+    for (i, &e) in cands.iter().enumerate() {
+        assert_eq!(
+            reference[i],
+            st.gain(e),
+            "{label}: gain({e}) diverged from batch_gains"
+        );
+    }
+    for threads in THREAD_SWEEP {
+        assert_eq!(
+            reference,
+            st.par_batch_gains(cands, threads),
+            "{label}: par_batch_gains changed bits at {threads} threads"
+        );
+    }
+
+    // --- eval-replay consistency: eval IS a push replay, so the state's
+    // accumulated value must reproduce it exactly (bitwise).
+    assert_eq!(
+        st.value(),
+        f.eval(st.selected()),
+        "{label}: value() diverged from eval replay of selected()"
+    );
+
+    // --- engine-owned oracle accounting: pure function of the call
+    // sequence (hence thread-invariant by construction).
+    let mut counted = f.state();
+    counted.batch_gains(cands);
+    counted.par_batch_gains(cands, 8);
+    counted.gain(cands[0]);
+    let c = counted.oracle_counter();
+    assert_eq!(c.batches, 2, "{label}: batch count");
+    assert_eq!(c.gains, 2 * cands.len() as u64 + 1, "{label}: gain count");
+}
 
 #[test]
-fn facility_gain_engine_thread_invariant() {
-    // n = 1500 guarantees several window shards, so parallelism is real.
+fn every_objective_satisfies_the_engine_contract() {
+    // facility, global window — n = 1500 guarantees several window shards,
+    // so the parallel path genuinely fans out.
     let ds = Arc::new(gaussian_blobs(&SynthConfig::tiny_images(1500, 8), 3));
-    let f = FacilityLocation::from_dataset(&ds);
-    let mut st = f.state();
-    st.push(42);
-    st.push(901);
-    let cands: Vec<usize> = (0..128).map(|i| (i * 11) % 1500).collect();
-    let reference = st.batch_gains(&cands);
-    for threads in THREAD_SWEEP {
-        assert_eq!(
-            reference,
-            st.par_batch_gains(&cands, threads),
-            "facility gains changed at {threads} threads"
-        );
-    }
-}
+    let fac = FacilityLocation::from_dataset(&ds);
+    let fac_cands: Vec<usize> = (0..128).map(|i| (i * 11) % 1500).collect();
+    assert_engine_invariants("facility", &fac, &[42, 901], &fac_cands);
 
-#[test]
-fn coverage_gain_engine_thread_invariant() {
+    // facility, restricted window (the paper's §4.5 local mode).
+    let fac_local = FacilityLocation::with_window(&ds, (0..1500).step_by(2).collect());
+    assert_engine_invariants("facility/windowed", &fac_local, &[8, 700], &fac_cands);
+
+    // coverage, unweighted + weighted (closed-form singleton override).
     let td = Arc::new(zipf_transactions(500, 400, 9, 1.1, 4));
-    let f = Coverage::new(&td);
-    let mut st = f.state();
-    st.push(17);
-    let cands: Vec<usize> = (0..500).collect();
-    let reference = st.batch_gains(&cands);
-    for threads in THREAD_SWEEP {
-        assert_eq!(
-            reference,
-            st.par_batch_gains(&cands, threads),
-            "coverage gains changed at {threads} threads"
-        );
-    }
+    let cov = Coverage::new(&td);
+    let all500: Vec<usize> = (0..500).collect();
+    assert_engine_invariants("coverage", &cov, &[17, 250], &all500);
+    let cov_w = Coverage::weighted(&td, (0..400).map(|i| 0.25 + (i % 7) as f64).collect());
+    assert_engine_invariants("coverage/weighted", &cov_w, &[17, 250], &all500);
+
+    // cut, full graph + induced-subgraph restriction (non-monotone path).
+    let g = Arc::new(social_network(300, 2_000, 5));
+    let cut = GraphCut::new(&g);
+    let all300: Vec<usize> = (0..300).collect();
+    assert_engine_invariants("cut", &cut, &[3, 120], &all300);
+    let cut_local = GraphCut::restricted(&g, &(0..150).collect::<Vec<_>>());
+    assert_engine_invariants("cut/restricted", &cut_local, &[3, 120], &all300);
+
+    // dpp — per-shard Schur complements (first-ever parallel path).
+    let ds_small = Arc::new(gaussian_blobs(&SynthConfig::unstructured(120, 6), 13));
+    let dpp = DppLogDet::new(&ds_small, 1.0, 0.5);
+    let all120: Vec<usize> = (0..120).collect();
+    assert_engine_invariants("dpp", &dpp, &[2, 61, 99], &all120);
+
+    // infogain — per-shard Cholesky probe columns (first-ever parallel path).
+    let pk = Arc::new(parkinsons_like(150, 10, 3));
+    let ig = InfoGain::paper_params(&pk);
+    let all150: Vec<usize> = (0..150).collect();
+    assert_engine_invariants("infogain", &ig, &[1, 75, 149], &all150);
+
+    // entropy worst-case — the Theorem-3 tightness instance.
+    let ent = EntropyWorstCase::new(12, 10);
+    let ent_cands: Vec<usize> = (0..ent.ground_size()).collect();
+    assert_engine_invariants("entropy_worstcase", &ent, &[10, 21, 35], &ent_cands);
+
+    // modular — closed-form singleton override.
+    let weights: Vec<f64> = (0..300).map(|i| (i % 13) as f64 + 0.5).collect();
+    let modular = Modular::new(weights);
+    assert_engine_invariants("modular", &modular, &[7, 100], &all300);
 }
 
 #[test]
-fn cut_gain_engine_thread_invariant() {
-    let g = Arc::new(social_network(300, 2_000, 5));
-    let f = GraphCut::new(&g);
-    let mut st = f.state();
-    st.push(3);
-    st.push(120);
-    let cands: Vec<usize> = (0..300).collect();
-    let reference = st.batch_gains(&cands);
+fn forwarding_shim_preserves_closed_form_singletons() {
+    // OpaqueProblem's ForwardFn must forward singleton_gains — the trait
+    // default would rebuild a fresh state and miss the inner override.
+    let modular = Modular::new((0..64).map(|i| i as f64 * 0.5).collect());
+    let p = OpaqueProblem::new(&modular);
+    let fwd = p.global();
+    let es: Vec<usize> = (0..64).rev().collect();
     for threads in THREAD_SWEEP {
         assert_eq!(
-            reference,
-            st.par_batch_gains(&cands, threads),
-            "cut gains changed at {threads} threads"
+            modular.singleton_gains(&es, threads),
+            fwd.singleton_gains(&es, threads),
+            "ForwardFn singleton_gains diverged at {threads} threads"
         );
     }
+    assert_engine_invariants("modular/forwarded", fwd.as_ref(), &[5, 31], &es);
 }
 
 #[test]
@@ -88,11 +193,16 @@ fn batch_repriced_lazy_equals_plain_greedy_across_objectives_and_threads() {
     let coverage = Coverage::new(&td);
     let g = Arc::new(social_network(180, 1_200, 8));
     let cut = GraphCut::new(&g);
+    let pk = Arc::new(parkinsons_like(120, 10, 5));
+    let infogain = InfoGain::paper_params(&pk);
+    let dpp = DppLogDet::new(&pk, 1.0, 0.5);
 
-    let cases: [(&str, &dyn SubmodularFn, usize); 3] = [
+    let cases: [(&str, &dyn SubmodularFn, usize); 5] = [
         ("facility", &facility, 400),
         ("coverage", &coverage, 200),
         ("cut", &cut, 180),
+        ("infogain", &infogain, 120),
+        ("dpp", &dpp, 120),
     ];
     for (label, f, n) in cases {
         let ground: Vec<usize> = (0..n).collect();
@@ -135,6 +245,22 @@ fn protocol_round_trip_greedy_vs_lazy_bit_identical() {
             );
             assert_eq!(with_greedy.value, with_lazy.value, "{name}");
         }
+    }
+}
+
+#[test]
+fn protocol_results_reproduce_for_fixed_seeds() {
+    // Post-refactor acceptance: the engine under every objective must not
+    // perturb seed-fixed protocol round-trip values between repeated runs.
+    let ds = Arc::new(gaussian_blobs(&SynthConfig::tiny_images(320, 8), 15));
+    let p = FacilityProblem::new(&ds);
+    for name in ["greedi", "multiround", "stream_greedi", "greedy_merge"] {
+        let spec = RunSpec::new(4, 8).seed(21).threads(4);
+        let a = protocol::by_name(name).unwrap().run(&p, &spec);
+        let b = protocol::by_name(name).unwrap().run(&p, &spec);
+        assert_eq!(a.solution, b.solution, "{name}: seed-fixed rerun moved the solution");
+        assert_eq!(a.value, b.value, "{name}: seed-fixed rerun moved the value");
+        assert_eq!(a.oracle_calls, b.oracle_calls, "{name}: oracle calls moved");
     }
 }
 

@@ -6,8 +6,13 @@ Usage: bench_compare.py BASELINE.json CURRENT.json [--threshold 1.5]
 Both files are the flat ``{"op name": ns_per_iter, ...}`` objects written by
 ``GREEDI_BENCH_JSON=path cargo bench``. The baseline is the committed copy
 (or a CI artifact from the base branch); the current file is the run that
-just finished. Prints a per-op ratio table and a WARN line for every op
-slower than ``threshold`` x baseline.
+just finished.
+
+Output: when ``GITHUB_STEP_SUMMARY`` is set (GitHub Actions), a per-op
+delta table is appended to the job summary as GitHub-flavored markdown
+(ratio column, WARN flags, new/dropped ops) so regressions are readable
+from the run page without digging through logs; otherwise the same table
+prints to stdout in plain text.
 
 ALWAYS exits 0: CI bench runners are noisy shared machines, and the
 committed baselines started life as stubs (the PR-2..4 authoring containers
@@ -19,21 +24,34 @@ comparison.
 """
 
 import json
+import os
 import sys
 
 
-def load_ops(path):
+def load_ops(path, notes):
     try:
         with open(path) as f:
             raw = json.load(f)
     except (OSError, ValueError) as e:
-        print(f"bench_compare: cannot read {path}: {e} — skipping comparison")
+        notes.append(f"bench_compare: cannot read {path}: {e} — skipping comparison")
         return None
     return {
         k: float(v)
         for k, v in raw.items()
         if isinstance(v, (int, float)) and not k.startswith("_")
     }
+
+
+def emit(lines_markdown, lines_plain):
+    """Job summary when running under Actions, stdout otherwise."""
+    summary = os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary:
+        with open(summary, "a") as f:
+            f.write("\n".join(lines_markdown) + "\n")
+        # leave a breadcrumb in the log so the step isn't silent
+        print("bench_compare: delta table written to the job summary")
+    else:
+        print("\n".join(lines_plain))
 
 
 def main(argv):
@@ -54,40 +72,61 @@ def main(argv):
     if len(args) != 2:
         print(__doc__)
         return 0
-    base, cur = load_ops(args[0]), load_ops(args[1])
+    notes = []
+    base, cur = load_ops(args[0], notes), load_ops(args[1], notes)
     if base is None or cur is None:
+        emit([f"> {n}" for n in notes], notes)
         return 0
     if not base:
-        print(f"bench_compare: baseline {args[0]} has no numeric ops (stub?) — "
-              "nothing to compare; commit a CI-generated baseline to arm this step")
+        msg = (f"bench_compare: baseline {args[0]} has no numeric ops (stub?) — "
+               "nothing to compare; commit a CI-generated baseline to arm this step")
+        emit([f"> {msg}"], [msg])
         return 0
     if not cur:
-        print(f"bench_compare: current {args[1]} has no numeric ops — skipping")
+        msg = f"bench_compare: current {args[1]} has no numeric ops — skipping"
+        emit([f"> {msg}"], [msg])
         return 0
 
     shared = [op for op in cur if op in base]
     gone = sorted(op for op in base if op not in cur)
     new = sorted(op for op in cur if op not in base)
     warns = 0
+
+    def md_op(op):
+        # op names contain literal pipes (e.g. "smallwin |W|=1000: ...") —
+        # escape them or they split the markdown table's cells.
+        return "`" + op.replace("|", "\\|") + "`"
+
+    name = os.path.basename(args[1])
+    md = [f"### bench_compare: `{name}` vs committed baseline", "",
+          "| op | base ns | cur ns | ratio | |",
+          "|---|---:|---:|---:|---|"]
     width = max((len(op) for op in shared), default=8)
-    print(f"{'op':<{width}}  {'base ns':>12}  {'cur ns':>12}  ratio")
+    plain = [f"{'op':<{width}}  {'base ns':>12}  {'cur ns':>12}  ratio"]
     for op in shared:
         b, c = base[op], cur[op]
         ratio = c / b if b > 0 else float("inf")
-        flag = ""
-        if ratio > threshold:
-            flag = f"  WARN >{threshold}x"
+        warn = ratio > threshold
+        if warn:
             warns += 1
-        print(f"{op:<{width}}  {b:>12.1f}  {c:>12.1f}  {ratio:>5.2f}{flag}")
+        flag_md = f"⚠️ WARN >{threshold}x" if warn else ""
+        flag_plain = f"  WARN >{threshold}x" if warn else ""
+        md.append(f"| {md_op(op)} | {b:.1f} | {c:.1f} | {ratio:.2f} | {flag_md} |")
+        plain.append(f"{op:<{width}}  {b:>12.1f}  {c:>12.1f}  {ratio:>5.2f}{flag_plain}")
     for op in new:
-        print(f"(new op, no baseline: {op})")
+        md.append(f"| {md_op(op)} | — | {cur[op]:.1f} | new | |")
+        plain.append(f"(new op, no baseline: {op})")
     for op in gone:
-        print(f"(op dropped since baseline: {op})")
+        md.append(f"| {md_op(op)} | {base[op]:.1f} | — | dropped | |")
+        plain.append(f"(op dropped since baseline: {op})")
     if warns:
-        print(f"bench_compare: {warns} op(s) slower than {threshold}x baseline "
-              "(warn-only; CI runners are noisy — investigate if it persists)")
+        verdict = (f"bench_compare: {warns} op(s) slower than {threshold}x baseline "
+                   "(warn-only; CI runners are noisy — investigate if it persists)")
     else:
-        print("bench_compare: no regressions beyond threshold")
+        verdict = "bench_compare: no regressions beyond threshold"
+    md += ["", f"> {verdict}", ""]
+    plain.append(verdict)
+    emit(md, plain)
     return 0
 
 
