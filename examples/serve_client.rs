@@ -1,0 +1,97 @@
+//! The always-on selection service, end to end in one process.
+//!
+//! Boots a `serve::Server` on an ephemeral port with a drifting streaming
+//! dataset, then walks the whole wire surface from a `serve::Client`:
+//! ping, warm-up, a query (verified bit-identical to a direct
+//! `protocol::by_name` run), concurrent queries through admission control,
+//! dataset drift via `advance`, the `stats` latency surface, and a clean
+//! shutdown. Against a daemon started separately (`greedi serve`), the
+//! client half of this file is all you need.
+//!
+//! Run with: `cargo run --release --example serve_client`
+
+use std::sync::Arc;
+
+use greedi::coordinator::protocol::{self, Protocol, RunSpec};
+use greedi::coordinator::FacilityProblem;
+use greedi::data::synth::{gaussian_blobs, SynthConfig};
+use greedi::serve::{Client, ServeSpec, Server, WarmState};
+use greedi::stream::{DriftSource, StreamOrder, StreamSource};
+
+fn main() {
+    let (n, live0) = (2_000usize, 1_200usize);
+    let data = Arc::new(gaussian_blobs(&SynthConfig::tiny_images(n, 16), 42));
+
+    // ---- boot: warm registry + daemon on an ephemeral port ---------------
+    let state = Arc::new(WarmState::new());
+    let src = DriftSource::new(&data, data.ids(), StreamOrder::Drift);
+    state
+        .register_streaming("demo", Arc::clone(&data), Box::new(src), live0)
+        .expect("register dataset");
+    let mut spec = ServeSpec::default();
+    spec.addr = "127.0.0.1:0".into();
+    spec.threads = 8;
+    spec.max_concurrency = 4;
+    let mut server = Server::start(&spec, state).expect("start daemon");
+    println!("daemon on {} ({} threads / {} slots)\n", server.addr(), 8, 4);
+
+    let mut client = Client::connect(server.addr()).expect("connect");
+    let pong = client.ping().expect("ping");
+    println!("ping -> {}", pong.dump());
+
+    // ---- warm the singleton cache, then query ----------------------------
+    let w = client.warm(None).expect("warm");
+    println!("warm -> {}", w.dump());
+
+    let qspec = RunSpec::new(5, 10).seed(7);
+    let reply = client.query("greedi", None, &qspec).expect("query");
+    println!(
+        "\nquery greedi -> f(S) = {:.5}, |S| = {}, {:.1}us end-to-end ({} threads)",
+        reply.value,
+        reply.solution.len(),
+        reply.latency_us,
+        reply.threads_used
+    );
+
+    // the served answer is bit-identical to running the protocol directly
+    // on the same visible prefix of the drift order
+    let mut order_src = DriftSource::new(&data, data.ids(), StreamOrder::Drift);
+    let order = order_src.next_batch(n);
+    let view = Arc::new(data.subset(&order[..live0]));
+    let direct = protocol::by_name("greedi").unwrap().run(&FacilityProblem::new(&view), &qspec);
+    assert_eq!(reply.solution, direct.solution);
+    assert_eq!(reply.value.to_bits(), direct.value.to_bits());
+    println!("  bit-identical to the direct protocol run: yes");
+
+    // ---- concurrent clients through admission control --------------------
+    let addr = server.addr();
+    let workers: Vec<_> = (0..6)
+        .map(|_| {
+            let qspec = qspec.clone();
+            std::thread::spawn(move || {
+                Client::connect(addr).unwrap().query("stream_greedi", None, &qspec).unwrap().value
+            })
+        })
+        .collect();
+    let values: Vec<f64> = workers.into_iter().map(|w| w.join().unwrap()).collect();
+    assert!(values.windows(2).all(|w| w[0] == w[1]), "concurrent answers must agree");
+    println!("\n6 concurrent stream_greedi queries -> all agree on f(S) = {:.5}", values[0]);
+
+    // ---- drift: pull more of the stream in, version bumps -----------------
+    let adv = client.advance(None, 400).expect("advance");
+    println!("\nadvance 400 -> {}", adv.dump());
+    let after = client.query("greedi", None, &qspec).expect("query after drift");
+    println!(
+        "query on v{} -> f(S) = {:.5} (corpus drifted, same wire spec)",
+        after.dataset_version, after.value
+    );
+
+    // ---- the latency surface ---------------------------------------------
+    let stats = client.stats().expect("stats");
+    let lat = stats.get("latency").unwrap();
+    println!("\nstats.latency -> {}", lat.dump());
+
+    let _ = client.shutdown().expect("shutdown");
+    server.join();
+    println!("\ndaemon stopped cleanly");
+}

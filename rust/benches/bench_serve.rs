@@ -1,0 +1,106 @@
+//! `cargo bench` target: closed-loop load on the always-on selection
+//! daemon. Boots a real `serve::Server` on an ephemeral port, measures
+//! single-query round-trip latency (cold vs warm singleton cache), then
+//! drives a closed loop of concurrent clients through admission control
+//! and reports qps + p50/p99 from the daemon's own metrics surface.
+//!
+//! `GREEDI_BENCH_FAST=1` shrinks sizes for CI;
+//! `GREEDI_BENCH_JSON=BENCH_serve.json` dumps `op -> number` — the Bencher
+//! ns/iter rows merged (via the `util::json` reader+writer round-trip)
+//! with `serve: qps` / `serve: p50 us` / `serve: p99 us`, so serving
+//! throughput joins the per-op delta table in CI.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use greedi::coordinator::protocol::RunSpec;
+use greedi::data::synth::{gaussian_blobs, SynthConfig};
+use greedi::serve::{Client, ServeSpec, Server, WarmState};
+use greedi::util::bench::{black_box, Bencher};
+use greedi::util::json::{self, Json};
+
+fn main() {
+    let fast = std::env::var("GREEDI_BENCH_FAST").ok().as_deref() == Some("1");
+    let (n, clients, per_client) = if fast { (800, 4, 5) } else { (4_000, 8, 20) };
+    let (threads, conc) = (8, 4);
+    let mut b = Bencher::new(1, if fast { 3 } else { 10 });
+
+    println!("== serve benchmarks (n={n}, budget {threads} threads / {conc} slots) ==\n");
+
+    let data = Arc::new(gaussian_blobs(&SynthConfig::tiny_images(n, 16), 1));
+    let state = Arc::new(WarmState::new());
+    state.register("demo", Arc::clone(&data));
+    let mut spec = ServeSpec::default();
+    spec.addr = "127.0.0.1:0".into();
+    spec.threads = threads;
+    spec.max_concurrency = conc;
+    spec.queue_depth = clients * per_client;
+    let server = Server::start(&spec, state).expect("bind ephemeral port");
+    let addr = server.addr();
+    let qspec = RunSpec::new(4, 8).seed(1);
+
+    // ---- 1. single-query round-trip, cold vs warm singleton cache --------
+    let mut probe = Client::connect(addr).expect("connect");
+    b.bench("serve: query round-trip (cold cache)", || {
+        black_box(probe.query("stream_greedi", None, &qspec).expect("query").value)
+    });
+    probe.warm(None).expect("warm");
+    b.bench("serve: query round-trip (warm cache)", || {
+        black_box(probe.query("stream_greedi", None, &qspec).expect("query").value)
+    });
+    b.bench("serve: ping round-trip", || black_box(probe.ping().expect("ping").dump().len()));
+
+    // ---- 2. closed-loop concurrent load through admission -----------------
+    let t0 = Instant::now();
+    let workers: Vec<_> = (0..clients)
+        .map(|_| {
+            let qspec = qspec.clone();
+            std::thread::spawn(move || {
+                let mut c = Client::connect(addr).expect("connect");
+                let mut checksum = 0.0;
+                for _ in 0..per_client {
+                    checksum += c.query("greedi", None, &qspec).expect("query").value;
+                }
+                checksum
+            })
+        })
+        .collect();
+    let mut checksum = 0.0;
+    for w in workers {
+        checksum += w.join().expect("client thread");
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    black_box(checksum);
+    let total = (clients * per_client) as f64;
+    let loop_qps = total / wall_s;
+
+    // the daemon's own latency surface (what the `stats` op serves)
+    let m = server.metrics().snapshot();
+    println!("\n== closed loop: {clients} clients x {per_client} queries ==");
+    println!("  wall = {wall_s:.3}s -> {loop_qps:.1} qps (daemon-side qps {:.1})", m.qps);
+    println!(
+        "  latency p50 = {:.0}us  p99 = {:.0}us  max = {:.0}us (n={})",
+        m.latency.p50_us, m.latency.p99_us, m.latency.max_us, m.latency.count
+    );
+    println!(
+        "  admission queue p50 = {:.0}us  p99 = {:.0}us",
+        m.queued.p50_us, m.queued.p99_us
+    );
+
+    // ---- 3. perf trail: Bencher rows + serving throughput, one flat file --
+    if let Ok(path) = std::env::var("GREEDI_BENCH_JSON") {
+        if !path.is_empty() {
+            let mut doc = json::parse(&b.to_json()).expect("bencher json");
+            if let Json::Obj(map) = &mut doc {
+                map.insert("serve: qps".into(), Json::num(loop_qps));
+                map.insert("serve: p50 us".into(), Json::num(m.latency.p50_us));
+                map.insert("serve: p99 us".into(), Json::num(m.latency.p99_us));
+                map.insert("serve: queued p99 us".into(), Json::num(m.queued.p99_us));
+            }
+            match std::fs::write(&path, json::write(&doc) + "\n") {
+                Ok(()) => println!("(wrote bench JSON to {path})"),
+                Err(e) => eprintln!("warning: could not write bench JSON to {path}: {e}"),
+            }
+        }
+    }
+}

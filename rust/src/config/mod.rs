@@ -158,6 +158,10 @@ impl ExperimentConfig {
                 "epsilon" => cfg.epsilon = value.as_f64().ok_or("epsilon: float")?,
                 "trials" => cfg.trials = value.as_usize().ok_or("trials: int")?,
                 "seed" => cfg.seed = value.as_i64().ok_or("seed: int")? as u64,
+                // the [serve] section belongs to serve::ServeSpec — one
+                // preset file can carry both; ServeSpec::from_doc enforces
+                // the same unknown-key discipline over its own keys
+                key if key.starts_with("serve.") => {}
                 other => return Err(format!("unknown config key {other:?}")),
             }
         }
@@ -253,6 +257,17 @@ mod tests {
     #[test]
     fn unknown_key_rejected() {
         assert!(ExperimentConfig::from_toml("bogus = 1").is_err());
+    }
+
+    #[test]
+    fn serve_section_is_tolerated_not_parsed() {
+        // one preset can carry experiment + [serve] sections; each parser
+        // owns its keys (serve's schema is serve::ServeSpec's business)
+        let text = "protocol = \"greedi\"\n\n[serve]\naddr = \"127.0.0.1:0\"\nmax_concurrency = 2\n";
+        let cfg = ExperimentConfig::from_toml(text).unwrap();
+        assert_eq!(cfg.protocol, "greedi");
+        let spec = crate::serve::ServeSpec::from_toml(text).unwrap();
+        assert_eq!((spec.addr.as_str(), spec.max_concurrency), ("127.0.0.1:0", 2));
     }
 
     #[test]

@@ -48,6 +48,11 @@
 //!     println!("{name}: f(S) = {}, ratio = {:.4}", run.value, run.ratio_vs(central.value));
 //! }
 //! ```
+//!
+//! For an always-on deployment — one resident process, warm caches,
+//! concurrent queries over TCP with admission control and a latency
+//! metrics surface — see [`serve`] and the `greedi serve` / `greedi query`
+//! subcommands.
 pub mod algorithms;
 pub mod config;
 pub mod constraints;
@@ -58,6 +63,7 @@ pub mod linalg;
 pub mod mapreduce;
 pub mod objective;
 pub mod runtime;
+pub mod serve;
 pub mod stream;
 pub mod util;
 
@@ -86,6 +92,7 @@ pub mod prelude {
         coverage::Coverage, cut::GraphCut, facility::FacilityLocation, infogain::InfoGain,
         SubmodularFn,
     };
+    pub use crate::serve::{Client, ServeSpec, Server, WarmState};
     pub use crate::stream::{
         candidate_bound, sieve_stream, BatchedSieve, ChunkedCsvSource, SieveResult,
         StreamGreedi, StreamSource, VecSource,

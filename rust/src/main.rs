@@ -10,6 +10,8 @@
 //!   fig4 … fig10          regenerate a figure from the paper's §6
 //!   theory                empirical checks of Theorems 3/4/11 + Table 1
 //!   streaming             bounded-memory sieve→merge vs GreeDi (stream_greedi)
+//!   serve                 always-on selection daemon (see `serve` module)
+//!   query                 one wire request against a running daemon
 //!   all                   every figure + theory, in order
 //!   info                  artifact / build information
 //!
@@ -25,6 +27,16 @@
 //!   --xla              use the AOT/PJRT gain oracle where applicable
 //!   --full             lift sizes toward paper scale
 //!   --config <path>    load an ExperimentConfig preset (configs/*.toml)
+//!
+//! serve options:
+//!   --addr <h:p>       listen address (also `[serve] addr`; default 127.0.0.1:7199)
+//!   --concurrency <c>  max queries in flight   --queue <q>  bounded wait depth
+//!   --stream           register the demo dataset as a drifting stream
+//!
+//! query options:
+//!   --addr <h:p>       daemon address
+//!   --op <name>        query | ping | stats | datasets | warm | advance | shutdown
+//!   --m/--k/--dataset  query shape (spec fields also honor common options)
 //! ```
 
 use greedi::config::ExperimentConfig;
@@ -135,6 +147,134 @@ fn protocols(opts: &ExpOpts, cfg: Option<&ExperimentConfig>) {
     }
 }
 
+/// `greedi serve`: boot the always-on selection daemon and park until a
+/// client sends the wire `shutdown` op.
+fn serve_cmd(args: &Args, opts: &ExpOpts) {
+    use greedi::data::synth::{gaussian_blobs, SynthConfig};
+    use greedi::serve::{ServeSpec, Server, WarmState};
+    use greedi::stream::{DriftSource, StreamOrder};
+    use std::sync::Arc;
+
+    let mut spec = match args.get("config") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path).unwrap_or_else(|e| {
+                eprintln!("config error: {path}: {e}");
+                std::process::exit(2);
+            });
+            ServeSpec::from_toml(&text).unwrap_or_else(|e| {
+                eprintln!("config error: {path}: {e}");
+                std::process::exit(2);
+            })
+        }
+        None => ServeSpec::default(),
+    };
+    // CLI overrides win over the [serve] section, same as everywhere else
+    if let Some(addr) = args.get("addr") {
+        spec.addr = addr.to_string();
+    }
+    if args.get("threads").is_some() {
+        spec.threads = opts.threads;
+    }
+    spec.max_concurrency = args.get_usize("concurrency", spec.max_concurrency);
+    spec.queue_depth = args.get_usize("queue", spec.queue_depth);
+    if let Some(name) = args.get("dataset") {
+        spec.dataset = name.to_string();
+    }
+    spec.validate().unwrap_or_else(|e| {
+        eprintln!("serve config error: {e}");
+        std::process::exit(2);
+    });
+
+    let n = opts.n.unwrap_or(2_000);
+    let data = Arc::new(gaussian_blobs(&SynthConfig::tiny_images(n, 16), opts.seed));
+    let state = Arc::new(WarmState::new());
+    if args.has_flag("stream") {
+        // drifting corpus: half the stream now, `advance` pulls the rest
+        let src = DriftSource::new(&data, data.ids(), StreamOrder::Drift);
+        let live = state
+            .register_streaming(&spec.dataset, Arc::clone(&data), Box::new(src), n / 2)
+            .unwrap_or_else(|e| {
+                eprintln!("serve: {e}");
+                std::process::exit(2);
+            });
+        println!("dataset {:?}: streaming, {live}/{n} points live", spec.dataset);
+    } else {
+        state.register(&spec.dataset, Arc::clone(&data));
+        println!("dataset {:?}: static, {n} points", spec.dataset);
+    }
+
+    let mut server = Server::start(&spec, state).unwrap_or_else(|e| {
+        eprintln!("serve: {e}");
+        std::process::exit(2);
+    });
+    println!(
+        "greedi serve: listening on {} (budget {} threads / {} slots, queue {})",
+        server.addr(),
+        spec.threads,
+        spec.max_concurrency,
+        spec.queue_depth
+    );
+    println!("stop with: greedi query --addr {} --op shutdown", server.addr());
+    server.join();
+    println!("greedi serve: shutdown received, bye");
+}
+
+/// `greedi query`: one wire request against a running daemon.
+fn query_cmd(args: &Args, opts: &ExpOpts, cfg: Option<&ExperimentConfig>) {
+    use greedi::serve::Client;
+
+    let addr = args.get_str("addr", "127.0.0.1:7199");
+    let mut client = Client::connect(addr.as_str()).unwrap_or_else(|e| {
+        eprintln!("query: {e} (is `greedi serve` running on {addr}?)");
+        std::process::exit(2);
+    });
+    let dataset = args.get("dataset");
+    let op = args.get_str("op", "query");
+    let outcome = match op.as_str() {
+        "ping" => client.ping(),
+        "stats" => client.stats(),
+        "datasets" => client.datasets(),
+        "warm" => client.warm(dataset),
+        "advance" => client.advance(dataset, args.get_usize("count", 100)),
+        "shutdown" => client.shutdown(),
+        "query" => {
+            let m = args.get_usize("m", 5);
+            let k = args.get_usize("k", 10);
+            let spec = base_spec(opts, cfg, m, k);
+            let proto = args.get_str("protocol", "greedi");
+            match client.query(&proto, dataset, &spec) {
+                Err(e) => Err(e),
+                Ok(r) => {
+                    println!(
+                        "{}: f(S) = {}, |S| = {}, oracle calls = {}, rounds = {}",
+                        r.protocol,
+                        r.value,
+                        r.solution.len(),
+                        r.oracle_calls,
+                        r.rounds
+                    );
+                    println!(
+                        "dataset {} v{}; {} threads; queued {:.1}us, latency {:.1}us",
+                        r.dataset, r.dataset_version, r.threads_used, r.queued_us, r.latency_us
+                    );
+                    return;
+                }
+            }
+        }
+        other => {
+            eprintln!("query: unknown --op {other:?} (query|ping|stats|datasets|warm|advance|shutdown)");
+            std::process::exit(2);
+        }
+    };
+    match outcome {
+        Ok(result) => println!("{}", result.dump()),
+        Err(e) => {
+            eprintln!("query: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
 fn info() {
     println!("greedi — distributed submodular maximization (Mirzasoleiman et al., 2014)");
     println!("three-layer build: rust coordinator + JAX L2 graphs + Pallas L1 kernels (AOT)");
@@ -154,7 +294,7 @@ fn info() {
 fn main() {
     let args = Args::from_env();
     let Some(cmd) = args.positional.first().cloned() else {
-        eprintln!("usage: greedi <quickstart|protocols|fig4..fig10|theory|ablations|streaming|all|info> [--n N] [--trials T] [--seed S] [--threads T] [--partition S] [--protocol P] [--part P] [--xla] [--full]");
+        eprintln!("usage: greedi <quickstart|protocols|serve|query|fig4..fig10|theory|ablations|streaming|all|info> [--n N] [--trials T] [--seed S] [--threads T] [--partition S] [--protocol P] [--part P] [--xla] [--full]");
         std::process::exit(2);
     };
     let mut opts = opts_from(&args);
@@ -196,6 +336,8 @@ fn main() {
     match cmd.as_str() {
         "quickstart" => quickstart(&opts, cfg_opt.as_ref(), &proto_name),
         "protocols" => protocols(&opts, cfg_opt.as_ref()),
+        "serve" => serve_cmd(&args, &opts),
+        "query" => query_cmd(&args, &opts, cfg_opt.as_ref()),
         "info" => info(),
         "all" => {
             for f in ["fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "theory", "ablations", "streaming"] {

@@ -1,0 +1,264 @@
+//! Admission control: a concurrency cap plus a bounded wait queue in front
+//! of the query executor.
+//!
+//! The daemon owns one thread budget (the persistent `util::executor`
+//! pool). Letting every connection run a query at full width would
+//! oversubscribe it the moment two queries overlap, so admission splits the
+//! budget the same way [`RunSpec::oracle_threads`] splits a stage budget
+//! across shard tasks: with budget `T` and concurrency cap `c`, each
+//! admitted query runs its protocol at `(T / c.clamp(1, T.max(1))).max(1)`
+//! threads ([`split_budget`]; a unit test pins the two formulas together).
+//! The repo-wide thread-invariance contract (every protocol is bit-identical
+//! at any thread count) is what makes this narrowing safe for the served
+//! bit-identity guarantee.
+//!
+//! Flow control is two-level and strictly bounded:
+//!
+//! * up to `max_concurrency` queries hold a [`Permit`] and run;
+//! * up to `queue_depth` more block in [`Admission::admit`] on a condvar;
+//! * everything beyond that is **shed immediately** with a typed
+//!   [`ErrorKind::Overloaded`] reply — the daemon never buffers unbounded
+//!   work, matching the bounded-memory discipline of the `stream` subsystem.
+//!
+//! [`RunSpec::oracle_threads`]: crate::coordinator::protocol::RunSpec::oracle_threads
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+use super::wire::{ErrorKind, WireError};
+
+/// Per-query thread width for a server budget of `threads` and a
+/// concurrency cap of `slots` — the same split [`RunSpec::oracle_threads`]
+/// applies to shard tasks, so admitted queries exactly tile the pool.
+///
+/// [`RunSpec::oracle_threads`]: crate::coordinator::protocol::RunSpec::oracle_threads
+pub fn split_budget(threads: usize, slots: usize) -> usize {
+    (threads / slots.clamp(1, threads.max(1))).max(1)
+}
+
+struct Waitline {
+    in_flight: usize,
+    waiting: usize,
+    peak_in_flight: usize,
+    shutting_down: bool,
+}
+
+struct Inner {
+    max_concurrency: usize,
+    queue_depth: usize,
+    threads: usize,
+    line: Mutex<Waitline>,
+    cv: Condvar,
+    admitted: AtomicU64,
+    shed: AtomicU64,
+}
+
+/// Counter snapshot for the `stats` reply.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AdmissionStats {
+    pub max_concurrency: usize,
+    pub queue_depth: usize,
+    pub query_threads: usize,
+    pub in_flight: usize,
+    pub waiting: usize,
+    pub peak_in_flight: usize,
+    pub admitted: u64,
+    pub shed: u64,
+}
+
+/// Shared admission gate; clone-cheap via `Arc`.
+#[derive(Clone)]
+pub struct Admission {
+    inner: Arc<Inner>,
+}
+
+impl Admission {
+    /// `threads` is the server's whole executor budget; `max_concurrency`
+    /// queries may run at once (each at [`split_budget`] threads) and
+    /// `queue_depth` more may wait.
+    pub fn new(threads: usize, max_concurrency: usize, queue_depth: usize) -> Admission {
+        let max_concurrency = max_concurrency.max(1);
+        Admission {
+            inner: Arc::new(Inner {
+                max_concurrency,
+                queue_depth,
+                threads: threads.max(1),
+                line: Mutex::new(Waitline {
+                    in_flight: 0,
+                    waiting: 0,
+                    peak_in_flight: 0,
+                    shutting_down: false,
+                }),
+                cv: Condvar::new(),
+                admitted: AtomicU64::new(0),
+                shed: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    /// Thread width every admitted query runs at.
+    pub fn query_threads(&self) -> usize {
+        split_budget(self.inner.threads, self.inner.max_concurrency)
+    }
+
+    /// Block until a slot frees (bounded by `queue_depth` waiters), or shed.
+    pub fn admit(&self) -> Result<Permit, WireError> {
+        let inner = &self.inner;
+        let mut line = inner.line.lock().unwrap();
+        if line.shutting_down {
+            return Err(WireError::new(ErrorKind::ShuttingDown, "server is shutting down"));
+        }
+        if line.in_flight >= inner.max_concurrency {
+            if line.waiting >= inner.queue_depth {
+                inner.shed.fetch_add(1, Ordering::Relaxed);
+                return Err(WireError::new(
+                    ErrorKind::Overloaded,
+                    format!(
+                        "admission queue full ({} in flight, {} waiting); retry later",
+                        line.in_flight, line.waiting
+                    ),
+                ));
+            }
+            line.waiting += 1;
+            while line.in_flight >= inner.max_concurrency && !line.shutting_down {
+                line = inner.cv.wait(line).unwrap();
+            }
+            line.waiting -= 1;
+            if line.shutting_down {
+                // another waiter may also be eligible to observe the flag
+                inner.cv.notify_one();
+                return Err(WireError::new(ErrorKind::ShuttingDown, "server is shutting down"));
+            }
+        }
+        line.in_flight += 1;
+        line.peak_in_flight = line.peak_in_flight.max(line.in_flight);
+        inner.admitted.fetch_add(1, Ordering::Relaxed);
+        drop(line);
+        Ok(Permit { inner: Arc::clone(inner) })
+    }
+
+    /// Fail queued waiters (and all future `admit`s) with `ShuttingDown`.
+    pub fn shutdown(&self) {
+        let mut line = self.inner.line.lock().unwrap();
+        line.shutting_down = true;
+        self.inner.cv.notify_all();
+    }
+
+    pub fn stats(&self) -> AdmissionStats {
+        let line = self.inner.line.lock().unwrap();
+        AdmissionStats {
+            max_concurrency: self.inner.max_concurrency,
+            queue_depth: self.inner.queue_depth,
+            query_threads: self.query_threads(),
+            in_flight: line.in_flight,
+            waiting: line.waiting,
+            peak_in_flight: line.peak_in_flight,
+            admitted: self.inner.admitted.load(Ordering::Relaxed),
+            shed: self.inner.shed.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// RAII admission slot: holding one entitles the query to
+/// [`Permit::threads`] pool threads; dropping it wakes the next waiter.
+pub struct Permit {
+    inner: Arc<Inner>,
+}
+
+impl Permit {
+    pub fn threads(&self) -> usize {
+        split_budget(self.inner.threads, self.inner.max_concurrency)
+    }
+}
+
+impl Drop for Permit {
+    fn drop(&mut self) {
+        let mut line = self.inner.line.lock().unwrap();
+        line.in_flight -= 1;
+        drop(line);
+        self.inner.cv.notify_one();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::protocol::RunSpec;
+    use std::time::Duration;
+
+    #[test]
+    fn split_matches_oracle_threads_model() {
+        for threads in [1usize, 2, 3, 4, 7, 8, 16] {
+            for slots in [1usize, 2, 3, 5, 8, 32] {
+                let spec = RunSpec::new(4, 5).threads(threads);
+                assert_eq!(
+                    split_budget(threads, slots),
+                    spec.oracle_threads(slots),
+                    "threads={threads} slots={slots}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn budget_never_oversubscribed() {
+        for threads in [1usize, 2, 4, 8, 16] {
+            for slots in [1usize, 2, 3, 4, 8] {
+                let per = split_budget(threads, slots);
+                assert!(per >= 1);
+                if slots <= threads {
+                    assert!(per * slots <= threads, "threads={threads} slots={slots} per={per}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn admits_to_cap_then_sheds_past_queue() {
+        let adm = Admission::new(8, 2, 0);
+        let p1 = adm.admit().unwrap();
+        let p2 = adm.admit().unwrap();
+        let err = adm.admit().unwrap_err();
+        assert_eq!(err.kind, ErrorKind::Overloaded);
+        let s = adm.stats();
+        assert_eq!((s.in_flight, s.peak_in_flight, s.admitted, s.shed), (2, 2, 2, 1));
+        assert_eq!(s.query_threads, 4);
+        drop(p1);
+        let _p3 = adm.admit().unwrap();
+        drop(p2);
+        assert_eq!(adm.stats().in_flight, 1);
+        assert_eq!(adm.stats().peak_in_flight, 2);
+    }
+
+    #[test]
+    fn queued_waiter_runs_after_release() {
+        let adm = Admission::new(4, 1, 4);
+        let permit = adm.admit().unwrap();
+        let adm2 = adm.clone();
+        let waiter = std::thread::spawn(move || adm2.admit().map(|p| p.threads()));
+        // let the waiter reach the condvar
+        while adm.stats().waiting == 0 {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        drop(permit);
+        let got = waiter.join().unwrap().unwrap();
+        assert_eq!(got, 4, "solo query gets the whole budget");
+        assert_eq!(adm.stats().admitted, 2);
+        assert_eq!(adm.stats().shed, 0);
+    }
+
+    #[test]
+    fn shutdown_fails_waiters_and_future_admits() {
+        let adm = Admission::new(4, 1, 4);
+        let permit = adm.admit().unwrap();
+        let adm2 = adm.clone();
+        let waiter = std::thread::spawn(move || adm2.admit().err().map(|e| e.kind));
+        while adm.stats().waiting == 0 {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        adm.shutdown();
+        assert_eq!(waiter.join().unwrap(), Some(ErrorKind::ShuttingDown));
+        assert_eq!(adm.admit().unwrap_err().kind, ErrorKind::ShuttingDown);
+        drop(permit);
+    }
+}

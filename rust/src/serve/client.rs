@@ -1,0 +1,99 @@
+//! Blocking NDJSON client for the selection daemon — the counterpart the
+//! `query` subcommand, the load bench and the integration tests share.
+//!
+//! One request in flight per connection: each call writes one line, then
+//! blocks for one reply line and decodes it into `Ok(result)` or the
+//! server's typed [`WireError`]. Transport failures surface as
+//! [`ErrorKind::Internal`] so callers handle exactly one error type.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+
+use crate::coordinator::protocol::RunSpec;
+use crate::util::json::Json;
+
+use super::wire::{self, ErrorKind, QueryReply, WireError};
+
+/// A connected client. Requests carry a per-connection incrementing `id`
+/// that the server echoes, so replies are self-describing in logs.
+pub struct Client {
+    writer: TcpStream,
+    reader: BufReader<TcpStream>,
+    next_id: u64,
+}
+
+fn io_err(what: &str, e: std::io::Error) -> WireError {
+    WireError::new(ErrorKind::Internal, format!("{what}: {e}"))
+}
+
+impl Client {
+    pub fn connect(addr: impl ToSocketAddrs) -> Result<Client, WireError> {
+        let writer = TcpStream::connect(addr).map_err(|e| io_err("connect", e))?;
+        let read_half = writer.try_clone().map_err(|e| io_err("clone stream", e))?;
+        Ok(Client { writer, reader: BufReader::new(read_half), next_id: 0 })
+    }
+
+    fn call(&mut self, line: String) -> Result<Json, WireError> {
+        self.writer
+            .write_all(line.as_bytes())
+            .and_then(|_| self.writer.write_all(b"\n"))
+            .and_then(|_| self.writer.flush())
+            .map_err(|e| io_err("send", e))?;
+        let mut reply = String::new();
+        let n = self.reader.read_line(&mut reply).map_err(|e| io_err("recv", e))?;
+        if n == 0 {
+            return Err(WireError::new(ErrorKind::Internal, "server closed the connection"));
+        }
+        wire::parse_reply(reply.trim())
+    }
+
+    fn id(&mut self) -> u64 {
+        self.next_id += 1;
+        self.next_id
+    }
+
+    pub fn ping(&mut self) -> Result<Json, WireError> {
+        let id = self.id();
+        self.call(wire::simple_line("ping", id))
+    }
+
+    pub fn stats(&mut self) -> Result<Json, WireError> {
+        let id = self.id();
+        self.call(wire::simple_line("stats", id))
+    }
+
+    pub fn datasets(&mut self) -> Result<Json, WireError> {
+        let id = self.id();
+        self.call(wire::simple_line("datasets", id))
+    }
+
+    /// Pre-fill the named (or default) dataset's singleton cache.
+    pub fn warm(&mut self, dataset: Option<&str>) -> Result<Json, WireError> {
+        let id = self.id();
+        self.call(wire::warm_line(dataset, id))
+    }
+
+    /// Pull `count` more stream elements into the dataset (drift mutation).
+    pub fn advance(&mut self, dataset: Option<&str>, count: usize) -> Result<Json, WireError> {
+        let id = self.id();
+        self.call(wire::advance_line(dataset, count, id))
+    }
+
+    /// Run one selection query and decode the typed reply.
+    pub fn query(
+        &mut self,
+        protocol: &str,
+        dataset: Option<&str>,
+        spec: &RunSpec,
+    ) -> Result<QueryReply, WireError> {
+        let id = self.id();
+        let result = self.call(wire::query_line(protocol, dataset, spec, id))?;
+        QueryReply::from_json(&result)
+    }
+
+    /// Ask the daemon to stop (it still answers this request).
+    pub fn shutdown(&mut self) -> Result<Json, WireError> {
+        let id = self.id();
+        self.call(wire::simple_line("shutdown", id))
+    }
+}

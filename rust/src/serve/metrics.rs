@@ -1,0 +1,262 @@
+//! Query-latency metrics surface: bounded ring buffers of per-query
+//! timings with p50/p99/qps summaries.
+//!
+//! Every completed query records two durations — time spent **queued** in
+//! admission and **end-to-end latency** (admission wait + protocol run) —
+//! into fixed-capacity ring buffers, so a long-lived daemon's memory stays
+//! bounded while the percentiles track the recent window. The `stats` wire
+//! op serializes a [`LatencySnapshot`] (via [`util::stats`] nearest-rank
+//! percentiles), and [`ServeMetrics::to_json`] is exactly what `bench_serve`
+//! dumps into the `GREEDI_BENCH_JSON` trail so qps/p99 join the per-op
+//! delta table in CI.
+//!
+//! qps is lifetime throughput: completed queries over the wall-clock span
+//! from the first recorded completion to the last (a single query reports
+//! its own latency as the span). Error replies count separately and never
+//! pollute the latency window.
+//!
+//! [`util::stats`]: crate::util::stats
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::json::Json;
+use crate::util::stats::{percentile, summarize};
+
+/// Default ring capacity: enough to hold the recent window of any realistic
+/// closed-loop load without unbounded growth.
+pub const DEFAULT_RING: usize = 1024;
+
+/// Fixed-capacity overwrite-oldest sample buffer.
+struct Ring {
+    buf: Vec<f64>,
+    cap: usize,
+    at: usize,
+}
+
+impl Ring {
+    fn new(cap: usize) -> Ring {
+        Ring { buf: Vec::with_capacity(cap.max(1)), cap: cap.max(1), at: 0 }
+    }
+
+    fn push(&mut self, x: f64) {
+        if self.buf.len() < self.cap {
+            self.buf.push(x);
+        } else {
+            self.buf[self.at] = x;
+        }
+        self.at = (self.at + 1) % self.cap;
+    }
+
+    fn samples(&self) -> Vec<f64> {
+        self.buf.clone()
+    }
+}
+
+struct Windows {
+    latency_us: Ring,
+    queued_us: Ring,
+    first_done: Option<Instant>,
+    last_done: Option<Instant>,
+}
+
+/// Percentile summary of one ring (all values in microseconds).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LatencySnapshot {
+    pub count: usize,
+    pub mean_us: f64,
+    pub p50_us: f64,
+    pub p99_us: f64,
+    pub max_us: f64,
+}
+
+impl LatencySnapshot {
+    fn of(xs: &[f64]) -> LatencySnapshot {
+        if xs.is_empty() {
+            return LatencySnapshot::default();
+        }
+        let s = summarize(xs);
+        LatencySnapshot {
+            count: s.n,
+            mean_us: s.mean,
+            p50_us: percentile(xs, 50.0),
+            p99_us: percentile(xs, 99.0),
+            max_us: s.max,
+        }
+    }
+
+    fn to_json(self) -> Json {
+        Json::obj([
+            ("count", Json::num(self.count as f64)),
+            ("mean_us", Json::num(self.mean_us)),
+            ("p50_us", Json::num(self.p50_us)),
+            ("p99_us", Json::num(self.p99_us)),
+            ("max_us", Json::num(self.max_us)),
+        ])
+    }
+}
+
+/// Everything the `stats` wire op reports about timings.
+#[derive(Debug, Clone, Default)]
+pub struct MetricsSnapshot {
+    pub completed: u64,
+    pub errors: u64,
+    pub qps: f64,
+    pub latency: LatencySnapshot,
+    pub queued: LatencySnapshot,
+}
+
+/// Shared recorder, one per server.
+pub struct ServeMetrics {
+    windows: Mutex<Windows>,
+    completed: AtomicU64,
+    errors: AtomicU64,
+}
+
+impl Default for ServeMetrics {
+    fn default() -> Self {
+        ServeMetrics::new(DEFAULT_RING)
+    }
+}
+
+impl ServeMetrics {
+    pub fn new(ring: usize) -> ServeMetrics {
+        ServeMetrics {
+            windows: Mutex::new(Windows {
+                latency_us: Ring::new(ring),
+                queued_us: Ring::new(ring),
+                first_done: None,
+                last_done: None,
+            }),
+            completed: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one successful query: `queued_us` in admission, `latency_us`
+    /// end to end.
+    pub fn record_query(&self, queued_us: f64, latency_us: f64) {
+        let now = Instant::now();
+        let mut w = self.windows.lock().unwrap();
+        w.latency_us.push(latency_us);
+        w.queued_us.push(queued_us);
+        if w.first_done.is_none() {
+            w.first_done = Some(now);
+        }
+        w.last_done = Some(now);
+        drop(w);
+        self.completed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a query that ended in an error reply (shed, bad request, …).
+    pub fn record_error(&self) {
+        self.errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let w = self.windows.lock().unwrap();
+        let latency = w.latency_us.samples();
+        let queued = w.queued_us.samples();
+        let completed = self.completed.load(Ordering::Relaxed);
+        let span_s = match (w.first_done, w.last_done) {
+            (Some(a), Some(b)) => (b - a).as_secs_f64(),
+            _ => 0.0,
+        };
+        // one query has zero span: fall back to its own latency
+        let eff_s = if span_s > 0.0 {
+            span_s
+        } else {
+            latency.first().map(|us| us / 1e6).unwrap_or(0.0)
+        };
+        let qps = if eff_s > 0.0 { completed as f64 / eff_s } else { 0.0 };
+        MetricsSnapshot {
+            completed,
+            errors: self.errors.load(Ordering::Relaxed),
+            qps,
+            latency: LatencySnapshot::of(&latency),
+            queued: LatencySnapshot::of(&queued),
+        }
+    }
+
+    /// The `stats` reply body (latency section); also embedded in
+    /// `BENCH_serve.json` by the load bench.
+    pub fn to_json(&self) -> Json {
+        let s = self.snapshot();
+        Json::obj([
+            ("completed", Json::num(s.completed as f64)),
+            ("errors", Json::num(s.errors as f64)),
+            ("qps", Json::num(s.qps)),
+            ("latency", s.latency.to_json()),
+            ("queued", s.queued.to_json()),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_overwrites_oldest() {
+        let mut r = Ring::new(3);
+        for x in [1.0, 2.0, 3.0, 4.0, 5.0] {
+            r.push(x);
+        }
+        let mut got = r.samples();
+        got.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(got, vec![3.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn empty_snapshot_is_finite_zero() {
+        let m = ServeMetrics::default();
+        let s = m.snapshot();
+        assert_eq!((s.completed, s.errors), (0, 0));
+        assert_eq!(s.qps, 0.0);
+        assert_eq!(s.latency.count, 0);
+        assert_eq!(s.latency.p99_us, 0.0, "empty window must not report NaN");
+    }
+
+    #[test]
+    fn percentiles_over_recorded_window() {
+        let m = ServeMetrics::new(256);
+        for i in 1..=100 {
+            m.record_query(i as f64 / 10.0, i as f64 * 100.0);
+        }
+        let s = m.snapshot();
+        assert_eq!(s.completed, 100);
+        assert_eq!(s.latency.count, 100);
+        assert_eq!(s.latency.p50_us, 5000.0);
+        assert_eq!(s.latency.p99_us, 9900.0, "nearest-rank p99 of 100..10000 step 100");
+        assert_eq!(s.latency.max_us, 10000.0);
+        assert_eq!(s.queued.p50_us, 5.0);
+        assert!(s.qps > 0.0, "span or single-latency fallback must give positive qps");
+    }
+
+    #[test]
+    fn errors_do_not_enter_latency_window() {
+        let m = ServeMetrics::default();
+        m.record_query(1.0, 50.0);
+        m.record_error();
+        m.record_error();
+        let s = m.snapshot();
+        assert_eq!((s.completed, s.errors), (1, 2));
+        assert_eq!(s.latency.count, 1);
+        assert_eq!(s.latency.p50_us, 50.0);
+        // single completion: qps falls back to its own latency (50us -> 20k qps)
+        assert!((s.qps - 20000.0).abs() < 1e-6, "qps={}", s.qps);
+    }
+
+    #[test]
+    fn stats_json_shape() {
+        let m = ServeMetrics::default();
+        m.record_query(2.0, 100.0);
+        let j = m.to_json();
+        assert_eq!(j.get("completed").and_then(|v| v.as_f64()), Some(1.0));
+        let lat = j.get("latency").unwrap();
+        assert_eq!(lat.get("p50_us").and_then(|v| v.as_f64()), Some(100.0));
+        assert_eq!(lat.get("p99_us").and_then(|v| v.as_f64()), Some(100.0));
+        assert!(j.get("qps").and_then(|v| v.as_f64()).unwrap() > 0.0);
+    }
+}

@@ -1,0 +1,95 @@
+//! Always-on selection service: a resident daemon that keeps datasets,
+//! the executor pool and objective caches warm, and serves concurrent
+//! selection queries over TCP.
+//!
+//! The paper's GreeDi is a batch protocol; the ROADMAP north star is a
+//! system answering selection queries for millions of users. The missing
+//! piece is residency: loading the corpus and warming the packed objective
+//! windows once, then amortizing them across every query. This subsystem
+//! is that piece, zero-dependency like the rest of the crate:
+//!
+//! * [`wire`] — versioned newline-delimited JSON request/reply schema
+//!   (via `util::json`, whose writer this subsystem motivated).
+//! * [`state`] — warm dataset registry, full-ground singleton-gain caches
+//!   (sieve ladders restart instantly on repeat queries), and dataset
+//!   drift through `stream::` sources.
+//! * [`admission`] — bounded queue + concurrency cap splitting the
+//!   executor budget with the `RunSpec::oracle_threads` model; overload is
+//!   shed as a typed error, never buffered unboundedly.
+//! * [`metrics`] — per-query latency rings with p50/p99/qps summaries on
+//!   the `stats` op and in `BENCH_serve.json`.
+//! * [`server`] / [`client`] — thread-per-connection daemon and the
+//!   blocking client used by the `query` subcommand, bench and tests.
+//!
+//! Served results are **bit-identical** to a direct
+//! `protocol::by_name(..).run(..)` with the same `RunSpec` and seed: the
+//! admission layer only narrows `spec.threads`, which the repo-wide
+//! thread-invariance contract guarantees never changes a solution, and the
+//! singleton cache returns the same bits batch pricing would (see
+//! [`state`]). `tests/integration_serve.rs` asserts this end to end,
+//! including under ≥ 8 concurrent clients.
+//!
+//! # Wire schema (v1)
+//!
+//! One JSON object per line in each direction. Requests carry
+//! `{"v": 1, "op": <string>, "id": <any>}` plus op-specific fields; `id`
+//! is echoed verbatim in the reply. Replies are
+//! `{"v": 1, "ok": true, "id": ..., "result": {...}}` or
+//! `{"v": 1, "ok": false, "id": ..., "error": {"kind": ..., "msg": ...}}`
+//! with `kind` one of `bad_request`, `unknown_protocol`,
+//! `unknown_dataset`, `overloaded`, `shutting_down`, `internal`.
+//!
+//! | op | request fields | result fields |
+//! |---|---|---|
+//! | `ping` | — | `op:"pong"`, `uptime_s`, `protocols` |
+//! | `stats` | — | `uptime_s`, `admission{..}`, `cache{..}`, `latency{completed,errors,qps,latency{p50_us,p99_us,..},queued{..}}` |
+//! | `datasets` | — | `datasets:[{name,n,d,version,streaming,warm}]` |
+//! | `warm` | `dataset?` | `dataset`, `version`, `n`, `was_warm` |
+//! | `advance` | `dataset?`, `count` | `dataset`, `added`, `live`, `version` |
+//! | `query` | `protocol`, `dataset?`, `spec{m,k,..}` | `protocol`, `solution`, `value`, `oracle_calls`, `rounds`, `dataset`, `dataset_version`, `threads_used`, `queued_us`, `latency_us` |
+//! | `shutdown` | — | `op:"shutdown"` (then the daemon stops) |
+//!
+//! `spec` accepts the [`RunSpec`](crate::coordinator::protocol::RunSpec)
+//! builder surface: required `m`, `k`; optional `kappa` **or** `alpha`
+//! (exclusive), `fanout`, `delta`, `epsilon`, `batch`, `local_eval`,
+//! `algorithm`, `threads`, `partition`, `seed`. Unknown fields are
+//! rejected — never ignored — so client typos cannot silently change an
+//! experiment.
+//!
+//! # Adding an endpoint
+//!
+//! 1. **Schema** (`wire.rs`): add a variant to [`wire::Request`], parse it
+//!    in `parse_request_doc` (validate everything there — builder panics
+//!    must never reach the server), and add a client-side `*_line`
+//!    constructor next to [`wire::simple_line`].
+//! 2. **Dispatch** (`server.rs`): add the match arm in `handle_line`,
+//!    returning `wire::ok_line(id, ...)` or `err_reply(...)` with a typed
+//!    [`wire::ErrorKind`]. Long work must go through
+//!    [`admission::Admission::admit`] and record into
+//!    [`metrics::ServeMetrics`].
+//! 3. **Client** (`client.rs`): add the blocking wrapper method.
+//! 4. **Prove it** : a round-trip unit test in `wire.rs` (including the
+//!    malformed-input rejection path) and an end-to-end case in
+//!    `tests/integration_serve.rs`.
+//!
+//! # Quickstart
+//!
+//! ```text
+//! greedi serve --n 2000 --threads 8          # daemon on 127.0.0.1:7199
+//! greedi query --protocol greedi --k 10      # one query from another shell
+//! cargo run --example serve_client           # the same dance in code
+//! ```
+
+pub mod admission;
+pub mod client;
+pub mod metrics;
+pub mod server;
+pub mod state;
+pub mod wire;
+
+pub use admission::{split_budget, Admission, AdmissionStats, Permit};
+pub use client::Client;
+pub use metrics::{LatencySnapshot, MetricsSnapshot, ServeMetrics};
+pub use server::{ServeSpec, Server};
+pub use state::{DatasetInfo, WarmProblem, WarmSnapshot, WarmState};
+pub use wire::{ErrorKind, QueryReply, WireError, WIRE_VERSION};

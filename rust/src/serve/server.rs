@@ -1,0 +1,522 @@
+//! The resident daemon: TCP accept loop, per-connection NDJSON dispatch,
+//! and the [`ServeSpec`] it boots from.
+//!
+//! One `Server` owns one [`WarmState`] registry, one [`Admission`] gate and
+//! one [`ServeMetrics`] recorder, shared across a thread-per-connection
+//! accept loop. Queries run **on the connection thread** under an admission
+//! [`Permit`](super::admission::Permit) that fixes their executor width, so
+//! the persistent `util::executor` pool is tiled, never oversubscribed.
+//! Protocol panics are caught and returned as typed
+//! [`ErrorKind::Internal`] replies instead of killing the connection.
+//!
+//! [`Server::with_parts`] exposes the composed pieces for tests: handing
+//! the server a pre-built [`Admission`] lets `tests/integration_serve.rs`
+//! hold a permit itself and drive the shed path deterministically.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::coordinator::protocol;
+use crate::util::json::Json;
+use crate::util::toml;
+
+use super::admission::Admission;
+use super::metrics::{ServeMetrics, DEFAULT_RING};
+use super::state::WarmState;
+use super::wire::{self, ErrorKind, QueryRequest, Request, WireError};
+
+/// Boot parameters for the daemon — the `[serve]` TOML section.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeSpec {
+    /// Listen address (`serve.addr`); `"host:0"` binds an ephemeral port.
+    pub addr: String,
+    /// Queries allowed to run at once (`serve.max_concurrency`).
+    pub max_concurrency: usize,
+    /// Queries allowed to wait for a slot (`serve.queue_depth`); beyond
+    /// this, shed with [`ErrorKind::Overloaded`]. 0 = shed immediately.
+    pub queue_depth: usize,
+    /// Whole-server executor budget (`serve.threads`), split across
+    /// admitted queries by the `oracle_threads` model.
+    pub threads: usize,
+    /// Dataset served when a request names none (`serve.dataset`).
+    pub dataset: String,
+    /// Latency ring-buffer capacity (`serve.ring`).
+    pub ring: usize,
+}
+
+impl Default for ServeSpec {
+    fn default() -> Self {
+        ServeSpec {
+            addr: "127.0.0.1:7199".into(),
+            max_concurrency: 4,
+            queue_depth: 16,
+            threads: 4,
+            dataset: "demo".into(),
+            ring: DEFAULT_RING,
+        }
+    }
+}
+
+impl ServeSpec {
+    /// Parse the `[serve]` section out of a TOML document. Non-`serve.*`
+    /// keys are ignored (they belong to [`ExperimentConfig`]), unknown
+    /// `serve.*` keys are rejected — same discipline as the experiment
+    /// config, so a preset file can carry both sections.
+    ///
+    /// [`ExperimentConfig`]: crate::config::ExperimentConfig
+    pub fn from_toml(text: &str) -> Result<ServeSpec, String> {
+        let doc = toml::parse(text).map_err(|e| e.to_string())?;
+        Self::from_doc(&doc)
+    }
+
+    pub fn from_doc(doc: &toml::Document) -> Result<ServeSpec, String> {
+        let mut spec = ServeSpec::default();
+        for (key, value) in &doc.entries {
+            let Some(field) = key.strip_prefix("serve.") else {
+                continue;
+            };
+            match field {
+                "addr" => spec.addr = value.as_str().ok_or("serve.addr: string")?.into(),
+                "max_concurrency" => {
+                    spec.max_concurrency =
+                        value.as_usize().ok_or("serve.max_concurrency: int")?
+                }
+                "queue_depth" => {
+                    spec.queue_depth = value.as_usize().ok_or("serve.queue_depth: int")?
+                }
+                "threads" => spec.threads = value.as_usize().ok_or("serve.threads: int")?,
+                "dataset" => {
+                    spec.dataset = value.as_str().ok_or("serve.dataset: string")?.into()
+                }
+                "ring" => spec.ring = value.as_usize().ok_or("serve.ring: int")?,
+                other => return Err(format!("unknown serve key \"serve.{other}\"")),
+            }
+        }
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.addr.is_empty() || !self.addr.contains(':') {
+            return Err(format!("serve.addr must be host:port, got {:?}", self.addr));
+        }
+        if self.max_concurrency == 0 {
+            return Err("serve.max_concurrency must be > 0".into());
+        }
+        if self.threads == 0 {
+            return Err("serve.threads must be > 0".into());
+        }
+        if self.dataset.is_empty() {
+            return Err("serve.dataset must be non-empty".into());
+        }
+        if self.ring == 0 {
+            return Err("serve.ring must be > 0".into());
+        }
+        Ok(())
+    }
+}
+
+struct Shared {
+    state: Arc<WarmState>,
+    admission: Admission,
+    metrics: Arc<ServeMetrics>,
+    default_dataset: String,
+    addr: SocketAddr,
+    started: Instant,
+    stop: AtomicBool,
+}
+
+/// A running daemon. Dropping it stops the accept loop.
+pub struct Server {
+    shared: Arc<Shared>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind and start serving with freshly built admission/metrics.
+    pub fn start(spec: &ServeSpec, state: Arc<WarmState>) -> Result<Server, String> {
+        spec.validate()?;
+        let admission = Admission::new(spec.threads, spec.max_concurrency, spec.queue_depth);
+        let metrics = Arc::new(ServeMetrics::new(spec.ring));
+        Server::with_parts(spec, state, admission, metrics)
+    }
+
+    /// Start with caller-supplied parts (tests hold a [`Permit`] on the
+    /// same [`Admission`] to exercise shedding deterministically).
+    ///
+    /// [`Permit`]: super::admission::Permit
+    pub fn with_parts(
+        spec: &ServeSpec,
+        state: Arc<WarmState>,
+        admission: Admission,
+        metrics: Arc<ServeMetrics>,
+    ) -> Result<Server, String> {
+        let listener =
+            TcpListener::bind(&spec.addr).map_err(|e| format!("bind {}: {e}", spec.addr))?;
+        let addr = listener.local_addr().map_err(|e| format!("local_addr: {e}"))?;
+        let shared = Arc::new(Shared {
+            state,
+            admission,
+            metrics,
+            default_dataset: spec.dataset.clone(),
+            addr,
+            started: Instant::now(),
+            stop: AtomicBool::new(false),
+        });
+        let sh = Arc::clone(&shared);
+        let accept = std::thread::spawn(move || {
+            for conn in listener.incoming() {
+                if sh.stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                if let Ok(stream) = conn {
+                    let sh2 = Arc::clone(&sh);
+                    std::thread::spawn(move || handle_conn(stream, sh2));
+                }
+            }
+        });
+        Ok(Server { shared, accept: Some(accept) })
+    }
+
+    /// Bound address (resolves the port when the spec asked for `:0`).
+    pub fn addr(&self) -> SocketAddr {
+        self.shared.addr
+    }
+
+    pub fn admission(&self) -> Admission {
+        self.shared.admission.clone()
+    }
+
+    pub fn metrics(&self) -> Arc<ServeMetrics> {
+        Arc::clone(&self.shared.metrics)
+    }
+
+    pub fn state(&self) -> Arc<WarmState> {
+        Arc::clone(&self.shared.state)
+    }
+
+    /// Block until the accept loop exits — i.e. until some client sends a
+    /// wire `shutdown` (what `greedi serve` parks on).
+    pub fn join(&mut self) {
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+
+    /// Stop accepting, fail queued admissions, join the accept loop.
+    /// Idempotent; also runs on drop and after a wire `shutdown`.
+    pub fn stop(&mut self) {
+        if !self.shared.stop.swap(true, Ordering::SeqCst) {
+            self.shared.admission.shutdown();
+        }
+        // unblock the accept loop if it is still parked in accept()
+        let _ = TcpStream::connect(self.shared.addr);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn handle_conn(stream: TcpStream, shared: Arc<Shared>) {
+    let Ok(read_half) = stream.try_clone() else {
+        return;
+    };
+    let mut reader = BufReader::new(read_half);
+    let mut writer = stream;
+    let mut line = String::new();
+    loop {
+        if shared.stop.load(Ordering::SeqCst) {
+            break;
+        }
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) | Err(_) => break, // client went away
+            Ok(_) => {}
+        }
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        let (reply, shutdown) = handle_line(&shared, trimmed);
+        let sent = writer
+            .write_all(reply.as_bytes())
+            .and_then(|_| writer.write_all(b"\n"))
+            .and_then(|_| writer.flush());
+        if sent.is_err() {
+            break;
+        }
+        if shutdown {
+            shared.stop.store(true, Ordering::SeqCst);
+            shared.admission.shutdown();
+            // wake the accept loop so it observes the stop flag
+            let _ = TcpStream::connect(shared.addr);
+            break;
+        }
+    }
+}
+
+/// Dispatch one request line to one reply line. The bool asks the caller
+/// to begin server shutdown after the reply is flushed.
+fn handle_line(shared: &Shared, line: &str) -> (String, bool) {
+    let (id, req) = wire::parse_request(line);
+    let req = match req {
+        Ok(r) => r,
+        Err(e) => {
+            shared.metrics.record_error();
+            return (wire::err_line(id.as_ref(), &e), false);
+        }
+    };
+    let id = id.as_ref();
+    match req {
+        Request::Ping => {
+            let result = Json::obj([
+                ("op", Json::str("pong")),
+                ("uptime_s", Json::num(shared.started.elapsed().as_secs_f64())),
+                (
+                    "protocols",
+                    Json::Arr(protocol::NAMES.iter().map(|n| Json::str(*n)).collect()),
+                ),
+            ]);
+            (wire::ok_line(id, result), false)
+        }
+        Request::Stats => (wire::ok_line(id, stats_json(shared)), false),
+        Request::Datasets => {
+            let rows = shared
+                .state
+                .list()
+                .into_iter()
+                .map(|d| {
+                    Json::obj([
+                        ("name", Json::str(d.name)),
+                        ("n", Json::num(d.n as f64)),
+                        ("d", Json::num(d.d as f64)),
+                        ("version", Json::num(d.version as f64)),
+                        ("streaming", Json::Bool(d.streaming)),
+                        ("warm", Json::Bool(d.warm)),
+                    ])
+                })
+                .collect();
+            (wire::ok_line(id, Json::obj([("datasets", Json::Arr(rows))])), false)
+        }
+        Request::Warm { dataset } => {
+            let name = dataset.as_deref().unwrap_or(&shared.default_dataset);
+            match shared.state.snapshot(name) {
+                None => (err_reply(shared, id, unknown_dataset(name)), false),
+                Some(snap) => {
+                    let (n, was_warm) = snap.warm(shared.admission.query_threads());
+                    let result = Json::obj([
+                        ("dataset", Json::str(name)),
+                        ("version", Json::num(snap.version as f64)),
+                        ("n", Json::num(n as f64)),
+                        ("was_warm", Json::Bool(was_warm)),
+                    ]);
+                    (wire::ok_line(id, result), false)
+                }
+            }
+        }
+        Request::Advance { dataset, count } => {
+            let name = dataset.as_deref().unwrap_or(&shared.default_dataset);
+            if shared.state.snapshot(name).is_none() {
+                return (err_reply(shared, id, unknown_dataset(name)), false);
+            }
+            match shared.state.advance(name, count) {
+                Err(msg) => (err_reply(shared, id, WireError::bad(msg)), false),
+                Ok((added, live, version)) => {
+                    let result = Json::obj([
+                        ("dataset", Json::str(name)),
+                        ("added", Json::num(added as f64)),
+                        ("live", Json::num(live as f64)),
+                        ("version", Json::num(version as f64)),
+                    ]);
+                    (wire::ok_line(id, result), false)
+                }
+            }
+        }
+        Request::Query(q) => (run_query(shared, *q, id), false),
+        Request::Shutdown => {
+            (wire::ok_line(id, Json::obj([("op", Json::str("shutdown"))])), true)
+        }
+    }
+}
+
+fn unknown_dataset(name: &str) -> WireError {
+    WireError::new(ErrorKind::UnknownDataset, format!("unknown dataset {name:?}"))
+}
+
+fn err_reply(shared: &Shared, id: Option<&Json>, e: WireError) -> String {
+    shared.metrics.record_error();
+    wire::err_line(id, &e)
+}
+
+fn stats_json(shared: &Shared) -> Json {
+    let a = shared.admission.stats();
+    let (hits, misses) = shared.state.cache_counts();
+    Json::obj([
+        ("uptime_s", Json::num(shared.started.elapsed().as_secs_f64())),
+        (
+            "admission",
+            Json::obj([
+                ("max_concurrency", Json::num(a.max_concurrency as f64)),
+                ("queue_depth", Json::num(a.queue_depth as f64)),
+                ("query_threads", Json::num(a.query_threads as f64)),
+                ("in_flight", Json::num(a.in_flight as f64)),
+                ("waiting", Json::num(a.waiting as f64)),
+                ("peak_in_flight", Json::num(a.peak_in_flight as f64)),
+                ("admitted", Json::num(a.admitted as f64)),
+                ("shed", Json::num(a.shed as f64)),
+            ]),
+        ),
+        (
+            "cache",
+            Json::obj([
+                ("singleton_hits", Json::num(hits as f64)),
+                ("singleton_misses", Json::num(misses as f64)),
+            ]),
+        ),
+        ("latency", shared.metrics.to_json()),
+    ])
+}
+
+fn run_query(shared: &Shared, q: QueryRequest, id: Option<&Json>) -> String {
+    let t0 = Instant::now();
+    let Some(proto) = protocol::by_name(&q.protocol) else {
+        return err_reply(
+            shared,
+            id,
+            WireError::new(
+                ErrorKind::UnknownProtocol,
+                format!(
+                    "unknown protocol {:?} — known: {}",
+                    q.protocol,
+                    protocol::NAMES.join(", ")
+                ),
+            ),
+        );
+    };
+    let name = q.dataset.as_deref().unwrap_or(&shared.default_dataset).to_string();
+    let Some(snap) = shared.state.snapshot(&name) else {
+        return err_reply(shared, id, unknown_dataset(&name));
+    };
+    let permit = match shared.admission.admit() {
+        Ok(p) => p,
+        Err(e) => return err_reply(shared, id, e),
+    };
+    let queued_us = t0.elapsed().as_secs_f64() * 1e6;
+    // Narrow the query to its admission share of the pool. Protocol output
+    // is thread-invariant (repo-wide contract), so this never changes the
+    // solution — only how much of the executor the query may occupy.
+    let threads_used = permit.threads();
+    let spec = q.spec.threads(threads_used);
+    let problem = snap.problem();
+    let run = catch_unwind(AssertUnwindSafe(|| proto.run(&problem, &spec)));
+    drop(permit);
+    match run {
+        Err(panic) => {
+            let msg = panic
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| panic.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "protocol panicked".into());
+            err_reply(
+                shared,
+                id,
+                WireError::new(ErrorKind::Internal, format!("protocol {:?}: {msg}", q.protocol)),
+            )
+        }
+        Ok(run) => {
+            let latency_us = t0.elapsed().as_secs_f64() * 1e6;
+            shared.metrics.record_query(queued_us, latency_us);
+            wire::ok_line(
+                id,
+                wire::query_result_json(
+                    &run,
+                    &name,
+                    snap.version,
+                    threads_used,
+                    queued_us,
+                    latency_us,
+                ),
+            )
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_defaults_without_serve_section() {
+        let spec = ServeSpec::from_toml("n = 500\nthreads = 2\n").unwrap();
+        assert_eq!(spec, ServeSpec::default(), "non-serve keys are not ours to parse");
+    }
+
+    #[test]
+    fn spec_parses_full_section() {
+        let spec = ServeSpec::from_toml(
+            r#"
+            protocol = "greedi"
+
+            [serve]
+            addr = "0.0.0.0:9000"
+            max_concurrency = 8
+            queue_depth = 32
+            threads = 16
+            dataset = "tiny"
+            ring = 512
+            "#,
+        )
+        .unwrap();
+        assert_eq!(spec.addr, "0.0.0.0:9000");
+        assert_eq!(spec.max_concurrency, 8);
+        assert_eq!(spec.queue_depth, 32);
+        assert_eq!(spec.threads, 16);
+        assert_eq!(spec.dataset, "tiny");
+        assert_eq!(spec.ring, 512);
+    }
+
+    #[test]
+    fn spec_rejects_unknown_serve_key() {
+        let err = ServeSpec::from_toml("[serve]\nports = 3\n").unwrap_err();
+        assert!(err.contains("serve.ports"), "{err}");
+    }
+
+    #[test]
+    fn spec_rejects_bad_types() {
+        assert!(ServeSpec::from_toml("[serve]\naddr = 3\n").is_err());
+        assert!(ServeSpec::from_toml("[serve]\nmax_concurrency = \"two\"\n").is_err());
+        assert!(ServeSpec::from_toml("[serve]\nqueue_depth = \"deep\"\n").is_err());
+    }
+
+    #[test]
+    fn spec_rejects_invalid_values() {
+        let err = ServeSpec::from_toml("[serve]\nmax_concurrency = 0\n").unwrap_err();
+        assert!(err.contains("max_concurrency"), "{err}");
+        let err = ServeSpec::from_toml("[serve]\nthreads = 0\n").unwrap_err();
+        assert!(err.contains("threads"), "{err}");
+        let err = ServeSpec::from_toml("[serve]\naddr = \"nocolon\"\n").unwrap_err();
+        assert!(err.contains("host:port"), "{err}");
+        let err = ServeSpec::from_toml("[serve]\ndataset = \"\"\n").unwrap_err();
+        assert!(err.contains("dataset"), "{err}");
+        let err = ServeSpec::from_toml("[serve]\nring = 0\n").unwrap_err();
+        assert!(err.contains("ring"), "{err}");
+    }
+
+    #[test]
+    fn queue_depth_zero_is_valid_shed_immediately() {
+        let spec = ServeSpec::from_toml("[serve]\nqueue_depth = 0\n").unwrap();
+        assert_eq!(spec.queue_depth, 0);
+        spec.validate().unwrap();
+    }
+}

@@ -1,0 +1,509 @@
+//! Warm server state: the dataset registry and per-dataset objective
+//! caches that make a resident daemon worth having.
+//!
+//! A batch CLI reloads and re-prices everything per invocation; the serve
+//! subsystem keeps three things alive across queries instead:
+//!
+//! 1. **Datasets** — registered once as [`Arc<Dataset>`], shared by every
+//!    query (the persistent `util::executor` pool and the objectives'
+//!    packed windows stay warm with them).
+//! 2. **Singleton-gain caches** — the streaming sieve prices every arriving
+//!    batch through [`SubmodularFn::singleton_gains`], and a singleton
+//!    value `f({e})` is a pure per-element function (gains from ∅ — the
+//!    engine harness asserts `singleton_gains == fresh per-element gains`
+//!    bit-wise). So the server computes the full-ground vector once per
+//!    dataset version and answers every later ladder restart by indexing
+//!    into it: `stream_greedi` queries after the first skip the whole
+//!    pricing pass. Values are **bit-identical** to a cold run by the
+//!    engine's determinism contract (per-element independence + thread
+//!    invariance), which `tests/integration_serve.rs` asserts end-to-end.
+//! 3. **Arrival order** — a streaming dataset keeps its one-pass
+//!    [`StreamSource`] attached; `advance` pulls the next elements into the
+//!    visible window (drift: the served corpus evolves), bumps the dataset
+//!    version and retires the now-stale singleton cache. Snapshots taken by
+//!    in-flight queries keep the version they started with.
+//!
+//! Element ids in query solutions index the dataset's **current arrival
+//! order** (identity for statically registered datasets).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::coordinator::{FacilityProblem, Problem};
+use crate::data::Dataset;
+use crate::objective::SubmodularFn;
+use crate::stream::StreamSource;
+use crate::util::rng::Rng;
+
+/// Aggregate singleton-cache counters (stats surface).
+#[derive(Debug, Default)]
+pub struct CacheStats {
+    pub hits: AtomicU64,
+    pub misses: AtomicU64,
+}
+
+/// One dataset version's lazily filled full-ground singleton-gain vector.
+/// A fresh cell is installed on every mutation; snapshots hold the cell
+/// matching their data, so a drifted dataset can never serve stale gains.
+pub struct SingletonCell {
+    slot: Mutex<Option<Arc<Vec<f64>>>>,
+}
+
+impl SingletonCell {
+    fn new() -> Arc<SingletonCell> {
+        Arc::new(SingletonCell { slot: Mutex::new(None) })
+    }
+
+    pub fn is_warm(&self) -> bool {
+        self.slot.lock().unwrap().is_some()
+    }
+
+    /// Return the cached vector, filling it via `fill` on first use. The
+    /// lock is held across the fill so concurrent first queries compute the
+    /// vector once, not once each (they serialize on the fill; every later
+    /// hit is a lock-and-clone).
+    fn get_or_fill(
+        &self,
+        stats: &CacheStats,
+        fill: impl FnOnce() -> Vec<f64>,
+    ) -> Arc<Vec<f64>> {
+        let mut slot = self.slot.lock().unwrap();
+        match &*slot {
+            Some(v) => {
+                stats.hits.fetch_add(1, Ordering::Relaxed);
+                Arc::clone(v)
+            }
+            None => {
+                stats.misses.fetch_add(1, Ordering::Relaxed);
+                let v = Arc::new(fill());
+                *slot = Some(Arc::clone(&v));
+                v
+            }
+        }
+    }
+}
+
+struct EntryState {
+    /// Visible backing-row ids, in arrival order.
+    order: Vec<usize>,
+    version: u64,
+    /// Materialized current view (`backing.subset(&order)`; the backing Arc
+    /// itself when the order is the full identity).
+    current: Arc<Dataset>,
+    cell: Arc<SingletonCell>,
+}
+
+struct Entry {
+    backing: Arc<Dataset>,
+    /// `Some` for streaming datasets — the attached one-pass source that
+    /// `advance` keeps draining.
+    source: Option<Mutex<Box<dyn StreamSource + Send>>>,
+    state: Mutex<EntryState>,
+}
+
+/// Listing row for the `datasets` wire op.
+#[derive(Debug, Clone)]
+pub struct DatasetInfo {
+    pub name: String,
+    pub n: usize,
+    pub d: usize,
+    pub version: u64,
+    pub streaming: bool,
+    pub warm: bool,
+}
+
+/// A consistent view of one dataset version, taken at query start.
+/// Concurrent `advance` calls never disturb a snapshot: it keeps the data
+/// and singleton cell of the version it saw.
+pub struct WarmSnapshot {
+    pub name: String,
+    pub version: u64,
+    pub data: Arc<Dataset>,
+    cell: Arc<SingletonCell>,
+    stats: Arc<CacheStats>,
+}
+
+impl WarmSnapshot {
+    /// The warm problem instance a query runs against.
+    pub fn problem(&self) -> WarmProblem {
+        WarmProblem {
+            inner: FacilityProblem::new(&self.data),
+            cell: Arc::clone(&self.cell),
+            stats: Arc::clone(&self.stats),
+        }
+    }
+
+    /// Force-fill the singleton cache (the `warm` wire op). Returns the
+    /// vector length and whether the cache was already warm.
+    pub fn warm(&self, threads: usize) -> (usize, bool) {
+        let was_warm = self.cell.is_warm();
+        let p = self.problem();
+        let f = p.global();
+        let ids: Vec<usize> = (0..f.ground_size()).collect();
+        let n = f.singleton_gains(&ids, threads).len();
+        (n, was_warm)
+    }
+}
+
+/// The registry: name → warm dataset entry. Shared (`Arc<WarmState>`)
+/// between the accept loop, every connection thread, and the CLI.
+#[derive(Default)]
+pub struct WarmState {
+    entries: Mutex<BTreeMap<String, Arc<Entry>>>,
+    cache_stats: Arc<CacheStats>,
+}
+
+impl WarmState {
+    pub fn new() -> WarmState {
+        WarmState::default()
+    }
+
+    /// Register a static dataset: the full corpus is visible immediately
+    /// and `advance` is rejected.
+    pub fn register(&self, name: &str, data: Arc<Dataset>) {
+        let entry = Entry {
+            backing: Arc::clone(&data),
+            source: None,
+            state: Mutex::new(EntryState {
+                order: data.ids(),
+                version: 0,
+                current: data,
+                cell: SingletonCell::new(),
+            }),
+        };
+        self.entries.lock().unwrap().insert(name.to_string(), Arc::new(entry));
+    }
+
+    /// Register a streaming dataset: `source` yields backing-row ids in
+    /// arrival order (e.g. a [`crate::stream::DriftSource`] for covariate
+    /// drift); the first `initial` elements become visible now and
+    /// [`WarmState::advance`] pulls more later. Returns the visible count.
+    pub fn register_streaming(
+        &self,
+        name: &str,
+        backing: Arc<Dataset>,
+        mut source: Box<dyn StreamSource + Send>,
+        initial: usize,
+    ) -> Result<usize, String> {
+        let mut order = Vec::new();
+        drain_into(&mut order, source.as_mut(), initial)?;
+        if order.is_empty() {
+            return Err(format!("dataset {name:?}: source yielded no initial elements"));
+        }
+        let current = materialize(&backing, &order);
+        let live = order.len();
+        let entry = Entry {
+            backing,
+            source: Some(Mutex::new(source)),
+            state: Mutex::new(EntryState {
+                order,
+                version: 0,
+                current,
+                cell: SingletonCell::new(),
+            }),
+        };
+        self.entries.lock().unwrap().insert(name.to_string(), Arc::new(entry));
+        Ok(live)
+    }
+
+    /// Pull up to `count` more elements from a streaming dataset's source
+    /// into the visible window. Bumps the version and retires the singleton
+    /// cache (snapshots in flight keep theirs). Returns
+    /// `(elements actually added, new live count, new version)` — added may
+    /// be short when the source is exhausted.
+    pub fn advance(&self, name: &str, count: usize) -> Result<(usize, usize, u64), String> {
+        let entry = self.get(name).ok_or_else(|| format!("unknown dataset {name:?}"))?;
+        let Some(source) = &entry.source else {
+            return Err(format!("dataset {name:?} is static (no attached stream source)"));
+        };
+        let mut source = source.lock().unwrap();
+        let mut fresh = Vec::new();
+        drain_into(&mut fresh, source.as_mut(), count)?;
+        let mut st = entry.state.lock().unwrap();
+        if fresh.is_empty() {
+            // exhausted source: report current shape, no version churn
+            return Ok((0, st.order.len(), st.version));
+        }
+        st.order.extend_from_slice(&fresh);
+        st.current = materialize(&entry.backing, &st.order);
+        st.version += 1;
+        st.cell = SingletonCell::new();
+        Ok((fresh.len(), st.order.len(), st.version))
+    }
+
+    /// Consistent view of a dataset for one query.
+    pub fn snapshot(&self, name: &str) -> Option<WarmSnapshot> {
+        let entry = self.get(name)?;
+        let st = entry.state.lock().unwrap();
+        Some(WarmSnapshot {
+            name: name.to_string(),
+            version: st.version,
+            data: Arc::clone(&st.current),
+            cell: Arc::clone(&st.cell),
+            stats: Arc::clone(&self.cache_stats),
+        })
+    }
+
+    pub fn list(&self) -> Vec<DatasetInfo> {
+        let entries = self.entries.lock().unwrap();
+        entries
+            .iter()
+            .map(|(name, e)| {
+                let st = e.state.lock().unwrap();
+                DatasetInfo {
+                    name: name.clone(),
+                    n: st.current.n,
+                    d: st.current.d,
+                    version: st.version,
+                    streaming: e.source.is_some(),
+                    warm: st.cell.is_warm(),
+                }
+            })
+            .collect()
+    }
+
+    /// `(hits, misses)` of the singleton caches, across all datasets and
+    /// versions (the stats surface).
+    pub fn cache_counts(&self) -> (u64, u64) {
+        (
+            self.cache_stats.hits.load(Ordering::Relaxed),
+            self.cache_stats.misses.load(Ordering::Relaxed),
+        )
+    }
+
+    fn get(&self, name: &str) -> Option<Arc<Entry>> {
+        self.entries.lock().unwrap().get(name).cloned()
+    }
+}
+
+fn drain_into(
+    order: &mut Vec<usize>,
+    source: &mut dyn StreamSource,
+    count: usize,
+) -> Result<(), String> {
+    while order.len() < count {
+        let batch = source.next_batch(count - order.len());
+        if batch.is_empty() {
+            if let Some(err) = source.error() {
+                return Err(format!("stream source failed: {err}"));
+            }
+            break; // exhausted
+        }
+        order.extend(batch);
+    }
+    Ok(())
+}
+
+/// Materialize the visible view. Reuses the backing Arc when the order is
+/// the full identity (the static-registration fast path) instead of
+/// copying the corpus.
+fn materialize(backing: &Arc<Dataset>, order: &[usize]) -> Arc<Dataset> {
+    let identity = order.len() == backing.n && order.iter().enumerate().all(|(i, &e)| i == e);
+    if identity {
+        Arc::clone(backing)
+    } else {
+        Arc::new(backing.subset(order))
+    }
+}
+
+/// The problem a served query runs against: exemplar clustering over the
+/// snapshot's data, with the snapshot's singleton cache spliced into the
+/// **global** objective. Local/merge objectives are forwarded uncached
+/// (their windows vary per shard / per random subset).
+pub struct WarmProblem {
+    inner: FacilityProblem,
+    cell: Arc<SingletonCell>,
+    stats: Arc<CacheStats>,
+}
+
+impl Problem for WarmProblem {
+    fn ground(&self) -> Vec<usize> {
+        self.inner.ground()
+    }
+
+    fn global(&self) -> Box<dyn SubmodularFn + '_> {
+        Box::new(CachedSingletonFn {
+            inner: self.inner.global(),
+            cell: Arc::clone(&self.cell),
+            stats: Arc::clone(&self.stats),
+        })
+    }
+
+    fn local(&self, shard: &[usize], rng: &mut Rng) -> Box<dyn SubmodularFn + '_> {
+        self.inner.local(shard, rng)
+    }
+
+    fn merge(&self, m: usize, rng: &mut Rng) -> Box<dyn SubmodularFn + '_> {
+        self.inner.merge(m, rng)
+    }
+
+    fn has_local_mode(&self) -> bool {
+        self.inner.has_local_mode()
+    }
+}
+
+/// Forwarding wrapper that answers [`SubmodularFn::singleton_gains`] from
+/// the warm full-ground cache. Exactness argument: a singleton gain is
+/// priced on a fresh empty state, so `f({e})` is a pure function of `e` —
+/// independent of which other candidates share the batch (the engine's
+/// invariance harness pins `singleton_gains == per-element fresh gains`
+/// bit-wise) and of the thread count (the engine's core contract). Indexing
+/// a full-ground vector therefore returns the identical bits a cold batched
+/// call would.
+struct CachedSingletonFn<'a> {
+    inner: Box<dyn SubmodularFn + 'a>,
+    cell: Arc<SingletonCell>,
+    stats: Arc<CacheStats>,
+}
+
+impl<'a> SubmodularFn for CachedSingletonFn<'a> {
+    fn state(&self) -> Box<dyn crate::objective::State + '_> {
+        self.inner.state()
+    }
+
+    fn eval(&self, s: &[usize]) -> f64 {
+        self.inner.eval(s)
+    }
+
+    fn singleton_gains(&self, es: &[usize], threads: usize) -> Vec<f64> {
+        let cached = self.cell.get_or_fill(&self.stats, || {
+            let all: Vec<usize> = (0..self.inner.ground_size()).collect();
+            self.inner.singleton_gains(&all, threads)
+        });
+        es.iter().map(|&e| cached[e]).collect()
+    }
+
+    fn is_monotone(&self) -> bool {
+        self.inner.is_monotone()
+    }
+
+    fn ground_size(&self) -> usize {
+        self.inner.ground_size()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{gaussian_blobs, SynthConfig};
+    use crate::stream::{DriftSource, StreamOrder, VecSource};
+
+    fn data(n: usize, seed: u64) -> Arc<Dataset> {
+        Arc::new(gaussian_blobs(&SynthConfig::tiny_images(n, 6), seed))
+    }
+
+    #[test]
+    fn static_registration_shares_backing_arc() {
+        let ws = WarmState::new();
+        let ds = data(50, 1);
+        ws.register("main", Arc::clone(&ds));
+        let snap = ws.snapshot("main").unwrap();
+        assert!(Arc::ptr_eq(&snap.data, &ds), "identity view must not copy the corpus");
+        assert_eq!(snap.version, 0);
+        assert!(ws.snapshot("other").is_none());
+        assert!(ws.advance("main", 5).is_err(), "static dataset rejects advance");
+    }
+
+    #[test]
+    fn cached_singletons_bit_identical_to_cold() {
+        let ws = WarmState::new();
+        ws.register("main", data(80, 2));
+        let snap = ws.snapshot("main").unwrap();
+        let cold = FacilityProblem::new(&snap.data);
+        let es: Vec<usize> = vec![3, 77, 10, 41];
+        let want = cold.global().singleton_gains(&es, 2);
+        let p = snap.problem();
+        let f = p.global();
+        let first = f.singleton_gains(&es, 2); // fills the cache
+        let second = f.singleton_gains(&es, 1); // cache hit, different threads
+        for i in 0..es.len() {
+            assert_eq!(first[i].to_bits(), want[i].to_bits(), "fill mismatch at {i}");
+            assert_eq!(second[i].to_bits(), want[i].to_bits(), "hit mismatch at {i}");
+        }
+        let (hits, misses) = ws.cache_counts();
+        assert_eq!((hits, misses), (1, 1));
+        assert!(snap.cell.is_warm());
+    }
+
+    #[test]
+    fn warm_op_prefills() {
+        let ws = WarmState::new();
+        ws.register("main", data(40, 3));
+        let snap = ws.snapshot("main").unwrap();
+        let (n, was_warm) = snap.warm(2);
+        assert_eq!(n, 40);
+        assert!(!was_warm);
+        let (_, was_warm) = snap.warm(2);
+        assert!(was_warm, "second warm must find the cache filled");
+        assert!(ws.list()[0].warm);
+    }
+
+    #[test]
+    fn streaming_advance_versions_and_invalidates() {
+        let ws = WarmState::new();
+        let backing = data(60, 4);
+        let src = VecSource::shuffled(backing.ids(), 9);
+        ws.register_streaming("live", Arc::clone(&backing), Box::new(src), 20).unwrap();
+        let s0 = ws.snapshot("live").unwrap();
+        assert_eq!(s0.data.n, 20);
+        s0.warm(1);
+        assert!(s0.cell.is_warm());
+
+        let (added, live, version) = ws.advance("live", 15).unwrap();
+        assert_eq!((added, live, version), (15, 35, 1));
+        let s1 = ws.snapshot("live").unwrap();
+        assert_eq!(s1.data.n, 35);
+        assert_eq!(s1.version, 1);
+        assert!(!s1.cell.is_warm(), "mutation must retire the singleton cache");
+        assert!(s0.cell.is_warm(), "in-flight snapshot keeps its own cache");
+        // rows: the first 20 of the new view are the old view exactly
+        for i in 0..20 {
+            assert_eq!(s0.data.row(i), s1.data.row(i), "prefix stability at {i}");
+        }
+
+        // drain past the end: short add, then a no-op
+        let (added, live, v) = ws.advance("live", 1000).unwrap();
+        assert_eq!((added, live, v), (25, 60, 2));
+        let (added, live, v) = ws.advance("live", 10).unwrap();
+        assert_eq!((added, live, v), (0, 60, 2), "exhausted source: no version churn");
+    }
+
+    #[test]
+    fn drift_source_orders_the_window() {
+        let ws = WarmState::new();
+        let backing = data(30, 5);
+        let src = DriftSource::new(&backing, backing.ids(), StreamOrder::Drift);
+        ws.register_streaming("drift", Arc::clone(&backing), Box::new(src), 30).unwrap();
+        let snap = ws.snapshot("drift").unwrap();
+        for i in 1..snap.data.n {
+            assert!(
+                (snap.data.row(i - 1)[0] as f64) <= (snap.data.row(i)[0] as f64) + 1e-6,
+                "drift view must ascend along axis 0"
+            );
+        }
+    }
+
+    #[test]
+    fn register_streaming_rejects_empty_source() {
+        let ws = WarmState::new();
+        let backing = data(10, 6);
+        let err = ws
+            .register_streaming("x", backing, Box::new(VecSource::new(vec![])), 5)
+            .unwrap_err();
+        assert!(err.contains("no initial elements"), "{err}");
+    }
+
+    #[test]
+    fn listing_reports_shape() {
+        let ws = WarmState::new();
+        ws.register("a", data(12, 7));
+        let backing = data(40, 8);
+        let src = VecSource::new(backing.ids());
+        ws.register_streaming("b", backing, Box::new(src), 16).unwrap();
+        let infos = ws.list();
+        assert_eq!(infos.len(), 2);
+        assert_eq!((infos[0].name.as_str(), infos[0].n, infos[0].streaming), ("a", 12, false));
+        assert_eq!((infos[1].name.as_str(), infos[1].n, infos[1].streaming), ("b", 16, true));
+    }
+}

@@ -1,0 +1,698 @@
+//! Wire schema for the selection service: versioned newline-delimited JSON
+//! requests and replies over one TCP stream, built entirely on
+//! [`util::json`](crate::util::json) (parse + the deterministic writer).
+//!
+//! ## Framing
+//!
+//! One request per line, one reply per line, in order. The writer never
+//! emits interior newlines (control characters are escaped), so a frame is
+//! exactly one `\n`-terminated line.
+//!
+//! ## Requests
+//!
+//! Every request is an object with `"v"` (protocol version, currently 1),
+//! `"op"`, and an optional `"id"` the server echoes back verbatim so
+//! clients can pipeline:
+//!
+//! ```json
+//! {"v":1,"op":"ping","id":7}
+//! {"v":1,"op":"stats"}
+//! {"v":1,"op":"datasets"}
+//! {"v":1,"op":"warm","dataset":"default"}
+//! {"v":1,"op":"advance","dataset":"default","count":128}
+//! {"v":1,"op":"query","protocol":"greedi","dataset":"default",
+//!  "spec":{"m":8,"k":20,"seed":42,"algorithm":"lazy"}}
+//! {"v":1,"op":"shutdown"}
+//! ```
+//!
+//! The `"spec"` object mirrors [`RunSpec`] field-for-field (`m` and `k`
+//! required; `kappa`, `alpha`, `fanout`, `delta`, `epsilon`, `batch`,
+//! `local_eval`, `algorithm`, `threads`, `partition`, `seed` optional, with
+//! the builder's defaults). Unknown spec keys are rejected — same
+//! strictness as the TOML config, so clients cannot silently drift.
+//!
+//! ## Replies
+//!
+//! ```json
+//! {"v":1,"ok":true,"id":7,"result":{...}}
+//! {"v":1,"ok":false,"id":7,"error":{"kind":"overloaded","msg":"..."}}
+//! ```
+//!
+//! Error kinds are a closed enum ([`ErrorKind`]) so clients can switch on
+//! them: `bad_request`, `unknown_protocol`, `unknown_dataset`,
+//! `overloaded` (admission shed — retry later), `shutting_down`,
+//! `internal`.
+
+use std::collections::BTreeMap;
+
+use crate::algorithms;
+use crate::coordinator::metrics::RunMetrics;
+use crate::coordinator::protocol::{self, PartitionStrategy, RunSpec};
+use crate::util::json::{self, Json};
+
+/// Wire protocol version. Bump on breaking schema changes; the server
+/// rejects mismatched versions with `bad_request` naming both versions.
+pub const WIRE_VERSION: u64 = 1;
+
+/// Typed error category carried in every error reply.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorKind {
+    /// Malformed JSON, missing/invalid fields, or a version mismatch.
+    BadRequest,
+    /// `protocol` not in `protocol::by_name`.
+    UnknownProtocol,
+    /// `dataset` not in the warm registry.
+    UnknownDataset,
+    /// Admission control shed the query (queue full) — retry later.
+    Overloaded,
+    /// Server is draining; no new work accepted.
+    ShuttingDown,
+    /// Unexpected server-side failure.
+    Internal,
+}
+
+impl ErrorKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            ErrorKind::BadRequest => "bad_request",
+            ErrorKind::UnknownProtocol => "unknown_protocol",
+            ErrorKind::UnknownDataset => "unknown_dataset",
+            ErrorKind::Overloaded => "overloaded",
+            ErrorKind::ShuttingDown => "shutting_down",
+            ErrorKind::Internal => "internal",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ErrorKind> {
+        Some(match s {
+            "bad_request" => ErrorKind::BadRequest,
+            "unknown_protocol" => ErrorKind::UnknownProtocol,
+            "unknown_dataset" => ErrorKind::UnknownDataset,
+            "overloaded" => ErrorKind::Overloaded,
+            "shutting_down" => ErrorKind::ShuttingDown,
+            "internal" => ErrorKind::Internal,
+            _ => return None,
+        })
+    }
+}
+
+/// A structured wire error: closed kind + human message.
+#[derive(Debug, Clone)]
+pub struct WireError {
+    pub kind: ErrorKind,
+    pub msg: String,
+}
+
+impl WireError {
+    pub fn new(kind: ErrorKind, msg: impl Into<String>) -> WireError {
+        WireError { kind, msg: msg.into() }
+    }
+
+    pub fn bad(msg: impl Into<String>) -> WireError {
+        WireError::new(ErrorKind::BadRequest, msg)
+    }
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}: {}", self.kind.label(), self.msg)
+    }
+}
+
+/// A parsed request.
+#[derive(Debug)]
+pub enum Request {
+    Ping,
+    Stats,
+    Datasets,
+    /// Pre-compute the warm singleton cache for a dataset.
+    Warm { dataset: Option<String> },
+    /// Advance a streaming dataset by `count` elements (drift mutation).
+    Advance { dataset: Option<String>, count: usize },
+    Query(Box<QueryRequest>),
+    Shutdown,
+}
+
+/// One selection query: which protocol, over which warm dataset, under
+/// which [`RunSpec`].
+#[derive(Debug)]
+pub struct QueryRequest {
+    pub dataset: Option<String>,
+    pub protocol: String,
+    pub spec: RunSpec,
+}
+
+/// Parse one request line. The `id` (first tuple slot) is recovered even
+/// when the request itself is invalid, so error replies can still be
+/// correlated; it is `None` when the line is not parseable JSON at all.
+pub fn parse_request(line: &str) -> (Option<Json>, Result<Request, WireError>) {
+    let doc = match json::parse(line) {
+        Ok(v) => v,
+        Err(e) => return (None, Err(WireError::bad(format!("invalid json: {e}")))),
+    };
+    let id = doc.get("id").cloned();
+    (id, parse_request_doc(&doc))
+}
+
+fn parse_request_doc(doc: &Json) -> Result<Request, WireError> {
+    let Json::Obj(_) = doc else {
+        return Err(WireError::bad("request must be a json object"));
+    };
+    match doc.get("v").and_then(|v| v.as_u64()) {
+        Some(WIRE_VERSION) => {}
+        Some(v) => {
+            return Err(WireError::bad(format!(
+                "unsupported wire version {v} (server speaks {WIRE_VERSION})"
+            )))
+        }
+        None => return Err(WireError::bad("missing version field \"v\"")),
+    }
+    let op = doc
+        .get("op")
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| WireError::bad("missing op"))?;
+    let dataset = |d: &Json| d.get("dataset").and_then(|v| v.as_str()).map(String::from);
+    match op {
+        "ping" => Ok(Request::Ping),
+        "stats" => Ok(Request::Stats),
+        "datasets" => Ok(Request::Datasets),
+        "shutdown" => Ok(Request::Shutdown),
+        "warm" => Ok(Request::Warm { dataset: dataset(doc) }),
+        "advance" => {
+            let count = doc
+                .get("count")
+                .and_then(|v| v.as_usize())
+                .ok_or_else(|| WireError::bad("advance: missing/invalid count"))?;
+            Ok(Request::Advance { dataset: dataset(doc), count })
+        }
+        "query" => {
+            let protocol_name = doc
+                .get("protocol")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| WireError::bad("query: missing protocol"))?
+                .to_string();
+            if protocol::by_name(&protocol_name).is_none() {
+                return Err(WireError::new(
+                    ErrorKind::UnknownProtocol,
+                    format!(
+                        "unknown protocol {protocol_name:?} — known: {}",
+                        protocol::NAMES.join(", ")
+                    ),
+                ));
+            }
+            let spec_doc = doc
+                .get("spec")
+                .ok_or_else(|| WireError::bad("query: missing spec"))?;
+            let spec = spec_from_json(spec_doc)?;
+            Ok(Request::Query(Box::new(QueryRequest {
+                dataset: dataset(doc),
+                protocol: protocol_name,
+                spec,
+            })))
+        }
+        other => Err(WireError::bad(format!("unknown op {other:?}"))),
+    }
+}
+
+/// Decode a wire `spec` object into a [`RunSpec`]. Strict: `m`/`k`
+/// required, every optional field validated with the same predicates the
+/// builder asserts (so a bad spec is a typed reply, never a server panic),
+/// unknown keys rejected.
+pub fn spec_from_json(v: &Json) -> Result<RunSpec, WireError> {
+    let Json::Obj(map) = v else {
+        return Err(WireError::bad("spec must be a json object"));
+    };
+    let field = |k: &str| map.get(k);
+    let m = field("m")
+        .and_then(|v| v.as_usize())
+        .ok_or_else(|| WireError::bad("spec: missing/invalid m"))?;
+    let k = field("k")
+        .and_then(|v| v.as_usize())
+        .filter(|&k| k >= 1)
+        .ok_or_else(|| WireError::bad("spec: missing/invalid k (need k >= 1)"))?;
+    let mut spec = RunSpec::new(m, k);
+    for (key, val) in map {
+        match key.as_str() {
+            "m" | "k" => {}
+            "kappa" => {
+                spec.kappa = val
+                    .as_usize()
+                    .filter(|&x| x >= 1)
+                    .ok_or_else(|| WireError::bad("spec: kappa must be an integer >= 1"))?;
+            }
+            "alpha" => {
+                let a = val
+                    .as_f64()
+                    .filter(|&a| a > 0.0)
+                    .ok_or_else(|| WireError::bad("spec: alpha must be a positive number"))?;
+                if map.contains_key("kappa") {
+                    return Err(WireError::bad("spec: give kappa or alpha, not both"));
+                }
+                spec = spec.alpha(a);
+            }
+            "fanout" => {
+                spec.fanout = val
+                    .as_usize()
+                    .filter(|&x| x >= 2)
+                    .ok_or_else(|| WireError::bad("spec: fanout must be an integer >= 2"))?;
+            }
+            "delta" => {
+                spec.delta = val
+                    .as_f64()
+                    .filter(|&x| x >= 0.0)
+                    .ok_or_else(|| WireError::bad("spec: delta must be >= 0"))?;
+            }
+            "epsilon" => {
+                spec.epsilon = val
+                    .as_f64()
+                    .filter(|&x| x > 0.0 && x < 1.0)
+                    .ok_or_else(|| WireError::bad("spec: epsilon must be in (0, 1)"))?;
+            }
+            "batch" => {
+                spec.batch = val
+                    .as_usize()
+                    .filter(|&x| x >= 1)
+                    .ok_or_else(|| WireError::bad("spec: batch must be an integer >= 1"))?;
+            }
+            "local_eval" => {
+                spec.local_eval = val
+                    .as_bool()
+                    .ok_or_else(|| WireError::bad("spec: local_eval must be a bool"))?;
+            }
+            "algorithm" => {
+                let name = val
+                    .as_str()
+                    .ok_or_else(|| WireError::bad("spec: algorithm must be a string"))?;
+                if algorithms::by_name(name).is_none() {
+                    return Err(WireError::bad(format!("spec: unknown algorithm {name:?}")));
+                }
+                spec.algorithm = name.to_string();
+            }
+            "threads" => {
+                spec.threads = val
+                    .as_usize()
+                    .filter(|&x| x >= 1)
+                    .ok_or_else(|| WireError::bad("spec: threads must be an integer >= 1"))?;
+            }
+            "partition" => {
+                let s = val
+                    .as_str()
+                    .ok_or_else(|| WireError::bad("spec: partition must be a string"))?;
+                spec.partition = PartitionStrategy::parse(s).ok_or_else(|| {
+                    WireError::bad(format!(
+                        "spec: unknown partition {s:?} (random|balanced|contiguous)"
+                    ))
+                })?;
+            }
+            "seed" => {
+                spec.seed = val
+                    .as_u64()
+                    .ok_or_else(|| WireError::bad("spec: seed must be a non-negative integer"))?;
+            }
+            other => {
+                return Err(WireError::bad(format!("spec: unknown key {other:?}")));
+            }
+        }
+    }
+    Ok(spec)
+}
+
+/// Encode a [`RunSpec`] as the wire `spec` object (the client half of
+/// [`spec_from_json`]; per-round constraint overrides are not expressible
+/// on the wire and are dropped).
+pub fn spec_to_json(spec: &RunSpec) -> Json {
+    Json::obj([
+        ("m", Json::num(spec.m as f64)),
+        ("k", Json::num(spec.k as f64)),
+        ("kappa", Json::num(spec.kappa as f64)),
+        ("fanout", Json::num(spec.fanout as f64)),
+        ("delta", Json::num(spec.delta)),
+        ("epsilon", Json::num(spec.epsilon)),
+        ("batch", Json::num(spec.batch as f64)),
+        ("local_eval", Json::Bool(spec.local_eval)),
+        ("algorithm", Json::str(spec.algorithm.clone())),
+        ("threads", Json::num(spec.threads as f64)),
+        ("partition", Json::str(spec.partition.label())),
+        ("seed", Json::num(spec.seed as f64)),
+    ])
+}
+
+fn request_shell(op: &str, id: u64) -> BTreeMap<String, Json> {
+    let mut m = BTreeMap::new();
+    m.insert("v".to_string(), Json::num(WIRE_VERSION as f64));
+    m.insert("op".to_string(), Json::str(op));
+    m.insert("id".to_string(), Json::num(id as f64));
+    m
+}
+
+/// Client-side: one argument-free request line (`ping`, `stats`, …).
+pub fn simple_line(op: &str, id: u64) -> String {
+    Json::Obj(request_shell(op, id)).dump()
+}
+
+/// Client-side: one `query` request line.
+pub fn query_line(protocol_name: &str, dataset: Option<&str>, spec: &RunSpec, id: u64) -> String {
+    let mut m = request_shell("query", id);
+    m.insert("protocol".to_string(), Json::str(protocol_name));
+    if let Some(d) = dataset {
+        m.insert("dataset".to_string(), Json::str(d));
+    }
+    m.insert("spec".to_string(), spec_to_json(spec));
+    Json::Obj(m).dump()
+}
+
+/// Client-side: one `warm` request line (pre-fill singleton cache).
+pub fn warm_line(dataset: Option<&str>, id: u64) -> String {
+    let mut m = request_shell("warm", id);
+    if let Some(d) = dataset {
+        m.insert("dataset".to_string(), Json::str(d));
+    }
+    Json::Obj(m).dump()
+}
+
+/// Client-side: one `advance` request line (drift mutation).
+pub fn advance_line(dataset: Option<&str>, count: usize, id: u64) -> String {
+    let mut m = request_shell("advance", id);
+    if let Some(d) = dataset {
+        m.insert("dataset".to_string(), Json::str(d));
+    }
+    m.insert("count".to_string(), Json::num(count as f64));
+    Json::Obj(m).dump()
+}
+
+/// Server-side: success reply line.
+pub fn ok_line(id: Option<&Json>, result: Json) -> String {
+    let mut m = BTreeMap::new();
+    m.insert("v".to_string(), Json::num(WIRE_VERSION as f64));
+    m.insert("ok".to_string(), Json::Bool(true));
+    if let Some(id) = id {
+        m.insert("id".to_string(), id.clone());
+    }
+    m.insert("result".to_string(), result);
+    Json::Obj(m).dump()
+}
+
+/// Server-side: error reply line.
+pub fn err_line(id: Option<&Json>, e: &WireError) -> String {
+    let mut m = BTreeMap::new();
+    m.insert("v".to_string(), Json::num(WIRE_VERSION as f64));
+    m.insert("ok".to_string(), Json::Bool(false));
+    if let Some(id) = id {
+        m.insert("id".to_string(), id.clone());
+    }
+    m.insert(
+        "error".to_string(),
+        Json::obj([("kind", Json::str(e.kind.label())), ("msg", Json::str(e.msg.clone()))]),
+    );
+    Json::Obj(m).dump()
+}
+
+/// Server-side: the `result` object of a finished query.
+pub fn query_result_json(
+    run: &RunMetrics,
+    dataset: &str,
+    dataset_version: u64,
+    threads_used: usize,
+    queued_us: f64,
+    latency_us: f64,
+) -> Json {
+    Json::obj([
+        ("protocol", Json::str(run.name.clone())),
+        (
+            "solution",
+            Json::Arr(run.solution.iter().map(|&e| Json::num(e as f64)).collect()),
+        ),
+        ("value", Json::num(run.value)),
+        ("oracle_calls", Json::num(run.oracle_calls as f64)),
+        ("rounds", Json::num(run.rounds as f64)),
+        ("dataset", Json::str(dataset)),
+        ("dataset_version", Json::num(dataset_version as f64)),
+        ("threads_used", Json::num(threads_used as f64)),
+        ("queued_us", Json::num(queued_us)),
+        ("latency_us", Json::num(latency_us)),
+    ])
+}
+
+/// Client-side decoded query reply.
+#[derive(Debug, Clone)]
+pub struct QueryReply {
+    pub protocol: String,
+    pub solution: Vec<usize>,
+    pub value: f64,
+    pub oracle_calls: u64,
+    pub rounds: usize,
+    pub dataset: String,
+    pub dataset_version: u64,
+    pub threads_used: usize,
+    pub queued_us: f64,
+    pub latency_us: f64,
+}
+
+impl QueryReply {
+    pub fn from_json(result: &Json) -> Result<QueryReply, WireError> {
+        let get = |k: &str| {
+            result
+                .get(k)
+                .ok_or_else(|| WireError::bad(format!("query result: missing {k}")))
+        };
+        Ok(QueryReply {
+            protocol: get("protocol")?
+                .as_str()
+                .ok_or_else(|| WireError::bad("query result: protocol"))?
+                .to_string(),
+            solution: get("solution")?
+                .as_usize_arr()
+                .ok_or_else(|| WireError::bad("query result: solution"))?,
+            value: get("value")?
+                .as_f64()
+                .ok_or_else(|| WireError::bad("query result: value"))?,
+            oracle_calls: get("oracle_calls")?
+                .as_u64()
+                .ok_or_else(|| WireError::bad("query result: oracle_calls"))?,
+            rounds: get("rounds")?
+                .as_usize()
+                .ok_or_else(|| WireError::bad("query result: rounds"))?,
+            dataset: get("dataset")?
+                .as_str()
+                .ok_or_else(|| WireError::bad("query result: dataset"))?
+                .to_string(),
+            dataset_version: get("dataset_version")?
+                .as_u64()
+                .ok_or_else(|| WireError::bad("query result: dataset_version"))?,
+            threads_used: get("threads_used")?
+                .as_usize()
+                .ok_or_else(|| WireError::bad("query result: threads_used"))?,
+            queued_us: get("queued_us")?
+                .as_f64()
+                .ok_or_else(|| WireError::bad("query result: queued_us"))?,
+            latency_us: get("latency_us")?
+                .as_f64()
+                .ok_or_else(|| WireError::bad("query result: latency_us"))?,
+        })
+    }
+}
+
+/// Client-side: decode one reply line into `Ok(result)` or the server's
+/// typed error. A malformed reply is surfaced as `bad_request`.
+pub fn parse_reply(line: &str) -> Result<Json, WireError> {
+    let doc =
+        json::parse(line).map_err(|e| WireError::bad(format!("invalid reply json: {e}")))?;
+    match doc.get("ok").and_then(|v| v.as_bool()) {
+        Some(true) => doc
+            .get("result")
+            .cloned()
+            .ok_or_else(|| WireError::bad("reply: missing result")),
+        Some(false) => {
+            let err = doc.get("error");
+            let kind = err
+                .and_then(|e| e.get("kind"))
+                .and_then(|k| k.as_str())
+                .and_then(ErrorKind::parse)
+                .unwrap_or(ErrorKind::Internal);
+            let msg = err
+                .and_then(|e| e.get("msg"))
+                .and_then(|m| m.as_str())
+                .unwrap_or("<no message>")
+                .to_string();
+            Err(WireError::new(kind, msg))
+        }
+        None => Err(WireError::bad("reply: missing ok field")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_round_trips_through_wire_json() {
+        let spec = RunSpec::new(8, 20)
+            .kappa(30)
+            .fanout(4)
+            .delta(0.25)
+            .epsilon(0.2)
+            .batch(64)
+            .local()
+            .algorithm("greedy")
+            .threads(6)
+            .partition(PartitionStrategy::Contiguous)
+            .seed(1234);
+        let back = spec_from_json(&spec_to_json(&spec)).unwrap();
+        assert_eq!(back.m, spec.m);
+        assert_eq!(back.k, spec.k);
+        assert_eq!(back.kappa, spec.kappa);
+        assert_eq!(back.fanout, spec.fanout);
+        assert_eq!(back.delta.to_bits(), spec.delta.to_bits());
+        assert_eq!(back.epsilon.to_bits(), spec.epsilon.to_bits());
+        assert_eq!(back.batch, spec.batch);
+        assert_eq!(back.local_eval, spec.local_eval);
+        assert_eq!(back.algorithm, spec.algorithm);
+        assert_eq!(back.threads, spec.threads);
+        assert_eq!(back.partition, spec.partition);
+        assert_eq!(back.seed, spec.seed);
+    }
+
+    #[test]
+    fn query_line_parses_back() {
+        let spec = RunSpec::new(4, 6).seed(9);
+        let line = query_line("greedi", Some("main"), &spec, 3);
+        let (id, req) = parse_request(&line);
+        assert_eq!(id.unwrap().as_u64(), Some(3));
+        match req.unwrap() {
+            Request::Query(q) => {
+                assert_eq!(q.protocol, "greedi");
+                assert_eq!(q.dataset.as_deref(), Some("main"));
+                assert_eq!((q.spec.m, q.spec.k, q.spec.seed), (4, 6, 9));
+            }
+            other => panic!("expected query, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn simple_ops_parse() {
+        for (op, want) in [
+            ("ping", "Ping"),
+            ("stats", "Stats"),
+            ("datasets", "Datasets"),
+            ("shutdown", "Shutdown"),
+        ] {
+            let (_, req) = parse_request(&simple_line(op, 0));
+            assert!(format!("{:?}", req.unwrap()).starts_with(want), "{op}");
+        }
+        let (_, req) = parse_request(&advance_line(Some("d"), 7, 1));
+        match req.unwrap() {
+            Request::Advance { dataset, count } => {
+                assert_eq!(dataset.as_deref(), Some("d"));
+                assert_eq!(count, 7);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn version_mismatch_rejected_with_id() {
+        let (id, req) = parse_request(r#"{"v":99,"op":"ping","id":5}"#);
+        assert_eq!(id.unwrap().as_u64(), Some(5), "id recoverable from bad request");
+        let err = req.unwrap_err();
+        assert_eq!(err.kind, ErrorKind::BadRequest);
+        assert!(err.msg.contains("99"), "{}", err.msg);
+        let (_, req) = parse_request(r#"{"op":"ping"}"#);
+        assert!(req.unwrap_err().msg.contains("version"));
+    }
+
+    #[test]
+    fn malformed_and_unknown_rejected() {
+        assert!(parse_request("not json").1.is_err());
+        assert!(parse_request(r#"{"v":1,"op":"fly"}"#).1.is_err());
+        assert!(parse_request(r#"{"v":1}"#).1.is_err());
+        let (_, req) = parse_request(r#"{"v":1,"op":"query","protocol":"warp","spec":{"m":1,"k":1}}"#);
+        assert_eq!(req.unwrap_err().kind, ErrorKind::UnknownProtocol);
+    }
+
+    #[test]
+    fn spec_validation_paths() {
+        let bad = [
+            (r#"{"k":5}"#, "m"),
+            (r#"{"m":2}"#, "k"),
+            (r#"{"m":2,"k":0}"#, "k"),
+            (r#"{"m":2,"k":5,"epsilon":1.5}"#, "epsilon"),
+            (r#"{"m":2,"k":5,"epsilon":0}"#, "epsilon"),
+            (r#"{"m":2,"k":5,"delta":-1}"#, "delta"),
+            (r#"{"m":2,"k":5,"fanout":1}"#, "fanout"),
+            (r#"{"m":2,"k":5,"batch":0}"#, "batch"),
+            (r#"{"m":2,"k":5,"threads":0}"#, "threads"),
+            (r#"{"m":2,"k":5,"algorithm":"quantum"}"#, "algorithm"),
+            (r#"{"m":2,"k":5,"partition":"psychic"}"#, "partition"),
+            (r#"{"m":2,"k":5,"seed":-1}"#, "seed"),
+            (r#"{"m":2,"k":5,"kappa":2,"alpha":1.5}"#, "not both"),
+            (r#"{"m":2,"k":5,"warp":9}"#, "unknown key"),
+        ];
+        for (text, needle) in bad {
+            let err = spec_from_json(&json::parse(text).unwrap())
+                .expect_err(&format!("{text} must be rejected"));
+            assert_eq!(err.kind, ErrorKind::BadRequest, "{text}");
+            assert!(err.msg.contains(needle), "{text}: {}", err.msg);
+        }
+        // minimal spec accepted, defaults applied
+        let spec = spec_from_json(&json::parse(r#"{"m":3,"k":7}"#).unwrap()).unwrap();
+        assert_eq!((spec.m, spec.k, spec.kappa), (3, 7, 7));
+        assert_eq!(spec.algorithm, "lazy");
+        // alpha alone works
+        let spec = spec_from_json(&json::parse(r#"{"m":3,"k":10,"alpha":2}"#).unwrap()).unwrap();
+        assert_eq!(spec.kappa, 20);
+    }
+
+    #[test]
+    fn reply_lines_round_trip() {
+        let ok = ok_line(Some(&Json::num(4.0)), Json::obj([("x", Json::num(1.0))]));
+        let result = parse_reply(&ok).unwrap();
+        assert_eq!(result.get("x").and_then(|v| v.as_f64()), Some(1.0));
+
+        let err = err_line(None, &WireError::new(ErrorKind::Overloaded, "queue full"));
+        let e = parse_reply(&err).unwrap_err();
+        assert_eq!(e.kind, ErrorKind::Overloaded);
+        assert_eq!(e.msg, "queue full");
+
+        assert!(parse_reply("garbage").is_err());
+        assert!(parse_reply("{}").is_err());
+    }
+
+    #[test]
+    fn query_result_round_trips_value_bits() {
+        let run = RunMetrics {
+            name: "greedi".into(),
+            solution: vec![5, 17, 2],
+            value: 0.1234567890123456789,
+            oracle_calls: 991,
+            rounds: 2,
+            ..Default::default()
+        };
+        let line = ok_line(None, query_result_json(&run, "main", 3, 2, 12.5, 887.25));
+        let reply = QueryReply::from_json(&parse_reply(&line).unwrap()).unwrap();
+        assert_eq!(reply.solution, run.solution);
+        assert_eq!(
+            reply.value.to_bits(),
+            run.value.to_bits(),
+            "f64 must survive the wire bit-for-bit"
+        );
+        assert_eq!(reply.oracle_calls, 991);
+        assert_eq!(reply.rounds, 2);
+        assert_eq!(reply.dataset_version, 3);
+        assert_eq!(reply.threads_used, 2);
+    }
+
+    #[test]
+    fn error_kinds_round_trip() {
+        for k in [
+            ErrorKind::BadRequest,
+            ErrorKind::UnknownProtocol,
+            ErrorKind::UnknownDataset,
+            ErrorKind::Overloaded,
+            ErrorKind::ShuttingDown,
+            ErrorKind::Internal,
+        ] {
+            assert_eq!(ErrorKind::parse(k.label()), Some(k));
+        }
+        assert_eq!(ErrorKind::parse("nope"), None);
+    }
+}

@@ -1,7 +1,23 @@
-//! Minimal JSON parser for the AOT artifact manifest (no `serde` in the
-//! offline closure). Full JSON value model — objects, arrays, strings with
-//! escapes, numbers, booleans, null — with line/column error reporting.
-//! Parsing only; the crate never needs to emit JSON.
+//! Minimal JSON parser **and writer** (no `serde` in the offline closure).
+//! Full JSON value model — objects, arrays, strings with escapes, numbers,
+//! booleans, null — with byte-offset error reporting on the parse side and
+//! a deterministic compact serializer ([`write`] / [`Json::dump`]) on the
+//! write side. Originally parse-only (the AOT artifact manifest); the
+//! `serve::wire` NDJSON protocol made emission a first-class need, and the
+//! bench/metrics JSON trails now share the same writer instead of
+//! hand-formatting.
+//!
+//! ## Writer determinism contract
+//!
+//! * Objects serialize in `BTreeMap` key order — the same document always
+//!   produces the same bytes.
+//! * Numbers use Rust's shortest-round-trip `Display` for `f64` (never
+//!   scientific notation), so `parse(write(v)) == v` **bit-for-bit** for
+//!   every finite value, across runs and platforms. Non-finite values
+//!   (NaN/±inf) have no JSON spelling and serialize as `null`.
+//! * Output is a single line (no interior newlines even in strings —
+//!   control characters are `\u` escaped), which is what makes it safe as
+//!   one newline-delimited frame on the wire.
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -60,6 +76,119 @@ impl Json {
     pub fn as_usize_arr(&self) -> Option<Vec<usize>> {
         self.as_arr()?.iter().map(|v| v.as_usize()).collect()
     }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        self.as_f64().and_then(|x| {
+            if x >= 0.0 && x.fract() == 0.0 && x <= u64::MAX as f64 {
+                Some(x as u64)
+            } else {
+                None
+            }
+        })
+    }
+
+    /// Shorthand string constructor.
+    pub fn str(s: impl Into<String>) -> Json {
+        Json::Str(s.into())
+    }
+
+    /// Shorthand number constructor (accepts anything convertible to f64).
+    pub fn num(x: impl Into<f64>) -> Json {
+        Json::Num(x.into())
+    }
+
+    /// Build an object from `(key, value)` pairs.
+    pub fn obj(pairs: impl IntoIterator<Item = (impl Into<String>, Json)>) -> Json {
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.into(), v)).collect())
+    }
+
+    /// Serialize to compact single-line JSON (see the module docs for the
+    /// determinism contract). Alias of [`write`].
+    pub fn dump(&self) -> String {
+        write(self)
+    }
+}
+
+/// Serialize a [`Json`] value to compact single-line JSON. Deterministic:
+/// object keys in `BTreeMap` order, shortest-round-trip number formatting,
+/// control characters escaped so the output never contains a newline.
+pub fn write(v: &Json) -> String {
+    let mut out = String::new();
+    write_into(v, &mut out);
+    out
+}
+
+fn write_into(v: &Json, out: &mut String) {
+    match v {
+        Json::Null => out.push_str("null"),
+        Json::Bool(true) => out.push_str("true"),
+        Json::Bool(false) => out.push_str("false"),
+        Json::Num(x) => write_num(*x, out),
+        Json::Str(s) => write_str(s, out),
+        Json::Arr(xs) => {
+            out.push('[');
+            for (i, x) in xs.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                write_into(x, out);
+            }
+            out.push(']');
+        }
+        Json::Obj(m) => {
+            out.push('{');
+            for (i, (k, x)) in m.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                write_str(k, out);
+                out.push(':');
+                write_into(x, out);
+            }
+            out.push('}');
+        }
+    }
+}
+
+/// f64 → JSON number. Rust's `Display` for f64 is the shortest decimal
+/// string that round-trips to the identical bits (and never uses scientific
+/// notation), which is exactly the stability the bench trails and the wire
+/// protocol need: `parse(write(x)) == x` bit-for-bit for finite `x`, and
+/// the same `x` formats identically on every run/platform. NaN and ±inf
+/// have no JSON representation and degrade to `null`.
+fn write_num(x: f64, out: &mut String) {
+    if x.is_finite() {
+        out.push_str(&x.to_string());
+    } else {
+        out.push_str("null");
+    }
+}
+
+fn write_str(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            // Non-ASCII passes through as raw UTF-8 (legal JSON; the parser
+            // decodes it back losslessly).
+            c => out.push(c),
+        }
+    }
+    out.push('"');
 }
 
 /// Parse error with byte offset.
@@ -185,7 +314,26 @@ impl<'a> Parser<'a> {
                     }
                     _ => return self.err("bad escape"),
                 },
-                Some(c) => out.push(c as char),
+                Some(c) if c < 0x80 => out.push(c as char),
+                Some(c) => {
+                    // Multi-byte UTF-8 sequence: the input began life as a
+                    // &str, so the bytes are valid — decode the full scalar
+                    // instead of mangling each byte into a Latin-1 char.
+                    let start = self.pos - 1;
+                    let len = match c {
+                        b if b >= 0xf0 => 4,
+                        b if b >= 0xe0 => 3,
+                        _ => 2,
+                    };
+                    let end = (start + len).min(self.bytes.len());
+                    match std::str::from_utf8(&self.bytes[start..end]) {
+                        Ok(s) => {
+                            out.push_str(s);
+                            self.pos = end;
+                        }
+                        Err(_) => return self.err("invalid utf-8 in string"),
+                    }
+                }
             }
         }
     }
@@ -308,5 +456,141 @@ mod tests {
     fn as_usize_rejects_fraction_and_negative() {
         assert_eq!(parse("1.5").unwrap().as_usize(), None);
         assert_eq!(parse("-3").unwrap().as_usize(), None);
+    }
+
+    // ---- writer -----------------------------------------------------------
+
+    /// parse(write(v)) must reproduce v exactly (the wire-protocol
+    /// round-trip the serve subsystem depends on).
+    fn assert_round_trips(v: &Json) {
+        let text = write(v);
+        let back = parse(&text).unwrap_or_else(|e| panic!("write produced unparseable {text:?}: {e}"));
+        assert_eq!(&back, v, "round trip changed value (text {text:?})");
+        // and writing the re-parsed value must be byte-stable
+        assert_eq!(write(&back), text, "write not idempotent");
+    }
+
+    #[test]
+    fn write_scalars() {
+        assert_eq!(write(&Json::Null), "null");
+        assert_eq!(write(&Json::Bool(true)), "true");
+        assert_eq!(write(&Json::Num(3.0)), "3");
+        assert_eq!(write(&Json::Num(-1.5)), "-1.5");
+        assert_eq!(write(&Json::str("hi")), "\"hi\"");
+    }
+
+    #[test]
+    fn write_containers_compact_and_ordered() {
+        let v = Json::obj([
+            ("b", Json::num(2)),
+            ("a", Json::Arr(vec![Json::num(1), Json::Null])),
+        ]);
+        // BTreeMap order: "a" before "b" regardless of insertion order
+        assert_eq!(write(&v), r#"{"a":[1,null],"b":2}"#);
+        assert_round_trips(&v);
+    }
+
+    #[test]
+    fn write_escapes_round_trip() {
+        for s in [
+            "plain",
+            "quote\"backslash\\slash/",
+            "newline\ntab\tcr\r",
+            "ctrl\u{1}\u{1f}",
+            "unicode λ λλ — ünïcødé 日本語",
+            "",
+        ] {
+            assert_round_trips(&Json::str(s));
+        }
+        // escaped output stays single-line (NDJSON framing requirement)
+        assert!(!write(&Json::str("a\nb")).contains('\n'));
+    }
+
+    #[test]
+    fn write_numbers_bit_exact_round_trip() {
+        for x in [
+            0.0f64,
+            -0.0,
+            1.0,
+            -1.0,
+            0.1,
+            1.0 / 3.0,
+            6.02214076e23,
+            1e-12,
+            f64::MAX,
+            f64::MIN_POSITIVE,
+            123456789.123456789,
+            (u64::MAX as f64),
+        ] {
+            let text = write(&Json::Num(x));
+            let back = parse(&text).unwrap().as_f64().unwrap();
+            assert_eq!(back.to_bits(), x.to_bits(), "{x:e} -> {text} -> {back:e}");
+        }
+    }
+
+    #[test]
+    fn write_nonfinite_degrades_to_null() {
+        assert_eq!(write(&Json::Num(f64::NAN)), "null");
+        assert_eq!(write(&Json::Num(f64::INFINITY)), "null");
+        assert_eq!(write(&Json::Num(f64::NEG_INFINITY)), "null");
+    }
+
+    #[test]
+    fn deep_structure_round_trips() {
+        let v = Json::obj([
+            ("solution", Json::Arr((0..20).map(|i| Json::num(i as f64)).collect())),
+            ("value", Json::num(123.456789012345)),
+            (
+                "nested",
+                Json::obj([
+                    ("label", Json::str("greedi \"v1\"\n")),
+                    ("flags", Json::Arr(vec![Json::Bool(false), Json::Null])),
+                ]),
+            ),
+        ]);
+        assert_round_trips(&v);
+    }
+
+    /// Seeded pseudo-random documents: the property-test style sweep for the
+    /// parse↔write contract (deterministic, no external prop-test crate).
+    #[test]
+    fn random_documents_round_trip() {
+        let mut rng = crate::util::rng::Rng::new(0xC0FFEE);
+        for _ in 0..200 {
+            let v = random_json(&mut rng, 3);
+            assert_round_trips(&v);
+        }
+    }
+
+    fn random_json(rng: &mut crate::util::rng::Rng, depth: usize) -> Json {
+        let choice = rng.below(if depth == 0 { 4 } else { 6 });
+        match choice {
+            0 => Json::Null,
+            1 => Json::Bool(rng.below(2) == 0),
+            2 => {
+                // mix of integral, fractional, large and tiny magnitudes
+                let mag = [1.0, 1e-6, 1e6, 1e12][rng.below(4)];
+                let sign = if rng.below(2) == 0 { 1.0 } else { -1.0 };
+                Json::Num(sign * mag * (rng.below(1_000_000) as f64) / 997.0)
+            }
+            3 => {
+                let alphabet = ['a', 'Z', '0', '"', '\\', '\n', '\t', 'λ', '素', ' '];
+                let len = rng.below(12);
+                Json::Str((0..len).map(|_| alphabet[rng.below(alphabet.len())]).collect())
+            }
+            4 => Json::Arr((0..rng.below(5)).map(|_| random_json(rng, depth - 1)).collect()),
+            _ => Json::obj(
+                (0..rng.below(5))
+                    .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
+                    .collect::<Vec<_>>(),
+            ),
+        }
+    }
+
+    #[test]
+    fn parser_decodes_raw_utf8() {
+        // multi-byte chars arrive as raw UTF-8 on the wire; the parser must
+        // decode them losslessly (it used to mangle bytes into Latin-1)
+        assert_eq!(parse("\"λ 日本\"").unwrap().as_str(), Some("λ 日本"));
     }
 }

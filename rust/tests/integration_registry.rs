@@ -1,0 +1,61 @@
+//! Registry-completeness: the protocol registry, the CLI `protocols`
+//! sweep, bench coverage and the serving layer must agree on the protocol
+//! list, so the next protocol added to `protocol::NAMES` cannot silently
+//! miss a surface (the way `stream_greedi` nearly missed the bench sweep).
+//!
+//! Surfaces that *iterate the registry* are checked structurally (their
+//! source must loop over `protocol::NAMES`, not spell out a stale list);
+//! runtime agreement is checked by driving `by_name` itself.
+
+use greedi::coordinator::protocol;
+
+#[test]
+fn names_are_unique_and_roundtrip_through_by_name() {
+    let mut seen = std::collections::BTreeSet::new();
+    for name in protocol::NAMES {
+        assert!(seen.insert(name), "duplicate registry entry {name:?}");
+        let proto = protocol::by_name(name)
+            .unwrap_or_else(|| panic!("NAMES entry {name:?} missing from by_name"));
+        assert_eq!(proto.name(), name, "registry id must round-trip");
+    }
+    assert!(seen.contains("centralized"), "the reference baseline must stay registered");
+    assert!(protocol::by_name("no_such_protocol").is_none());
+}
+
+#[test]
+fn cli_protocols_sweep_iterates_the_registry() {
+    let src = include_str!("../src/main.rs");
+    assert!(
+        src.contains("for name in protocol::NAMES"),
+        "the `protocols` subcommand must sweep protocol::NAMES, not a hand-kept list"
+    );
+}
+
+#[test]
+fn bench_sweep_iterates_the_registry() {
+    let src = include_str!("../benches/bench_protocols.rs");
+    assert!(
+        src.contains("for name in protocol::NAMES"),
+        "bench_protocols must sweep protocol::NAMES so new protocols are benched for free"
+    );
+}
+
+#[test]
+fn serve_dispatch_is_registry_driven() {
+    // the daemon resolves protocols through by_name and advertises the
+    // registry on `ping` — no protocol list of its own to go stale
+    let src = include_str!("../src/serve/server.rs");
+    assert!(src.contains("protocol::by_name(&q.protocol)"), "serve must dispatch via by_name");
+    assert!(src.contains("protocol::NAMES"), "ping must advertise the registry");
+}
+
+#[test]
+fn config_accepts_every_registered_protocol() {
+    use greedi::config::ExperimentConfig;
+    for name in protocol::NAMES {
+        let toml = format!("protocol = \"{name}\"");
+        ExperimentConfig::from_toml(&toml)
+            .unwrap_or_else(|e| panic!("config must accept registered protocol {name:?}: {e}"));
+    }
+    assert!(ExperimentConfig::from_toml("protocol = \"bogus\"").is_err());
+}

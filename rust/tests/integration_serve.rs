@@ -1,0 +1,308 @@
+//! End-to-end guarantees of the always-on selection service:
+//!
+//! 1. a served query is **bit-identical** (solution + value) to a direct
+//!    `protocol::by_name(..).run(..)` with the same `RunSpec` and seed —
+//!    for batch and streaming protocols, cold and warm caches alike;
+//! 2. ≥ 8 concurrent clients all get that same bit-identical answer while
+//!    admission control keeps peak in-flight ≤ the concurrency cap and
+//!    every query's `threads_used` at the oracle_threads split of the
+//!    budget (never oversubscribing the pool);
+//! 3. overload is shed as a typed `overloaded` error (driven
+//!    deterministically by holding an admission permit from the test);
+//! 4. bad requests come back as typed errors, never dropped connections;
+//! 5. the `stats` reply carries p50/p99 latency and qps;
+//! 6. dataset drift through `advance` bumps the version and keeps serving
+//!    answers bit-identical to a direct run on the equivalent prefix.
+
+use std::sync::Arc;
+
+use greedi::coordinator::protocol::{self, Protocol, RunSpec};
+use greedi::coordinator::FacilityProblem;
+use greedi::data::synth::{gaussian_blobs, SynthConfig};
+use greedi::data::Dataset;
+use greedi::serve::{Admission, Client, ErrorKind, ServeMetrics, ServeSpec, Server, WarmState};
+use greedi::stream::{DriftSource, StreamOrder, StreamSource};
+
+fn dataset(n: usize, seed: u64) -> Arc<Dataset> {
+    Arc::new(gaussian_blobs(&SynthConfig::tiny_images(n, 8), seed))
+}
+
+fn spec_for(addr: &str, threads: usize, max_concurrency: usize, queue_depth: usize) -> ServeSpec {
+    let mut s = ServeSpec::default();
+    s.addr = addr.to_string();
+    s.threads = threads;
+    s.max_concurrency = max_concurrency;
+    s.queue_depth = queue_depth;
+    s.dataset = "demo".to_string();
+    s
+}
+
+fn start_static(n: usize, threads: usize, conc: usize, queue: usize) -> (Server, Arc<Dataset>) {
+    let data = dataset(n, 42);
+    let state = Arc::new(WarmState::new());
+    state.register("demo", Arc::clone(&data));
+    let server = Server::start(&spec_for("127.0.0.1:0", threads, conc, queue), state).unwrap();
+    (server, data)
+}
+
+#[test]
+fn served_query_bit_identical_to_direct_run() {
+    let (server, data) = start_static(400, 4, 2, 8);
+    let mut client = Client::connect(server.addr()).unwrap();
+    let problem = FacilityProblem::new(&data);
+
+    for proto in ["greedi", "stream_greedi", "greedy_max", "centralized"] {
+        let spec = RunSpec::new(5, 8).seed(7);
+        let direct = protocol::by_name(proto).unwrap().run(&problem, &spec);
+        let served = client.query(proto, None, &spec).unwrap_or_else(|e| {
+            panic!("served {proto}: {e}");
+        });
+        assert_eq!(served.solution, direct.solution, "{proto}: solution drifted");
+        assert_eq!(
+            served.value.to_bits(),
+            direct.value.to_bits(),
+            "{proto}: value not bit-identical ({} vs {})",
+            served.value,
+            direct.value
+        );
+        assert_eq!(served.oracle_calls, direct.oracle_calls, "{proto}");
+        assert_eq!(served.rounds, direct.rounds, "{proto}");
+        assert_eq!(served.protocol, direct.name, "{proto}");
+    }
+}
+
+#[test]
+fn warm_singleton_cache_keeps_answers_bit_identical() {
+    let (server, data) = start_static(400, 4, 2, 8);
+    let mut client = Client::connect(server.addr()).unwrap();
+    let spec = RunSpec::new(4, 6).seed(11);
+    let direct =
+        protocol::by_name("stream_greedi").unwrap().run(&FacilityProblem::new(&data), &spec);
+
+    // cold, then warm (second query answers singleton pricing from cache)
+    let cold = client.query("stream_greedi", None, &spec).unwrap();
+    let warm = client.query("stream_greedi", None, &spec).unwrap();
+    for (label, reply) in [("cold", &cold), ("warm", &warm)] {
+        assert_eq!(reply.solution, direct.solution, "{label} solution");
+        assert_eq!(reply.value.to_bits(), direct.value.to_bits(), "{label} value");
+    }
+
+    // the stats surface proves the cache was actually exercised
+    let stats = client.stats().unwrap();
+    let cache = stats.get("cache").unwrap();
+    let hits = cache.get("singleton_hits").and_then(|v| v.as_u64()).unwrap();
+    let misses = cache.get("singleton_misses").and_then(|v| v.as_u64()).unwrap();
+    assert!(misses >= 1, "first query must fill the cache (misses={misses})");
+    assert!(hits >= 1, "second query must hit the cache (hits={hits})");
+}
+
+#[test]
+fn eight_concurrent_clients_admitted_without_oversubscription() {
+    const CLIENTS: usize = 8;
+    const THREADS: usize = 8;
+    const CONC: usize = 2;
+    let (server, data) = start_static(300, THREADS, CONC, CLIENTS);
+    let spec = RunSpec::new(4, 6).seed(3);
+    let direct = protocol::by_name("greedi").unwrap().run(&FacilityProblem::new(&data), &spec);
+    let addr = server.addr();
+
+    let workers: Vec<_> = (0..CLIENTS)
+        .map(|_| {
+            let spec = spec.clone();
+            std::thread::spawn(move || {
+                let mut c = Client::connect(addr).unwrap();
+                c.query("greedi", None, &spec)
+            })
+        })
+        .collect();
+    let replies: Vec<_> =
+        workers.into_iter().map(|w| w.join().unwrap().expect("query under load")).collect();
+
+    let per_query = THREADS / CONC;
+    for (i, r) in replies.iter().enumerate() {
+        assert_eq!(r.solution, direct.solution, "client {i}: solution drifted under load");
+        assert_eq!(r.value.to_bits(), direct.value.to_bits(), "client {i}");
+        assert_eq!(
+            r.threads_used, per_query,
+            "client {i}: admission must narrow each query to budget/slots threads"
+        );
+    }
+
+    let mut c = Client::connect(addr).unwrap();
+    let stats = c.stats().unwrap();
+    let adm = stats.get("admission").unwrap();
+    let get = |k: &str| adm.get(k).and_then(|v| v.as_u64()).unwrap();
+    assert_eq!(get("admitted"), CLIENTS as u64);
+    assert_eq!(get("shed"), 0, "queue depth {CLIENTS} must absorb all waiters");
+    assert!(
+        get("peak_in_flight") <= CONC as u64,
+        "oversubscribed: peak {} > cap {CONC}",
+        get("peak_in_flight")
+    );
+    assert_eq!(get("in_flight"), 0);
+    let completed =
+        stats.get("latency").and_then(|l| l.get("completed")).and_then(|v| v.as_u64()).unwrap();
+    assert_eq!(completed, CLIENTS as u64);
+}
+
+#[test]
+fn overload_is_shed_as_typed_error() {
+    // with_parts + a permit held by the test makes the shed deterministic:
+    // max_concurrency 1 is occupied, queue_depth 0 means no waiting.
+    let data = dataset(200, 42);
+    let state = Arc::new(WarmState::new());
+    state.register("demo", Arc::clone(&data));
+    let spec = spec_for("127.0.0.1:0", 4, 1, 0);
+    let admission = Admission::new(spec.threads, spec.max_concurrency, spec.queue_depth);
+    let metrics = Arc::new(ServeMetrics::new(spec.ring));
+    let server =
+        Server::with_parts(&spec, state, admission.clone(), Arc::clone(&metrics)).unwrap();
+    let mut client = Client::connect(server.addr()).unwrap();
+    let qspec = RunSpec::new(3, 5).seed(1);
+
+    let held = admission.admit().unwrap();
+    let err = client.query("greedi", None, &qspec).unwrap_err();
+    assert_eq!(err.kind, ErrorKind::Overloaded, "{err}");
+    drop(held);
+
+    let reply = client.query("greedi", None, &qspec).expect("slot freed");
+    let direct =
+        protocol::by_name("greedi").unwrap().run(&FacilityProblem::new(&data), &qspec);
+    assert_eq!(reply.value.to_bits(), direct.value.to_bits());
+    assert_eq!(metrics.snapshot().errors, 1, "the shed must be counted");
+    assert_eq!(admission.stats().shed, 1);
+}
+
+#[test]
+fn bad_requests_get_typed_errors_not_dropped_connections() {
+    let (server, _data) = start_static(150, 2, 1, 4);
+    let mut client = Client::connect(server.addr()).unwrap();
+    let spec = RunSpec::new(3, 5).seed(1);
+
+    let err = client.query("definitely_not_a_protocol", None, &spec).unwrap_err();
+    assert_eq!(err.kind, ErrorKind::UnknownProtocol);
+    assert!(err.msg.contains("greedi"), "error should list known protocols: {}", err.msg);
+
+    let err = client.query("greedi", Some("no_such_dataset"), &spec).unwrap_err();
+    assert_eq!(err.kind, ErrorKind::UnknownDataset);
+
+    let err = client.advance(None, 10).unwrap_err();
+    assert_eq!(err.kind, ErrorKind::BadRequest, "advance on a static dataset: {err}");
+
+    // raw garbage on the same wire protocol — connection must survive
+    {
+        use std::io::{BufRead, BufReader, Write};
+        let mut raw = std::net::TcpStream::connect(server.addr()).unwrap();
+        raw.write_all(b"this is not json\n{\"v\":99,\"op\":\"ping\",\"id\":1}\n").unwrap();
+        let mut reader = BufReader::new(raw.try_clone().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("bad_request"), "garbage line: {line}");
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        assert!(
+            line.contains("bad_request") && line.contains("version"),
+            "version mismatch must be typed: {line}"
+        );
+    }
+
+    // after all that, the connection and server still answer real queries
+    let reply = client.query("greedi", None, &spec).unwrap();
+    assert!(!reply.solution.is_empty());
+}
+
+#[test]
+fn stats_reply_reports_percentiles_and_qps() {
+    let (server, _data) = start_static(200, 2, 2, 8);
+    let mut client = Client::connect(server.addr()).unwrap();
+    let spec = RunSpec::new(3, 4).seed(5);
+    for _ in 0..4 {
+        client.query("greedy_max", None, &spec).unwrap();
+    }
+    let stats = client.stats().unwrap();
+    let lat = stats.get("latency").unwrap();
+    assert_eq!(lat.get("completed").and_then(|v| v.as_u64()), Some(4));
+    let qps = lat.get("qps").and_then(|v| v.as_f64()).unwrap();
+    assert!(qps > 0.0 && qps.is_finite(), "qps={qps}");
+    let window = lat.get("latency").unwrap();
+    let p50 = window.get("p50_us").and_then(|v| v.as_f64()).unwrap();
+    let p99 = window.get("p99_us").and_then(|v| v.as_f64()).unwrap();
+    assert!(p50 > 0.0 && p50.is_finite());
+    assert!(p99 >= p50, "p99={p99} < p50={p50}");
+    assert!(stats.get("uptime_s").and_then(|v| v.as_f64()).unwrap() >= 0.0);
+    // ping lists the whole protocol registry for discoverability
+    let pong = client.ping().unwrap();
+    let protos = pong.get("protocols").and_then(|v| v.as_arr()).unwrap();
+    assert_eq!(protos.len(), protocol::NAMES.len());
+}
+
+#[test]
+fn drift_advance_versions_dataset_and_stays_bit_identical() {
+    let n = 240;
+    let initial = 120;
+    let step = 60;
+    let backing = dataset(n, 9);
+
+    // the server's streaming view: drift order, half visible at boot
+    let state = Arc::new(WarmState::new());
+    let src = DriftSource::new(&backing, backing.ids(), StreamOrder::Drift);
+    state.register_streaming("demo", Arc::clone(&backing), Box::new(src), initial).unwrap();
+    let server = Server::start(&spec_for("127.0.0.1:0", 4, 2, 8), state).unwrap();
+    let mut client = Client::connect(server.addr()).unwrap();
+
+    // the reference: the same deterministic order, materialized directly
+    let mut order_src = DriftSource::new(&backing, backing.ids(), StreamOrder::Drift);
+    let order = order_src.next_batch(n);
+    assert_eq!(order.len(), n);
+    let spec = RunSpec::new(4, 6).seed(2);
+    let direct_at = |live: usize| {
+        let view = Arc::new(backing.subset(&order[..live]));
+        protocol::by_name("greedi").unwrap().run(&FacilityProblem::new(&view), &spec)
+    };
+
+    let before = client.query("greedi", None, &spec).unwrap();
+    let d0 = direct_at(initial);
+    assert_eq!(before.solution, d0.solution);
+    assert_eq!(before.value.to_bits(), d0.value.to_bits());
+    assert_eq!(before.dataset_version, 0);
+
+    let adv = client.advance(None, step).unwrap();
+    assert_eq!(adv.get("added").and_then(|v| v.as_usize()), Some(step));
+    assert_eq!(adv.get("live").and_then(|v| v.as_usize()), Some(initial + step));
+    assert_eq!(adv.get("version").and_then(|v| v.as_u64()), Some(1));
+
+    let after = client.query("greedi", None, &spec).unwrap();
+    let d1 = direct_at(initial + step);
+    assert_eq!(after.solution, d1.solution, "post-drift solution must match direct prefix run");
+    assert_eq!(after.value.to_bits(), d1.value.to_bits());
+    assert_eq!(after.dataset_version, 1);
+
+    let listing = client.datasets().unwrap();
+    let rows = listing.get("datasets").and_then(|v| v.as_arr()).unwrap();
+    assert_eq!(rows.len(), 1);
+    assert_eq!(rows[0].get("version").and_then(|v| v.as_u64()), Some(1));
+    assert_eq!(rows[0].get("streaming").and_then(|v| v.as_bool()), Some(true));
+    assert_eq!(rows[0].get("n").and_then(|v| v.as_usize()), Some(initial + step));
+}
+
+#[test]
+fn warm_op_prefills_and_shutdown_stops_the_daemon() {
+    let (mut server, _data) = start_static(150, 2, 1, 4);
+    let mut client = Client::connect(server.addr()).unwrap();
+
+    let w = client.warm(None).unwrap();
+    assert_eq!(w.get("was_warm").and_then(|v| v.as_bool()), Some(false));
+    assert_eq!(w.get("n").and_then(|v| v.as_usize()), Some(150));
+    let w2 = client.warm(None).unwrap();
+    assert_eq!(w2.get("was_warm").and_then(|v| v.as_bool()), Some(true));
+
+    let bye = client.shutdown().unwrap();
+    assert_eq!(bye.get("op").and_then(|v| v.as_str()), Some("shutdown"));
+    // the accept loop must actually exit — join() would hang forever if not
+    server.join();
+    let err = client.query("greedi", None, &RunSpec::new(3, 5)).unwrap_err();
+    assert!(
+        matches!(err.kind, ErrorKind::Internal | ErrorKind::ShuttingDown),
+        "post-shutdown query must fail, got: {err}"
+    );
+}
