@@ -7,7 +7,7 @@
 
 use std::sync::Arc;
 
-use greedi::coordinator::protocol::{self, Protocol, RunSpec};
+use greedi::coordinator::protocol::{self, FaultPlan, Protocol, RecoveryPolicy, RunSpec};
 use greedi::coordinator::FacilityProblem;
 use greedi::data::synth::{gaussian_blobs, SynthConfig};
 use greedi::util::bench::{black_box, Bencher};
@@ -47,6 +47,39 @@ fn main() {
             )
         });
     }
+
+    // ---- fault-tolerance overhead: retries, replication, crash recovery ----
+    let spec_retry = spec.clone().faults(FaultPlan::new(0.2, 8, 1));
+    b.bench("protocol: greedi (retry, fail_p=0.2)", || {
+        black_box(
+            protocol::by_name("greedi")
+                .expect("registry")
+                .run(&problem, &spec_retry)
+                .value,
+        )
+    });
+    let spec_c2 = spec.clone().multiplicity(2);
+    b.bench("protocol: greedi (c=2 replication)", || {
+        black_box(
+            protocol::by_name("greedi")
+                .expect("registry")
+                .run(&problem, &spec_c2)
+                .value,
+        )
+    });
+    let spec_recover = spec
+        .clone()
+        .multiplicity(2)
+        .recovery(RecoveryPolicy::SurvivorMerge)
+        .faults(FaultPlan::none().crash_tasks(vec![0]));
+    b.bench("protocol: greedi (c=2, crash + survivor-merge)", || {
+        black_box(
+            protocol::by_name("greedi")
+                .expect("registry")
+                .run(&problem, &spec_recover)
+                .value,
+        )
+    });
 
     println!("\n== values under the shared spec ==");
     let central = values

@@ -7,7 +7,7 @@
 
 use std::path::Path;
 
-pub use crate::coordinator::protocol::{PartitionStrategy, RunSpec};
+pub use crate::coordinator::protocol::{PartitionStrategy, RecoveryPolicy, RunSpec};
 use crate::coordinator::protocol;
 use crate::util::toml;
 
@@ -76,6 +76,10 @@ pub struct ExperimentConfig {
     pub algorithm: String,
     /// Ground-set partitioning strategy.
     pub partition: PartitionStrategy,
+    /// Replication multiplicity c ≥ 1 (every element on c distinct machines).
+    pub multiplicity: usize,
+    /// Crash-recovery policy for the map stages.
+    pub recovery: RecoveryPolicy,
     /// OS threads for the simulated cluster.
     pub threads: usize,
     /// Stream batch size (`protocol = "stream_greedi"`; output-invariant).
@@ -102,6 +106,8 @@ impl Default for ExperimentConfig {
             local_eval: false,
             algorithm: "lazy".into(),
             partition: PartitionStrategy::Random,
+            multiplicity: 1,
+            recovery: RecoveryPolicy::Retry,
             threads: 1,
             batch: 256,
             epsilon: 0.5,
@@ -153,6 +159,14 @@ impl ExperimentConfig {
                     cfg.partition = PartitionStrategy::parse(s)
                         .ok_or_else(|| format!("unknown partition strategy {s}"))?;
                 }
+                "multiplicity" => {
+                    cfg.multiplicity = value.as_usize().ok_or("multiplicity: int")?
+                }
+                "recovery" => {
+                    let s = value.as_str().ok_or("recovery: string")?;
+                    cfg.recovery = RecoveryPolicy::parse(s)
+                        .ok_or_else(|| format!("unknown recovery policy {s}"))?;
+                }
                 "threads" => cfg.threads = value.as_usize().ok_or("threads: int")?,
                 "batch" => cfg.batch = value.as_usize().ok_or("batch: int")?,
                 "epsilon" => cfg.epsilon = value.as_f64().ok_or("epsilon: float")?,
@@ -191,6 +205,9 @@ impl ExperimentConfig {
         if self.threads == 0 {
             return Err("threads must be > 0".into());
         }
+        if self.multiplicity == 0 {
+            return Err("multiplicity must be >= 1".into());
+        }
         if self.batch == 0 {
             return Err("batch must be > 0".into());
         }
@@ -209,6 +226,8 @@ impl ExperimentConfig {
         let mut spec = RunSpec::new(m, k)
             .algorithm(&self.algorithm)
             .partition(self.partition)
+            .multiplicity(self.multiplicity)
+            .recovery(self.recovery)
             .threads(self.threads)
             .batch(self.batch)
             .epsilon(self.epsilon)
@@ -327,6 +346,28 @@ mod tests {
         assert!(ExperimentConfig::from_toml("batch = 0").is_err());
         assert!(ExperimentConfig::from_toml("epsilon = 0.0").is_err());
         assert!(ExperimentConfig::from_toml("epsilon = 1.5").is_err());
+    }
+
+    #[test]
+    fn fault_tolerance_keys_parse_and_reach_spec() {
+        let cfg = ExperimentConfig::from_toml(
+            r#"
+            multiplicity = 2
+            recovery = "survivor_merge"
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.multiplicity, 2);
+        assert_eq!(cfg.recovery, RecoveryPolicy::SurvivorMerge);
+        let spec = cfg.run_spec(5, 10);
+        assert_eq!(spec.multiplicity, 2);
+        assert_eq!(spec.recovery, RecoveryPolicy::SurvivorMerge);
+    }
+
+    #[test]
+    fn bad_fault_tolerance_keys_rejected() {
+        assert!(ExperimentConfig::from_toml("multiplicity = 0").is_err());
+        assert!(ExperimentConfig::from_toml(r#"recovery = "pray""#).is_err());
     }
 
     #[test]

@@ -188,6 +188,7 @@ impl Protocol for Baseline {
             job,
             rounds: 2,
             stream: None,
+            fault: None,
         }
     }
 }

@@ -18,12 +18,13 @@
 //! All parameters come from the shared [`RunSpec`]; `Greedi` itself is a
 //! stateless unit struct registered as `"greedi"` in `protocol::by_name`.
 
-use super::metrics::RunMetrics;
+use super::metrics::{FaultStats, RunMetrics};
 use super::protocol::{Protocol, RunSpec};
 use super::Problem;
 use crate::algorithms;
 use crate::constraints::cardinality::Cardinality;
 use crate::constraints::Constraint;
+use crate::mapreduce::fault::{FaultPlan, RecoveryPolicy};
 use crate::mapreduce::{JobReport, MapReduce};
 use crate::util::rng::Rng;
 
@@ -73,7 +74,10 @@ impl Greedi {
         let base_rng = Rng::new(spec.seed);
         let mut rng = base_rng.clone();
         let ground = problem.ground();
-        let shards = spec.partition.split(&ground, spec.m, &mut rng);
+        let plan = spec.fault.clone().unwrap_or_else(FaultPlan::none);
+        let policy = spec.recovery;
+        let multiplicity = spec.multiplicity.clamp(1, spec.m);
+        let shards = spec.partition.split_replicated(&ground, spec.m, multiplicity, &mut rng);
 
         let engine = MapReduce::new(spec.threads);
         let mut job = JobReport::default();
@@ -81,11 +85,15 @@ impl Greedi {
         // ---- Round 1: per-machine black box ------------------------------
         let local_eval = spec.local_eval;
         let algo_name = spec.algorithm.clone();
-        let inputs: Vec<(usize, Vec<usize>)> = shards.into_iter().enumerate().collect();
+        let inputs: Vec<(usize, Vec<usize>)> = shards.iter().cloned().enumerate().collect();
         // Leftover pool threads feed each machine's gain engine (map-stage
         // workers × oracle threads never exceeds spec.threads).
         let oracle_threads = spec.oracle_threads(inputs.len());
-        let (round1_results, stage1) = engine.run_stage(inputs, |_, (i, shard)| {
+        // One task body for round 1 AND crash recovery: recovery re-runs a
+        // machine with the SAME fork (1000 + i), so a shard rebuilt in full
+        // from survivor replicas reproduces the fault-free result bit for
+        // bit.
+        let run_machine = |i: usize, shard: Vec<usize>| {
             let mut task_rng = base_rng.fork(1000 + i as u64);
             let algo = algorithms::by_name(&algo_name).expect("algorithm");
             let obj = if local_eval {
@@ -94,14 +102,67 @@ impl Greedi {
                 problem.global()
             };
             algo.maximize_threaded(obj.as_ref(), &shard, round1, &mut task_rng, oracle_threads)
-        });
-        job.stages.push(stage1);
+        };
+        let stage1 = engine
+            .run_stage_policied(inputs, &plan, policy, |_, (i, shard)| run_machine(i, shard))
+            .unwrap_or_else(|e| {
+                panic!(
+                    "greedi round 1 aborted: {e} (policy=retry turns machine crashes into \
+                     job aborts; use drop_shard or survivor_merge to recover)"
+                )
+            });
+        let mut round1_results = stage1.outputs;
+        let crashed = stage1.crashed;
+        let straggled = stage1.straggled;
+        let mut fault_retries = stage1.retries;
+        job.stages.push(stage1.report);
 
-        let mut oracle_calls: u64 = round1_results.iter().map(|r| r.oracle_calls).sum();
+        // ---- Crash recovery ----------------------------------------------
+        let mut recovery_time = 0.0;
+        let mut dropped = 0usize;
+        if !crashed.is_empty() {
+            // Elements still held by some surviving machine.
+            let surviving: std::collections::HashSet<usize> = shards
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| !crashed.contains(i))
+                .flat_map(|(_, s)| s.iter().copied())
+                .collect();
+            dropped = ground.iter().filter(|e| !surviving.contains(e)).count();
+            if policy == RecoveryPolicy::SurvivorMerge {
+                // Rebuild each crashed shard from replicas, preserving the
+                // original within-shard order, and re-run its map task. When
+                // every element survives somewhere (multiplicity ≥ 2, few
+                // crashes) the rebuilt shard IS the lost shard, so the
+                // recovered candidate set equals the fault-free one exactly.
+                let rebuilt: Vec<(usize, Vec<usize>)> = crashed
+                    .iter()
+                    .map(|&j| {
+                        let shard: Vec<usize> =
+                            shards[j].iter().copied().filter(|e| surviving.contains(e)).collect();
+                        (j, shard)
+                    })
+                    .filter(|(_, shard)| !shard.is_empty())
+                    .collect();
+                if !rebuilt.is_empty() {
+                    let rebuilt_ids: Vec<usize> = rebuilt.iter().map(|(j, _)| *j).collect();
+                    let (recovered, rec_stage) =
+                        engine.run_stage(rebuilt, |_, (j, shard)| run_machine(j, shard));
+                    recovery_time = rec_stage.max_task_time;
+                    job.stages.push(rec_stage);
+                    for (j, r) in rebuilt_ids.into_iter().zip(recovered) {
+                        round1_results[j] = Some(r);
+                    }
+                }
+            }
+        }
 
-        // Union of round-1 candidate sets = the only shuffled data.
+        let mut oracle_calls: u64 =
+            round1_results.iter().flatten().map(|r| r.oracle_calls).sum();
+
+        // Union of surviving round-1 candidate sets = the only shuffled data.
         let mut merged: Vec<usize> = Vec::new();
-        for r in &round1_results {
+        for r in round1_results.iter().flatten() {
             merged.extend_from_slice(&r.solution);
         }
         merged.sort_unstable();
@@ -109,14 +170,19 @@ impl Greedi {
         job.record_shuffle(merged.len());
 
         // ---- Round 2: merge machine --------------------------------------
+        // Crashes model the loss of data-holding map machines; the reducer
+        // reads shuffle data held at the driver and is always re-schedulable,
+        // so the merge runs under the transient-failure plan only.
+        let merge_plan = plan.without_crashes();
         let candidates: Vec<Vec<usize>> =
-            round1_results.iter().map(|r| r.solution.clone()).collect();
+            round1_results.iter().flatten().map(|r| r.solution.clone()).collect();
         let merged_for_task = merged.clone();
         let algo_name2 = spec.algorithm.clone();
         let m = spec.m;
         // The merge round is a single reducer — it gets the whole budget.
         let merge_threads = spec.oracle_threads(1);
-        let (mut round2_out, stage2) = engine.run_stage(vec![()], |_, ()| {
+        let (mut round2_out, stage2, merge_retries) = engine
+            .run_stage_faulted(vec![()], &merge_plan, |_, ()| {
             let mut task_rng = base_rng.fork(2000);
             let obj = if local_eval {
                 problem.merge(m, &mut task_rng)
@@ -157,20 +223,38 @@ impl Greedi {
                 max_sol
             };
             (winner, extra_oracle)
-        });
+            })
+            .unwrap_or_else(|e| panic!("greedi merge aborted: {e}"));
         job.stages.push(stage2);
+        fault_retries += merge_retries;
         let (solution, extra) = round2_out.pop().unwrap();
         oracle_calls += extra;
 
         // Final reported value: always the true global objective.
         let value = problem.global().eval(&solution);
 
+        let fault = plan.active().then(|| FaultStats {
+            policy: policy.label().to_string(),
+            multiplicity,
+            retries: fault_retries,
+            crashed_machines: crashed,
+            straggled_machines: straggled,
+            dropped_elements: dropped,
+            ground_size: ground.len(),
+            recovery_time,
+        });
+
         RunMetrics {
             name: format!(
-                "greedi[m={},k={},κ={}{}]",
+                "greedi[m={},k={},κ={}{}{}]",
                 spec.m,
                 spec.k,
                 spec.kappa,
+                if multiplicity > 1 {
+                    format!(",c={multiplicity}")
+                } else {
+                    String::new()
+                },
                 if spec.local_eval { ",local" } else { "" }
             ),
             solution,
@@ -179,6 +263,7 @@ impl Greedi {
             job,
             rounds: 2,
             stream: None,
+            fault,
         }
     }
 }
@@ -227,6 +312,7 @@ pub fn centralized_threaded(
         job,
         rounds: 1,
         stream: None,
+        fault: None,
     }
 }
 
@@ -320,6 +406,23 @@ mod tests {
         let central = centralized(&p, 6, "lazy", 9);
         let run = Greedi.run(&p, &RunSpec::new(1, 6).seed(9));
         assert!((run.value - central.value).abs() < 1e-9);
+    }
+
+    #[test]
+    fn multiplicity_replication_runs_and_stays_competitive() {
+        let ds = Arc::new(gaussian_blobs(&SynthConfig::tiny_images(200, 8), 47));
+        let p = FacilityProblem::new(&ds);
+        let run = Greedi.run(&p, &RunSpec::new(4, 8).multiplicity(2).seed(5));
+        assert!(run.name.contains("c=2"), "{}", run.name);
+        assert!(run.solution.len() <= 8);
+        assert_eq!(run.job.stages.len(), 2, "no crashes => no recovery stage");
+        let base = Greedi.run(&p, &RunSpec::new(4, 8).seed(5));
+        assert!(
+            run.value >= base.value * 0.9,
+            "replication should not tank quality: {} vs {}",
+            run.value,
+            base.value
+        );
     }
 
     #[test]

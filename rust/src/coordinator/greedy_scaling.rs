@@ -170,6 +170,7 @@ fn finish(
         job,
         rounds,
         stream: None,
+        fault: None,
     }
 }
 

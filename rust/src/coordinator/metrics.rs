@@ -34,6 +34,39 @@ impl StreamStats {
     }
 }
 
+/// Fault-tolerance accounting for a run executed under an active
+/// `FaultPlan` (`None` on fault-free runs). Everything here is
+/// deterministic from (seed, plan).
+#[derive(Debug, Clone, Default)]
+pub struct FaultStats {
+    /// Recovery policy label ("retry" / "drop_shard" / "survivor_merge").
+    pub policy: String,
+    /// Replication multiplicity c the run partitioned with.
+    pub multiplicity: usize,
+    /// Failed attempts re-executed across all stages.
+    pub retries: usize,
+    /// Map machines lost for the run (task order).
+    pub crashed_machines: Vec<usize>,
+    /// Map machines whose wallclock was straggler-inflated.
+    pub straggled_machines: Vec<usize>,
+    /// Ground elements that survived on NO machine after the crashes.
+    pub dropped_elements: usize,
+    /// |V| — denominator for the surviving-coverage fraction.
+    pub ground_size: usize,
+    /// Wallclock of the survivor-merge recovery stage (0 when none ran).
+    pub recovery_time: f64,
+}
+
+impl FaultStats {
+    /// Fraction of the ground set still on some surviving machine.
+    pub fn coverage(&self) -> f64 {
+        if self.ground_size == 0 {
+            return 1.0;
+        }
+        (self.ground_size - self.dropped_elements) as f64 / self.ground_size as f64
+    }
+}
+
 /// Outcome of one distributed (or centralized) protocol run.
 #[derive(Debug, Clone, Default)]
 pub struct RunMetrics {
@@ -51,6 +84,8 @@ pub struct RunMetrics {
     pub rounds: usize,
     /// Streaming-stage memory accounting (`None` for batch protocols).
     pub stream: Option<StreamStats>,
+    /// Fault-tolerance accounting (`None` for fault-free runs).
+    pub fault: Option<FaultStats>,
 }
 
 impl RunMetrics {
@@ -81,8 +116,20 @@ impl RunMetrics {
             Some(s) => format!(" peak_live={}/{}", s.peak_live(), s.live_bound),
             None => String::new(),
         };
+        let fault = match &self.fault {
+            Some(f) => format!(
+                " fault=[{} c={} crashed={} cov={:.0}% retries={} rec={:.4}s]",
+                f.policy,
+                f.multiplicity,
+                f.crashed_machines.len(),
+                f.coverage() * 100.0,
+                f.retries,
+                f.recovery_time
+            ),
+            None => String::new(),
+        };
         format!(
-            "{:<16} f(S)={:<12.5} |S|={:<4} oracle={:<10} rounds={} simt={:.4}s comm={}{}",
+            "{:<16} f(S)={:<12.5} |S|={:<4} oracle={:<10} rounds={} simt={:.4}s comm={}{}{}",
             self.name,
             self.value,
             self.solution.len(),
@@ -90,7 +137,8 @@ impl RunMetrics {
             self.rounds,
             self.sim_time(),
             self.job.shuffled_elements,
-            stream
+            stream,
+            fault
         )
     }
 }
@@ -125,6 +173,25 @@ mod tests {
         assert!(s.contains("greedi"));
         assert!(s.contains("rounds=2"));
         assert!(!s.contains("peak_live"), "batch protocols carry no stream stats");
+        assert!(!s.contains("fault="), "fault-free runs carry no fault block");
+    }
+
+    #[test]
+    fn fault_stats_coverage_and_one_line() {
+        let f = FaultStats {
+            policy: "drop_shard".into(),
+            multiplicity: 2,
+            retries: 3,
+            crashed_machines: vec![1, 4],
+            dropped_elements: 25,
+            ground_size: 100,
+            ..Default::default()
+        };
+        assert!((f.coverage() - 0.75).abs() < 1e-12);
+        assert!((FaultStats::default().coverage() - 1.0).abs() < 1e-12, "empty ground = full coverage");
+        let m = RunMetrics { name: "greedi".into(), fault: Some(f), ..Default::default() };
+        let line = m.one_line();
+        assert!(line.contains("fault=[drop_shard c=2 crashed=2 cov=75%"), "{line}");
     }
 
     #[test]

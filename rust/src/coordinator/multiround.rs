@@ -18,12 +18,13 @@
 //! local/global mode, partition, threads and seed from the shared
 //! [`RunSpec`].
 
-use super::metrics::RunMetrics;
+use super::metrics::{FaultStats, RunMetrics};
 use super::protocol::{Protocol, RunSpec};
 use super::Problem;
 use crate::algorithms;
 use crate::constraints::cardinality::Cardinality;
 use crate::constraints::Constraint;
+use crate::mapreduce::fault::{FaultPlan, RecoveryPolicy};
 use crate::mapreduce::{JobReport, MapReduce};
 use crate::util::rng::Rng;
 
@@ -40,7 +41,10 @@ impl Protocol for MultiRoundGreedi {
         let base_rng = Rng::new(spec.seed);
         let mut rng = base_rng.clone();
         let ground = problem.ground();
-        let shards = spec.partition.split(&ground, spec.m, &mut rng);
+        let plan = spec.fault.clone().unwrap_or_else(FaultPlan::none);
+        let policy = spec.recovery;
+        let multiplicity = spec.multiplicity.clamp(1, spec.m);
+        let shards = spec.partition.split_replicated(&ground, spec.m, multiplicity, &mut rng);
 
         let engine = MapReduce::new(spec.threads);
         let mut job = JobReport::default();
@@ -51,9 +55,12 @@ impl Protocol for MultiRoundGreedi {
         let leaf_con = Cardinality::new(spec.kappa);
         let local_eval = spec.local_eval;
         let algo_name = spec.algorithm.clone();
-        let inputs: Vec<(usize, Vec<usize>)> = shards.into_iter().enumerate().collect();
+        let inputs: Vec<(usize, Vec<usize>)> = shards.iter().cloned().enumerate().collect();
         let leaf_oracle_threads = spec.oracle_threads(inputs.len());
-        let (leaf_results, stage) = engine.run_stage(inputs, |_, (i, shard)| {
+        // Shared by level 0 and crash recovery: same fork (7000 + i), so a
+        // shard rebuilt in full from survivor replicas reproduces the lost
+        // leaf's result bit for bit.
+        let run_leaf = |i: usize, shard: Vec<usize>| {
             let mut task_rng = base_rng.fork(7_000 + i as u64);
             let algo = algorithms::by_name(&algo_name).expect("algorithm");
             let obj = if local_eval {
@@ -68,12 +75,65 @@ impl Protocol for MultiRoundGreedi {
                 &mut task_rng,
                 leaf_oracle_threads,
             )
-        });
-        job.stages.push(stage);
+        };
+        let stage0 = engine
+            .run_stage_policied(inputs, &plan, policy, |_, (i, shard)| run_leaf(i, shard))
+            .unwrap_or_else(|e| {
+                panic!(
+                    "multiround leaves aborted: {e} (policy=retry turns machine crashes \
+                     into job aborts; use drop_shard or survivor_merge to recover)"
+                )
+            });
+        let mut leaf_results = stage0.outputs;
+        let crashed = stage0.crashed;
+        let straggled = stage0.straggled;
+        let mut fault_retries = stage0.retries;
+        job.stages.push(stage0.report);
         rounds += 1;
-        oracle_calls += leaf_results.iter().map(|r| r.oracle_calls).sum::<u64>();
+
+        // ---- Crash recovery (leaves hold the data; reducers don't) ----------
+        let mut recovery_time = 0.0;
+        let mut dropped = 0usize;
+        if !crashed.is_empty() {
+            let surviving: std::collections::HashSet<usize> = shards
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| !crashed.contains(i))
+                .flat_map(|(_, s)| s.iter().copied())
+                .collect();
+            dropped = ground.iter().filter(|e| !surviving.contains(e)).count();
+            if policy == RecoveryPolicy::SurvivorMerge {
+                let rebuilt: Vec<(usize, Vec<usize>)> = crashed
+                    .iter()
+                    .map(|&j| {
+                        let shard: Vec<usize> =
+                            shards[j].iter().copied().filter(|e| surviving.contains(e)).collect();
+                        (j, shard)
+                    })
+                    .filter(|(_, shard)| !shard.is_empty())
+                    .collect();
+                if !rebuilt.is_empty() {
+                    let rebuilt_ids: Vec<usize> = rebuilt.iter().map(|(j, _)| *j).collect();
+                    let (recovered, rec_stage) =
+                        engine.run_stage(rebuilt, |_, (j, shard)| run_leaf(j, shard));
+                    recovery_time = rec_stage.max_task_time;
+                    job.stages.push(rec_stage);
+                    for (j, r) in rebuilt_ids.into_iter().zip(recovered) {
+                        leaf_results[j] = Some(r);
+                    }
+                }
+            }
+        }
+
+        oracle_calls += leaf_results.iter().flatten().map(|r| r.oracle_calls).sum::<u64>();
+        // Surviving (or recovered) leaves feed the tree in leaf order; under
+        // DropShard the crashed leaves simply vanish from the frontier.
         let mut frontier: Vec<Vec<usize>> =
-            leaf_results.into_iter().map(|r| r.solution).collect();
+            leaf_results.into_iter().flatten().map(|r| r.solution).collect();
+        // Reduction levels run under the transient-failure plan only: crashes
+        // model losing data-holding leaf machines, while reducers read
+        // shuffled candidate sets held at the driver.
+        let reduce_plan = plan.without_crashes();
 
         // ---- Reduction levels ----------------------------------------------
         let mut level = 0u64;
@@ -96,7 +156,8 @@ impl Protocol for MultiRoundGreedi {
             // Fewer merge tasks each level => more oracle threads per task
             // (the root merge runs on the full budget).
             let oracle_threads = spec.oracle_threads(groups.len());
-            let (next, stage) = engine.run_stage(groups, |_, (gi, sets)| {
+            let (next, stage, level_retries) = engine
+                .run_stage_faulted(groups, &reduce_plan, |_, (gi, sets)| {
                 let mut task_rng = base_rng.fork(8_000 + level * 100 + gi as u64);
                 let mut pool: Vec<usize> = sets.iter().flatten().copied().collect();
                 pool.sort_unstable();
@@ -129,7 +190,9 @@ impl Protocol for MultiRoundGreedi {
                     }
                 }
                 (best_set, pool.len(), calls)
-            });
+                })
+                .unwrap_or_else(|e| panic!("multiround reduction aborted: {e}"));
+            fault_retries += level_retries;
             job.stages.push(stage);
             let mut new_frontier = Vec::with_capacity(next.len());
             for (set, pool_len, calls) in next {
@@ -146,6 +209,16 @@ impl Protocol for MultiRoundGreedi {
         // the k-prefix feasible by heredity.
         solution.truncate(spec.k);
         let value = problem.global().eval(&solution);
+        let fault = plan.active().then(|| FaultStats {
+            policy: policy.label().to_string(),
+            multiplicity,
+            retries: fault_retries,
+            crashed_machines: crashed,
+            straggled_machines: straggled,
+            dropped_elements: dropped,
+            ground_size: ground.len(),
+            recovery_time,
+        });
         RunMetrics {
             name: format!(
                 "greedi-tree[m={},k={},fanout={}]",
@@ -157,6 +230,7 @@ impl Protocol for MultiRoundGreedi {
             job,
             rounds,
             stream: None,
+            fault,
         }
     }
 }

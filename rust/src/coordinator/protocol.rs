@@ -33,7 +33,35 @@ use super::Problem;
 use crate::algorithms;
 use crate::constraints::Constraint;
 
+pub use crate::mapreduce::fault::{FaultPlan, RecoveryPolicy};
 pub use crate::mapreduce::partition::PartitionStrategy;
+
+/// Chaos-smoke hook: `GREEDI_CHAOS=fail_prob:max_attempts[:seed]` injects a
+/// transient-failure [`FaultPlan`] into every spec built by
+/// [`RunSpec::new`] (explicit `.faults(..)` calls still win). Under the
+/// default `Retry` policy this is output-invariant — retries re-run pure
+/// tasks — so the whole integration surface can run under injected faults
+/// in CI without touching a single test.
+fn chaos_plan() -> Option<FaultPlan> {
+    use std::sync::OnceLock;
+    static CHAOS: OnceLock<Option<FaultPlan>> = OnceLock::new();
+    fn parse(v: &str) -> Option<FaultPlan> {
+        let mut parts = v.split(':');
+        let fail_prob: f64 = parts.next()?.trim().parse().ok()?;
+        let max_attempts: usize = parts.next()?.trim().parse().ok()?;
+        let seed: u64 = match parts.next() {
+            Some(s) => s.trim().parse().ok()?,
+            None => 0xC0FFEE,
+        };
+        if !(0.0..=1.0).contains(&fail_prob) || max_attempts == 0 {
+            return None;
+        }
+        Some(FaultPlan::new(fail_prob, max_attempts, seed))
+    }
+    CHAOS
+        .get_or_init(|| std::env::var("GREEDI_CHAOS").ok().as_deref().and_then(parse))
+        .clone()
+}
 
 /// A distributed maximization protocol: anything that can turn a
 /// [`Problem`] plus a [`RunSpec`] into a finished [`RunMetrics`].
@@ -78,6 +106,14 @@ pub struct RunSpec {
     /// OS threads for the simulated cluster's map stages.
     pub threads: usize,
     pub partition: PartitionStrategy,
+    /// Replication multiplicity c: every element lands on `c` distinct
+    /// machines (Lucic et al., 1605.09619). 1 = classic disjoint partition;
+    /// protocols clamp to `min(c, m)`.
+    pub multiplicity: usize,
+    /// What map stages do when a machine crashes (see `mapreduce::fault`).
+    pub recovery: RecoveryPolicy,
+    /// Fault injection for the simulated cluster (`None` = fault-free).
+    pub fault: Option<FaultPlan>,
     /// Base RNG seed — partitions and every per-task stream fork from it.
     pub seed: u64,
     /// Round-1 hereditary constraint override (Algorithm 3). `None` ⇒
@@ -101,6 +137,9 @@ impl RunSpec {
             algorithm: "lazy".to_string(),
             threads: 1,
             partition: PartitionStrategy::Random,
+            multiplicity: 1,
+            recovery: RecoveryPolicy::Retry,
+            fault: chaos_plan(),
             seed: 42,
             round1: None,
             round2: None,
@@ -133,6 +172,24 @@ impl RunSpec {
 
     pub fn partition(mut self, p: PartitionStrategy) -> Self {
         self.partition = p;
+        self
+    }
+
+    /// Replication multiplicity c ≥ 1 (clamped to `m` at run time).
+    pub fn multiplicity(mut self, c: usize) -> Self {
+        self.multiplicity = c.max(1);
+        self
+    }
+
+    /// Crash-recovery policy for the map stages.
+    pub fn recovery(mut self, policy: RecoveryPolicy) -> Self {
+        self.recovery = policy;
+        self
+    }
+
+    /// Inject a fault plan into every stage of the run.
+    pub fn faults(mut self, plan: FaultPlan) -> Self {
+        self.fault = Some(plan);
         self
     }
 
@@ -213,6 +270,9 @@ impl fmt::Debug for RunSpec {
             .field("algorithm", &self.algorithm)
             .field("threads", &self.threads)
             .field("partition", &self.partition)
+            .field("multiplicity", &self.multiplicity)
+            .field("recovery", &self.recovery)
+            .field("fault", &self.fault)
             .field("seed", &self.seed)
             .field("round1", &self.round1.as_ref().map(|_| "<constraint>"))
             .field("round2", &self.round2.as_ref().map(|_| "<constraint>"))
@@ -354,6 +414,23 @@ mod tests {
         assert_eq!(s.batch, 1, "batch clamps to 1");
         assert_eq!(s.partition, PartitionStrategy::Contiguous);
         assert_eq!(s.seed, 99);
+    }
+
+    #[test]
+    fn fault_spec_builders_default_and_clamp() {
+        let s = RunSpec::new(4, 10);
+        assert_eq!(s.multiplicity, 1, "replication off by default");
+        assert_eq!(s.recovery, RecoveryPolicy::Retry, "classic MapReduce default");
+        let s = RunSpec::new(4, 10)
+            .multiplicity(0)
+            .recovery(RecoveryPolicy::SurvivorMerge)
+            .faults(FaultPlan::new(0.5, 10, 1).crashes(0.1));
+        assert_eq!(s.multiplicity, 1, "multiplicity clamps to 1");
+        assert_eq!(s.recovery, RecoveryPolicy::SurvivorMerge);
+        let plan = s.fault.expect("explicit plan stored");
+        assert!(plan.active());
+        assert_eq!(plan.crash_prob, 0.1);
+        assert_eq!(RunSpec::new(2, 3).multiplicity(5).multiplicity, 5, "clamped to m at run time, not here");
     }
 
     #[test]

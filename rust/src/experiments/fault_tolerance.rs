@@ -1,0 +1,151 @@
+//! Fault-tolerance experiment — the replication-buys-recovery tradeoff.
+//!
+//! The paper's Hadoop runs lean on MapReduce re-execution for transient
+//! failures; this harness measures what happens when whole machines (and
+//! their shards) are lost. Sweeps solution quality against the machine
+//! crash rate at m ∈ {10, 100} (parts a/b) × multiplicity c ∈ {1, 2, 3}
+//! × recovery policy:
+//!
+//! * `retry` with transient attempt failures only — re-execution keeps the
+//!   output bit-identical (ratio exactly 1), the classic MapReduce story;
+//! * `drop_shard` — survivors only; quality degrades with the coverage lost;
+//! * `survivor_merge` — crashed shards rebuilt from replicas on surviving
+//!   machines; with c ≥ 2 the rebuild is almost always complete and the
+//!   run recovers the fault-free output exactly.
+//!
+//! Reported per row: value ratio vs the fault-free run at the same (m, c)
+//! and seed, mean ground-set coverage after crashes, mean crashed-machine
+//! count, total retries, and recovery-stage wallclock.
+
+use std::sync::Arc;
+
+use super::{ExpOpts, FigureReport};
+use crate::coordinator::protocol::{self, FaultPlan, Protocol, RecoveryPolicy};
+use crate::coordinator::FacilityProblem;
+use crate::data::synth::{gaussian_blobs, SynthConfig};
+use crate::util::stats::mean;
+use crate::util::table::Table;
+
+/// Per-trial plan seeds fork off the spec seed with a fixed salt so the
+/// crash coins are independent of the partition/algorithm randomness.
+const PLAN_SALT: u64 = 0xFA17;
+
+pub fn run(opts: &ExpOpts) -> FigureReport {
+    let n = opts.size(1_200, 20_000);
+    let d = 16;
+    let ds = Arc::new(gaussian_blobs(&SynthConfig::tiny_images(n, d), opts.seed));
+    let problem = FacilityProblem::new(&ds);
+    let k = 20.min(n / 10).max(2);
+    let greedi = protocol::by_name("greedi").expect("greedi registered");
+    let trials = opts.trials.max(1);
+
+    let mut body = format!(
+        "replicated-shard fault tolerance: n={n}, d={d}, k={k}, trials={trials}\n\n"
+    );
+
+    // (policy, crash_prob, transient fail_prob). The retry row has no
+    // crashes (a crash under retry aborts the job); the c≥2 survivor_merge
+    // rows are where replication pays off.
+    let rows: [(RecoveryPolicy, f64, f64); 6] = [
+        (RecoveryPolicy::Retry, 0.0, 0.2),
+        (RecoveryPolicy::SurvivorMerge, 0.0, 0.0),
+        (RecoveryPolicy::DropShard, 0.1, 0.0),
+        (RecoveryPolicy::SurvivorMerge, 0.1, 0.0),
+        (RecoveryPolicy::DropShard, 0.3, 0.0),
+        (RecoveryPolicy::SurvivorMerge, 0.3, 0.0),
+    ];
+
+    for (part, m) in [("a", 10usize), ("b", 100usize)] {
+        if !opts.wants(part) {
+            continue;
+        }
+        let mut t = Table::new(
+            &format!("greedi under machine crashes (m={m}; ratio vs fault-free at same c, seed)"),
+            &["c", "policy", "crash_p", "fail_p", "ratio", "coverage", "crashed", "retries", "rec_s"],
+        );
+        for c in [1usize, 2, 3] {
+            if c > m {
+                continue;
+            }
+            // Fault-free reference per trial seed at this (m, c).
+            let refs: Vec<f64> = (0..trials)
+                .map(|t_idx| {
+                    let seed = trial_seed(opts.seed, t_idx);
+                    let base = opts.spec(m, k, false, "lazy").multiplicity(c).seed(seed);
+                    greedi.run(&problem, &base).value
+                })
+                .collect();
+
+            for &(policy, crash_p, fail_p) in &rows {
+                let mut ratios = Vec::with_capacity(trials);
+                let mut coverages = Vec::with_capacity(trials);
+                let mut crashed_counts = Vec::with_capacity(trials);
+                let mut retries_total = 0usize;
+                let mut rec_time = 0.0;
+                for t_idx in 0..trials {
+                    let seed = trial_seed(opts.seed, t_idx);
+                    let max_attempts = if fail_p > 0.0 { 8 } else { 1 };
+                    let plan =
+                        FaultPlan::new(fail_p, max_attempts, seed ^ PLAN_SALT).crashes(crash_p);
+                    let spec = opts
+                        .spec(m, k, false, "lazy")
+                        .multiplicity(c)
+                        .seed(seed)
+                        .recovery(policy)
+                        .faults(plan);
+                    let r = greedi.run(&problem, &spec);
+                    ratios.push(r.value / refs[t_idx].max(f64::MIN_POSITIVE));
+                    // An all-zero plan (the survivor_merge sanity row at
+                    // crash_p = 0) is inactive => no FaultStats attached.
+                    match r.fault.as_ref() {
+                        Some(fs) => {
+                            coverages.push(fs.coverage());
+                            crashed_counts.push(fs.crashed_machines.len() as f64);
+                            retries_total += fs.retries;
+                            rec_time += fs.recovery_time;
+                        }
+                        None => {
+                            coverages.push(1.0);
+                            crashed_counts.push(0.0);
+                        }
+                    }
+                }
+                t.row(&[
+                    c.to_string(),
+                    policy.label().into(),
+                    format!("{crash_p:.1}"),
+                    format!("{fail_p:.1}"),
+                    format!("{:.4}", mean(&ratios)),
+                    format!("{:.3}", mean(&coverages)),
+                    format!("{:.1}", mean(&crashed_counts)),
+                    retries_total.to_string(),
+                    format!("{rec_time:.4}"),
+                ]);
+            }
+        }
+        body.push_str(&t.render());
+        body.push('\n');
+    }
+
+    FigureReport { id: "fault_tolerance".into(), body }
+}
+
+fn trial_seed(base: u64, t_idx: usize) -> u64 {
+    base.wrapping_add(t_idx as u64).wrapping_mul(0x9E37_79B9)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_run_covers_policies_and_multiplicities() {
+        let opts = ExpOpts { n: Some(150), trials: 1, part: "a".into(), ..Default::default() };
+        let rep = run(&opts);
+        assert_eq!(rep.id, "fault_tolerance");
+        for needle in ["retry", "drop_shard", "survivor_merge", "coverage", "m=10"] {
+            assert!(rep.body.contains(needle), "missing {needle:?} in:\n{}", rep.body);
+        }
+        assert!(!rep.body.contains("m=100"), "part=a must skip the m=100 sweep");
+    }
+}

@@ -13,6 +13,7 @@
 //! `--full` or explicit `--n` lifts them toward paper scale.
 
 pub mod ablations;
+pub mod fault_tolerance;
 pub mod fig10;
 pub mod fig4;
 pub mod fig5;
@@ -26,7 +27,7 @@ pub mod theory;
 use std::collections::BTreeMap;
 
 use crate::coordinator::greedi::centralized;
-use crate::coordinator::protocol::{self, PartitionStrategy, Protocol, RunSpec};
+use crate::coordinator::protocol::{self, PartitionStrategy, Protocol, RecoveryPolicy, RunSpec};
 use crate::coordinator::Problem;
 use crate::util::stats::summarize;
 use crate::util::table::Table;
@@ -42,6 +43,10 @@ pub struct ExpOpts {
     pub threads: usize,
     /// Ground-set partitioning strategy for every protocol run.
     pub partition: PartitionStrategy,
+    /// Replication multiplicity c for every protocol run (default 1).
+    pub multiplicity: usize,
+    /// Crash-recovery policy for every protocol run.
+    pub recovery: RecoveryPolicy,
     /// Use the XLA facility-gain backend where applicable.
     pub xla: bool,
     /// Lift sizes toward paper scale.
@@ -58,6 +63,8 @@ impl Default for ExpOpts {
             seed: 42,
             threads: 1,
             partition: PartitionStrategy::Random,
+            multiplicity: 1,
+            recovery: RecoveryPolicy::Retry,
             xla: false,
             full: false,
             part: String::new(),
@@ -79,6 +86,8 @@ impl ExpOpts {
         let mut spec = RunSpec::new(m, k)
             .algorithm(algorithm)
             .partition(self.partition)
+            .multiplicity(self.multiplicity)
+            .recovery(self.recovery)
             .threads(self.threads)
             .seed(self.seed);
         if local {

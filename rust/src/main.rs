@@ -10,6 +10,7 @@
 //!   fig4 … fig10          regenerate a figure from the paper's §6
 //!   theory                empirical checks of Theorems 3/4/11 + Table 1
 //!   streaming             bounded-memory sieve→merge vs GreeDi (stream_greedi)
+//!   fault_tolerance       quality vs machine crash rate × multiplicity × policy
 //!   serve                 always-on selection daemon (see `serve` module)
 //!   query                 one wire request against a running daemon
 //!   all                   every figure + theory, in order
@@ -21,6 +22,8 @@
 //!   --seed <int>       base RNG seed (default 42)
 //!   --threads <int>    OS threads for the simulated cluster (default 1)
 //!   --partition <s>    random | balanced | contiguous (default random)
+//!   --multiplicity <c> replicate every element on c machines (default 1)
+//!   --recovery <s>     retry | drop_shard | survivor_merge (default retry)
 //!   --protocol <name>  protocol for `quickstart` (see `protocol::by_name`;
 //!                      default greedi — figure harnesses run their fixed suites)
 //!   --part <a|b|c|d>   figure sub-part filter
@@ -40,7 +43,7 @@
 //! ```
 
 use greedi::config::ExperimentConfig;
-use greedi::coordinator::protocol::{self, PartitionStrategy, Protocol, RunSpec};
+use greedi::coordinator::protocol::{self, PartitionStrategy, Protocol, RecoveryPolicy, RunSpec};
 use greedi::experiments::{self, ExpOpts, FigureReport};
 use greedi::util::args::Args;
 
@@ -58,6 +61,15 @@ fn opts_from(args: &Args) -> ExpOpts {
                 })
             })
             .unwrap_or(PartitionStrategy::Random),
+        multiplicity: args.get_usize("multiplicity", 1),
+        recovery: args
+            .get("recovery")
+            .map(|s| {
+                RecoveryPolicy::parse(s).unwrap_or_else(|| {
+                    panic!("--recovery expects retry|drop_shard|survivor_merge, got {s:?}")
+                })
+            })
+            .unwrap_or(RecoveryPolicy::Retry),
         xla: args.has_flag("xla"),
         full: args.has_flag("full"),
         part: args.get_str("part", ""),
@@ -76,6 +88,7 @@ fn run_figure(name: &str, opts: &ExpOpts) -> Option<FigureReport> {
         "theory" => experiments::theory::run(opts),
         "ablations" => experiments::ablations::run(opts),
         "streaming" => experiments::streaming::run(opts),
+        "fault_tolerance" => experiments::fault_tolerance::run(opts),
         _ => return None,
     })
 }
@@ -294,7 +307,7 @@ fn info() {
 fn main() {
     let args = Args::from_env();
     let Some(cmd) = args.positional.first().cloned() else {
-        eprintln!("usage: greedi <quickstart|protocols|serve|query|fig4..fig10|theory|ablations|streaming|all|info> [--n N] [--trials T] [--seed S] [--threads T] [--partition S] [--protocol P] [--part P] [--xla] [--full]");
+        eprintln!("usage: greedi <quickstart|protocols|serve|query|fig4..fig10|theory|ablations|streaming|fault_tolerance|all|info> [--n N] [--trials T] [--seed S] [--threads T] [--partition S] [--multiplicity C] [--recovery P] [--protocol P] [--part P] [--xla] [--full]");
         std::process::exit(2);
     };
     let mut opts = opts_from(&args);
@@ -321,6 +334,12 @@ fn main() {
         if args.get("partition").is_none() {
             opts.partition = cfg.partition;
         }
+        if args.get("multiplicity").is_none() {
+            opts.multiplicity = cfg.multiplicity;
+        }
+        if args.get("recovery").is_none() {
+            opts.recovery = cfg.recovery;
+        }
         if args.get("protocol").is_none() {
             proto_name = cfg.protocol.clone();
         }
@@ -340,7 +359,7 @@ fn main() {
         "query" => query_cmd(&args, &opts, cfg_opt.as_ref()),
         "info" => info(),
         "all" => {
-            for f in ["fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "theory", "ablations", "streaming"] {
+            for f in ["fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "theory", "ablations", "streaming", "fault_tolerance"] {
                 run_figure(f, &opts).unwrap().print();
             }
         }

@@ -1,12 +1,28 @@
-//! Fault injection + retry for the simulated MapReduce runtime.
+//! Fault injection + recovery for the simulated MapReduce runtime.
 //!
 //! The paper's Hadoop deployment leans on MapReduce's core resilience
 //! property: failed tasks are rescheduled and the job still completes with
 //! identical output (map tasks are deterministic and side-effect-free).
-//! This module models that: a [`FaultPlan`] decides, deterministically from
-//! a seed, which (task, attempt) pairs fail; [`run_stage_with_faults`]
-//! re-executes failed tasks up to `max_attempts`, charging each attempt's
-//! wallclock to the stage like a real re-scheduled container would be.
+//! This module models that and two stronger failure modes:
+//!
+//! - **Transient attempt failures** — a [`FaultPlan`] decides,
+//!   deterministically from a seed, which (task, attempt) pairs fail;
+//!   [`run_stage_with_faults`] re-executes failed tasks up to
+//!   `max_attempts`, charging each attempt's wallclock to the stage like a
+//!   real re-scheduled container would be.
+//! - **Machine crashes** — a crashed task loses *every* attempt for the
+//!   stage (the machine and its shard are gone). Crashes are either drawn
+//!   per-task from `crash_prob` or pinned explicitly via
+//!   [`FaultPlan::crash_tasks`].
+//! - **Stragglers** — a deterministic per-task slowdown factor multiplies
+//!   the recorded task wallclock (timing only; outputs are untouched),
+//!   modeling the slow-node tail that dominates real stage latency.
+//!
+//! What happens after a crash is the [`RecoveryPolicy`]'s call:
+//! [`run_stage_policied`] either aborts like today (`Retry`), or skips the
+//! crashed machines and lets the protocol degrade (`DropShard`) or rebuild
+//! the lost shard from surviving replicas (`SurvivorMerge`, with
+//! multiplicity ≥ 2 from `partition::split_replicated`).
 //!
 //! Because GreeDi's map tasks are pure functions of (shard, seed), retries
 //! cannot change the protocol's output — asserted by the integration tests.
@@ -14,28 +30,92 @@
 use std::time::Instant;
 
 use super::StageReport;
+use crate::util::executor::parallel_map;
 use crate::util::rng::Rng;
 
-/// Deterministic per-(task, attempt) failure oracle.
-#[derive(Debug, Clone)]
+/// Deterministic per-(task, attempt) failure oracle, plus machine-level
+/// crash and straggler injection.
+#[derive(Debug, Clone, PartialEq)]
 pub struct FaultPlan {
-    /// Probability a given task attempt fails.
+    /// Probability a given task attempt fails (transient; retried).
     pub fail_prob: f64,
-    /// Attempts per task before the stage aborts.
+    /// Probability a given task's machine crashes for the whole stage.
+    pub crash_prob: f64,
+    /// Probability a given task's machine is a straggler.
+    pub straggle_prob: f64,
+    /// Wallclock multiplier charged to straggling tasks (≥ 1).
+    pub straggle_factor: f64,
+    /// Attempts per task before the stage aborts (under `Retry`).
     pub max_attempts: usize,
+    /// Tasks that crash unconditionally (in addition to `crash_prob` draws).
+    pub crashed_tasks: Vec<usize>,
     seed: u64,
 }
 
+const CRASH_SALT: u64 = 0x5851_F42D_4C95_7F2D;
+const STRAGGLE_SALT: u64 = 0x1405_7B7E_F767_814F;
+
 impl FaultPlan {
     pub fn new(fail_prob: f64, max_attempts: usize, seed: u64) -> Self {
-        assert!((0.0..1.0).contains(&fail_prob));
+        assert!((0.0..=1.0).contains(&fail_prob));
         assert!(max_attempts >= 1);
-        FaultPlan { fail_prob, max_attempts, seed }
+        FaultPlan {
+            fail_prob,
+            crash_prob: 0.0,
+            straggle_prob: 0.0,
+            straggle_factor: 1.0,
+            max_attempts,
+            crashed_tasks: Vec::new(),
+            seed,
+        }
     }
 
     /// No faults (baseline).
     pub fn none() -> Self {
-        FaultPlan { fail_prob: 0.0, max_attempts: 1, seed: 0 }
+        FaultPlan::new(0.0, 1, 0)
+    }
+
+    /// Draw machine crashes per task with probability `p`.
+    pub fn crashes(mut self, p: f64) -> Self {
+        assert!((0.0..=1.0).contains(&p));
+        self.crash_prob = p;
+        self
+    }
+
+    /// Crash these tasks unconditionally (deterministic chaos scripting).
+    pub fn crash_tasks(mut self, tasks: Vec<usize>) -> Self {
+        self.crashed_tasks = tasks;
+        self
+    }
+
+    /// Mark tasks as stragglers with probability `p`; a straggler's recorded
+    /// wallclock is multiplied by `factor` (its output is unchanged).
+    pub fn stragglers(mut self, p: f64, factor: f64) -> Self {
+        assert!((0.0..=1.0).contains(&p));
+        assert!(factor >= 1.0, "straggle factor {factor} must be >= 1");
+        self.straggle_prob = p;
+        self.straggle_factor = factor;
+        self
+    }
+
+    /// Is any fault injection configured? Gates the faulted stage paths so
+    /// crash-only or straggler-only plans are not silently ignored.
+    pub fn active(&self) -> bool {
+        self.fail_prob > 0.0
+            || self.crash_prob > 0.0
+            || self.straggle_prob > 0.0
+            || !self.crashed_tasks.is_empty()
+    }
+
+    /// The same plan with machine crashes stripped (transient failures and
+    /// stragglers kept). Merge/reduce stages run under this: crashes model
+    /// the loss of data-holding *map* machines, while reducers read shuffle
+    /// data held at the driver and are always re-schedulable.
+    pub fn without_crashes(&self) -> Self {
+        let mut p = self.clone();
+        p.crash_prob = 0.0;
+        p.crashed_tasks.clear();
+        p
     }
 
     /// Does attempt `attempt` of task `task` fail?
@@ -48,6 +128,74 @@ impl FaultPlan {
                 ^ (attempt as u64).wrapping_mul(0xC2B2_AE3D_27D4_EB4F),
         );
         rng.bool(self.fail_prob)
+    }
+
+    /// Is task `task`'s machine crashed for this stage?
+    pub fn crashed(&self, task: usize) -> bool {
+        if self.crashed_tasks.contains(&task) {
+            return true;
+        }
+        if self.crash_prob <= 0.0 {
+            return false;
+        }
+        let mut rng = Rng::new(
+            self.seed ^ CRASH_SALT ^ (task as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+        );
+        rng.bool(self.crash_prob)
+    }
+
+    /// The wallclock multiplier for task `task`, if it straggles.
+    pub fn straggle(&self, task: usize) -> Option<f64> {
+        if self.straggle_prob <= 0.0 {
+            return None;
+        }
+        let mut rng = Rng::new(
+            self.seed ^ STRAGGLE_SALT ^ (task as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+        );
+        rng.bool(self.straggle_prob).then_some(self.straggle_factor)
+    }
+}
+
+/// What a stage does when a machine crashes (or a task exhausts attempts).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RecoveryPolicy {
+    /// Re-execute until success; abort the job on exhaustion (the classic
+    /// MapReduce behavior, and the only option before machine crashes
+    /// existed). A crashed machine makes every attempt fail, so `Retry`
+    /// turns crashes into job aborts.
+    #[default]
+    Retry,
+    /// Proceed with the surviving machines and report the ground-set
+    /// coverage lost (graceful degradation).
+    DropShard,
+    /// Rebuild each crashed shard from replicas surviving on other machines
+    /// and re-run its task — with multiplicity ≥ 2, provably equal to the
+    /// fault-free output whenever every element survives somewhere.
+    SurvivorMerge,
+}
+
+impl RecoveryPolicy {
+    pub const ALL: [RecoveryPolicy; 3] = [
+        RecoveryPolicy::Retry,
+        RecoveryPolicy::DropShard,
+        RecoveryPolicy::SurvivorMerge,
+    ];
+
+    pub fn parse(s: &str) -> Option<RecoveryPolicy> {
+        Some(match s {
+            "retry" => RecoveryPolicy::Retry,
+            "drop_shard" => RecoveryPolicy::DropShard,
+            "survivor_merge" => RecoveryPolicy::SurvivorMerge,
+            _ => return None,
+        })
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            RecoveryPolicy::Retry => "retry",
+            RecoveryPolicy::DropShard => "drop_shard",
+            RecoveryPolicy::SurvivorMerge => "survivor_merge",
+        }
     }
 }
 
@@ -66,42 +214,87 @@ impl std::fmt::Display for StageFailed {
 
 impl std::error::Error for StageFailed {}
 
-/// Run a stage under a fault plan: each task is (re)executed until an
-/// attempt succeeds; every attempt's wallclock is charged to the task
-/// (a rescheduled container re-does the work). Inputs must be cloneable —
-/// retries replay the same input, preserving determinism.
-pub fn run_stage_with_faults<T, R, F>(
-    inputs: Vec<T>,
-    plan: &FaultPlan,
-    f: F,
-) -> Result<(Vec<R>, StageReport, usize), StageFailed>
+/// A stage run under a [`RecoveryPolicy`]: crashed tasks produce `None`
+/// outputs (in task order) instead of aborting the stage.
+#[derive(Debug)]
+pub struct PoliciedStage<R> {
+    /// Per-task results; `None` where the machine crashed (or exhausted its
+    /// attempts under a non-`Retry` policy).
+    pub outputs: Vec<Option<R>>,
+    pub report: StageReport,
+    /// Total failed attempts that were re-executed.
+    pub retries: usize,
+    /// Tasks lost for the stage, in task order.
+    pub crashed: Vec<usize>,
+    /// Tasks whose wallclock was inflated by the straggle factor.
+    pub straggled: Vec<usize>,
+}
+
+/// One task's attempt loop: re-execute until an attempt survives the fault
+/// coin, charging every attempt's (possibly straggler-inflated) wallclock.
+enum TaskRun<R> {
+    Done { out: R, time: f64, retries: usize },
+    Exhausted { retries: usize },
+}
+
+fn attempt_loop<T, R, F>(i: usize, input: T, plan: &FaultPlan, f: &F) -> TaskRun<R>
 where
     T: Clone,
     F: Fn(usize, T) -> R,
 {
-    let mut outputs = Vec::with_capacity(inputs.len());
-    let mut times = Vec::with_capacity(inputs.len());
+    let mut time = 0.0;
     let mut retries = 0usize;
-    for (i, input) in inputs.into_iter().enumerate() {
-        let mut task_time = 0.0;
-        let mut done = None;
-        for attempt in 0..plan.max_attempts {
-            let t = Instant::now();
-            let r = f(i, input.clone());
-            task_time += t.elapsed().as_secs_f64();
-            if plan.fails(i, attempt) {
-                retries += 1;
-                continue; // attempt lost; result discarded like a dead container
-            }
-            done = Some(r);
-            break;
+    for attempt in 0..plan.max_attempts {
+        let t = Instant::now();
+        let r = f(i, input.clone());
+        let mut elapsed = t.elapsed().as_secs_f64();
+        if let Some(factor) = plan.straggle(i) {
+            elapsed *= factor;
         }
-        match done {
-            Some(r) => {
-                outputs.push(r);
-                times.push(task_time);
+        time += elapsed;
+        if plan.crashed(i) || plan.fails(i, attempt) {
+            retries += 1;
+            continue; // attempt lost; result discarded like a dead container
+        }
+        return TaskRun::Done { out: r, time, retries };
+    }
+    TaskRun::Exhausted { retries }
+}
+
+/// Run a stage under a fault plan: each task is (re)executed until an
+/// attempt succeeds; every attempt's wallclock is charged to the task
+/// (a rescheduled container re-does the work). Inputs must be cloneable —
+/// retries replay the same input, preserving determinism.
+///
+/// Tasks run on `threads` workers via the shared executor; outputs, retry
+/// counts, and per-task times are bit-identical to the serial path at any
+/// thread count, and on exhaustion the lowest-index failed task is reported
+/// (exactly what the serial scan would hit first).
+pub fn run_stage_with_faults<T, R, F>(
+    inputs: Vec<T>,
+    plan: &FaultPlan,
+    threads: usize,
+    f: F,
+) -> Result<(Vec<R>, StageReport, usize), StageFailed>
+where
+    T: Clone + Send,
+    R: Send,
+    F: Fn(usize, T) -> R + Sync,
+{
+    let runs = parallel_map(inputs, threads, |i, input| attempt_loop(i, input, plan, &f));
+    let mut outputs = Vec::with_capacity(runs.len());
+    let mut times = Vec::with_capacity(runs.len());
+    let mut retries = 0usize;
+    for (i, run) in runs.into_iter().enumerate() {
+        match run {
+            TaskRun::Done { out, time, retries: r } => {
+                outputs.push(out);
+                times.push(time);
+                retries += r;
             }
-            None => return Err(StageFailed { task: i, attempts: plan.max_attempts }),
+            TaskRun::Exhausted { .. } => {
+                return Err(StageFailed { task: i, attempts: plan.max_attempts })
+            }
         }
     }
     let max_task_time = times.iter().cloned().fold(0.0, f64::max);
@@ -113,6 +306,86 @@ where
     ))
 }
 
+/// Run a stage under a fault plan *and* a recovery policy.
+///
+/// `Retry` delegates to [`run_stage_with_faults`] (abort on exhaustion).
+/// `DropShard` / `SurvivorMerge` never abort: crashed machines are skipped
+/// entirely (no attempts run, `None` output, zero recorded time), transient
+/// failures are still retried, and a task that exhausts its attempts is
+/// treated as crashed. What to do with the `None` slots — drop them or
+/// rebuild from replicas — is the protocol's job.
+pub fn run_stage_policied<T, R, F>(
+    inputs: Vec<T>,
+    plan: &FaultPlan,
+    policy: RecoveryPolicy,
+    threads: usize,
+    f: F,
+) -> Result<PoliciedStage<R>, StageFailed>
+where
+    T: Clone + Send,
+    R: Send,
+    F: Fn(usize, T) -> R + Sync,
+{
+    let n = inputs.len();
+    if policy == RecoveryPolicy::Retry {
+        let (outputs, report, retries) = run_stage_with_faults(inputs, plan, threads, f)?;
+        let straggled = (0..n).filter(|&i| plan.straggle(i).is_some()).collect();
+        return Ok(PoliciedStage {
+            outputs: outputs.into_iter().map(Some).collect(),
+            report,
+            retries,
+            crashed: Vec::new(),
+            straggled,
+        });
+    }
+
+    let runs = parallel_map(inputs, threads, |i, input| {
+        if plan.crashed(i) {
+            None
+        } else {
+            Some(attempt_loop(i, input, plan, &f))
+        }
+    });
+    let mut outputs = Vec::with_capacity(n);
+    let mut times = Vec::with_capacity(n);
+    let mut retries = 0usize;
+    let mut crashed = Vec::new();
+    let mut straggled = Vec::new();
+    for (i, run) in runs.into_iter().enumerate() {
+        match run {
+            None => {
+                outputs.push(None);
+                times.push(0.0);
+                crashed.push(i);
+            }
+            Some(TaskRun::Done { out, time, retries: r }) => {
+                outputs.push(Some(out));
+                times.push(time);
+                retries += r;
+                if plan.straggle(i).is_some() {
+                    straggled.push(i);
+                }
+            }
+            Some(TaskRun::Exhausted { retries: r }) => {
+                // attempts exhausted => machine effectively lost for the stage
+                outputs.push(None);
+                times.push(0.0);
+                retries += r;
+                crashed.push(i);
+            }
+        }
+    }
+    let max_task_time = times.iter().cloned().fold(0.0, f64::max);
+    let total_cpu_time = times.iter().sum();
+    Ok(PoliciedStage {
+        outputs,
+        report: StageReport { task_times: times, max_task_time, total_cpu_time },
+        retries,
+        crashed,
+        straggled,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -120,7 +393,7 @@ mod tests {
     #[test]
     fn no_faults_matches_plain_stage() {
         let (out, rep, retries) =
-            run_stage_with_faults((0..10).collect(), &FaultPlan::none(), |_, x: i32| x * 2)
+            run_stage_with_faults((0..10).collect(), &FaultPlan::none(), 1, |_, x: i32| x * 2)
                 .unwrap();
         assert_eq!(out, (0..10).map(|x| x * 2).collect::<Vec<_>>());
         assert_eq!(retries, 0);
@@ -131,9 +404,10 @@ mod tests {
     fn retries_preserve_outputs() {
         let plan = FaultPlan::new(0.4, 20, 7);
         let (out, _, retries) =
-            run_stage_with_faults((0..50).collect(), &plan, |i, x: i32| x + i as i32).unwrap();
+            run_stage_with_faults((0..50).collect(), &plan, 1, |i, x: i32| x + i as i32)
+                .unwrap();
         let (base, _, _) =
-            run_stage_with_faults((0..50).collect(), &FaultPlan::none(), |i, x: i32| {
+            run_stage_with_faults((0..50).collect(), &FaultPlan::none(), 1, |i, x: i32| {
                 x + i as i32
             })
             .unwrap();
@@ -142,16 +416,33 @@ mod tests {
     }
 
     #[test]
+    fn parallel_faulted_stage_matches_serial() {
+        let plan = FaultPlan::new(0.5, 30, 19);
+        let (serial, _, serial_retries) =
+            run_stage_with_faults((0..40).collect(), &plan, 1, |i, x: i32| x * 3 + i as i32)
+                .unwrap();
+        for threads in [2, 4, 8] {
+            let (par, _, par_retries) =
+                run_stage_with_faults((0..40).collect(), &plan, threads, |i, x: i32| {
+                    x * 3 + i as i32
+                })
+                .unwrap();
+            assert_eq!(par, serial, "threads={threads}: outputs drifted");
+            assert_eq!(par_retries, serial_retries, "threads={threads}: retry count drifted");
+        }
+    }
+
+    #[test]
     fn failed_attempts_charge_time() {
         let plan = FaultPlan::new(0.9, 50, 3);
         let (_, rep_faulty, retries) =
-            run_stage_with_faults(vec![500_000usize], &plan, |_, n| {
+            run_stage_with_faults(vec![500_000usize], &plan, 1, |_, n| {
                 (0..n as u64).map(std::hint::black_box).sum::<u64>()
             })
             .unwrap();
         assert!(retries >= 1);
         let (_, rep_clean, _) =
-            run_stage_with_faults(vec![500_000usize], &FaultPlan::none(), |_, n| {
+            run_stage_with_faults(vec![500_000usize], &FaultPlan::none(), 1, |_, n| {
                 (0..n as u64).map(std::hint::black_box).sum::<u64>()
             })
             .unwrap();
@@ -163,25 +454,129 @@ mod tests {
 
     #[test]
     fn exhausted_attempts_abort() {
-        // fail_prob ~1 with 1 attempt => guaranteed failure
-        let plan = FaultPlan::new(0.999, 1, 3);
-        let mut failed = false;
-        for _ in 0..5 {
-            if run_stage_with_faults(vec![1, 2, 3], &plan, |_, x: i32| x).is_err() {
-                failed = true;
-                break;
-            }
-        }
-        assert!(failed);
+        // fail_prob = 1.0 is now expressible: guaranteed failure, one pass.
+        let plan = FaultPlan::new(1.0, 2, 3);
+        let err = run_stage_with_faults(vec![1, 2, 3], &plan, 1, |_, x: i32| x).unwrap_err();
+        assert_eq!(err.task, 0, "lowest-index exhausted task reported");
+        assert_eq!(err.attempts, 2);
+        // parallel path reports the same task
+        let err = run_stage_with_faults(vec![1, 2, 3], &plan, 4, |_, x: i32| x).unwrap_err();
+        assert_eq!(err.task, 0);
     }
 
     #[test]
     fn fault_plan_deterministic() {
-        let p = FaultPlan::new(0.3, 5, 11);
+        let p = FaultPlan::new(0.3, 5, 11).crashes(0.2).stragglers(0.2, 4.0);
         for task in 0..20 {
             for attempt in 0..5 {
                 assert_eq!(p.fails(task, attempt), p.fails(task, attempt));
             }
+            assert_eq!(p.crashed(task), p.crashed(task));
+            assert_eq!(p.straggle(task), p.straggle(task));
         }
+    }
+
+    #[test]
+    fn crash_coin_independent_of_fail_coin() {
+        // same seed, crash draws must not mirror attempt-failure draws
+        let p = FaultPlan::new(0.5, 5, 42).crashes(0.5);
+        let fails: Vec<bool> = (0..64).map(|t| p.fails(t, 0)).collect();
+        let crashes: Vec<bool> = (0..64).map(|t| p.crashed(t)).collect();
+        assert_ne!(fails, crashes, "crash salt collapsed onto the fail salt");
+    }
+
+    #[test]
+    fn explicit_crash_tasks_skipped_under_drop_policy() {
+        let plan = FaultPlan::none().crash_tasks(vec![1, 3]);
+        assert!(plan.active());
+        let stage = run_stage_policied(
+            (0..5).collect(),
+            &plan,
+            RecoveryPolicy::DropShard,
+            1,
+            |_, x: i32| x * 10,
+        )
+        .unwrap();
+        assert_eq!(stage.crashed, vec![1, 3]);
+        let got: Vec<Option<i32>> = stage.outputs;
+        assert_eq!(got, vec![Some(0), None, Some(20), None, Some(40)]);
+        assert_eq!(stage.report.task_times[1], 0.0, "crashed task charges no time");
+        assert_eq!(stage.retries, 0);
+    }
+
+    #[test]
+    fn crash_under_retry_aborts_the_stage() {
+        let plan = FaultPlan::none().crash_tasks(vec![2]);
+        let err = run_stage_policied(
+            (0..4).collect(),
+            &plan,
+            RecoveryPolicy::Retry,
+            1,
+            |_, x: i32| x,
+        )
+        .unwrap_err();
+        assert_eq!(err.task, 2);
+    }
+
+    #[test]
+    fn exhaustion_becomes_crash_under_survivor_merge() {
+        let plan = FaultPlan::new(1.0, 3, 9);
+        let stage = run_stage_policied(
+            (0..3).collect(),
+            &plan,
+            RecoveryPolicy::SurvivorMerge,
+            1,
+            |_, x: i32| x,
+        )
+        .unwrap();
+        assert_eq!(stage.crashed, vec![0, 1, 2]);
+        assert!(stage.outputs.iter().all(Option::is_none));
+        assert_eq!(stage.retries, 9, "3 tasks x 3 exhausted attempts");
+    }
+
+    #[test]
+    fn stragglers_inflate_time_without_touching_outputs() {
+        let plan = FaultPlan::new(0.0, 1, 5).stragglers(1.0, 1000.0);
+        assert!(plan.active(), "straggler-only plan must count as active");
+        let work = |_: usize, n: usize| (0..n as u64).map(std::hint::black_box).sum::<u64>();
+        let stage = run_stage_policied(
+            vec![200_000usize; 4],
+            &plan,
+            RecoveryPolicy::DropShard,
+            1,
+            work,
+        )
+        .unwrap();
+        let (base, base_rep, _) =
+            run_stage_with_faults(vec![200_000usize; 4], &FaultPlan::none(), 1, work).unwrap();
+        assert_eq!(stage.outputs.into_iter().flatten().collect::<Vec<_>>(), base);
+        assert_eq!(stage.straggled, vec![0, 1, 2, 3]);
+        assert!(
+            stage.report.max_task_time > base_rep.max_task_time * 10.0,
+            "factor 1000 must dominate timing noise: {} vs {}",
+            stage.report.max_task_time,
+            base_rep.max_task_time
+        );
+    }
+
+    #[test]
+    fn without_crashes_keeps_transient_faults() {
+        let plan = FaultPlan::new(0.4, 8, 21).crashes(0.9).crash_tasks(vec![0]);
+        let stripped = plan.without_crashes();
+        assert!(stripped.active());
+        assert!(!stripped.crashed(0));
+        assert_eq!(stripped.fail_prob, plan.fail_prob);
+        for task in 0..16 {
+            assert_eq!(stripped.fails(task, 0), plan.fails(task, 0));
+        }
+    }
+
+    #[test]
+    fn recovery_policy_parse_label_roundtrip() {
+        for policy in RecoveryPolicy::ALL {
+            assert_eq!(RecoveryPolicy::parse(policy.label()), Some(policy));
+        }
+        assert!(RecoveryPolicy::parse("pray").is_none());
+        assert_eq!(RecoveryPolicy::default(), RecoveryPolicy::Retry);
     }
 }

@@ -123,13 +123,13 @@ impl MapReduce {
 
     /// [`MapReduce::run_stage`] under a [`fault::FaultPlan`]: with no
     /// injected faults the tasks run on the pool exactly as `run_stage`
-    /// does (zero retries); with faults enabled, execution delegates to
-    /// [`fault::run_stage_with_faults`] — serial, so each attempt's
-    /// wallclock stays interference-free, exactly like the fault module's
-    /// own accounting. For pure task functions the outputs are identical
-    /// on both paths, which is what lets protocols expose a fault-injected
-    /// run mode without forking their stage logic. Returns the retry count
-    /// alongside the outputs and stage report.
+    /// does (zero retries); with any fault injection active (transient,
+    /// crash, or straggler), execution delegates to
+    /// [`fault::run_stage_with_faults`] on the same `threads` budget. For
+    /// pure task functions the outputs are identical on both paths, which
+    /// is what lets protocols expose a fault-injected run mode without
+    /// forking their stage logic. Returns the retry count alongside the
+    /// outputs and stage report.
     pub fn run_stage_faulted<T, R, F>(
         &self,
         inputs: Vec<T>,
@@ -141,11 +141,41 @@ impl MapReduce {
         R: Send,
         F: Fn(usize, T) -> R + Sync,
     {
-        if plan.fail_prob <= 0.0 {
+        if !plan.active() {
             let (out, rep) = self.run_stage(inputs, f);
             return Ok((out, rep, 0));
         }
-        fault::run_stage_with_faults(inputs, plan, f)
+        fault::run_stage_with_faults(inputs, plan, self.threads, f)
+    }
+
+    /// [`MapReduce::run_stage`] under a [`fault::FaultPlan`] *and* a
+    /// [`fault::RecoveryPolicy`]: crashed machines become `None` outputs
+    /// instead of stage aborts (except under `Retry`, which keeps the
+    /// abort-on-exhaustion contract). Inactive plans take the plain
+    /// `run_stage` path with every output present.
+    pub fn run_stage_policied<T, R, F>(
+        &self,
+        inputs: Vec<T>,
+        plan: &fault::FaultPlan,
+        policy: fault::RecoveryPolicy,
+        f: F,
+    ) -> Result<fault::PoliciedStage<R>, fault::StageFailed>
+    where
+        T: Send + Clone,
+        R: Send,
+        F: Fn(usize, T) -> R + Sync,
+    {
+        if !plan.active() {
+            let (out, report) = self.run_stage(inputs, f);
+            return Ok(fault::PoliciedStage {
+                outputs: out.into_iter().map(Some).collect(),
+                report,
+                retries: 0,
+                crashed: Vec::new(),
+                straggled: Vec::new(),
+            });
+        }
+        fault::run_stage_policied(inputs, plan, policy, self.threads, f)
     }
 }
 
@@ -204,6 +234,26 @@ mod tests {
             .unwrap();
         assert_eq!(faulty_out, clean, "retries must not change outputs");
         assert!(retries > 0, "p=0.4 over 40 tasks must retry sometimes");
+    }
+
+    #[test]
+    fn crash_only_plan_is_not_silently_ignored() {
+        // fail_prob == 0 but a pinned crash: the faulted path must engage
+        // (the old gate keyed on fail_prob alone and would skip it).
+        let mr = MapReduce::new(2);
+        let plan = fault::FaultPlan::none().crash_tasks(vec![1]);
+        let err = mr.run_stage_faulted((0..4).collect(), &plan, |_, x: i32| x).unwrap_err();
+        assert_eq!(err.task, 1);
+        let stage = mr
+            .run_stage_policied(
+                (0..4).collect(),
+                &plan,
+                fault::RecoveryPolicy::SurvivorMerge,
+                |_, x: i32| x,
+            )
+            .unwrap();
+        assert_eq!(stage.crashed, vec![1]);
+        assert_eq!(stage.outputs[1], None);
     }
 
     #[test]

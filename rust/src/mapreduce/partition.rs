@@ -53,6 +53,32 @@ impl PartitionStrategy {
             PartitionStrategy::Contiguous => contiguous_partition(ground, m),
         }
     }
+
+    /// Split `ground` into `m` shards with multiplicity `c`: every element
+    /// lands on exactly `c` *distinct* machines (Lucic et al., 1605.09619).
+    /// `c = 1` delegates to [`PartitionStrategy::split`] and is bit-identical
+    /// to it — same RNG stream, same shards — so existing runs are unchanged.
+    pub fn split_replicated(
+        &self,
+        ground: &[usize],
+        m: usize,
+        c: usize,
+        rng: &mut Rng,
+    ) -> Vec<Vec<usize>> {
+        assert!(m >= 1);
+        assert!(
+            (1..=m).contains(&c),
+            "multiplicity {c} must be in 1..={m} (machines)"
+        );
+        if c == 1 {
+            return self.split(ground, m, rng);
+        }
+        match self {
+            PartitionStrategy::Random => random_replicated(ground, m, c, rng),
+            PartitionStrategy::Balanced => balanced_replicated(ground, m, c, rng),
+            PartitionStrategy::Contiguous => contiguous_replicated(ground, m, c),
+        }
+    }
 }
 
 /// Uniformly random assignment of each element to one of `m` machines.
@@ -98,6 +124,54 @@ pub fn contiguous_partition(ground: &[usize], m: usize) -> Vec<Vec<usize>> {
     shards
 }
 
+/// Uniform replicated assignment: each element is sent to `c` distinct
+/// machines drawn uniformly without replacement (Floyd's sampling), so the
+/// per-element replica sets are independent across elements.
+pub fn random_replicated(ground: &[usize], m: usize, c: usize, rng: &mut Rng) -> Vec<Vec<usize>> {
+    assert!(m >= 1 && (1..=m).contains(&c));
+    let mut shards = vec![Vec::with_capacity(ground.len() * c / m + 1); m];
+    for &e in ground {
+        for machine in rng.sample_indices(m, c) {
+            shards[machine].push(e);
+        }
+    }
+    shards
+}
+
+/// Balanced replicated assignment: shuffle once, then deal each element's
+/// `c` replicas into consecutive machine slots `(i*c + r) % m`. Replica
+/// machines are distinct because `c <= m`, and every machine receives
+/// `n*c/m` elements up to ±1 (slot dealing is exactly round-robin over the
+/// `n*c` replica stream).
+pub fn balanced_replicated(ground: &[usize], m: usize, c: usize, rng: &mut Rng) -> Vec<Vec<usize>> {
+    assert!(m >= 1 && (1..=m).contains(&c));
+    let mut ids = ground.to_vec();
+    rng.shuffle(&mut ids);
+    let mut shards = vec![Vec::with_capacity(ids.len() * c / m + 1); m];
+    for (i, e) in ids.into_iter().enumerate() {
+        for r in 0..c {
+            shards[(i * c + r) % m].push(e);
+        }
+    }
+    shards
+}
+
+/// Contiguous replicated assignment: the `m` base slices of the contiguous
+/// partition, with base slice `j` chained onto machines `(j + r) % m` for
+/// `r in 0..c` — the classic chained-replication layout, so any `c - 1`
+/// machine crashes still leave every slice on some survivor.
+pub fn contiguous_replicated(ground: &[usize], m: usize, c: usize) -> Vec<Vec<usize>> {
+    assert!(m >= 1 && (1..=m).contains(&c));
+    let base = contiguous_partition(ground, m);
+    let mut shards = vec![Vec::new(); m];
+    for (j, slice) in base.iter().enumerate() {
+        for r in 0..c {
+            shards[(j + r) % m].extend_from_slice(slice);
+        }
+    }
+    shards
+}
+
 /// Verify that `shards` is an exact partition of `ground` (diagnostics and
 /// property tests).
 pub fn check_is_partition(ground: &[usize], shards: &[Vec<usize>]) -> bool {
@@ -106,6 +180,24 @@ pub fn check_is_partition(ground: &[usize], shards: &[Vec<usize>]) -> bool {
     let mut g = ground.to_vec();
     g.sort_unstable();
     all == g
+}
+
+/// Verify that `shards` is an exact `c`-replicated partition of `ground`:
+/// every element appears on exactly `c` machines and at most once per
+/// machine. `c = 1` reduces to [`check_is_partition`].
+pub fn check_replicated_partition(ground: &[usize], shards: &[Vec<usize>], c: usize) -> bool {
+    use std::collections::HashMap;
+    let mut copies: HashMap<usize, usize> = HashMap::with_capacity(ground.len());
+    for shard in shards {
+        let mut in_shard = std::collections::HashSet::with_capacity(shard.len());
+        for &e in shard {
+            if !in_shard.insert(e) {
+                return false; // duplicate within one machine
+            }
+            *copies.entry(e).or_insert(0) += 1;
+        }
+    }
+    copies.len() == ground.len() && ground.iter().all(|e| copies.get(e) == Some(&c))
 }
 
 #[cfg(test)]
@@ -205,6 +297,83 @@ mod tests {
             );
             assert!(hi - lo <= 1, "n={n} m={m}: sizes {sizes:?}");
         }
+    }
+
+    #[test]
+    fn replicated_c1_bit_identical_to_split() {
+        let ground: Vec<usize> = (0..157).map(|i| i * 2 + 3).collect();
+        for strat in PartitionStrategy::ALL {
+            let plain = strat.split(&ground, 9, &mut Rng::new(31));
+            let rep = strat.split_replicated(&ground, 9, 1, &mut Rng::new(31));
+            assert_eq!(plain, rep, "{}: c=1 must not change the split", strat.label());
+        }
+    }
+
+    #[test]
+    fn replicated_every_element_on_exactly_c_machines() {
+        let ground: Vec<usize> = (0..211).map(|i| i * 3 + 1).rev().collect();
+        for strat in PartitionStrategy::ALL {
+            for (m, c) in [(6, 2), (6, 3), (6, 6), (10, 4), (2, 2)] {
+                let shards = strat.split_replicated(&ground, m, c, &mut Rng::new(5));
+                assert_eq!(shards.len(), m);
+                assert!(
+                    check_replicated_partition(&ground, &shards, c),
+                    "{} m={m} c={c}",
+                    strat.label()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn replicated_deterministic_per_seed() {
+        let ground: Vec<usize> = (0..120).collect();
+        for strat in PartitionStrategy::ALL {
+            let a = strat.split_replicated(&ground, 7, 3, &mut Rng::new(13));
+            let b = strat.split_replicated(&ground, 7, 3, &mut Rng::new(13));
+            assert_eq!(a, b, "{} not deterministic under replication", strat.label());
+        }
+    }
+
+    #[test]
+    fn balanced_replicated_shard_sizes_differ_by_at_most_one() {
+        for (n, m, c) in [(103, 10, 2), (64, 8, 3), (30, 6, 5), (7, 3, 2)] {
+            let ground: Vec<usize> = (0..n).collect();
+            let shards =
+                PartitionStrategy::Balanced.split_replicated(&ground, m, c, &mut Rng::new(4));
+            let sizes: Vec<usize> = shards.iter().map(|s| s.len()).collect();
+            let (lo, hi) = (*sizes.iter().min().unwrap(), *sizes.iter().max().unwrap());
+            assert!(hi - lo <= 1, "n={n} m={m} c={c}: sizes {sizes:?}");
+        }
+    }
+
+    #[test]
+    fn contiguous_replicated_survives_any_c_minus_1_crashes() {
+        // chained replication: dropping any c-1 machines keeps full coverage
+        let ground: Vec<usize> = (0..60).collect();
+        let (m, c) = (6, 3);
+        let shards = contiguous_replicated(&ground, m, c);
+        for a in 0..m {
+            for b in 0..m {
+                if a == b {
+                    continue;
+                }
+                let survivors: HashSet<usize> = shards
+                    .iter()
+                    .enumerate()
+                    .filter(|(i, _)| *i != a && *i != b)
+                    .flat_map(|(_, s)| s.iter().copied())
+                    .collect();
+                assert_eq!(survivors.len(), ground.len(), "crash {{{a},{b}}} lost data");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "multiplicity")]
+    fn replication_cannot_exceed_machine_count() {
+        let ground: Vec<usize> = (0..10).collect();
+        PartitionStrategy::Random.split_replicated(&ground, 3, 4, &mut Rng::new(1));
     }
 
     #[test]

@@ -20,10 +20,16 @@
 //!   [`ErrorKind::Overloaded`] reply — the daemon never buffers unbounded
 //!   work, matching the bounded-memory discipline of the `stream` subsystem.
 //!
+//! An optional per-query **queue-wait deadline** ([`Admission::with_deadline`])
+//! bounds how long a waiter may sit in the queue: when it expires the query
+//! is shed with a typed `Overloaded` reply instead of blocking a connection
+//! handler indefinitely behind a long-running query.
+//!
 //! [`RunSpec::oracle_threads`]: crate::coordinator::protocol::RunSpec::oracle_threads
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 use super::wire::{ErrorKind, WireError};
 
@@ -47,10 +53,14 @@ struct Inner {
     max_concurrency: usize,
     queue_depth: usize,
     threads: usize,
+    /// Default queue-wait bound applied by [`Admission::admit`]; `None`
+    /// waits indefinitely (the pre-deadline behavior).
+    deadline: Option<Duration>,
     line: Mutex<Waitline>,
     cv: Condvar,
     admitted: AtomicU64,
     shed: AtomicU64,
+    deadline_expired: AtomicU64,
 }
 
 /// Counter snapshot for the `stats` reply.
@@ -64,6 +74,8 @@ pub struct AdmissionStats {
     pub peak_in_flight: usize,
     pub admitted: u64,
     pub shed: u64,
+    /// Queries shed because their queue wait exceeded the deadline.
+    pub deadline_expired: u64,
 }
 
 /// Shared admission gate; clone-cheap via `Arc`.
@@ -83,6 +95,7 @@ impl Admission {
                 max_concurrency,
                 queue_depth,
                 threads: threads.max(1),
+                deadline: None,
                 line: Mutex::new(Waitline {
                     in_flight: 0,
                     waiting: 0,
@@ -92,8 +105,19 @@ impl Admission {
                 cv: Condvar::new(),
                 admitted: AtomicU64::new(0),
                 shed: AtomicU64::new(0),
+                deadline_expired: AtomicU64::new(0),
             }),
         }
+    }
+
+    /// Set the default queue-wait deadline used by [`Admission::admit`]
+    /// (`None` = wait indefinitely). Call before sharing the gate — it
+    /// configures construction, not live traffic.
+    pub fn with_deadline(mut self, deadline: Option<Duration>) -> Admission {
+        Arc::get_mut(&mut self.inner)
+            .expect("set the admission deadline before cloning the gate")
+            .deadline = deadline;
+        self
     }
 
     /// Thread width every admitted query runs at.
@@ -102,7 +126,15 @@ impl Admission {
     }
 
     /// Block until a slot frees (bounded by `queue_depth` waiters), or shed.
+    /// Uses the gate's default deadline (see [`Admission::with_deadline`]).
     pub fn admit(&self) -> Result<Permit, WireError> {
+        self.admit_deadline(self.inner.deadline)
+    }
+
+    /// [`Admission::admit`] with an explicit per-query queue-wait bound:
+    /// a waiter still queued when `deadline` elapses is shed with a typed
+    /// `Overloaded` reply (counted in `deadline_expired`, not `shed`).
+    pub fn admit_deadline(&self, deadline: Option<Duration>) -> Result<Permit, WireError> {
         let inner = &self.inner;
         let mut line = inner.line.lock().unwrap();
         if line.shutting_down {
@@ -119,9 +151,27 @@ impl Admission {
                     ),
                 ));
             }
+            let enqueued = Instant::now();
             line.waiting += 1;
             while line.in_flight >= inner.max_concurrency && !line.shutting_down {
-                line = inner.cv.wait(line).unwrap();
+                match deadline {
+                    None => line = inner.cv.wait(line).unwrap(),
+                    Some(d) => {
+                        let Some(left) = d.checked_sub(enqueued.elapsed()) else {
+                            line.waiting -= 1;
+                            drop(line);
+                            inner.deadline_expired.fetch_add(1, Ordering::Relaxed);
+                            return Err(WireError::new(
+                                ErrorKind::Overloaded,
+                                format!(
+                                    "queue-wait deadline expired after {:.0?}; retry later",
+                                    d
+                                ),
+                            ));
+                        };
+                        line = inner.cv.wait_timeout(line, left).unwrap().0;
+                    }
+                }
             }
             line.waiting -= 1;
             if line.shutting_down {
@@ -155,6 +205,7 @@ impl Admission {
             peak_in_flight: line.peak_in_flight,
             admitted: self.inner.admitted.load(Ordering::Relaxed),
             shed: self.inner.shed.load(Ordering::Relaxed),
+            deadline_expired: self.inner.deadline_expired.load(Ordering::Relaxed),
         }
     }
 }
@@ -245,6 +296,36 @@ mod tests {
         assert_eq!(got, 4, "solo query gets the whole budget");
         assert_eq!(adm.stats().admitted, 2);
         assert_eq!(adm.stats().shed, 0);
+    }
+
+    #[test]
+    fn deadline_expiry_sheds_with_typed_overloaded() {
+        let adm = Admission::new(4, 1, 4).with_deadline(Some(Duration::from_millis(20)));
+        let _permit = adm.admit().unwrap();
+        // slot held, queue has room => this waiter parks, then times out
+        let err = adm.admit().unwrap_err();
+        assert_eq!(err.kind, ErrorKind::Overloaded);
+        assert!(err.msg.contains("deadline"), "unexpected message {:?}", err.msg);
+        let s = adm.stats();
+        assert_eq!(s.waiting, 0, "expired waiter must leave the queue");
+        assert_eq!(s.deadline_expired, 1);
+        assert_eq!(s.shed, 0, "deadline expiry counted separately from queue-full sheds");
+        assert_eq!(s.in_flight, 1);
+    }
+
+    #[test]
+    fn deadline_irrelevant_when_slot_free_and_explicit_override_wins() {
+        let adm = Admission::new(4, 1, 1).with_deadline(Some(Duration::from_millis(1)));
+        // free slot: admitted immediately, deadline never consulted
+        let permit = adm.admit_deadline(Some(Duration::ZERO)).unwrap();
+        // held slot + zero explicit deadline: immediate typed shed
+        let err = adm.admit_deadline(Some(Duration::ZERO)).unwrap_err();
+        assert_eq!(err.kind, ErrorKind::Overloaded);
+        assert_eq!(adm.stats().deadline_expired, 1);
+        drop(permit);
+        // released: the default deadline only bounds *waiting*, not running
+        let _p = adm.admit().unwrap();
+        assert_eq!(adm.stats().admitted, 2);
     }
 
     #[test]

@@ -47,6 +47,10 @@ pub struct ServeSpec {
     pub dataset: String,
     /// Latency ring-buffer capacity (`serve.ring`).
     pub ring: usize,
+    /// Queue-wait deadline in milliseconds (`serve.deadline_ms`); a query
+    /// still waiting for a slot after this long is shed with a typed
+    /// `overloaded` reply. 0 = wait indefinitely (the default).
+    pub deadline_ms: u64,
 }
 
 impl Default for ServeSpec {
@@ -58,6 +62,7 @@ impl Default for ServeSpec {
             threads: 4,
             dataset: "demo".into(),
             ring: DEFAULT_RING,
+            deadline_ms: 0,
         }
     }
 }
@@ -94,6 +99,10 @@ impl ServeSpec {
                     spec.dataset = value.as_str().ok_or("serve.dataset: string")?.into()
                 }
                 "ring" => spec.ring = value.as_usize().ok_or("serve.ring: int")?,
+                "deadline_ms" => {
+                    spec.deadline_ms =
+                        value.as_usize().ok_or("serve.deadline_ms: int")? as u64
+                }
                 other => return Err(format!("unknown serve key \"serve.{other}\"")),
             }
         }
@@ -141,7 +150,10 @@ impl Server {
     /// Bind and start serving with freshly built admission/metrics.
     pub fn start(spec: &ServeSpec, state: Arc<WarmState>) -> Result<Server, String> {
         spec.validate()?;
-        let admission = Admission::new(spec.threads, spec.max_concurrency, spec.queue_depth);
+        let deadline =
+            (spec.deadline_ms > 0).then(|| std::time::Duration::from_millis(spec.deadline_ms));
+        let admission = Admission::new(spec.threads, spec.max_concurrency, spec.queue_depth)
+            .with_deadline(deadline);
         let metrics = Arc::new(ServeMetrics::new(spec.ring));
         Server::with_parts(spec, state, admission, metrics)
     }
@@ -375,6 +387,7 @@ fn stats_json(shared: &Shared) -> Json {
                 ("peak_in_flight", Json::num(a.peak_in_flight as f64)),
                 ("admitted", Json::num(a.admitted as f64)),
                 ("shed", Json::num(a.shed as f64)),
+                ("deadline_expired", Json::num(a.deadline_expired as f64)),
             ]),
         ),
         (
@@ -475,6 +488,7 @@ mod tests {
             threads = 16
             dataset = "tiny"
             ring = 512
+            deadline_ms = 250
             "#,
         )
         .unwrap();
@@ -484,6 +498,14 @@ mod tests {
         assert_eq!(spec.threads, 16);
         assert_eq!(spec.dataset, "tiny");
         assert_eq!(spec.ring, 512);
+        assert_eq!(spec.deadline_ms, 250);
+    }
+
+    #[test]
+    fn deadline_zero_means_wait_forever() {
+        let spec = ServeSpec::from_toml("[serve]\ndeadline_ms = 0\n").unwrap();
+        assert_eq!(spec.deadline_ms, 0);
+        spec.validate().unwrap();
     }
 
     #[test]

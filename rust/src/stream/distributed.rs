@@ -30,10 +30,10 @@ use super::source::VecSource;
 use crate::algorithms;
 use crate::constraints::cardinality::Cardinality;
 use crate::constraints::Constraint;
-use crate::coordinator::metrics::{RunMetrics, StreamStats};
+use crate::coordinator::metrics::{FaultStats, RunMetrics, StreamStats};
 use crate::coordinator::protocol::{Protocol, RunSpec};
 use crate::coordinator::Problem;
-use crate::mapreduce::fault::{FaultPlan, StageFailed};
+use crate::mapreduce::fault::{FaultPlan, RecoveryPolicy, StageFailed};
 use crate::mapreduce::{JobReport, MapReduce};
 use crate::util::rng::Rng;
 
@@ -42,8 +42,14 @@ pub struct StreamGreedi;
 
 impl Protocol for StreamGreedi {
     fn run(&self, problem: &dyn Problem, spec: &RunSpec) -> RunMetrics {
-        self.run_with_faults(problem, spec, &FaultPlan::none())
-            .expect("fault-free run cannot exhaust attempts")
+        let plan = spec.fault.clone().unwrap_or_else(FaultPlan::none);
+        self.run_with_faults(problem, spec, &plan)
+            .unwrap_or_else(|e| {
+                panic!(
+                    "stream_greedi aborted: {e} (policy=retry turns machine crashes into \
+                     job aborts; use drop_shard or survivor_merge to recover)"
+                )
+            })
     }
 
     fn name(&self) -> &'static str {
@@ -65,7 +71,9 @@ impl StreamGreedi {
         let base_rng = Rng::new(spec.seed);
         let mut rng = base_rng.clone();
         let ground = problem.ground();
-        let shards = spec.partition.split(&ground, spec.m, &mut rng);
+        let policy = spec.recovery;
+        let multiplicity = spec.multiplicity.clamp(1, spec.m);
+        let shards = spec.partition.split_replicated(&ground, spec.m, multiplicity, &mut rng);
 
         let engine = MapReduce::new(spec.threads);
         let mut job = JobReport::default();
@@ -78,26 +86,70 @@ impl StreamGreedi {
         // Arrival order is a deterministic per-machine shuffle (the random
         // order the streaming analysis assumes), forked from the base seed
         // so retries replay the identical stream.
-        let inputs: Vec<(usize, Vec<usize>)> = shards.into_iter().enumerate().collect();
+        let inputs: Vec<(usize, Vec<usize>)> = shards.iter().cloned().enumerate().collect();
         let oracle_threads = spec.oracle_threads(inputs.len());
-        let (results, stage1, retries1) =
-            engine.run_stage_faulted(inputs, plan, |_, (i, shard)| {
-                let mut task_rng = base_rng.fork(3_000 + i as u64);
-                let obj = if local_eval {
-                    problem.local(&shard, &mut task_rng)
-                } else {
-                    problem.global()
-                };
-                let mut src = VecSource::shuffled_with(shard, &mut task_rng);
-                sieve_stream(obj.as_ref(), &mut src, kappa, epsilon, batch, oracle_threads)
-            })?;
-        job.stages.push(stage1);
-        let mut oracle_calls: u64 = results.iter().map(|r| r.oracle_calls).sum();
+        // One task body for the sieve stage AND crash recovery: recovery
+        // re-runs a machine with the SAME fork (3000 + i), so a shard
+        // rebuilt in full from survivor replicas replays the identical
+        // stream and reproduces the lost summary bit for bit.
+        let run_sieve = |i: usize, shard: Vec<usize>| {
+            let mut task_rng = base_rng.fork(3_000 + i as u64);
+            let obj = if local_eval {
+                problem.local(&shard, &mut task_rng)
+            } else {
+                problem.global()
+            };
+            let mut src = VecSource::shuffled_with(shard, &mut task_rng);
+            sieve_stream(obj.as_ref(), &mut src, kappa, epsilon, batch, oracle_threads)
+        };
+        let stage1 = engine
+            .run_stage_policied(inputs, plan, policy, |_, (i, shard)| run_sieve(i, shard))?;
+        let mut results = stage1.outputs;
+        let crashed = stage1.crashed;
+        let straggled = stage1.straggled;
+        let retries1 = stage1.retries;
+        job.stages.push(stage1.report);
 
-        // The union of sieve summaries is the only shuffled data — at most
-        // m·candidate_bound(κ, ε) ids, independent of n.
+        // ---- Crash recovery (map machines hold the shard streams) --------
+        let mut recovery_time = 0.0;
+        let mut dropped = 0usize;
+        if !crashed.is_empty() {
+            let surviving: std::collections::HashSet<usize> = shards
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| !crashed.contains(i))
+                .flat_map(|(_, s)| s.iter().copied())
+                .collect();
+            dropped = ground.iter().filter(|e| !surviving.contains(e)).count();
+            if policy == RecoveryPolicy::SurvivorMerge {
+                let rebuilt: Vec<(usize, Vec<usize>)> = crashed
+                    .iter()
+                    .map(|&j| {
+                        let shard: Vec<usize> =
+                            shards[j].iter().copied().filter(|e| surviving.contains(e)).collect();
+                        (j, shard)
+                    })
+                    .filter(|(_, shard)| !shard.is_empty())
+                    .collect();
+                if !rebuilt.is_empty() {
+                    let rebuilt_ids: Vec<usize> = rebuilt.iter().map(|(j, _)| *j).collect();
+                    let (recovered, rec_stage) =
+                        engine.run_stage(rebuilt, |_, (j, shard)| run_sieve(j, shard));
+                    recovery_time = rec_stage.max_task_time;
+                    job.stages.push(rec_stage);
+                    for (j, r) in rebuilt_ids.into_iter().zip(recovered) {
+                        results[j] = Some(r);
+                    }
+                }
+            }
+        }
+
+        let mut oracle_calls: u64 = results.iter().flatten().map(|r| r.oracle_calls).sum();
+
+        // The union of surviving sieve summaries is the only shuffled data —
+        // at most m·candidate_bound(κ, ε) ids, independent of n.
         let mut merged: Vec<usize> = Vec::new();
-        for r in &results {
+        for r in results.iter().flatten() {
             merged.extend_from_slice(&r.union);
         }
         merged.sort_unstable();
@@ -105,12 +157,16 @@ impl StreamGreedi {
         job.record_shuffle(merged.len());
 
         // ---- Stage 2: merge round (single reducer, full thread budget) ---
-        let candidates: Vec<Vec<usize>> = results.iter().map(|r| r.solution.clone()).collect();
+        // The reducer reads shuffle data held at the driver, so it runs
+        // under the transient-failure plan only (no machine crashes).
+        let merge_plan = plan.without_crashes();
+        let candidates: Vec<Vec<usize>> =
+            results.iter().flatten().map(|r| r.solution.clone()).collect();
         let merged_in = merged;
         let algo_name = spec.algorithm.clone();
         let (m, k) = (spec.m, spec.k);
         let merge_threads = spec.oracle_threads(1);
-        let (mut out2, stage2, retries2) = engine.run_stage_faulted(vec![()], plan, |_, ()| {
+        let (mut out2, stage2, retries2) = engine.run_stage_faulted(vec![()], &merge_plan, |_, ()| {
             let mut task_rng = base_rng.fork(4_000);
             let obj = if local_eval {
                 problem.merge(m, &mut task_rng)
@@ -160,13 +216,31 @@ impl StreamGreedi {
 
         // Reported value: always the true global objective.
         let value = problem.global().eval(&solution);
+        // Per-machine vectors keep length m: a machine crashed-and-dropped
+        // reports 0 peak candidates / 0 elements at its slot.
         let stream = StreamStats {
-            peak_live_per_machine: results.iter().map(|r| r.peak_live).collect(),
+            peak_live_per_machine: results
+                .iter()
+                .map(|r| r.as_ref().map_or(0, |r| r.peak_live))
+                .collect(),
             live_bound: candidate_bound(kappa, epsilon),
-            elements_per_machine: results.iter().map(|r| r.elements).collect(),
+            elements_per_machine: results
+                .iter()
+                .map(|r| r.as_ref().map_or(0, |r| r.elements))
+                .collect(),
             batch,
             retries: retries1 + retries2,
         };
+        let fault = plan.active().then(|| FaultStats {
+            policy: policy.label().to_string(),
+            multiplicity,
+            retries: retries1 + retries2,
+            crashed_machines: crashed,
+            straggled_machines: straggled,
+            dropped_elements: dropped,
+            ground_size: ground.len(),
+            recovery_time,
+        });
 
         Ok(RunMetrics {
             name: format!(
@@ -184,6 +258,7 @@ impl StreamGreedi {
             job,
             rounds: 2,
             stream: Some(stream),
+            fault,
         })
     }
 }

@@ -1,0 +1,177 @@
+//! Integration tests for replicated-shard fault tolerance: multiplicity
+//! partitioning + machine crashes + recovery policies, end to end through
+//! the real protocols.
+//!
+//! The headline pin: with multiplicity c = 2, any single machine crash
+//! recovered by `survivor_merge` yields the bit-identical solution (and
+//! `value.to_bits()`) of the fault-free run — replication makes machine
+//! loss invisible, which is the whole point of the subsystem.
+
+use std::sync::Arc;
+
+use greedi::coordinator::protocol::{
+    self, FaultPlan, Protocol, RecoveryPolicy, RunSpec,
+};
+use greedi::coordinator::FacilityProblem;
+use greedi::data::synth::{gaussian_blobs, SynthConfig};
+
+fn problem(n: usize, seed: u64) -> FacilityProblem {
+    let ds = Arc::new(gaussian_blobs(&SynthConfig::tiny_images(n, 8), seed));
+    FacilityProblem::new(&ds)
+}
+
+#[test]
+fn survivor_merge_recovers_any_single_crash_bit_identically() {
+    let p = problem(300, 61);
+    let (m, k) = (4usize, 8usize);
+    let proto = protocol::by_name("greedi").unwrap();
+    let clean_spec = RunSpec::new(m, k).multiplicity(2).seed(11).faults(FaultPlan::none());
+    let clean = proto.run(&p, &clean_spec);
+    for j in 0..m {
+        let spec = clean_spec
+            .clone()
+            .recovery(RecoveryPolicy::SurvivorMerge)
+            .faults(FaultPlan::none().crash_tasks(vec![j]));
+        let r = proto.run(&p, &spec);
+        assert_eq!(r.solution, clean.solution, "crash of machine {j} changed the solution");
+        assert_eq!(
+            r.value.to_bits(),
+            clean.value.to_bits(),
+            "crash of machine {j} changed the value"
+        );
+        let fs = r.fault.as_ref().expect("fault stats under an active plan");
+        assert_eq!(fs.crashed_machines, vec![j]);
+        assert_eq!(fs.dropped_elements, 0, "c=2 keeps every element alive somewhere");
+        assert_eq!(fs.coverage(), 1.0);
+        assert_eq!(fs.multiplicity, 2);
+        assert_eq!(fs.policy, "survivor_merge");
+        assert_eq!(
+            r.job.stages.len(),
+            clean.job.stages.len() + 1,
+            "recovery adds exactly one stage"
+        );
+    }
+}
+
+#[test]
+fn drop_shard_degrades_gracefully_and_reports_lost_coverage() {
+    let p = problem(300, 62);
+    let proto = protocol::by_name("greedi").unwrap();
+    let base = RunSpec::new(4, 8).seed(13);
+    let clean = proto.run(&p, &base);
+    let r = proto.run(
+        &p,
+        &base
+            .clone()
+            .recovery(RecoveryPolicy::DropShard)
+            .faults(FaultPlan::none().crash_tasks(vec![1])),
+    );
+    let fs = r.fault.as_ref().expect("fault stats");
+    assert_eq!(fs.crashed_machines, vec![1]);
+    assert!(fs.dropped_elements > 0, "c=1: a crashed shard is lost outright");
+    assert!(fs.coverage() < 1.0, "coverage {}", fs.coverage());
+    assert!(
+        r.value <= clean.value + 1e-9,
+        "survivors-only run cannot beat the fault-free one: {} vs {}",
+        r.value,
+        clean.value
+    );
+    assert!(r.solution.len() <= 8);
+}
+
+#[test]
+fn retry_policy_is_thread_invariant_and_deterministic() {
+    let p = problem(250, 63);
+    let proto = protocol::by_name("greedi").unwrap();
+    let plan = FaultPlan::new(0.4, 30, 17);
+    let base = RunSpec::new(4, 8).seed(5).faults(plan.clone());
+    let clean = proto.run(&p, &RunSpec::new(4, 8).seed(5).faults(FaultPlan::none()));
+    let serial = proto.run(&p, &base.clone().threads(1));
+    assert_eq!(serial.solution, clean.solution, "retries must not change the output");
+    assert_eq!(serial.value.to_bits(), clean.value.to_bits());
+    let retries = serial.fault.as_ref().expect("fault stats").retries;
+    // Retries per task = the plan's leading streak of failed attempts; the
+    // job runs 4 map tasks plus one merge task (task index 0 of its stage),
+    // so the total is exactly computable from the coin.
+    let streak = |t: usize| (0..30).take_while(|&a| plan.fails(t, a)).count();
+    let expected: usize = (0..4).map(&streak).sum::<usize>() + streak(0);
+    assert_eq!(retries, expected, "retry accounting must match the fault coin");
+    for threads in [2usize, 8] {
+        let par = proto.run(&p, &base.clone().threads(threads));
+        assert_eq!(par.solution, serial.solution, "threads={threads}");
+        assert_eq!(par.value.to_bits(), serial.value.to_bits(), "threads={threads}");
+        assert_eq!(
+            par.fault.as_ref().unwrap().retries,
+            retries,
+            "threads={threads}: retry accounting drifted"
+        );
+    }
+    // same (seed, plan) twice => identical everything
+    let again = proto.run(&p, &base.clone().threads(1));
+    assert_eq!(again.solution, serial.solution);
+    assert_eq!(again.fault.as_ref().unwrap().retries, retries);
+}
+
+#[test]
+fn survivor_merge_holds_for_multiround_and_stream_protocols() {
+    let p = problem(300, 64);
+    for name in ["multiround", "stream_greedi"] {
+        let proto = protocol::by_name(name).unwrap();
+        let clean_spec = RunSpec::new(4, 8).multiplicity(2).seed(21).faults(FaultPlan::none());
+        let clean = proto.run(&p, &clean_spec);
+        let r = proto.run(
+            &p,
+            &clean_spec
+                .clone()
+                .recovery(RecoveryPolicy::SurvivorMerge)
+                .faults(FaultPlan::none().crash_tasks(vec![0])),
+        );
+        assert_eq!(r.solution, clean.solution, "{name}: crash changed the solution");
+        assert_eq!(r.value.to_bits(), clean.value.to_bits(), "{name}");
+        let fs = r.fault.as_ref().expect("fault stats");
+        assert_eq!(fs.crashed_machines, vec![0], "{name}");
+        assert_eq!(fs.dropped_elements, 0, "{name}");
+    }
+}
+
+#[test]
+fn crashes_are_deterministic_from_seed_and_plan() {
+    let p = problem(250, 65);
+    let proto = protocol::by_name("greedi").unwrap();
+    let spec = RunSpec::new(6, 8)
+        .multiplicity(2)
+        .seed(31)
+        .recovery(RecoveryPolicy::DropShard)
+        .faults(FaultPlan::new(0.0, 1, 99).crashes(0.5));
+    let a = proto.run(&p, &spec);
+    let b = proto.run(&p, &spec.clone());
+    let (fa, fb) = (a.fault.as_ref().unwrap(), b.fault.as_ref().unwrap());
+    assert_eq!(fa.crashed_machines, fb.crashed_machines);
+    assert_eq!(fa.dropped_elements, fb.dropped_elements);
+    assert_eq!(a.solution, b.solution);
+    assert_eq!(a.value.to_bits(), b.value.to_bits());
+}
+
+#[test]
+fn stragglers_slow_the_stage_without_changing_results() {
+    let p = problem(300, 66);
+    let proto = protocol::by_name("greedi").unwrap();
+    let clean = proto.run(&p, &RunSpec::new(4, 8).seed(9).faults(FaultPlan::none()));
+    let r = proto.run(
+        &p,
+        &RunSpec::new(4, 8)
+            .seed(9)
+            .faults(FaultPlan::new(0.0, 1, 7).stragglers(1.0, 1_000.0)),
+    );
+    assert_eq!(r.solution, clean.solution, "stragglers must not touch outputs");
+    assert_eq!(r.value.to_bits(), clean.value.to_bits());
+    let fs = r.fault.as_ref().expect("fault stats");
+    assert_eq!(fs.straggled_machines, vec![0, 1, 2, 3], "p=1.0 straggles every machine");
+    assert!(fs.crashed_machines.is_empty());
+    assert!(
+        r.job.stages[0].max_task_time > clean.job.stages[0].max_task_time * 10.0,
+        "×1000 straggle factor must dominate timing noise: {} vs {}",
+        r.job.stages[0].max_task_time,
+        clean.job.stages[0].max_task_time
+    );
+}

@@ -1,0 +1,117 @@
+//! Shared property harness for partitioning: every [`PartitionStrategy`] ×
+//! machine count × multiplicity is pushed through the same four invariants:
+//!
+//! 1. every element lands on **exactly c distinct machines**;
+//! 2. no element appears twice on one machine;
+//! 3. the split is deterministic given the seed;
+//! 4. `c = 1` is bit-identical to the un-replicated `split` (so turning the
+//!    multiplicity knob off reproduces every pre-existing run exactly).
+
+use std::collections::{HashMap, HashSet};
+
+use greedi::mapreduce::partition::{check_replicated_partition, PartitionStrategy};
+use greedi::util::rng::Rng;
+
+/// The one checker every (strategy, m, c) cell goes through.
+fn assert_replication_properties(
+    strat: PartitionStrategy,
+    ground: &[usize],
+    m: usize,
+    c: usize,
+    seed: u64,
+) {
+    let label = format!("{} n={} m={m} c={c}", strat.label(), ground.len());
+    let shards = strat.split_replicated(ground, m, c, &mut Rng::new(seed));
+    assert_eq!(shards.len(), m, "{label}: wrong machine count");
+
+    // 1 + 2: exactly c copies, all on distinct machines.
+    assert!(
+        check_replicated_partition(ground, &shards, c),
+        "{label}: not an exact c-replicated partition"
+    );
+    let mut owners: HashMap<usize, HashSet<usize>> = HashMap::new();
+    for (i, shard) in shards.iter().enumerate() {
+        for &e in shard {
+            owners.entry(e).or_default().insert(i);
+        }
+    }
+    for &e in ground {
+        assert_eq!(
+            owners.get(&e).map(HashSet::len),
+            Some(c),
+            "{label}: element {e} not on exactly {c} distinct machines"
+        );
+    }
+
+    // 3: same seed => same shards; the replica volume is exactly n*c.
+    let again = strat.split_replicated(ground, m, c, &mut Rng::new(seed));
+    assert_eq!(shards, again, "{label}: split is not deterministic per seed");
+    let volume: usize = shards.iter().map(Vec::len).sum();
+    assert_eq!(volume, ground.len() * c, "{label}: replica volume drifted");
+
+    // 4: multiplicity 1 collapses to the plain split, bit for bit.
+    if c == 1 {
+        let plain = strat.split(ground, m, &mut Rng::new(seed));
+        assert_eq!(shards, plain, "{label}: c=1 must equal split()");
+    }
+}
+
+#[test]
+fn every_strategy_m_c_cell_holds_the_invariants() {
+    // non-contiguous, descending ids to rule out positional luck
+    let ground: Vec<usize> = (0..257).map(|i| i * 3 + 1).rev().collect();
+    for strat in PartitionStrategy::ALL {
+        for m in [1usize, 2, 5, 9, 16] {
+            for c in 1..=m.min(4) {
+                assert_replication_properties(strat, &ground, m, c, 71);
+            }
+        }
+    }
+}
+
+#[test]
+fn full_replication_puts_everything_everywhere() {
+    let ground: Vec<usize> = (0..40).collect();
+    for strat in PartitionStrategy::ALL {
+        let m = 5;
+        let shards = strat.split_replicated(&ground, m, m, &mut Rng::new(3));
+        for (i, shard) in shards.iter().enumerate() {
+            let s: HashSet<usize> = shard.iter().copied().collect();
+            assert_eq!(
+                s.len(),
+                ground.len(),
+                "{} c=m: machine {i} must hold the whole ground set",
+                strat.label()
+            );
+        }
+        assert_replication_properties(strat, &ground, m, m, 3);
+    }
+}
+
+#[test]
+fn randomized_strategies_respond_to_the_seed() {
+    let ground: Vec<usize> = (0..300).collect();
+    for strat in [PartitionStrategy::Random, PartitionStrategy::Balanced] {
+        let a = strat.split_replicated(&ground, 8, 2, &mut Rng::new(21));
+        let b = strat.split_replicated(&ground, 8, 2, &mut Rng::new(22));
+        assert_ne!(a, b, "{}: replicated split ignores the seed", strat.label());
+    }
+    // contiguous has no randomness: any seed gives the same layout
+    let a = PartitionStrategy::Contiguous.split_replicated(&ground, 8, 2, &mut Rng::new(21));
+    let b = PartitionStrategy::Contiguous.split_replicated(&ground, 8, 2, &mut Rng::new(22));
+    assert_eq!(a, b, "contiguous replication must be seed-independent");
+}
+
+#[test]
+fn small_grounds_and_edge_shapes_still_partition() {
+    for strat in PartitionStrategy::ALL {
+        // empty ground: m empty shards, any c <= m
+        let shards = strat.split_replicated(&[], 4, 2, &mut Rng::new(1));
+        assert_eq!(shards.len(), 4);
+        assert!(shards.iter().all(Vec::is_empty), "{}", strat.label());
+        // fewer elements than machines
+        assert_replication_properties(strat, &[7, 9], 6, 2, 5);
+        // single element, replicated everywhere
+        assert_replication_properties(strat, &[42], 3, 3, 5);
+    }
+}
