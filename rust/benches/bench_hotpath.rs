@@ -340,8 +340,50 @@ fn main() {
         black_box(inc.logdet())
     });
 
-    // ---- 4. protocol end-to-end --------------------------------------------
     let problem = FacilityProblem::new(&ds);
+
+    // ---- 3b. trace overhead -------------------------------------------------
+    // Pins the observability contract: the disabled path is one relaxed
+    // load + branch (no allocation — "span disabled" must sit within noise
+    // of the empty loop), and a fully traced protocol run stays close to
+    // its untraced twin. The trace file goes to a temp path we remove.
+    {
+        use greedi::util::trace;
+        trace::disable();
+        b.bench("trace: span disabled, x10k", || {
+            for i in 0..10_000u64 {
+                let _sp = trace::span_with("bench.noop", || vec![("i", i.into())]);
+                black_box(i);
+            }
+        });
+        b.bench("trace: empty loop, x10k", || {
+            for i in 0..10_000u64 {
+                black_box(i);
+            }
+        });
+        b.bench("protocol: greedi 2-round untraced (m=8)", || {
+            black_box(Greedi.run(&problem, &RunSpec::new(8, k).seed(1)).value)
+        });
+        let tpath = std::env::temp_dir().join(format!("greedi_bench_trace_{}", std::process::id()));
+        trace::enable(&tpath);
+        b.bench("trace: span enabled, x10k", || {
+            for i in 0..10_000u64 {
+                let _sp = trace::span_with("bench.noop", || vec![("i", i.into())]);
+                black_box(i);
+            }
+            trace::clear_events();
+        });
+        b.bench("protocol: greedi 2-round traced (m=8)", || {
+            let v = Greedi.run(&problem, &RunSpec::new(8, k).seed(1)).value;
+            trace::clear_events();
+            black_box(v)
+        });
+        trace::disable();
+        trace::clear_events();
+        let _ = std::fs::remove_file(&tpath);
+    }
+
+    // ---- 4. protocol end-to-end --------------------------------------------
     b.bench("protocol: centralized lazy greedy", || {
         black_box(centralized(&problem, k, "lazy", 1).value)
     });
@@ -411,6 +453,15 @@ fn main() {
         "protocol: greedi 2-round (m=8)",
     ) {
         println!("greedi wallclock speedup vs centralized (1 core, real time): {s:.2}x");
+    }
+    if let Some(s) = b.speedup("trace: span disabled, x10k", "trace: empty loop, x10k") {
+        println!("disabled trace span overhead vs empty loop: {s:.2}x (≈1.0 = branch-only)");
+    }
+    if let Some(s) = b.speedup(
+        "protocol: greedi 2-round traced (m=8)",
+        "protocol: greedi 2-round untraced (m=8)",
+    ) {
+        println!("traced greedi run vs untraced: {s:.2}x");
     }
 
     // GREEDI_BENCH_JSON=path dumps `op -> ns/iter` for the CI perf trail.

@@ -90,6 +90,9 @@ pub struct ExperimentConfig {
     /// Repetitions (figures show mean ± std).
     pub trials: usize,
     pub seed: u64,
+    /// Structured-trace output path (`util::trace`); `None` leaves tracing
+    /// off unless `GREEDI_TRACE` / `--trace` asks for it.
+    pub trace: Option<String>,
 }
 
 impl Default for ExperimentConfig {
@@ -113,6 +116,7 @@ impl Default for ExperimentConfig {
             epsilon: 0.5,
             trials: 3,
             seed: 42,
+            trace: None,
         }
     }
 }
@@ -172,6 +176,7 @@ impl ExperimentConfig {
                 "epsilon" => cfg.epsilon = value.as_f64().ok_or("epsilon: float")?,
                 "trials" => cfg.trials = value.as_usize().ok_or("trials: int")?,
                 "seed" => cfg.seed = value.as_i64().ok_or("seed: int")? as u64,
+                "trace" => cfg.trace = Some(value.as_str().ok_or("trace: string")?.into()),
                 // the [serve] section belongs to serve::ServeSpec — one
                 // preset file can carry both; ServeSpec::from_doc enforces
                 // the same unknown-key discipline over its own keys
@@ -276,6 +281,14 @@ mod tests {
     #[test]
     fn unknown_key_rejected() {
         assert!(ExperimentConfig::from_toml("bogus = 1").is_err());
+    }
+
+    #[test]
+    fn trace_key_parses() {
+        let cfg = ExperimentConfig::from_toml(r#"trace = "/tmp/run.trace.json""#).unwrap();
+        assert_eq!(cfg.trace.as_deref(), Some("/tmp/run.trace.json"));
+        assert_eq!(ExperimentConfig::from_toml("").unwrap().trace, None);
+        assert!(ExperimentConfig::from_toml("trace = 3").is_err());
     }
 
     #[test]

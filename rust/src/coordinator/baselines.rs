@@ -18,6 +18,7 @@ use crate::algorithms::{self};
 use crate::constraints::cardinality::Cardinality;
 use crate::mapreduce::{JobReport, MapReduce};
 use crate::util::rng::Rng;
+use crate::util::trace;
 
 /// Baseline protocol selector.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -60,6 +61,9 @@ impl Protocol for Baseline {
     /// Run the baseline under `spec`. `spec.local_eval` mirrors GreeDi's
     /// decomposable mode so comparisons stay apples-to-apples.
     fn run(&self, problem: &dyn Problem, spec: &RunSpec) -> RunMetrics {
+        let _proto_span = trace::span_with("protocol.baseline", || {
+            vec![("which", self.name().into()), ("m", spec.m.into()), ("k", spec.k.into())]
+        });
         let (m, k) = (spec.m, spec.k);
         let local_eval = spec.local_eval;
         let base_rng = Rng::new(spec.seed);

@@ -27,6 +27,7 @@ use crate::constraints::Constraint;
 use crate::mapreduce::fault::{FaultPlan, RecoveryPolicy};
 use crate::mapreduce::{JobReport, MapReduce};
 use crate::util::rng::Rng;
+use crate::util::trace;
 
 pub use crate::mapreduce::partition::PartitionStrategy;
 
@@ -71,6 +72,9 @@ impl Greedi {
         round2: &dyn Constraint,
         spec: &RunSpec,
     ) -> RunMetrics {
+        let _proto_span = trace::span_with("protocol.greedi", || {
+            vec![("m", spec.m.into()), ("k", spec.k.into()), ("threads", spec.threads.into())]
+        });
         let base_rng = Rng::new(spec.seed);
         let mut rng = base_rng.clone();
         let ground = problem.ground();
@@ -103,6 +107,7 @@ impl Greedi {
             };
             algo.maximize_threaded(obj.as_ref(), &shard, round1, &mut task_rng, oracle_threads)
         };
+        let round1_span = trace::span_with("greedi.round1", || vec![("machines", spec.m.into())]);
         let stage1 = engine
             .run_stage_policied(inputs, &plan, policy, |_, (i, shard)| run_machine(i, shard))
             .unwrap_or_else(|e| {
@@ -116,11 +121,14 @@ impl Greedi {
         let straggled = stage1.straggled;
         let mut fault_retries = stage1.retries;
         job.stages.push(stage1.report);
+        drop(round1_span);
 
         // ---- Crash recovery ----------------------------------------------
         let mut recovery_time = 0.0;
         let mut dropped = 0usize;
         if !crashed.is_empty() {
+            let _rec_span =
+                trace::span_with("greedi.recovery", || vec![("crashed", crashed.len().into())]);
             // Elements still held by some surviving machine.
             let surviving: std::collections::HashSet<usize> = shards
                 .iter()
@@ -181,6 +189,8 @@ impl Greedi {
         let m = spec.m;
         // The merge round is a single reducer — it gets the whole budget.
         let merge_threads = spec.oracle_threads(1);
+        let _merge_span =
+            trace::span_with("greedi.merge", || vec![("candidates", merged.len().into())]);
         let (mut round2_out, stage2, merge_retries) = engine
             .run_stage_faulted(vec![()], &merge_plan, |_, ()| {
             let mut task_rng = base_rng.fork(2000);
@@ -229,6 +239,7 @@ impl Greedi {
         fault_retries += merge_retries;
         let (solution, extra) = round2_out.pop().unwrap();
         oracle_calls += extra;
+        drop(_merge_span);
 
         // Final reported value: always the true global objective.
         let value = problem.global().eval(&solution);
@@ -292,6 +303,9 @@ pub fn centralized_threaded(
     seed: u64,
     threads: usize,
 ) -> RunMetrics {
+    let _proto_span = trace::span_with("protocol.centralized", || {
+        vec![("k", k.into()), ("threads", threads.into())]
+    });
     let engine = MapReduce::new(1);
     let mut job = JobReport::default();
     let ground = problem.ground();

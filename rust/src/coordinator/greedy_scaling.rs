@@ -20,6 +20,7 @@ use super::protocol::{Protocol, RunSpec};
 use super::Problem;
 use crate::mapreduce::{JobReport, MapReduce, StageReport};
 use crate::util::rng::Rng;
+use crate::util::trace;
 
 /// The multi-round threshold-greedy protocol.
 pub struct GreedyScaling;
@@ -30,6 +31,9 @@ impl Protocol for GreedyScaling {
     }
 
     fn run(&self, problem: &dyn Problem, spec: &RunSpec) -> RunMetrics {
+        let _proto_span = trace::span_with("protocol.greedy_scaling", || {
+            vec![("m", spec.m.into()), ("k", spec.k.into())]
+        });
         let (k, m, delta, epsilon) = (spec.k, spec.m, spec.delta, spec.epsilon);
         let base_rng = Rng::new(spec.seed);
         let mut rng = base_rng.clone();
@@ -71,6 +75,9 @@ impl Protocol for GreedyScaling {
 
         while state.selected().len() < k && !surviving.is_empty() && tau > tau_floor {
             rounds += 1;
+            let _round_span = trace::span_with("gs.round", || {
+                vec![("round", rounds.into()), ("tau", tau.into()), ("surviving", surviving.len().into())]
+            });
 
             // -- distributed filter: survivors with gain >= τ ----------------
             let selected_now = state.selected().to_vec();

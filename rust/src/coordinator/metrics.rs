@@ -3,6 +3,7 @@
 //! the quantities behind every figure in the paper's §6.
 
 use crate::mapreduce::JobReport;
+use crate::util::json::Json;
 
 /// Bounded-memory accounting for streaming protocols (`stream_greedi`):
 /// the realized per-machine memory footprint of the one-pass sieve stage,
@@ -31,6 +32,25 @@ impl StreamStats {
     /// Whether every machine stayed within the candidate ceiling.
     pub fn within_bound(&self) -> bool {
         self.peak_live() <= self.live_bound
+    }
+
+    /// The `stream` block of [`RunMetrics::to_json`].
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            (
+                "peak_live_per_machine",
+                Json::Arr(self.peak_live_per_machine.iter().map(|&p| Json::num(p as f64)).collect()),
+            ),
+            ("peak_live", Json::num(self.peak_live() as f64)),
+            ("live_bound", Json::num(self.live_bound as f64)),
+            ("within_bound", Json::Bool(self.within_bound())),
+            (
+                "elements_per_machine",
+                Json::Arr(self.elements_per_machine.iter().map(|&e| Json::num(e as f64)).collect()),
+            ),
+            ("batch", Json::num(self.batch as f64)),
+            ("retries", Json::num(self.retries as f64)),
+        ])
     }
 }
 
@@ -64,6 +84,27 @@ impl FaultStats {
             return 1.0;
         }
         (self.ground_size - self.dropped_elements) as f64 / self.ground_size as f64
+    }
+
+    /// The `fault` block of [`RunMetrics::to_json`].
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            ("policy", Json::str(self.policy.as_str())),
+            ("multiplicity", Json::num(self.multiplicity as f64)),
+            ("retries", Json::num(self.retries as f64)),
+            (
+                "crashed_machines",
+                Json::Arr(self.crashed_machines.iter().map(|&m| Json::num(m as f64)).collect()),
+            ),
+            (
+                "straggled_machines",
+                Json::Arr(self.straggled_machines.iter().map(|&m| Json::num(m as f64)).collect()),
+            ),
+            ("dropped_elements", Json::num(self.dropped_elements as f64)),
+            ("ground_size", Json::num(self.ground_size as f64)),
+            ("coverage", Json::num(self.coverage())),
+            ("recovery_time", Json::num(self.recovery_time)),
+        ])
     }
 }
 
@@ -111,6 +152,30 @@ impl RunMetrics {
         self.value / centralized_value
     }
 
+    /// Canonical JSON view of a run — the single formatter behind
+    /// experiment trails and the serve wire's `query` / `stats` replies.
+    /// Round-trips through `util::json::parse` (see the unit test).
+    pub fn to_json(&self) -> Json {
+        let mut obj = std::collections::BTreeMap::new();
+        obj.insert("name".to_string(), Json::str(self.name.as_str()));
+        obj.insert("value".to_string(), Json::num(self.value));
+        obj.insert(
+            "solution".to_string(),
+            Json::Arr(self.solution.iter().map(|&e| Json::num(e as f64)).collect()),
+        );
+        obj.insert("oracle_calls".to_string(), Json::num(self.oracle_calls as f64));
+        obj.insert("rounds".to_string(), Json::num(self.rounds as f64));
+        obj.insert("sim_time".to_string(), Json::num(self.sim_time()));
+        obj.insert("shuffled_elements".to_string(), Json::num(self.job.shuffled_elements as f64));
+        if let Some(s) = &self.stream {
+            obj.insert("stream".to_string(), s.to_json());
+        }
+        if let Some(f) = &self.fault {
+            obj.insert("fault".to_string(), f.to_json());
+        }
+        Json::Obj(obj)
+    }
+
     pub fn one_line(&self) -> String {
         let stream = match &self.stream {
             Some(s) => format!(" peak_live={}/{}", s.peak_live(), s.live_bound),
@@ -118,10 +183,11 @@ impl RunMetrics {
         };
         let fault = match &self.fault {
             Some(f) => format!(
-                " fault=[{} c={} crashed={} cov={:.0}% retries={} rec={:.4}s]",
+                " fault=[{} c={} crashed={} straggled={} cov={:.0}% retries={} rec={:.4}s]",
                 f.policy,
                 f.multiplicity,
                 f.crashed_machines.len(),
+                f.straggled_machines.len(),
                 f.coverage() * 100.0,
                 f.retries,
                 f.recovery_time
@@ -191,7 +257,79 @@ mod tests {
         assert!((FaultStats::default().coverage() - 1.0).abs() < 1e-12, "empty ground = full coverage");
         let m = RunMetrics { name: "greedi".into(), fault: Some(f), ..Default::default() };
         let line = m.one_line();
-        assert!(line.contains("fault=[drop_shard c=2 crashed=2 cov=75%"), "{line}");
+        assert!(line.contains("fault=[drop_shard c=2 crashed=2 straggled=0 cov=75%"), "{line}");
+    }
+
+    #[test]
+    fn one_line_reports_stragglers() {
+        let f = FaultStats {
+            policy: "retry".into(),
+            multiplicity: 1,
+            straggled_machines: vec![0, 3, 7],
+            ground_size: 10,
+            ..Default::default()
+        };
+        let m = RunMetrics { name: "greedi".into(), fault: Some(f), ..Default::default() };
+        let line = m.one_line();
+        assert!(line.contains("straggled=3"), "{line}");
+    }
+
+    #[test]
+    fn to_json_round_trips_and_carries_blocks() {
+        let m = RunMetrics {
+            name: "greedi".into(),
+            solution: vec![3, 1, 4],
+            value: 2.5,
+            oracle_calls: 123,
+            rounds: 2,
+            stream: Some(StreamStats {
+                peak_live_per_machine: vec![5, 9],
+                live_bound: 12,
+                elements_per_machine: vec![50, 49],
+                batch: 16,
+                retries: 1,
+            }),
+            fault: Some(FaultStats {
+                policy: "survivor_merge".into(),
+                multiplicity: 2,
+                retries: 4,
+                crashed_machines: vec![1],
+                straggled_machines: vec![0, 2],
+                dropped_elements: 5,
+                ground_size: 100,
+                recovery_time: 0.25,
+            }),
+            ..Default::default()
+        };
+        let j = m.to_json();
+        // deterministic dump → parse round-trip through util::json
+        let back = crate::util::json::parse(&j.dump()).unwrap();
+        assert_eq!(back, j);
+        assert_eq!(j.get("name").and_then(|v| v.as_str()), Some("greedi"));
+        assert_eq!(j.get("value").and_then(|v| v.as_f64()), Some(2.5));
+        assert_eq!(j.get("oracle_calls").and_then(|v| v.as_f64()), Some(123.0));
+        let sol: Vec<f64> = j
+            .get("solution")
+            .and_then(|v| v.as_arr())
+            .unwrap()
+            .iter()
+            .map(|v| v.as_f64().unwrap())
+            .collect();
+        assert_eq!(sol, vec![3.0, 1.0, 4.0]);
+        let stream = j.get("stream").unwrap();
+        assert_eq!(stream.get("peak_live").and_then(|v| v.as_f64()), Some(9.0));
+        assert_eq!(stream.get("live_bound").and_then(|v| v.as_f64()), Some(12.0));
+        let fault = j.get("fault").unwrap();
+        assert_eq!(fault.get("policy").and_then(|v| v.as_str()), Some("survivor_merge"));
+        assert_eq!(fault.get("coverage").and_then(|v| v.as_f64()), Some(0.95));
+        assert_eq!(
+            fault.get("straggled_machines").and_then(|v| v.as_arr()).map(|a| a.len()),
+            Some(2)
+        );
+        // fault-free batch runs carry neither optional block
+        let bare = RunMetrics { name: "x".into(), ..Default::default() }.to_json();
+        assert!(bare.get("stream").is_none());
+        assert!(bare.get("fault").is_none());
     }
 
     #[test]

@@ -27,6 +27,7 @@ use crate::constraints::Constraint;
 use crate::mapreduce::fault::{FaultPlan, RecoveryPolicy};
 use crate::mapreduce::{JobReport, MapReduce};
 use crate::util::rng::Rng;
+use crate::util::trace;
 
 /// The tree-reduction protocol.
 pub struct MultiRoundGreedi;
@@ -37,6 +38,9 @@ impl Protocol for MultiRoundGreedi {
     }
 
     fn run(&self, problem: &dyn Problem, spec: &RunSpec) -> RunMetrics {
+        let _proto_span = trace::span_with("protocol.multiround", || {
+            vec![("m", spec.m.into()), ("k", spec.k.into()), ("fanout", spec.fanout.into())]
+        });
         let fanout = spec.fanout.max(2);
         let base_rng = Rng::new(spec.seed);
         let mut rng = base_rng.clone();
@@ -76,6 +80,8 @@ impl Protocol for MultiRoundGreedi {
                 leaf_oracle_threads,
             )
         };
+        let leaves_span =
+            trace::span_with("multiround.leaves", || vec![("machines", spec.m.into())]);
         let stage0 = engine
             .run_stage_policied(inputs, &plan, policy, |_, (i, shard)| run_leaf(i, shard))
             .unwrap_or_else(|e| {
@@ -90,11 +96,15 @@ impl Protocol for MultiRoundGreedi {
         let mut fault_retries = stage0.retries;
         job.stages.push(stage0.report);
         rounds += 1;
+        drop(leaves_span);
 
         // ---- Crash recovery (leaves hold the data; reducers don't) ----------
         let mut recovery_time = 0.0;
         let mut dropped = 0usize;
         if !crashed.is_empty() {
+            let _rec_span = trace::span_with("multiround.recovery", || {
+                vec![("crashed", crashed.len().into())]
+            });
             let surviving: std::collections::HashSet<usize> = shards
                 .iter()
                 .enumerate()
@@ -145,6 +155,9 @@ impl Protocol for MultiRoundGreedi {
                 .map(|c| c.to_vec())
                 .enumerate()
                 .collect();
+            let _level_span = trace::span_with("multiround.reduce", || {
+                vec![("level", level.into()), ("groups", groups.len().into())]
+            });
             let is_root = groups.len() == 1;
             let con = if is_root {
                 Cardinality::new(spec.k)

@@ -30,6 +30,8 @@
 //!   --xla              use the AOT/PJRT gain oracle where applicable
 //!   --full             lift sizes toward paper scale
 //!   --config <path>    load an ExperimentConfig preset (configs/*.toml)
+//!   --trace <path>     write a Chrome trace + NDJSON sidecar (util::trace;
+//!                      also GREEDI_TRACE env or the `trace` config key)
 //!
 //! serve options:
 //!   --addr <h:p>       listen address (also `[serve] addr`; default 127.0.0.1:7199)
@@ -46,6 +48,7 @@ use greedi::config::ExperimentConfig;
 use greedi::coordinator::protocol::{self, PartitionStrategy, Protocol, RecoveryPolicy, RunSpec};
 use greedi::experiments::{self, ExpOpts, FigureReport};
 use greedi::util::args::Args;
+use greedi::util::trace;
 
 fn opts_from(args: &Args) -> ExpOpts {
     ExpOpts {
@@ -352,6 +355,15 @@ fn main() {
         cfg_opt = Some(cfg);
     }
 
+    // Trace activation precedence: --trace > GREEDI_TRACE > config `trace`.
+    if let Some(path) = args.get("trace") {
+        trace::enable(path);
+    } else if trace::init_from_env().is_none() {
+        if let Some(path) = cfg_opt.as_ref().and_then(|c| c.trace.as_deref()) {
+            trace::enable(path);
+        }
+    }
+
     match cmd.as_str() {
         "quickstart" => quickstart(&opts, cfg_opt.as_ref(), &proto_name),
         "protocols" => protocols(&opts, cfg_opt.as_ref()),
@@ -370,5 +382,9 @@ fn main() {
                 std::process::exit(2);
             }
         },
+    }
+
+    if let Some(path) = trace::flush() {
+        eprintln!("trace written to {} (+ NDJSON sidecar)", path.display());
     }
 }

@@ -32,6 +32,7 @@ use std::time::Instant;
 use super::StageReport;
 use crate::util::executor::parallel_map;
 use crate::util::rng::Rng;
+use crate::util::trace;
 
 /// Deterministic per-(task, attempt) failure oracle, plus machine-level
 /// crash and straggler injection.
@@ -254,6 +255,10 @@ where
         time += elapsed;
         if plan.crashed(i) || plan.fails(i, attempt) {
             retries += 1;
+            crate::trace_counter!("fault.retries").incr();
+            trace::event_with("fault.retry", || {
+                vec![("task", i.into()), ("attempt", attempt.into())]
+            });
             continue; // attempt lost; result discarded like a dead container
         }
         return TaskRun::Done { out: r, time, retries };
@@ -341,6 +346,8 @@ where
 
     let runs = parallel_map(inputs, threads, |i, input| {
         if plan.crashed(i) {
+            crate::trace_counter!("fault.crashes").incr();
+            trace::event_with("fault.crash", || vec![("task", i.into())]);
             None
         } else {
             Some(attempt_loop(i, input, plan, &f))
@@ -363,6 +370,7 @@ where
                 times.push(time);
                 retries += r;
                 if plan.straggle(i).is_some() {
+                    crate::trace_counter!("fault.straggles").incr();
                     straggled.push(i);
                 }
             }

@@ -22,6 +22,7 @@ pub mod partition;
 use std::time::Instant;
 
 use crate::util::executor::parallel_map;
+use crate::util::trace;
 
 /// Per-stage execution report (the paper's per-stage metrics).
 #[derive(Debug, Clone, Default)]
@@ -95,11 +96,16 @@ impl MapReduce {
         R: Send,
         F: Fn(usize, T) -> R + Sync,
     {
+        let n_tasks = inputs.len();
+        let _stage_span = trace::span_with("mr.stage", || {
+            vec![("tasks", n_tasks.into()), ("threads", self.threads.into())]
+        });
         let timed: Vec<(R, f64)> = if self.threads == 1 {
             inputs
                 .into_iter()
                 .enumerate()
                 .map(|(i, x)| {
+                    let _task_span = trace::span_with("mr.task", || vec![("task", i.into())]);
                     let t = Instant::now();
                     let r = f(i, x);
                     (r, t.elapsed().as_secs_f64())
@@ -107,6 +113,7 @@ impl MapReduce {
                 .collect()
         } else {
             parallel_map(inputs, self.threads, |i, x| {
+                let _task_span = trace::span_with("mr.task", || vec![("task", i.into())]);
                 let t = Instant::now();
                 let r = f(i, x);
                 (r, t.elapsed().as_secs_f64())

@@ -105,6 +105,10 @@ impl<'a> CoverageKernel<'a> {
 }
 
 impl<'a> GainKernel for CoverageKernel<'a> {
+    fn label(&self) -> &'static str {
+        "coverage"
+    }
+
     fn shard_spec(&self) -> ShardSpec {
         ShardSpec::Candidates { min_per_shard: MIN_CANDIDATES_PER_SHARD }
     }

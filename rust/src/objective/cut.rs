@@ -100,6 +100,10 @@ impl<'a> CutKernel<'a> {
 }
 
 impl<'a> GainKernel for CutKernel<'a> {
+    fn label(&self) -> &'static str {
+        "cut"
+    }
+
     fn shard_spec(&self) -> ShardSpec {
         ShardSpec::Candidates { min_per_shard: MIN_CANDIDATES_PER_SHARD }
     }

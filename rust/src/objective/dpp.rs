@@ -91,6 +91,10 @@ impl<'a> DppKernel<'a> {
 }
 
 impl<'a> GainKernel for DppKernel<'a> {
+    fn label(&self) -> &'static str {
+        "dpp"
+    }
+
     fn shard_spec(&self) -> ShardSpec {
         // O(k²) per candidate: even narrow batches amortize a shard.
         ShardSpec::Candidates { min_per_shard: MIN_HEAVY_CANDIDATES_PER_SHARD }

@@ -79,6 +79,7 @@ use std::ops::Range;
 
 use super::{OracleCounter, State};
 use crate::util::executor::{parallel_map, shard_ranges};
+use crate::util::trace;
 
 /// Pluggable batched-gain accelerator backend (implemented by
 /// `runtime::xla_facility`, and the seam a CUDA/Pallas backend will use).
@@ -186,6 +187,15 @@ pub trait GainKernel: Sync {
     fn backend_batch(&self, _es: &[usize]) -> Option<Vec<f64>> {
         None
     }
+
+    /// Stable label for the observability registry: dispatch-path counts
+    /// land under `kernels.<label>` in [`trace::metrics_snapshot`]
+    /// (see `util::trace`). Override per objective.
+    ///
+    /// [`trace::metrics_snapshot`]: crate::util::trace::metrics_snapshot
+    fn label(&self) -> &'static str {
+        "kernel"
+    }
 }
 
 /// Closed-form singletons for a whole batch — `Some` only if the kernel
@@ -208,11 +218,15 @@ pub fn closed_form_singletons<K: GainKernel + ?Sized>(
 pub struct ShardedGainEngine<K: GainKernel> {
     kernel: K,
     counter: OracleCounter,
+    /// Dispatch-path metrics, resolved ONCE per engine from the kernel's
+    /// label — the hot pricing loop only touches relaxed atomics.
+    metrics: &'static trace::KernelCounters,
 }
 
 impl<K: GainKernel> ShardedGainEngine<K> {
     pub fn new(kernel: K) -> Self {
-        ShardedGainEngine { kernel, counter: OracleCounter::default() }
+        let metrics = trace::kernel_counters(kernel.label());
+        ShardedGainEngine { kernel, counter: OracleCounter::default(), metrics }
     }
 
     /// The wrapped kernel (tests/benches peek at objective-specific state).
@@ -236,11 +250,22 @@ impl<K: GainKernel> ShardedGainEngine<K> {
         };
         let kernel = &self.kernel;
         let partials: Vec<Vec<f64>> = if threads > 1 && shards.len() > 1 {
-            parallel_map(shards, threads, |_, rows| kernel.shard_gain_partial(es, &rows))
+            parallel_map(shards, threads, |i, rows| {
+                let _sp = trace::span_with("engine.shard", || {
+                    vec![("shard", i.into()), ("rows", (rows.end - rows.start).into())]
+                });
+                kernel.shard_gain_partial(es, &rows)
+            })
         } else {
             shards
                 .into_iter()
-                .map(|rows| kernel.shard_gain_partial(es, &rows))
+                .enumerate()
+                .map(|(i, rows)| {
+                    let _sp = trace::span_with("engine.shard", || {
+                        vec![("shard", i.into()), ("rows", (rows.end - rows.start).into())]
+                    });
+                    kernel.shard_gain_partial(es, &rows)
+                })
                 .collect()
         };
         if windowed {
@@ -287,14 +312,21 @@ impl<K: GainKernel> ShardedGainEngine<K> {
     fn price(&mut self, es: &[usize], threads: usize) -> Vec<f64> {
         self.counter.count_batch();
         self.counter.count_gain(es.len());
+        self.metrics.gains.add(es.len() as u64);
+        let _sp = trace::span_with("engine.price", || {
+            vec![("kernel", self.kernel.label().into()), ("cands", es.len().into())]
+        });
         if let Some(out) = self.kernel.backend_batch(es) {
+            self.metrics.backend.incr();
             return out;
         }
         if self.kernel.selected().is_empty() {
             if let Some(out) = closed_form_singletons(&self.kernel, es) {
+                self.metrics.closed_form.incr();
                 return out;
             }
         }
+        self.metrics.sharded.incr();
         self.sharded_price(es, threads)
     }
 }

@@ -121,6 +121,10 @@ impl<'a> EntropyKernel<'a> {
 }
 
 impl<'a> GainKernel for EntropyKernel<'a> {
+    fn label(&self) -> &'static str {
+        "entropy"
+    }
+
     fn shard_spec(&self) -> ShardSpec {
         ShardSpec::Candidates { min_per_shard: MIN_CANDIDATES_PER_SHARD }
     }

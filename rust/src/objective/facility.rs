@@ -425,6 +425,10 @@ impl<'a> FacilityKernel<'a> {
 }
 
 impl<'a> GainKernel for FacilityKernel<'a> {
+    fn label(&self) -> &'static str {
+        "facility"
+    }
+
     fn shard_spec(&self) -> ShardSpec {
         ShardSpec::Window { len: self.obj.window.len() }
     }

@@ -96,6 +96,10 @@ impl<'a> InfoGainKernel<'a> {
 }
 
 impl<'a> GainKernel for InfoGainKernel<'a> {
+    fn label(&self) -> &'static str {
+        "infogain"
+    }
+
     fn shard_spec(&self) -> ShardSpec {
         // O(k²) per candidate: even narrow batches amortize a shard.
         ShardSpec::Candidates { min_per_shard: MIN_HEAVY_CANDIDATES_PER_SHARD }

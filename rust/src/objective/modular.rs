@@ -68,6 +68,10 @@ impl<'a> ModularKernel<'a> {
 }
 
 impl<'a> GainKernel for ModularKernel<'a> {
+    fn label(&self) -> &'static str {
+        "modular"
+    }
+
     fn shard_spec(&self) -> ShardSpec {
         ShardSpec::Candidates { min_per_shard: MIN_CANDIDATES_PER_SHARD }
     }

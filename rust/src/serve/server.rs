@@ -24,6 +24,7 @@ use std::time::Instant;
 use crate::coordinator::protocol;
 use crate::util::json::Json;
 use crate::util::toml;
+use crate::util::trace;
 
 use super::admission::Admission;
 use super::metrics::{ServeMetrics, DEFAULT_RING};
@@ -290,8 +291,10 @@ fn handle_line(shared: &Shared, line: &str) -> (String, bool) {
         }
     };
     let id = id.as_ref();
+    crate::trace_counter!("serve.requests").incr();
     match req {
         Request::Ping => {
+            crate::trace_counter!("serve.op.ping").incr();
             let result = Json::obj([
                 ("op", Json::str("pong")),
                 ("uptime_s", Json::num(shared.started.elapsed().as_secs_f64())),
@@ -302,8 +305,12 @@ fn handle_line(shared: &Shared, line: &str) -> (String, bool) {
             ]);
             (wire::ok_line(id, result), false)
         }
-        Request::Stats => (wire::ok_line(id, stats_json(shared)), false),
+        Request::Stats => {
+            crate::trace_counter!("serve.op.stats").incr();
+            (wire::ok_line(id, stats_json(shared)), false)
+        }
         Request::Datasets => {
+            crate::trace_counter!("serve.op.datasets").incr();
             let rows = shared
                 .state
                 .list()
@@ -322,6 +329,7 @@ fn handle_line(shared: &Shared, line: &str) -> (String, bool) {
             (wire::ok_line(id, Json::obj([("datasets", Json::Arr(rows))])), false)
         }
         Request::Warm { dataset } => {
+            crate::trace_counter!("serve.op.warm").incr();
             let name = dataset.as_deref().unwrap_or(&shared.default_dataset);
             match shared.state.snapshot(name) {
                 None => (err_reply(shared, id, unknown_dataset(name)), false),
@@ -338,6 +346,7 @@ fn handle_line(shared: &Shared, line: &str) -> (String, bool) {
             }
         }
         Request::Advance { dataset, count } => {
+            crate::trace_counter!("serve.op.advance").incr();
             let name = dataset.as_deref().unwrap_or(&shared.default_dataset);
             if shared.state.snapshot(name).is_none() {
                 return (err_reply(shared, id, unknown_dataset(name)), false);
@@ -355,8 +364,12 @@ fn handle_line(shared: &Shared, line: &str) -> (String, bool) {
                 }
             }
         }
-        Request::Query(q) => (run_query(shared, *q, id), false),
+        Request::Query(q) => {
+            crate::trace_counter!("serve.op.query").incr();
+            (run_query(shared, *q, id), false)
+        }
         Request::Shutdown => {
+            crate::trace_counter!("serve.op.shutdown").incr();
             (wire::ok_line(id, Json::obj([("op", Json::str("shutdown"))])), true)
         }
     }
@@ -398,10 +411,14 @@ fn stats_json(shared: &Shared) -> Json {
             ]),
         ),
         ("latency", shared.metrics.to_json()),
+        ("trace", trace::metrics_snapshot()),
     ])
 }
 
 fn run_query(shared: &Shared, q: QueryRequest, id: Option<&Json>) -> String {
+    let _query_span = trace::span_with("serve.query", || {
+        vec![("protocol", q.protocol.as_str().into())]
+    });
     let t0 = Instant::now();
     let Some(proto) = protocol::by_name(&q.protocol) else {
         return err_reply(
@@ -450,6 +467,7 @@ fn run_query(shared: &Shared, q: QueryRequest, id: Option<&Json>) -> String {
         Ok(run) => {
             let latency_us = t0.elapsed().as_secs_f64() * 1e6;
             shared.metrics.record_query(queued_us, latency_us);
+            trace::histogram("serve.latency_us").record(latency_us as u64);
             wire::ok_line(
                 id,
                 wire::query_result_json(

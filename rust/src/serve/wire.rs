@@ -407,7 +407,12 @@ pub fn err_line(id: Option<&Json>, e: &WireError) -> String {
     Json::Obj(m).dump()
 }
 
-/// Server-side: the `result` object of a finished query.
+/// Server-side: the `result` object of a finished query. Built on the
+/// canonical [`RunMetrics::to_json`] view (so the wire never hand-formats
+/// run fields), with the run's `name` re-keyed as `protocol` and the
+/// serve-side envelope fields layered on top. `QueryReply::from_json`
+/// reads only its known keys, so the extra run detail (sim_time,
+/// stream/fault blocks, …) rides along without breaking old clients.
 pub fn query_result_json(
     run: &RunMetrics,
     dataset: &str,
@@ -416,21 +421,17 @@ pub fn query_result_json(
     queued_us: f64,
     latency_us: f64,
 ) -> Json {
-    Json::obj([
-        ("protocol", Json::str(run.name.clone())),
-        (
-            "solution",
-            Json::Arr(run.solution.iter().map(|&e| Json::num(e as f64)).collect()),
-        ),
-        ("value", Json::num(run.value)),
-        ("oracle_calls", Json::num(run.oracle_calls as f64)),
-        ("rounds", Json::num(run.rounds as f64)),
-        ("dataset", Json::str(dataset)),
-        ("dataset_version", Json::num(dataset_version as f64)),
-        ("threads_used", Json::num(threads_used as f64)),
-        ("queued_us", Json::num(queued_us)),
-        ("latency_us", Json::num(latency_us)),
-    ])
+    let Json::Obj(mut m) = run.to_json() else {
+        unreachable!("RunMetrics::to_json always yields an object");
+    };
+    let name = m.remove("name").unwrap_or_else(|| Json::str(run.name.clone()));
+    m.insert("protocol".to_string(), name);
+    m.insert("dataset".to_string(), Json::str(dataset));
+    m.insert("dataset_version".to_string(), Json::num(dataset_version as f64));
+    m.insert("threads_used".to_string(), Json::num(threads_used as f64));
+    m.insert("queued_us".to_string(), Json::num(queued_us));
+    m.insert("latency_us".to_string(), Json::num(latency_us));
+    Json::Obj(m)
 }
 
 /// Client-side decoded query reply.
@@ -679,6 +680,32 @@ mod tests {
         assert_eq!(reply.rounds, 2);
         assert_eq!(reply.dataset_version, 3);
         assert_eq!(reply.threads_used, 2);
+    }
+
+    #[test]
+    fn query_result_carries_run_detail_blocks() {
+        // built on RunMetrics::to_json: the run's extra detail rides the
+        // wire as extra keys old clients simply ignore
+        let run = RunMetrics {
+            name: "greedi".into(),
+            fault: Some(crate::coordinator::metrics::FaultStats {
+                policy: "retry".into(),
+                multiplicity: 1,
+                straggled_machines: vec![2],
+                ground_size: 10,
+                ..Default::default()
+            }),
+            ..Default::default()
+        };
+        let result = query_result_json(&run, "main", 1, 1, 0.0, 1.0);
+        assert!(result.get("name").is_none(), "name is re-keyed as protocol");
+        assert_eq!(result.get("protocol").and_then(|v| v.as_str()), Some("greedi"));
+        assert!(result.get("sim_time").is_some());
+        let fault = result.get("fault").expect("fault block rides along");
+        assert_eq!(fault.get("policy").and_then(|v| v.as_str()), Some("retry"));
+        // and the tolerant client decoder still accepts the richer object
+        let line = ok_line(None, result);
+        QueryReply::from_json(&parse_reply(&line).unwrap()).unwrap();
     }
 
     #[test]

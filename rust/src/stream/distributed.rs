@@ -36,6 +36,7 @@ use crate::coordinator::Problem;
 use crate::mapreduce::fault::{FaultPlan, RecoveryPolicy, StageFailed};
 use crate::mapreduce::{JobReport, MapReduce};
 use crate::util::rng::Rng;
+use crate::util::trace;
 
 /// The distributed sieve→merge protocol.
 pub struct StreamGreedi;
@@ -68,6 +69,9 @@ impl StreamGreedi {
         spec: &RunSpec,
         plan: &FaultPlan,
     ) -> Result<RunMetrics, StageFailed> {
+        let _proto_span = trace::span_with("protocol.stream_greedi", || {
+            vec![("m", spec.m.into()), ("k", spec.k.into()), ("kappa", spec.kappa.into())]
+        });
         let base_rng = Rng::new(spec.seed);
         let mut rng = base_rng.clone();
         let ground = problem.ground();

@@ -56,6 +56,7 @@ use std::ops::RangeInclusive;
 
 use super::source::StreamSource;
 use crate::objective::{State, SubmodularFn};
+use crate::util::trace;
 
 /// Outcome of one single-pass sieve run.
 #[derive(Debug, Clone, Default)]
@@ -238,6 +239,10 @@ impl<'a> BatchedSieve<'a> {
                 if dirty {
                     let g = rung.state.gain(e);
                     calls += 1;
+                    crate::trace_counter!("sieve.reprices").incr();
+                    trace::event_with("sieve.reprice", || {
+                        vec![("rung", (i as f64).into()), ("element", e.into())]
+                    });
                     if g >= needed && g > 0.0 {
                         rung.state.push(e);
                     }

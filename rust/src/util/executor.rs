@@ -130,7 +130,9 @@ impl Inner {
         // park", so the counter must never under-report. (It may transiently
         // over-report between this increment and the push — a worker that
         // races in just re-scans.)
-        self.queued.fetch_add(1, Ordering::Release);
+        let depth = self.queued.fetch_add(1, Ordering::Release) + 1;
+        crate::trace_counter!("executor.submitted").incr();
+        crate::trace_gauge!("executor.queue_depth_max").record(depth as u64);
         self.deques[i].lock().unwrap().push_back(task);
         let _g = self.park.lock().unwrap();
         self.alarm.notify_one();
@@ -154,6 +156,7 @@ impl Inner {
             let task = self.deques[j].lock().unwrap().pop_front();
             if task.is_some() {
                 self.queued.fetch_sub(1, Ordering::Release);
+                crate::trace_counter!("executor.stolen").incr();
                 return task;
             }
         }
@@ -192,6 +195,7 @@ impl Inner {
                 // Park. The timeout is a belt-and-braces backstop only; the
                 // queued-counter handshake above already prevents lost
                 // wakeups (submitters notify under the same lock).
+                crate::trace_counter!("executor.parked").incr();
                 let _ = self
                     .alarm
                     .wait_timeout(guard, Duration::from_millis(50))

@@ -17,3 +17,4 @@ pub mod table;
 pub mod threadpool;
 pub mod timer;
 pub mod toml;
+pub mod trace;

@@ -1,0 +1,869 @@
+//! Process-wide structured observability: spans, a metrics registry, and
+//! Chrome-trace/NDJSON exporters — zero dependencies, dogfooding
+//! [`util::json`](crate::util::json) for every byte it writes.
+//!
+//! ## Model
+//!
+//! * **Spans** are RAII guards ([`span`] / [`span_with`]) carrying a static
+//!   name, optional key=value fields, the emitting thread, and monotonic
+//!   start/end timestamps taken from one process epoch. A thread-local depth
+//!   counter nests them, so a traced run yields the full
+//!   protocol → stage → shard → kernel-dispatch tree.
+//! * **Instant events** ([`event`] / [`event_with`]) mark points in time
+//!   (a fault retry, a sieve ladder re-price) without a duration.
+//! * **Metrics** are process-global named atomics — [`Counter`] (monotonic),
+//!   [`Gauge`] (high-water), [`Histogram`] (power-of-two buckets + count/sum/
+//!   max) — always on, readable at any time via [`metrics_snapshot`]. They
+//!   are independent of the span switch: a relaxed `fetch_add` is cheap
+//!   enough to leave in every hot path unconditionally.
+//! * **Exporters**: [`flush`] drains every per-thread span buffer (in buffer
+//!   registration order, chronological within a thread — a deterministic
+//!   total order) and writes two files: the configured path gets a Chrome
+//!   `trace_event` JSON document (open it in Perfetto / `chrome://tracing`),
+//!   and `<path>.ndjson` gets one compact JSON event per line for ad-hoc
+//!   `grep`/`jq` analysis.
+//!
+//! Tracing is activated by `GREEDI_TRACE=path` (see [`init_from_env`]),
+//! `--trace path` on the CLI, or the `trace` TOML key — all three end in
+//! [`enable`]. The enabled check is a single relaxed atomic load, and the
+//! disabled [`SpanGuard`] holds only an empty `Vec` (which does not
+//! allocate), so an untraced span site costs a branch and nothing else.
+//!
+//! ## The non-perturbation contract
+//!
+//! Tracing must never change results: spans and events only *read* values
+//! already computed by the instrumented code and never touch algorithm
+//! state, so traced runs are bit-identical to untraced runs (pinned across
+//! the protocol registry by `tests/integration_trace.rs`). Span collection
+//! is lock-sharded per thread — each thread appends to its own buffer under
+//! its own mutex — so tracing does not serialize the executor.
+//!
+//! ## Recipe: add a span
+//!
+//! ```ignore
+//! use crate::util::trace;
+//! // zero-field span; guard closes the span when dropped
+//! let _g = trace::span("merge.round");
+//! // fields are built inside a closure that only runs when tracing is on
+//! let _g = trace::span_with("mr.stage", || vec![("tasks", n.into())]);
+//! ```
+//!
+//! ## Recipe: add a counter
+//!
+//! ```ignore
+//! // per-call-site cached pointer: one registry lookup ever, then a
+//! // relaxed fetch_add per hit
+//! crate::trace_counter!("executor.submitted").incr();
+//! // or resolve once at construction for the very hottest paths
+//! let c: &'static trace::Counter = trace::counter("engine.batches");
+//! ```
+
+use std::cell::{Cell, RefCell};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+use super::json::Json;
+
+// ---------------------------------------------------------------------------
+// Enabled gate + output path
+// ---------------------------------------------------------------------------
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Is span/event collection on? One relaxed atomic load — the only cost a
+/// disabled call site pays besides its branch.
+#[inline(always)]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+fn out_path() -> &'static Mutex<Option<PathBuf>> {
+    static P: OnceLock<Mutex<Option<PathBuf>>> = OnceLock::new();
+    P.get_or_init(|| Mutex::new(None))
+}
+
+/// Turn span collection on and remember where [`flush`] should write.
+pub fn enable(path: impl Into<PathBuf>) {
+    *out_path().lock().unwrap() = Some(path.into());
+    ENABLED.store(true, Ordering::Relaxed);
+}
+
+/// Turn span collection off. Buffered events stay until [`flush`] or
+/// [`clear_events`].
+pub fn disable() {
+    ENABLED.store(false, Ordering::Relaxed);
+}
+
+/// Honour `GREEDI_TRACE=path`: enable tracing to that path. Returns the
+/// path when the variable was set and non-empty.
+pub fn init_from_env() -> Option<PathBuf> {
+    match std::env::var("GREEDI_TRACE") {
+        Ok(p) if !p.is_empty() => {
+            let pb = PathBuf::from(p);
+            enable(pb.clone());
+            Some(pb)
+        }
+        _ => None,
+    }
+}
+
+/// The currently configured output path, if any.
+pub fn output_path() -> Option<PathBuf> {
+    out_path().lock().unwrap().clone()
+}
+
+fn epoch() -> Instant {
+    static E: OnceLock<Instant> = OnceLock::new();
+    *E.get_or_init(Instant::now)
+}
+
+fn now_ns() -> u64 {
+    epoch().elapsed().as_nanos() as u64
+}
+
+// ---------------------------------------------------------------------------
+// Fields
+// ---------------------------------------------------------------------------
+
+/// A span/event field value. `From` impls cover the common cases so call
+/// sites can write `("tasks", n.into())`.
+#[derive(Debug, Clone)]
+pub enum FieldValue {
+    U(u64),
+    F(f64),
+    S(String),
+}
+
+impl From<usize> for FieldValue {
+    fn from(v: usize) -> Self {
+        FieldValue::U(v as u64)
+    }
+}
+impl From<u64> for FieldValue {
+    fn from(v: u64) -> Self {
+        FieldValue::U(v)
+    }
+}
+impl From<u32> for FieldValue {
+    fn from(v: u32) -> Self {
+        FieldValue::U(v as u64)
+    }
+}
+impl From<f64> for FieldValue {
+    fn from(v: f64) -> Self {
+        FieldValue::F(v)
+    }
+}
+impl From<&str> for FieldValue {
+    fn from(v: &str) -> Self {
+        FieldValue::S(v.to_string())
+    }
+}
+impl From<String> for FieldValue {
+    fn from(v: String) -> Self {
+        FieldValue::S(v)
+    }
+}
+
+impl FieldValue {
+    fn to_json(&self) -> Json {
+        match self {
+            FieldValue::U(v) => Json::num(*v as f64),
+            FieldValue::F(v) => Json::num(*v),
+            FieldValue::S(s) => Json::str(s.clone()),
+        }
+    }
+}
+
+/// Field list type accepted by [`span_with`] / [`event_with`] closures.
+pub type Fields = Vec<(&'static str, FieldValue)>;
+
+// ---------------------------------------------------------------------------
+// Per-thread event buffers
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+struct Event {
+    name: &'static str,
+    start_ns: u64,
+    /// `Some(dur)` for a completed span, `None` for an instant event.
+    dur_ns: Option<u64>,
+    depth: u32,
+    fields: Fields,
+}
+
+type SharedBuf = Arc<Mutex<Vec<Event>>>;
+
+/// Registry of every thread's buffer, in first-emit order. Flush iterates
+/// this order, so the export is a deterministic total order for a given run.
+fn buffers() -> &'static Mutex<Vec<SharedBuf>> {
+    static B: OnceLock<Mutex<Vec<SharedBuf>>> = OnceLock::new();
+    B.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+thread_local! {
+    static LOCAL: RefCell<Option<(usize, SharedBuf)>> = const { RefCell::new(None) };
+    static DEPTH: Cell<u32> = const { Cell::new(0) };
+}
+
+fn push_event(ev: Event) {
+    LOCAL.with(|slot| {
+        let mut slot = slot.borrow_mut();
+        if slot.is_none() {
+            let buf: SharedBuf = Arc::new(Mutex::new(Vec::new()));
+            let mut reg = buffers().lock().unwrap();
+            let tid = reg.len();
+            reg.push(Arc::clone(&buf));
+            drop(reg);
+            *slot = Some((tid, buf));
+        }
+        let (_, buf) = slot.as_ref().unwrap();
+        buf.lock().unwrap().push(ev);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Spans + instant events
+// ---------------------------------------------------------------------------
+
+/// RAII span guard: records one complete event when dropped. Inert (and
+/// allocation-free) when tracing was disabled at open time.
+pub struct SpanGuard {
+    name: &'static str,
+    start_ns: u64,
+    depth: u32,
+    fields: Fields,
+    active: bool,
+}
+
+/// Open a span with no fields. Disabled path: one branch, no allocation
+/// (`Vec::new` does not allocate).
+#[inline(always)]
+pub fn span(name: &'static str) -> SpanGuard {
+    if !enabled() {
+        return SpanGuard { name, start_ns: 0, depth: 0, fields: Vec::new(), active: false };
+    }
+    open_span(name, Vec::new())
+}
+
+/// Open a span with fields. The closure only runs when tracing is enabled,
+/// so field construction costs nothing on the disabled path.
+#[inline(always)]
+pub fn span_with<F>(name: &'static str, fields: F) -> SpanGuard
+where
+    F: FnOnce() -> Fields,
+{
+    if !enabled() {
+        return SpanGuard { name, start_ns: 0, depth: 0, fields: Vec::new(), active: false };
+    }
+    open_span(name, fields())
+}
+
+#[cold]
+fn open_span(name: &'static str, fields: Fields) -> SpanGuard {
+    let depth = DEPTH.with(|d| {
+        let v = d.get();
+        d.set(v + 1);
+        v
+    });
+    SpanGuard { name, start_ns: now_ns(), depth, fields, active: true }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if !self.active {
+            return;
+        }
+        DEPTH.with(|d| d.set(d.get().saturating_sub(1)));
+        let end = now_ns();
+        push_event(Event {
+            name: self.name,
+            start_ns: self.start_ns,
+            dur_ns: Some(end.saturating_sub(self.start_ns)),
+            depth: self.depth,
+            fields: std::mem::take(&mut self.fields),
+        });
+    }
+}
+
+/// Record an instant event (no duration) with no fields.
+#[inline(always)]
+pub fn event(name: &'static str) {
+    if !enabled() {
+        return;
+    }
+    emit_event(name, Vec::new());
+}
+
+/// Record an instant event with fields; the closure only runs when enabled.
+#[inline(always)]
+pub fn event_with<F>(name: &'static str, fields: F)
+where
+    F: FnOnce() -> Fields,
+{
+    if !enabled() {
+        return;
+    }
+    emit_event(name, fields());
+}
+
+#[cold]
+fn emit_event(name: &'static str, fields: Fields) {
+    push_event(Event {
+        name,
+        start_ns: now_ns(),
+        dur_ns: None,
+        depth: DEPTH.with(|d| d.get()),
+        fields,
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Metrics: counters, gauges, histograms
+// ---------------------------------------------------------------------------
+
+/// Monotonic counter (relaxed atomic). Always on — independent of the span
+/// switch.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub const fn new() -> Counter {
+        Counter(AtomicU64::new(0))
+    }
+
+    #[inline(always)]
+    pub fn incr(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline(always)]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+
+    fn reset(&self) {
+        self.0.store(0, Ordering::Relaxed);
+    }
+}
+
+/// High-water gauge: `record` keeps the maximum ever seen.
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub const fn new() -> Gauge {
+        Gauge(AtomicU64::new(0))
+    }
+
+    #[inline(always)]
+    pub fn record(&self, v: u64) {
+        self.0.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+
+    fn reset(&self) {
+        self.0.store(0, Ordering::Relaxed);
+    }
+}
+
+const HIST_BUCKETS: usize = 40;
+
+/// Fixed power-of-two-bucket histogram: bucket `i` counts values with
+/// `v < 2^i` (and `v` in the previous bucket's range), plus exact
+/// count/sum/max. Units are the caller's (serve records microseconds).
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: [AtomicU64; HIST_BUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    #[inline(always)]
+    pub fn record(&self, v: u64) {
+        // value 0 lands in bucket 0; otherwise bucket = bit width of v
+        let b = (64 - v.leading_zeros() as usize).min(HIST_BUCKETS - 1);
+        self.buckets[b].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max.load(Ordering::Relaxed)
+    }
+
+    fn to_json(&self) -> Json {
+        let count = self.count();
+        let sum = self.sum();
+        let mean = if count > 0 { sum as f64 / count as f64 } else { 0.0 };
+        let mut bs: Vec<Json> = Vec::new();
+        for (i, b) in self.buckets.iter().enumerate() {
+            let n = b.load(Ordering::Relaxed);
+            if n > 0 {
+                // upper bound of bucket i is 2^i - 1 (bucket 0 holds v == 0)
+                let le = if i == 0 { 0.0 } else { (1u64 << i) as f64 - 1.0 };
+                bs.push(Json::obj([("le", Json::num(le)), ("n", Json::num(n as f64))]));
+            }
+        }
+        Json::obj([
+            ("count", Json::num(count as f64)),
+            ("sum", Json::num(sum as f64)),
+            ("mean", Json::num(mean)),
+            ("max", Json::num(self.max() as f64)),
+            ("buckets", Json::Arr(bs)),
+        ])
+    }
+
+    fn reset(&self) {
+        for b in &self.buckets {
+            b.store(0, Ordering::Relaxed);
+        }
+        self.count.store(0, Ordering::Relaxed);
+        self.sum.store(0, Ordering::Relaxed);
+        self.max.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Per-kernel dispatch accounting for the sharded gain engine: how many
+/// candidate gains were priced and which path priced them. Resolved once
+/// per engine construction (see `ShardedGainEngine::new`), so the hot
+/// pricing loop touches only relaxed atomics.
+#[derive(Debug, Default)]
+pub struct KernelCounters {
+    /// Candidate gains requested through `price`.
+    pub gains: Counter,
+    /// Batches answered by an accelerator backend (`backend_batch`).
+    pub backend: Counter,
+    /// Batches answered by the closed-form singleton path.
+    pub closed_form: Counter,
+    /// Batches priced by the CPU sharded path (SIMD or scalar kernel).
+    pub sharded: Counter,
+}
+
+impl KernelCounters {
+    fn new() -> KernelCounters {
+        KernelCounters {
+            gains: Counter::new(),
+            backend: Counter::new(),
+            closed_form: Counter::new(),
+            sharded: Counter::new(),
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj([
+            ("gains", Json::num(self.gains.get() as f64)),
+            ("backend_batches", Json::num(self.backend.get() as f64)),
+            ("closed_form_batches", Json::num(self.closed_form.get() as f64)),
+            ("sharded_batches", Json::num(self.sharded.get() as f64)),
+        ])
+    }
+
+    fn reset(&self) {
+        self.gains.reset();
+        self.backend.reset();
+        self.closed_form.reset();
+        self.sharded.reset();
+    }
+}
+
+#[derive(Default)]
+struct Registries {
+    counters: BTreeMap<&'static str, &'static Counter>,
+    gauges: BTreeMap<&'static str, &'static Gauge>,
+    histograms: BTreeMap<&'static str, &'static Histogram>,
+    kernels: BTreeMap<&'static str, &'static KernelCounters>,
+}
+
+fn registries() -> &'static Mutex<Registries> {
+    static R: OnceLock<Mutex<Registries>> = OnceLock::new();
+    R.get_or_init(|| Mutex::new(Registries::default()))
+}
+
+/// Look up (or create) the named counter. Takes the registry lock — cache
+/// the returned `&'static` at the call site ([`crate::trace_counter!`]) or
+/// at construction time for hot paths.
+pub fn counter(name: &'static str) -> &'static Counter {
+    let mut r = registries().lock().unwrap();
+    r.counters.entry(name).or_insert_with(|| Box::leak(Box::new(Counter::new())))
+}
+
+/// Look up (or create) the named high-water gauge.
+pub fn gauge(name: &'static str) -> &'static Gauge {
+    let mut r = registries().lock().unwrap();
+    r.gauges.entry(name).or_insert_with(|| Box::leak(Box::new(Gauge::new())))
+}
+
+/// Look up (or create) the named histogram.
+pub fn histogram(name: &'static str) -> &'static Histogram {
+    let mut r = registries().lock().unwrap();
+    r.histograms.entry(name).or_insert_with(|| Box::leak(Box::new(Histogram::new())))
+}
+
+/// Look up (or create) the dispatch counters for one kernel label.
+pub fn kernel_counters(label: &'static str) -> &'static KernelCounters {
+    let mut r = registries().lock().unwrap();
+    r.kernels.entry(label).or_insert_with(|| Box::leak(Box::new(KernelCounters::new())))
+}
+
+/// Per-call-site cached counter handle: one registry lookup ever, then a
+/// raw `&'static Counter` per hit.
+#[macro_export]
+macro_rules! trace_counter {
+    ($name:expr) => {{
+        static SITE: ::std::sync::OnceLock<&'static $crate::util::trace::Counter> =
+            ::std::sync::OnceLock::new();
+        *SITE.get_or_init(|| $crate::util::trace::counter($name))
+    }};
+}
+
+/// Per-call-site cached gauge handle (see [`crate::trace_counter!`]).
+#[macro_export]
+macro_rules! trace_gauge {
+    ($name:expr) => {{
+        static SITE: ::std::sync::OnceLock<&'static $crate::util::trace::Gauge> =
+            ::std::sync::OnceLock::new();
+        *SITE.get_or_init(|| $crate::util::trace::gauge($name))
+    }};
+}
+
+/// Snapshot every registered metric as a deterministic JSON object
+/// (BTreeMap name order): `{counters, gauges, histograms, kernels}`.
+pub fn metrics_snapshot() -> Json {
+    let r = registries().lock().unwrap();
+    let counters = Json::obj(
+        r.counters.iter().map(|(k, c)| (k.to_string(), Json::num(c.get() as f64))),
+    );
+    let gauges =
+        Json::obj(r.gauges.iter().map(|(k, g)| (k.to_string(), Json::num(g.get() as f64))));
+    let histograms = Json::obj(r.histograms.iter().map(|(k, h)| (k.to_string(), h.to_json())));
+    let kernels = Json::obj(r.kernels.iter().map(|(k, kc)| (k.to_string(), kc.to_json())));
+    Json::obj([
+        ("counters", counters),
+        ("gauges", gauges),
+        ("histograms", histograms),
+        ("kernels", kernels),
+    ])
+}
+
+/// Zero every registered metric (benches/tests; names stay registered).
+pub fn reset_metrics() {
+    let r = registries().lock().unwrap();
+    for c in r.counters.values() {
+        c.reset();
+    }
+    for g in r.gauges.values() {
+        g.reset();
+    }
+    for h in r.histograms.values() {
+        h.reset();
+    }
+    for k in r.kernels.values() {
+        k.reset();
+    }
+}
+
+/// Drop all buffered span/instant events without exporting them.
+pub fn clear_events() {
+    let reg = buffers().lock().unwrap();
+    for buf in reg.iter() {
+        buf.lock().unwrap().clear();
+    }
+}
+
+/// Number of events currently buffered across all threads.
+pub fn buffered_events() -> usize {
+    let reg = buffers().lock().unwrap();
+    reg.iter().map(|b| b.lock().unwrap().len()).sum()
+}
+
+// ---------------------------------------------------------------------------
+// Exporters
+// ---------------------------------------------------------------------------
+
+/// The NDJSON sidecar path for a Chrome-trace path: `<path>.ndjson`.
+pub fn ndjson_path(p: &Path) -> PathBuf {
+    let mut s = p.as_os_str().to_os_string();
+    s.push(".ndjson");
+    PathBuf::from(s)
+}
+
+/// Drain every per-thread buffer (registration order, chronological within
+/// a thread) and write the Chrome `trace_event` JSON document to the
+/// configured path plus an NDJSON sidecar at `<path>.ndjson`. Returns the
+/// Chrome-trace path on success; `None` when no path is configured or the
+/// write failed (warning on stderr — tracing must never abort a run).
+pub fn flush() -> Option<PathBuf> {
+    let path = output_path()?;
+    let mut events: Vec<(usize, Event)> = Vec::new();
+    {
+        let reg = buffers().lock().unwrap();
+        for (tid, buf) in reg.iter().enumerate() {
+            let drained: Vec<Event> = std::mem::take(&mut *buf.lock().unwrap());
+            events.extend(drained.into_iter().map(|e| (tid, e)));
+        }
+    }
+
+    let mut trace_events: Vec<Json> = Vec::with_capacity(events.len());
+    let mut ndjson = String::new();
+    for (tid, e) in &events {
+        let ts_us = e.start_ns as f64 / 1000.0;
+        let mut args: BTreeMap<String, Json> =
+            e.fields.iter().map(|(k, v)| (k.to_string(), v.to_json())).collect();
+        args.insert("depth".to_string(), Json::num(e.depth as f64));
+
+        let mut obj: BTreeMap<String, Json> = BTreeMap::new();
+        obj.insert("name".to_string(), Json::str(e.name));
+        obj.insert("cat".to_string(), Json::str("greedi"));
+        obj.insert("pid".to_string(), Json::num(1.0));
+        obj.insert("tid".to_string(), Json::num(*tid as f64));
+        obj.insert("ts".to_string(), Json::num(ts_us));
+        obj.insert("args".to_string(), Json::Obj(args.clone()));
+        match e.dur_ns {
+            Some(d) => {
+                obj.insert("ph".to_string(), Json::str("X"));
+                obj.insert("dur".to_string(), Json::num(d as f64 / 1000.0));
+            }
+            None => {
+                obj.insert("ph".to_string(), Json::str("i"));
+                obj.insert("s".to_string(), Json::str("t"));
+            }
+        }
+        trace_events.push(Json::Obj(obj));
+
+        let mut line: BTreeMap<String, Json> = BTreeMap::new();
+        line.insert("name".to_string(), Json::str(e.name));
+        line.insert(
+            "kind".to_string(),
+            Json::str(if e.dur_ns.is_some() { "span" } else { "event" }),
+        );
+        line.insert("tid".to_string(), Json::num(*tid as f64));
+        line.insert("ts_us".to_string(), Json::num(ts_us));
+        if let Some(d) = e.dur_ns {
+            line.insert("dur_us".to_string(), Json::num(d as f64 / 1000.0));
+        }
+        line.insert("depth".to_string(), Json::num(e.depth as f64));
+        line.insert("fields".to_string(), Json::Obj(args));
+        ndjson.push_str(&Json::Obj(line).dump());
+        ndjson.push('\n');
+    }
+
+    let doc = Json::obj([
+        ("traceEvents", Json::Arr(trace_events)),
+        ("displayTimeUnit", Json::str("ms")),
+        ("metrics", metrics_snapshot()),
+    ]);
+    if let Err(e) = std::fs::write(&path, doc.dump()) {
+        eprintln!("warning: could not write trace to {}: {e}", path.display());
+        return None;
+    }
+    if let Err(e) = std::fs::write(ndjson_path(&path), ndjson) {
+        eprintln!("warning: could not write NDJSON trace sidecar: {e}");
+    }
+    Some(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    /// Enabling tracing is process-global; tests that flip the switch
+    /// serialize here so they don't see each other's events.
+    fn test_lock() -> &'static Mutex<()> {
+        static L: OnceLock<Mutex<()>> = OnceLock::new();
+        L.get_or_init(|| Mutex::new(()))
+    }
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("greedi_trace_unit_{name}_{}", std::process::id()))
+    }
+
+    /// Parse the flushed Chrome trace and keep only events whose name
+    /// starts with `prefix` (other suites' events may be interleaved —
+    /// tracing is process-global and the test binary is concurrent).
+    fn flush_named(prefix: &str) -> Vec<Json> {
+        let path = flush().expect("flush with path configured");
+        let doc = json::parse(&std::fs::read_to_string(&path).unwrap()).expect("trace parses");
+        let evs = doc.get("traceEvents").and_then(|v| v.as_arr()).unwrap();
+        evs.iter()
+            .filter(|e| {
+                e.get("name").and_then(|n| n.as_str()).is_some_and(|n| n.starts_with(prefix))
+            })
+            .cloned()
+            .collect()
+    }
+
+    #[test]
+    fn disabled_span_is_inert() {
+        let _l = test_lock().lock().unwrap();
+        disable();
+        {
+            let _g = span("unit.disabled");
+            let _h = span_with("unit.disabled.fields", || vec![("x", 1usize.into())]);
+            event("unit.disabled.event");
+        }
+        // no way to observe per-name buffered events without flushing, so
+        // assert via the global count delta under the lock
+        let before = buffered_events();
+        {
+            let _g = span("unit.disabled.again");
+        }
+        assert_eq!(buffered_events(), before, "disabled span must record nothing");
+    }
+
+    #[test]
+    fn spans_nest_and_export_chrome_trace() {
+        let _l = test_lock().lock().unwrap();
+        let path = tmp("nest");
+        enable(&path);
+        {
+            let _outer = span_with("unitnest.outer", || vec![("m", 4usize.into())]);
+            {
+                let _inner = span("unitnest.inner");
+            }
+            event_with("unitnest.mark", || vec![("e", 7usize.into())]);
+        }
+        disable();
+        let evs = flush_named("unitnest.");
+        assert_eq!(evs.len(), 3);
+        let by_name = |n: &str| {
+            evs.iter()
+                .find(|e| e.get("name").and_then(|v| v.as_str()) == Some(n))
+                .unwrap_or_else(|| panic!("missing event {n}"))
+        };
+        let outer = by_name("unitnest.outer");
+        let inner = by_name("unitnest.inner");
+        let mark = by_name("unitnest.mark");
+        assert_eq!(outer.get("ph").and_then(|v| v.as_str()), Some("X"));
+        assert_eq!(mark.get("ph").and_then(|v| v.as_str()), Some("i"));
+        let depth = |e: &Json| {
+            e.get("args").and_then(|a| a.get("depth")).and_then(|v| v.as_f64()).unwrap()
+        };
+        assert_eq!(depth(outer), 0.0);
+        assert_eq!(depth(inner), 1.0);
+        assert_eq!(depth(mark), 1.0, "instant inherits current nesting depth");
+        assert_eq!(
+            outer.get("args").and_then(|a| a.get("m")).and_then(|v| v.as_f64()),
+            Some(4.0)
+        );
+        // inner interval contained in outer interval
+        let ts = |e: &Json| e.get("ts").and_then(|v| v.as_f64()).unwrap();
+        let dur = |e: &Json| e.get("dur").and_then(|v| v.as_f64()).unwrap();
+        assert!(ts(inner) >= ts(outer));
+        assert!(ts(inner) + dur(inner) <= ts(outer) + dur(outer) + 1e-9);
+        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_file(ndjson_path(&path));
+    }
+
+    #[test]
+    fn ndjson_sidecar_one_parseable_object_per_line() {
+        let _l = test_lock().lock().unwrap();
+        let path = tmp("ndjson");
+        enable(&path);
+        {
+            let _g = span("unitnd.a");
+            event("unitnd.b");
+        }
+        disable();
+        flush().expect("flush");
+        let nd = std::fs::read_to_string(ndjson_path(&path)).unwrap();
+        let mut seen = 0;
+        for line in nd.lines() {
+            let v = json::parse(line).expect("every NDJSON line parses");
+            if v.get("name").and_then(|n| n.as_str()).is_some_and(|n| n.starts_with("unitnd.")) {
+                seen += 1;
+                assert!(v.get("kind").is_some() && v.get("ts_us").is_some());
+            }
+        }
+        assert_eq!(seen, 2);
+        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_file(ndjson_path(&path));
+    }
+
+    #[test]
+    fn counters_gauges_histograms() {
+        let c = counter("unit.test.counter");
+        let base = c.get();
+        c.incr();
+        c.add(4);
+        assert_eq!(c.get(), base + 5);
+        assert!(std::ptr::eq(c, counter("unit.test.counter")), "registry interns by name");
+
+        let g = gauge("unit.test.gauge");
+        g.record(3);
+        g.record(9);
+        g.record(5);
+        assert_eq!(g.get(), 9, "gauge keeps the high-water mark");
+
+        let h = histogram("unit.test.hist");
+        for v in [0u64, 1, 2, 3, 1000] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.sum(), 1006);
+        assert_eq!(h.max(), 1000);
+
+        let k = kernel_counters("unit.test.kernel");
+        k.gains.add(64);
+        k.sharded.incr();
+        assert!(std::ptr::eq(k, kernel_counters("unit.test.kernel")));
+
+        let snap = metrics_snapshot();
+        assert!(
+            snap.get("counters").and_then(|c| c.get("unit.test.counter")).is_some(),
+            "snapshot carries registered counters"
+        );
+        let hist = snap.get("histograms").and_then(|h| h.get("unit.test.hist")).unwrap();
+        assert_eq!(hist.get("count").and_then(|v| v.as_f64()), Some(5.0));
+        let kern = snap.get("kernels").and_then(|m| m.get("unit.test.kernel")).unwrap();
+        assert_eq!(kern.get("gains").and_then(|v| v.as_f64()), Some(64.0));
+        // snapshot itself must round-trip through the writer/parser
+        let rt = json::parse(&snap.dump()).expect("snapshot round-trips");
+        assert_eq!(rt, snap);
+    }
+
+    #[test]
+    fn trace_counter_macro_caches_site() {
+        let a = trace_counter!("unit.test.macro");
+        let before = a.get();
+        trace_counter!("unit.test.macro").incr();
+        assert_eq!(counter("unit.test.macro").get(), before + 1);
+    }
+}

@@ -1,0 +1,209 @@
+//! Integration: the `util::trace` observability layer against whole
+//! protocol runs.
+//!
+//! The load-bearing contract is **non-perturbation**: a traced run must be
+//! bit-identical to an untraced run — same solution, same f64 value bits —
+//! because spans only read values the algorithms already computed. These
+//! tests pin that across several registry protocols and thread counts,
+//! then check the exported artifacts themselves: the Chrome trace file
+//! parses with `util::json::parse`, covers every MapReduce stage of a
+//! greedi run, and forms a well-shaped span forest (per-thread intervals
+//! disjoint or properly nested).
+//!
+//! Tracing is process-global, so every test here serializes on one lock
+//! and clears the event buffers before running.
+
+use std::path::PathBuf;
+use std::sync::{Mutex, OnceLock};
+
+use greedi::coordinator::protocol::{by_name, RunSpec};
+use greedi::coordinator::FacilityProblem;
+use greedi::data::synth::{gaussian_blobs, SynthConfig};
+use greedi::util::json::{self, Json};
+use greedi::util::trace;
+
+fn test_lock() -> &'static Mutex<()> {
+    static L: OnceLock<Mutex<()>> = OnceLock::new();
+    L.get_or_init(|| Mutex::new(()))
+}
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("greedi_trace_it_{name}_{}", std::process::id()))
+}
+
+fn problem(n: usize, seed: u64) -> FacilityProblem {
+    let ds = std::sync::Arc::new(gaussian_blobs(&SynthConfig::tiny_images(n, 8), seed));
+    FacilityProblem::new(&ds)
+}
+
+/// Protocols the bit-identity sweep covers — two-round, multi-round,
+/// randomized baselines and the centralized reference (> 4, as the PR's
+/// acceptance bar requires).
+const PROTOCOLS: [&str; 5] =
+    ["greedi", "multiround", "random_greedy", "greedy_merge", "centralized"];
+
+#[test]
+fn traced_runs_are_bit_identical_to_untraced() {
+    let _l = test_lock().lock().unwrap();
+    trace::disable();
+    trace::clear_events();
+    let p = problem(300, 11);
+
+    // Pass 1: untraced reference results.
+    let mut reference = Vec::new();
+    for proto in PROTOCOLS {
+        for threads in [1usize, 2, 8] {
+            let spec = RunSpec::new(4, 8).seed(7).threads(threads);
+            let r = by_name(proto).unwrap().run(&p, &spec);
+            reference.push((proto, threads, r.solution, r.value.to_bits()));
+        }
+    }
+
+    // Pass 2: identical sweep with tracing live.
+    let path = tmp("bitident");
+    trace::enable(&path);
+    for (proto, threads, ref_solution, ref_bits) in &reference {
+        let spec = RunSpec::new(4, 8).seed(7).threads(*threads);
+        let r = by_name(proto).unwrap().run(&p, &spec);
+        assert_eq!(
+            &r.solution, ref_solution,
+            "{proto} (threads={threads}): traced solution diverged"
+        );
+        assert_eq!(
+            r.value.to_bits(),
+            *ref_bits,
+            "{proto} (threads={threads}): traced value not bit-identical"
+        );
+    }
+    trace::disable();
+    let written = trace::flush().expect("flush returns the configured path");
+    assert_eq!(written, path);
+    let _ = std::fs::remove_file(&path);
+    let _ = std::fs::remove_file(trace::ndjson_path(&path));
+}
+
+/// Flush the buffered events and parse the Chrome-trace document back.
+fn flush_and_parse() -> (Json, PathBuf) {
+    let path = trace::flush().expect("flush with path configured");
+    let doc = json::parse(&std::fs::read_to_string(&path).unwrap())
+        .expect("chrome trace must parse with util::json");
+    (doc, path)
+}
+
+#[test]
+fn chrome_trace_covers_every_greedi_stage() {
+    let _l = test_lock().lock().unwrap();
+    trace::disable();
+    trace::clear_events();
+    let p = problem(300, 12);
+    let path = tmp("stages");
+    trace::enable(&path);
+    let spec = RunSpec::new(5, 10).seed(3).threads(2);
+    let r = by_name("greedi").unwrap().run(&p, &spec);
+    assert!(r.value > 0.0);
+    trace::disable();
+
+    let (doc, path) = flush_and_parse();
+    let evs = doc.get("traceEvents").and_then(|v| v.as_arr()).expect("traceEvents array");
+    let count = |name: &str| {
+        evs.iter()
+            .filter(|e| e.get("name").and_then(|v| v.as_str()) == Some(name))
+            .count()
+    };
+    // one protocol span, both MapReduce rounds (round 1 map + merge), and
+    // one mr.task per machine in round 1 plus the merge task
+    assert_eq!(count("protocol.greedi"), 1, "protocol span");
+    assert_eq!(count("greedi.round1"), 1, "round-1 span");
+    assert_eq!(count("greedi.merge"), 1, "merge span");
+    assert!(count("mr.stage") >= 2, "a greedi run is at least 2 MapReduce stages");
+    assert!(count("mr.task") >= spec.m + 1, "m round-1 tasks + 1 merge task");
+    assert!(count("engine.price") > 0, "pricing spans from the gain engine");
+
+    // the metrics block rides in the same document and snapshots cleanly
+    let metrics = doc.get("metrics").expect("metrics key");
+    assert!(metrics.get("counters").is_some());
+
+    // NDJSON sidecar: one parseable object per line, spans carry dur_us
+    let nd = std::fs::read_to_string(trace::ndjson_path(&path)).unwrap();
+    let mut saw_span = false;
+    for line in nd.lines() {
+        let row = json::parse(line).expect("each NDJSON line parses");
+        if row.get("kind").and_then(|v| v.as_str()) == Some("span") {
+            assert!(row.get("dur_us").and_then(|v| v.as_f64()).unwrap() >= 0.0);
+            saw_span = true;
+        }
+    }
+    assert!(saw_span, "sidecar carries span rows");
+
+    let _ = std::fs::remove_file(&path);
+    let _ = std::fs::remove_file(trace::ndjson_path(&path));
+}
+
+#[test]
+fn span_forest_is_well_formed_per_thread() {
+    let _l = test_lock().lock().unwrap();
+    trace::disable();
+    trace::clear_events();
+    let p = problem(300, 13);
+    let path = tmp("forest");
+    trace::enable(&path);
+    for proto in ["greedi", "multiround"] {
+        let spec = RunSpec::new(4, 8).seed(5).threads(8);
+        by_name(proto).unwrap().run(&p, &spec);
+    }
+    trace::disable();
+
+    let (doc, path) = flush_and_parse();
+    let evs = doc.get("traceEvents").and_then(|v| v.as_arr()).unwrap();
+
+    // group complete ("X") spans by tid as (start, end) intervals
+    let mut by_tid: std::collections::BTreeMap<u64, Vec<(f64, f64)>> = Default::default();
+    let mut spans = 0usize;
+    for e in evs {
+        if e.get("ph").and_then(|v| v.as_str()) != Some("X") {
+            continue;
+        }
+        let tid = e.get("tid").and_then(|v| v.as_u64()).expect("tid");
+        let ts = e.get("ts").and_then(|v| v.as_f64()).expect("ts");
+        let dur = e.get("dur").and_then(|v| v.as_f64()).expect("dur");
+        assert!(dur >= 0.0, "negative span duration");
+        assert!(
+            e.get("args").and_then(|a| a.get("depth")).and_then(|v| v.as_f64()).is_some(),
+            "every span carries its nesting depth"
+        );
+        by_tid.entry(tid).or_default().push((ts, ts + dur));
+        spans += 1;
+    }
+    assert!(spans > 0, "the runs must have produced spans");
+
+    // Within one thread, RAII spans form a forest: any two intervals are
+    // disjoint or one contains the other. Sweep with an enclosing-span
+    // stack (sort by start, longest-first on ties); ε absorbs the ns→µs
+    // float conversion.
+    const EPS: f64 = 1e-3;
+    for (tid, mut iv) in by_tid {
+        iv.sort_by(|a, b| {
+            a.0.partial_cmp(&b.0).unwrap().then(b.1.partial_cmp(&a.1).unwrap())
+        });
+        let mut stack: Vec<(f64, f64)> = Vec::new();
+        for (s, e) in iv {
+            while let Some(&(_, top_end)) = stack.last() {
+                if top_end <= s + EPS {
+                    stack.pop();
+                } else {
+                    break;
+                }
+            }
+            if let Some(&(_, top_end)) = stack.last() {
+                assert!(
+                    e <= top_end + EPS,
+                    "tid {tid}: span [{s}, {e}] straddles its enclosing span ending {top_end}"
+                );
+            }
+            stack.push((s, e));
+        }
+    }
+
+    let _ = std::fs::remove_file(&path);
+    let _ = std::fs::remove_file(trace::ndjson_path(&path));
+}

@@ -1,0 +1,120 @@
+#!/usr/bin/env python3
+"""Validate a greedi Chrome trace written by ``util::trace``.
+
+Usage: trace_check.py TRACE.json [--require NAME ...] [--min-spans N]
+
+Checks (exit 1 on any failure — this one IS a gate, unlike bench_compare):
+
+1. the file is valid JSON with a ``traceEvents`` array and a ``metrics``
+   object (the document Perfetto / chrome://tracing loads);
+2. every event carries the Chrome ``trace_event`` essentials: ``name``,
+   ``ph`` ("X" complete span or "i" instant), ``tid``, ``ts``, and a
+   non-negative ``dur`` on spans;
+3. at least ``--min-spans`` spans total (default 1);
+4. every ``--require``'d span name appears at least once with nonzero
+   count — CI passes the MapReduce stage names so a silently
+   un-instrumented stage fails the smoke test;
+5. the NDJSON sidecar (``TRACE.json.ndjson``), when present, is one
+   parseable object per line.
+
+Prints a per-name span count table so the CI log doubles as a quick
+coverage report.
+"""
+
+import json
+import os
+import sys
+from collections import Counter
+
+
+def fail(msg):
+    print(f"trace_check: FAIL: {msg}")
+    sys.exit(1)
+
+
+def main(argv):
+    path = None
+    required = []
+    min_spans = 1
+    i = 1
+    while i < len(argv):
+        a = argv[i]
+        if a == "--require":
+            i += 1
+            required.append(argv[i])
+        elif a.startswith("--require="):
+            required.append(a.split("=", 1)[1])
+        elif a == "--min-spans":
+            i += 1
+            min_spans = int(argv[i])
+        elif a.startswith("--min-spans="):
+            min_spans = int(a.split("=", 1)[1])
+        elif path is None:
+            path = a
+        else:
+            print(__doc__)
+            return 2
+        i += 1
+    if path is None:
+        print(__doc__)
+        return 2
+
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, ValueError) as e:
+        fail(f"cannot parse {path}: {e}")
+
+    events = doc.get("traceEvents")
+    if not isinstance(events, list):
+        fail("no traceEvents array")
+    if not isinstance(doc.get("metrics"), dict):
+        fail("no metrics object (counters/gauges/histograms snapshot)")
+
+    spans = Counter()
+    instants = Counter()
+    for idx, e in enumerate(events):
+        for key in ("name", "ph", "tid", "ts"):
+            if key not in e:
+                fail(f"event {idx} missing {key!r}: {e}")
+        ph = e["ph"]
+        if ph == "X":
+            if not isinstance(e.get("dur"), (int, float)) or e["dur"] < 0:
+                fail(f"span {e['name']!r} has bad dur {e.get('dur')!r}")
+            spans[e["name"]] += 1
+        elif ph == "i":
+            instants[e["name"]] += 1
+        else:
+            fail(f"event {idx} has unexpected ph {ph!r}")
+
+    total = sum(spans.values())
+    if total < min_spans:
+        fail(f"only {total} spans, expected >= {min_spans}")
+    missing = [name for name in required if spans.get(name, 0) == 0]
+    if missing:
+        fail(f"required span(s) absent: {', '.join(missing)}")
+
+    sidecar = path + ".ndjson"
+    nd_lines = 0
+    if os.path.exists(sidecar):
+        with open(sidecar) as f:
+            for ln, line in enumerate(f, 1):
+                if not line.strip():
+                    continue
+                try:
+                    json.loads(line)
+                except ValueError as e:
+                    fail(f"{sidecar}:{ln}: unparseable NDJSON line: {e}")
+                nd_lines += 1
+
+    print(f"trace_check: OK: {total} spans / {sum(instants.values())} instants "
+          f"across {len(spans)} span names; {nd_lines} NDJSON rows")
+    width = max((len(n) for n in spans), default=4)
+    for name, count in sorted(spans.items()):
+        req = "  (required)" if name in required else ""
+        print(f"  {name:<{width}}  {count:>7}{req}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
