@@ -3,7 +3,9 @@
 //! added to the registry is benchmarked for free, in both sequential and
 //! threaded map-stage configurations.
 //!
-//! Set `GREEDI_BENCH_FAST=1` for a CI-speed pass.
+//! Set `GREEDI_BENCH_FAST=1` for a CI-speed pass;
+//! `GREEDI_BENCH_JSON=BENCH_protocols.json` dumps `op -> ns/iter` for the
+//! CI perf trail (same shape as `BENCH_hotpath.json`).
 
 use std::sync::Arc;
 
@@ -81,6 +83,31 @@ fn main() {
         )
     });
 
+    // ---- checkpoint overhead: resume recovery at B ∈ {off, 8, 64} ----------
+    // The crash + salvage path is where checkpoints pay; the no-crash row at
+    // B=0 is the PR 7 baseline the others are measured against.
+    for checkpoint_every in [0usize, 8, 64] {
+        let spec_ckpt = spec
+            .clone()
+            .multiplicity(2)
+            .recovery(RecoveryPolicy::Resume)
+            .checkpoint_every(checkpoint_every)
+            .faults(FaultPlan::none().crash_tasks(vec![0]).crash_progress(0.75));
+        let label = if checkpoint_every == 0 {
+            "protocol: greedi (c=2, crash + resume, ckpt=off)".to_string()
+        } else {
+            format!("protocol: greedi (c=2, crash + resume, ckpt={checkpoint_every})")
+        };
+        b.bench(&label, || {
+            black_box(
+                protocol::by_name("greedi")
+                    .expect("registry")
+                    .run(&problem, &spec_ckpt)
+                    .value,
+            )
+        });
+    }
+
     println!("\n== values under the shared spec ==");
     let central = values
         .iter()
@@ -93,5 +120,10 @@ fn main() {
 
     if let Some(s) = b.speedup("protocol: greedi", "protocol: greedi (4 threads)") {
         println!("\ngreedi map-stage speedup with 4 threads: {s:.2}x");
+    }
+
+    // GREEDI_BENCH_JSON=path dumps `op -> ns/iter` for the CI perf trail.
+    if let Some(path) = b.maybe_write_json_env() {
+        println!("wrote {path}");
     }
 }

@@ -37,56 +37,9 @@ impl Maximizer for Greedy {
     ) -> RunResult {
         let _ = rng;
         let mut state = f.state();
-        let mut oracle_calls = 0u64;
         let mut remaining: Vec<usize> = ground.to_vec();
-        // Reusable feasibility buffers for the whole run (perf: the old
-        // per-round `collect` + O(n) `retain` were measurable on large
-        // shards). `feasible_pos` records each candidate's index in
-        // `remaining` during the scan, so the winner leaves via a true O(1)
-        // `swap_remove` — no relocation scan. Selection itself is
-        // order-independent: ties break on element id, never on position.
-        let mut feasible: Vec<usize> = Vec::with_capacity(remaining.len());
-        let mut feasible_pos: Vec<usize> = Vec::with_capacity(remaining.len());
-
-        loop {
-            // feasible candidates under the current prefix
-            feasible.clear();
-            feasible_pos.clear();
-            for (pos, &e) in remaining.iter().enumerate() {
-                if constraint.can_add(state.selected(), e) {
-                    feasible.push(e);
-                    feasible_pos.push(pos);
-                }
-            }
-            if feasible.is_empty() {
-                break;
-            }
-            let gains = state.par_batch_gains(&feasible, threads);
-            oracle_calls += feasible.len() as u64;
-            // Ties broken toward the smallest element id — keeps plain and
-            // lazy greedy bit-identical (they must agree up to ties).
-            let (best_idx, &best_gain) = gains
-                .iter()
-                .enumerate()
-                .max_by(|(ia, ga), (ib, gb)| {
-                    ga.partial_cmp(gb)
-                        .unwrap()
-                        .then_with(|| feasible[*ib].cmp(&feasible[*ia]))
-                })
-                .unwrap();
-            if best_gain <= 0.0 && f.is_monotone() {
-                break; // nothing improves a monotone objective
-            }
-            if best_gain < 0.0 {
-                break; // non-monotone: never commit a strictly negative gain
-            }
-            let chosen = feasible[best_idx];
-            state.push(chosen);
-            // `remaining` has not moved since the scan, so the recorded
-            // position is still the winner's slot.
-            remaining.swap_remove(feasible_pos[best_idx]);
-        }
-
+        let oracle_calls =
+            greedy_loop(f, state.as_mut(), &mut remaining, constraint, threads, None);
         RunResult {
             value: state.value(),
             solution: state.selected().to_vec(),
@@ -96,6 +49,139 @@ impl Maximizer for Greedy {
 
     fn name(&self) -> &'static str {
         "greedy"
+    }
+}
+
+/// The greedy selection loop, shared by [`Greedy`] and [`greedy_resumed`]:
+/// commit up to `max_picks` further elements (`None` = until natural
+/// termination) onto `state`, consuming winners from `remaining`. Returns
+/// the oracle calls issued. The loop is memoryless in (selected set,
+/// remaining set) — each round's winner is a pure function of those two
+/// sets, with ties broken toward the smallest element id and candidate
+/// gains priced independently — so running it in two installments is
+/// bit-identical to one uninterrupted run (the `Resume` recovery contract).
+fn greedy_loop<'b>(
+    f: &dyn SubmodularFn,
+    state: &mut (dyn crate::objective::State + 'b),
+    remaining: &mut Vec<usize>,
+    constraint: &dyn Constraint,
+    threads: usize,
+    max_picks: Option<usize>,
+) -> u64 {
+    let mut oracle_calls = 0u64;
+    let mut picks = 0usize;
+    // Reusable feasibility buffers for the whole run (perf: the old
+    // per-round `collect` + O(n) `retain` were measurable on large
+    // shards). `feasible_pos` records each candidate's index in
+    // `remaining` during the scan, so the winner leaves via a true O(1)
+    // `swap_remove` — no relocation scan. Selection itself is
+    // order-independent: ties break on element id, never on position.
+    let mut feasible: Vec<usize> = Vec::with_capacity(remaining.len());
+    let mut feasible_pos: Vec<usize> = Vec::with_capacity(remaining.len());
+
+    while max_picks.map(|cap| picks < cap).unwrap_or(true) {
+        // feasible candidates under the current prefix
+        feasible.clear();
+        feasible_pos.clear();
+        for (pos, &e) in remaining.iter().enumerate() {
+            if constraint.can_add(state.selected(), e) {
+                feasible.push(e);
+                feasible_pos.push(pos);
+            }
+        }
+        if feasible.is_empty() {
+            break;
+        }
+        let gains = state.par_batch_gains(&feasible, threads);
+        oracle_calls += feasible.len() as u64;
+        // Ties broken toward the smallest element id — keeps plain and
+        // lazy greedy bit-identical (they must agree up to ties).
+        let (best_idx, &best_gain) = gains
+            .iter()
+            .enumerate()
+            .max_by(|(ia, ga), (ib, gb)| {
+                ga.partial_cmp(gb)
+                    .unwrap()
+                    .then_with(|| feasible[*ib].cmp(&feasible[*ia]))
+            })
+            .unwrap();
+        if best_gain <= 0.0 && f.is_monotone() {
+            break; // nothing improves a monotone objective
+        }
+        if best_gain < 0.0 {
+            break; // non-monotone: never commit a strictly negative gain
+        }
+        let chosen = feasible[best_idx];
+        state.push(chosen);
+        picks += 1;
+        // `remaining` has not moved since the scan, so the recorded
+        // position is still the winner's slot.
+        remaining.swap_remove(feasible_pos[best_idx]);
+    }
+    oracle_calls
+}
+
+/// Outcome of a greedy run recovered through a prefix checkpoint.
+#[derive(Debug, Clone)]
+pub struct ResumedGreedy {
+    /// Final result — solution and value bit-identical to the
+    /// uninterrupted run (and `oracle_calls` too whenever the checkpoint
+    /// landed strictly before natural termination).
+    pub result: RunResult,
+    /// Picks salvaged from the checkpoint (not re-selected by recovery).
+    pub salvaged_picks: usize,
+    /// Picks the recovery actually re-ran after the checkpoint.
+    pub replayed_picks: usize,
+}
+
+/// Run greedy as if the machine crashed after committing `ckpt_picks`
+/// selections and recovered from its durable prefix checkpoint: the
+/// prefix phase models the pre-crash work (a checkpoint is just the
+/// selected prefix, in commit order), the restore replays that prefix onto
+/// a fresh state with at most `k` pushes — no re-pricing of any candidate
+/// round — and the continuation finishes the selection. Because the greedy
+/// round winner is a pure function of (selected set, remaining set), the
+/// recovered solution and value are **bit-identical** to an uninterrupted
+/// [`Greedy::maximize_threaded`] run, which `RecoveryPolicy::Resume`
+/// relies on for the greedi/multiround map stages.
+pub fn greedy_resumed(
+    f: &dyn SubmodularFn,
+    ground: &[usize],
+    constraint: &dyn Constraint,
+    threads: usize,
+    ckpt_picks: usize,
+) -> ResumedGreedy {
+    // Pre-crash prefix: what the dead machine committed and snapshot.
+    let mut state = f.state();
+    let mut remaining: Vec<usize> = ground.to_vec();
+    let mut oracle_calls = greedy_loop(
+        f,
+        state.as_mut(),
+        &mut remaining,
+        constraint,
+        threads,
+        Some(ckpt_picks),
+    );
+    let prefix: Vec<usize> = state.selected().to_vec();
+    drop(state); // the machine is gone; only the durable prefix survives
+
+    // Restore: replay the prefix onto a fresh state (≤ k pushes), then
+    // continue the selection to natural termination.
+    let mut state = f.state();
+    for &e in &prefix {
+        state.push(e);
+    }
+    let chosen: std::collections::HashSet<usize> = prefix.iter().copied().collect();
+    let mut remaining: Vec<usize> =
+        ground.iter().copied().filter(|e| !chosen.contains(e)).collect();
+    oracle_calls +=
+        greedy_loop(f, state.as_mut(), &mut remaining, constraint, threads, None);
+    let solution = state.selected().to_vec();
+    let replayed_picks = solution.len() - prefix.len();
+    ResumedGreedy {
+        result: RunResult { value: state.value(), solution, oracle_calls },
+        salvaged_picks: prefix.len(),
+        replayed_picks,
     }
 }
 
@@ -169,6 +255,53 @@ mod tests {
         // 10 + 9 + 8 gains... plus the terminating round (7) if gains stay > 0:
         // all weights 1 so three rounds then k reached: 10+9+8 = 27
         assert_eq!(r.oracle_calls, 27);
+    }
+
+    #[test]
+    fn resumed_greedy_bit_identical_to_uninterrupted() {
+        let td = Arc::new(zipf_transactions(40, 60, 6, 1.1, 2));
+        let f = Coverage::new(&td);
+        let ground: Vec<usize> = (0..40).rev().collect();
+        let k = Cardinality::new(8);
+        let mut rng = Rng::new(0);
+        let full = Greedy.maximize_threaded(&f, &ground, &k, &mut rng, 1);
+        assert!(!full.solution.is_empty());
+        for ckpt in [0usize, 1, 3, 5, 8, 20] {
+            let resumed = greedy_resumed(&f, &ground, &k, 1, ckpt);
+            assert_eq!(resumed.result.solution, full.solution, "ckpt={ckpt}");
+            assert_eq!(
+                resumed.result.value.to_bits(),
+                full.value.to_bits(),
+                "ckpt={ckpt}"
+            );
+            assert_eq!(resumed.salvaged_picks, ckpt.min(full.solution.len()));
+            assert_eq!(
+                resumed.salvaged_picks + resumed.replayed_picks,
+                full.solution.len()
+            );
+            if ckpt < full.solution.len() {
+                assert_eq!(
+                    resumed.result.oracle_calls, full.oracle_calls,
+                    "ckpt={ckpt}: mid-run checkpoints keep even the call count"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn resumed_greedy_matches_lazy_greedy_selection() {
+        // protocols run `lazy` by default; resume replays via the plain
+        // greedy loop, which is pinned bit-identical to lazy up to ties
+        use crate::algorithms::lazy::LazyGreedy;
+        let td = Arc::new(zipf_transactions(50, 80, 6, 1.2, 9));
+        let f = Coverage::new(&td);
+        let ground: Vec<usize> = (0..50).collect();
+        let k = Cardinality::new(6);
+        let mut rng = Rng::new(0);
+        let lazy = LazyGreedy.maximize_threaded(&f, &ground, &k, &mut rng, 1);
+        let resumed = greedy_resumed(&f, &ground, &k, 1, 3);
+        assert_eq!(resumed.result.solution, lazy.solution);
+        assert_eq!(resumed.result.value.to_bits(), lazy.value.to_bits());
     }
 
     #[test]

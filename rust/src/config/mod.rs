@@ -7,7 +7,9 @@
 
 use std::path::Path;
 
-pub use crate::coordinator::protocol::{PartitionStrategy, RecoveryPolicy, RunSpec};
+pub use crate::coordinator::protocol::{
+    PartitionStrategy, PlacementPolicy, RecoveryPolicy, RunSpec,
+};
 use crate::coordinator::protocol;
 use crate::util::toml;
 
@@ -78,8 +80,13 @@ pub struct ExperimentConfig {
     pub partition: PartitionStrategy,
     /// Replication multiplicity c ≥ 1 (every element on c distinct machines).
     pub multiplicity: usize,
+    /// Where replicas land relative to the fault plan's failure domains
+    /// ("anywhere" / "distinct_domains").
+    pub placement: PlacementPolicy,
     /// Crash-recovery policy for the map stages.
     pub recovery: RecoveryPolicy,
+    /// Checkpoint period B for `recovery = "resume"` (0 = checkpoints off).
+    pub checkpoint_every: usize,
     /// OS threads for the simulated cluster.
     pub threads: usize,
     /// Stream batch size (`protocol = "stream_greedi"`; output-invariant).
@@ -110,7 +117,9 @@ impl Default for ExperimentConfig {
             algorithm: "lazy".into(),
             partition: PartitionStrategy::Random,
             multiplicity: 1,
+            placement: PlacementPolicy::Anywhere,
             recovery: RecoveryPolicy::Retry,
+            checkpoint_every: 0,
             threads: 1,
             batch: 256,
             epsilon: 0.5,
@@ -166,10 +175,18 @@ impl ExperimentConfig {
                 "multiplicity" => {
                     cfg.multiplicity = value.as_usize().ok_or("multiplicity: int")?
                 }
+                "placement" => {
+                    let s = value.as_str().ok_or("placement: string")?;
+                    cfg.placement = PlacementPolicy::parse(s)
+                        .ok_or_else(|| format!("unknown placement policy {s}"))?;
+                }
                 "recovery" => {
                     let s = value.as_str().ok_or("recovery: string")?;
                     cfg.recovery = RecoveryPolicy::parse(s)
                         .ok_or_else(|| format!("unknown recovery policy {s}"))?;
+                }
+                "checkpoint_every" => {
+                    cfg.checkpoint_every = value.as_usize().ok_or("checkpoint_every: int")?
                 }
                 "threads" => cfg.threads = value.as_usize().ok_or("threads: int")?,
                 "batch" => cfg.batch = value.as_usize().ok_or("batch: int")?,
@@ -232,7 +249,9 @@ impl ExperimentConfig {
             .algorithm(&self.algorithm)
             .partition(self.partition)
             .multiplicity(self.multiplicity)
+            .placement(self.placement)
             .recovery(self.recovery)
+            .checkpoint_every(self.checkpoint_every)
             .threads(self.threads)
             .batch(self.batch)
             .epsilon(self.epsilon)
@@ -366,21 +385,33 @@ mod tests {
         let cfg = ExperimentConfig::from_toml(
             r#"
             multiplicity = 2
-            recovery = "survivor_merge"
+            placement = "distinct_domains"
+            recovery = "resume"
+            checkpoint_every = 8
             "#,
         )
         .unwrap();
         assert_eq!(cfg.multiplicity, 2);
-        assert_eq!(cfg.recovery, RecoveryPolicy::SurvivorMerge);
+        assert_eq!(cfg.placement, PlacementPolicy::DistinctDomains);
+        assert_eq!(cfg.recovery, RecoveryPolicy::Resume);
+        assert_eq!(cfg.checkpoint_every, 8);
         let spec = cfg.run_spec(5, 10);
         assert_eq!(spec.multiplicity, 2);
-        assert_eq!(spec.recovery, RecoveryPolicy::SurvivorMerge);
+        assert_eq!(spec.placement, PlacementPolicy::DistinctDomains);
+        assert_eq!(spec.recovery, RecoveryPolicy::Resume);
+        assert_eq!(spec.checkpoint_every, 8);
+        // defaults reproduce the placement-agnostic, checkpoint-free runs
+        let bare = ExperimentConfig::from_toml("").unwrap();
+        assert_eq!(bare.placement, PlacementPolicy::Anywhere);
+        assert_eq!(bare.checkpoint_every, 0);
     }
 
     #[test]
     fn bad_fault_tolerance_keys_rejected() {
         assert!(ExperimentConfig::from_toml("multiplicity = 0").is_err());
         assert!(ExperimentConfig::from_toml(r#"recovery = "pray""#).is_err());
+        assert!(ExperimentConfig::from_toml(r#"placement = "wherever""#).is_err());
+        assert!(ExperimentConfig::from_toml(r#"checkpoint_every = "lots""#).is_err());
     }
 
     #[test]

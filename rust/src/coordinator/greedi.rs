@@ -81,7 +81,14 @@ impl Greedi {
         let plan = spec.fault.clone().unwrap_or_else(FaultPlan::none);
         let policy = spec.recovery;
         let multiplicity = spec.multiplicity.clamp(1, spec.m);
-        let shards = spec.partition.split_replicated(&ground, spec.m, multiplicity, &mut rng);
+        let shards = spec.partition.split_placed(
+            &ground,
+            spec.m,
+            multiplicity,
+            spec.placement,
+            &plan.domains,
+            &mut rng,
+        );
 
         let engine = MapReduce::new(spec.threads);
         let mut job = JobReport::default();
@@ -126,6 +133,8 @@ impl Greedi {
         // ---- Crash recovery ----------------------------------------------
         let mut recovery_time = 0.0;
         let mut dropped = 0usize;
+        let mut salvaged_units = 0usize;
+        let mut replayed_units = 0usize;
         if !crashed.is_empty() {
             let _rec_span =
                 trace::span_with("greedi.recovery", || vec![("crashed", crashed.len().into())]);
@@ -137,28 +146,74 @@ impl Greedi {
                 .flat_map(|(_, s)| s.iter().copied())
                 .collect();
             dropped = ground.iter().filter(|e| !surviving.contains(e)).count();
-            if policy == RecoveryPolicy::SurvivorMerge {
+            if policy.rebuilds() {
                 // Rebuild each crashed shard from replicas, preserving the
                 // original within-shard order, and re-run its map task. When
                 // every element survives somewhere (multiplicity ≥ 2, few
                 // crashes) the rebuilt shard IS the lost shard, so the
                 // recovered candidate set equals the fault-free one exactly.
-                let rebuilt: Vec<(usize, Vec<usize>)> = crashed
+                // A shard that lost elements (every replica crashed) degrades
+                // to drop-shard semantics for the missing part: the partial
+                // rebuild runs, coverage() stays < 1.
+                let rebuilt: Vec<(usize, Vec<usize>, bool)> = crashed
                     .iter()
                     .map(|&j| {
                         let shard: Vec<usize> =
                             shards[j].iter().copied().filter(|e| surviving.contains(e)).collect();
-                        (j, shard)
+                        let complete = shard.len() == shards[j].len();
+                        (j, shard, complete)
                     })
-                    .filter(|(_, shard)| !shard.is_empty())
+                    .filter(|(_, shard, _)| !shard.is_empty())
                     .collect();
                 if !rebuilt.is_empty() {
-                    let rebuilt_ids: Vec<usize> = rebuilt.iter().map(|(j, _)| *j).collect();
+                    let rebuilt_ids: Vec<usize> = rebuilt.iter().map(|(j, _, _)| *j).collect();
+                    // Resume salvages the crashed machine's last prefix
+                    // checkpoint instead of recomputing from scratch — only
+                    // when the rebuilt shard is byte-for-byte the lost one
+                    // (a checkpoint taken over elements that no longer exist
+                    // cannot be replayed) and the black box is the
+                    // memoryless greedy family, whose selection is a pure
+                    // function of (selected, remaining).
+                    let ckpt_b = spec.checkpoint_every;
+                    let can_salvage = policy == RecoveryPolicy::Resume
+                        && ckpt_b > 0
+                        && matches!(algo_name.as_str(), "greedy" | "lazy");
+                    let kappa = spec.kappa;
                     let (recovered, rec_stage) =
-                        engine.run_stage(rebuilt, |_, (j, shard)| run_machine(j, shard));
+                        engine.run_stage(rebuilt, |_, (j, shard, complete)| {
+                            if can_salvage && complete {
+                                // Progress at crash: the SALVAGE coin (or the
+                                // plan's pinned fraction) positions the crash
+                                // within the machine's planned picks; the
+                                // durable checkpoint is the last multiple of
+                                // B at or before it.
+                                let planned = kappa.min(shard.len());
+                                let frac = plan.crash_point(j);
+                                let ckpt_picks =
+                                    ((frac * planned as f64).floor() as usize / ckpt_b) * ckpt_b;
+                                let mut task_rng = base_rng.fork(1000 + j as u64);
+                                let obj = if local_eval {
+                                    problem.local(&shard, &mut task_rng)
+                                } else {
+                                    problem.global()
+                                };
+                                let r = algorithms::greedy::greedy_resumed(
+                                    obj.as_ref(),
+                                    &shard,
+                                    round1,
+                                    oracle_threads,
+                                    ckpt_picks,
+                                );
+                                (r.result, r.salvaged_picks, r.replayed_picks)
+                            } else {
+                                (run_machine(j, shard), 0, 0)
+                            }
+                        });
                     recovery_time = rec_stage.max_task_time;
                     job.stages.push(rec_stage);
-                    for (j, r) in rebuilt_ids.into_iter().zip(recovered) {
+                    for (j, (r, salvaged, replayed)) in rebuilt_ids.into_iter().zip(recovered) {
+                        salvaged_units += salvaged;
+                        replayed_units += replayed;
                         round1_results[j] = Some(r);
                     }
                 }
@@ -253,6 +308,8 @@ impl Greedi {
             dropped_elements: dropped,
             ground_size: ground.len(),
             recovery_time,
+            salvaged_units,
+            replayed_units,
         });
 
         RunMetrics {
@@ -437,6 +494,48 @@ mod tests {
             run.value,
             base.value
         );
+    }
+
+    #[test]
+    fn resume_recovery_bit_identical_and_salvages_checkpointed_picks() {
+        let ds = Arc::new(gaussian_blobs(&SynthConfig::tiny_images(200, 8), 48));
+        let p = FacilityProblem::new(&ds);
+        // Clean reference: same domains (placement input), no faults active.
+        let domains = FaultPlan::none().domain_groups(2);
+        let spec = |plan: FaultPlan| {
+            RunSpec::new(4, 8)
+                .multiplicity(2)
+                .placement(crate::mapreduce::partition::PlacementPolicy::DistinctDomains)
+                .algorithm("greedy")
+                .seed(5)
+                .faults(plan)
+        };
+        let clean = Greedi.run(&p, &spec(domains.clone()));
+        assert!(clean.fault.is_none(), "bare domain map must not activate the plan");
+        // Crash machine 1 at 70% progress; its replicas live in the other
+        // domain, so the rebuilt shard is complete and Resume replays only
+        // the picks past the last checkpoint.
+        let crash = domains.crash_tasks(vec![1]).crash_progress(0.7);
+        let run = Greedi.run(
+            &p,
+            &spec(crash).recovery(RecoveryPolicy::Resume).checkpoint_every(2),
+        );
+        assert_eq!(run.solution, clean.solution, "resume changed the solution");
+        assert_eq!(run.value.to_bits(), clean.value.to_bits());
+        let f = run.fault.expect("active plan records stats");
+        assert_eq!(f.policy, "resume");
+        assert!((f.coverage() - 1.0).abs() < 1e-12, "distinct domains keep coverage 1");
+        assert!(f.salvaged_units > 0, "checkpoint at 70% of 8 picks must salvage");
+        assert!(f.recompute_saved() > 0.0);
+        // Without checkpoints Resume still recovers bit-identically, just
+        // with zero salvage (full recompute).
+        let cold = Greedi.run(
+            &p,
+            &spec(FaultPlan::none().domain_groups(2).crash_tasks(vec![1]))
+                .recovery(RecoveryPolicy::Resume),
+        );
+        assert_eq!(cold.solution, clean.solution);
+        assert_eq!(cold.fault.unwrap().salvaged_units, 0);
     }
 
     #[test]

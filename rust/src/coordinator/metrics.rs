@@ -59,7 +59,8 @@ impl StreamStats {
 /// deterministic from (seed, plan).
 #[derive(Debug, Clone, Default)]
 pub struct FaultStats {
-    /// Recovery policy label ("retry" / "drop_shard" / "survivor_merge").
+    /// Recovery policy label ("retry" / "drop_shard" / "survivor_merge" /
+    /// "resume").
     pub policy: String,
     /// Replication multiplicity c the run partitioned with.
     pub multiplicity: usize,
@@ -75,6 +76,11 @@ pub struct FaultStats {
     pub ground_size: usize,
     /// Wallclock of the survivor-merge recovery stage (0 when none ran).
     pub recovery_time: f64,
+    /// Progress units (greedy picks / sieve batches) restored from crashed
+    /// machines' last checkpoints under `Resume` — work NOT recomputed.
+    pub salvaged_units: usize,
+    /// Progress units re-executed past the last checkpoint under `Resume`.
+    pub replayed_units: usize,
 }
 
 impl FaultStats {
@@ -84,6 +90,16 @@ impl FaultStats {
             return 1.0;
         }
         (self.ground_size - self.dropped_elements) as f64 / self.ground_size as f64
+    }
+
+    /// Fraction of a crashed machine's recovery work the checkpoints saved:
+    /// salvaged / (salvaged + replayed), or 0 when no Resume recovery ran.
+    pub fn recompute_saved(&self) -> f64 {
+        let total = self.salvaged_units + self.replayed_units;
+        if total == 0 {
+            return 0.0;
+        }
+        self.salvaged_units as f64 / total as f64
     }
 
     /// The `fault` block of [`RunMetrics::to_json`].
@@ -104,6 +120,9 @@ impl FaultStats {
             ("ground_size", Json::num(self.ground_size as f64)),
             ("coverage", Json::num(self.coverage())),
             ("recovery_time", Json::num(self.recovery_time)),
+            ("salvaged_units", Json::num(self.salvaged_units as f64)),
+            ("replayed_units", Json::num(self.replayed_units as f64)),
+            ("recompute_saved", Json::num(self.recompute_saved())),
         ])
     }
 }
@@ -182,16 +201,27 @@ impl RunMetrics {
             None => String::new(),
         };
         let fault = match &self.fault {
-            Some(f) => format!(
-                " fault=[{} c={} crashed={} straggled={} cov={:.0}% retries={} rec={:.4}s]",
-                f.policy,
-                f.multiplicity,
-                f.crashed_machines.len(),
-                f.straggled_machines.len(),
-                f.coverage() * 100.0,
-                f.retries,
-                f.recovery_time
-            ),
+            Some(f) => {
+                let salvage = if f.salvaged_units + f.replayed_units > 0 {
+                    format!(
+                        " salvaged={} replayed={}",
+                        f.salvaged_units, f.replayed_units
+                    )
+                } else {
+                    String::new()
+                };
+                format!(
+                    " fault=[{} c={} crashed={} straggled={} cov={:.0}% retries={} rec={:.4}s{}]",
+                    f.policy,
+                    f.multiplicity,
+                    f.crashed_machines.len(),
+                    f.straggled_machines.len(),
+                    f.coverage() * 100.0,
+                    f.retries,
+                    f.recovery_time,
+                    salvage
+                )
+            }
             None => String::new(),
         };
         format!(
@@ -258,6 +288,35 @@ mod tests {
         let m = RunMetrics { name: "greedi".into(), fault: Some(f), ..Default::default() };
         let line = m.one_line();
         assert!(line.contains("fault=[drop_shard c=2 crashed=2 straggled=0 cov=75%"), "{line}");
+    }
+
+    #[test]
+    fn salvage_accounting_surfaces_only_under_resume() {
+        let f = FaultStats {
+            policy: "resume".into(),
+            multiplicity: 2,
+            crashed_machines: vec![1],
+            ground_size: 100,
+            salvaged_units: 24,
+            replayed_units: 8,
+            ..Default::default()
+        };
+        assert!((f.recompute_saved() - 0.75).abs() < 1e-12);
+        assert_eq!(FaultStats::default().recompute_saved(), 0.0, "no resume => 0");
+        let j = f.to_json();
+        assert_eq!(j.get("salvaged_units").and_then(|v| v.as_f64()), Some(24.0));
+        assert_eq!(j.get("replayed_units").and_then(|v| v.as_f64()), Some(8.0));
+        assert_eq!(j.get("recompute_saved").and_then(|v| v.as_f64()), Some(0.75));
+        let m = RunMetrics { name: "greedi".into(), fault: Some(f), ..Default::default() };
+        let line = m.one_line();
+        assert!(line.contains("salvaged=24 replayed=8]"), "{line}");
+        // without any salvage the fault block keeps its PR 7 shape
+        let bare = RunMetrics {
+            name: "greedi".into(),
+            fault: Some(FaultStats { policy: "retry".into(), ..Default::default() }),
+            ..Default::default()
+        };
+        assert!(!bare.one_line().contains("salvaged="), "{}", bare.one_line());
     }
 
     #[test]

@@ -48,7 +48,14 @@ impl Protocol for MultiRoundGreedi {
         let plan = spec.fault.clone().unwrap_or_else(FaultPlan::none);
         let policy = spec.recovery;
         let multiplicity = spec.multiplicity.clamp(1, spec.m);
-        let shards = spec.partition.split_replicated(&ground, spec.m, multiplicity, &mut rng);
+        let shards = spec.partition.split_placed(
+            &ground,
+            spec.m,
+            multiplicity,
+            spec.placement,
+            &plan.domains,
+            &mut rng,
+        );
 
         let engine = MapReduce::new(spec.threads);
         let mut job = JobReport::default();
@@ -101,6 +108,8 @@ impl Protocol for MultiRoundGreedi {
         // ---- Crash recovery (leaves hold the data; reducers don't) ----------
         let mut recovery_time = 0.0;
         let mut dropped = 0usize;
+        let mut salvaged_units = 0usize;
+        let mut replayed_units = 0usize;
         if !crashed.is_empty() {
             let _rec_span = trace::span_with("multiround.recovery", || {
                 vec![("crashed", crashed.len().into())]
@@ -112,23 +121,62 @@ impl Protocol for MultiRoundGreedi {
                 .flat_map(|(_, s)| s.iter().copied())
                 .collect();
             dropped = ground.iter().filter(|e| !surviving.contains(e)).count();
-            if policy == RecoveryPolicy::SurvivorMerge {
-                let rebuilt: Vec<(usize, Vec<usize>)> = crashed
+            if policy.rebuilds() {
+                // Partial rebuilds (every replica of some element crashed)
+                // degrade to drop-shard semantics for the missing elements:
+                // the surviving slice still runs, coverage() stays < 1.
+                let rebuilt: Vec<(usize, Vec<usize>, bool)> = crashed
                     .iter()
                     .map(|&j| {
                         let shard: Vec<usize> =
                             shards[j].iter().copied().filter(|e| surviving.contains(e)).collect();
-                        (j, shard)
+                        let complete = shard.len() == shards[j].len();
+                        (j, shard, complete)
                     })
-                    .filter(|(_, shard)| !shard.is_empty())
+                    .filter(|(_, shard, _)| !shard.is_empty())
                     .collect();
                 if !rebuilt.is_empty() {
-                    let rebuilt_ids: Vec<usize> = rebuilt.iter().map(|(j, _)| *j).collect();
+                    let rebuilt_ids: Vec<usize> = rebuilt.iter().map(|(j, _, _)| *j).collect();
+                    // Resume: replay the crashed leaf's last prefix
+                    // checkpoint (greedy family only — the selection is
+                    // memoryless in (selected, remaining)) and re-run just
+                    // the tail. See `coordinator::greedi` for the full
+                    // salvage contract.
+                    let ckpt_b = spec.checkpoint_every;
+                    let can_salvage = policy == RecoveryPolicy::Resume
+                        && ckpt_b > 0
+                        && matches!(algo_name.as_str(), "greedy" | "lazy");
+                    let kappa = spec.kappa;
                     let (recovered, rec_stage) =
-                        engine.run_stage(rebuilt, |_, (j, shard)| run_leaf(j, shard));
+                        engine.run_stage(rebuilt, |_, (j, shard, complete)| {
+                            if can_salvage && complete {
+                                let planned = kappa.min(shard.len());
+                                let frac = plan.crash_point(j);
+                                let ckpt_picks =
+                                    ((frac * planned as f64).floor() as usize / ckpt_b) * ckpt_b;
+                                let mut task_rng = base_rng.fork(7_000 + j as u64);
+                                let obj = if local_eval {
+                                    problem.local(&shard, &mut task_rng)
+                                } else {
+                                    problem.global()
+                                };
+                                let r = algorithms::greedy::greedy_resumed(
+                                    obj.as_ref(),
+                                    &shard,
+                                    &leaf_con,
+                                    leaf_oracle_threads,
+                                    ckpt_picks,
+                                );
+                                (r.result, r.salvaged_picks, r.replayed_picks)
+                            } else {
+                                (run_leaf(j, shard), 0, 0)
+                            }
+                        });
                     recovery_time = rec_stage.max_task_time;
                     job.stages.push(rec_stage);
-                    for (j, r) in rebuilt_ids.into_iter().zip(recovered) {
+                    for (j, (r, salvaged, replayed)) in rebuilt_ids.into_iter().zip(recovered) {
+                        salvaged_units += salvaged;
+                        replayed_units += replayed;
                         leaf_results[j] = Some(r);
                     }
                 }
@@ -231,6 +279,8 @@ impl Protocol for MultiRoundGreedi {
             dropped_elements: dropped,
             ground_size: ground.len(),
             recovery_time,
+            salvaged_units,
+            replayed_units,
         });
         RunMetrics {
             name: format!(

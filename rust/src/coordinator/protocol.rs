@@ -33,15 +33,18 @@ use super::Problem;
 use crate::algorithms;
 use crate::constraints::Constraint;
 
-pub use crate::mapreduce::fault::{FaultPlan, RecoveryPolicy};
-pub use crate::mapreduce::partition::PartitionStrategy;
+pub use crate::mapreduce::fault::{DomainMap, FaultPlan, RecoveryPolicy};
+pub use crate::mapreduce::partition::{PartitionStrategy, PlacementPolicy};
 
-/// Chaos-smoke hook: `GREEDI_CHAOS=fail_prob:max_attempts[:seed]` injects a
-/// transient-failure [`FaultPlan`] into every spec built by
-/// [`RunSpec::new`] (explicit `.faults(..)` calls still win). Under the
-/// default `Retry` policy this is output-invariant — retries re-run pure
-/// tasks — so the whole integration surface can run under injected faults
-/// in CI without touching a single test.
+/// Chaos-smoke hook: `GREEDI_CHAOS=fail_prob:max_attempts[:seed][:dN]`
+/// injects a transient-failure [`FaultPlan`] into every spec built by
+/// [`RunSpec::new`] (explicit `.faults(..)` calls still win). A trailing
+/// `dN` segment assigns machines round-robin to `N` failure domains, which
+/// makes the transient coins *rack-correlated* (a whole domain loses the
+/// same attempts together). Under the default `Retry` policy both shapes
+/// are output-invariant — retries re-run pure tasks — so the whole
+/// integration surface can run under injected faults in CI without
+/// touching a single test.
 fn chaos_plan() -> Option<FaultPlan> {
     use std::sync::OnceLock;
     static CHAOS: OnceLock<Option<FaultPlan>> = OnceLock::new();
@@ -49,14 +52,24 @@ fn chaos_plan() -> Option<FaultPlan> {
         let mut parts = v.split(':');
         let fail_prob: f64 = parts.next()?.trim().parse().ok()?;
         let max_attempts: usize = parts.next()?.trim().parse().ok()?;
-        let seed: u64 = match parts.next() {
-            Some(s) => s.trim().parse().ok()?,
-            None => 0xC0FFEE,
-        };
+        let mut seed: u64 = 0xC0FFEE;
+        let mut domains: Option<usize> = None;
+        for part in parts {
+            let part = part.trim();
+            if let Some(d) = part.strip_prefix('d') {
+                domains = Some(d.parse().ok().filter(|&d| d >= 1)?);
+            } else {
+                seed = part.parse().ok()?;
+            }
+        }
         if !(0.0..=1.0).contains(&fail_prob) || max_attempts == 0 {
             return None;
         }
-        Some(FaultPlan::new(fail_prob, max_attempts, seed))
+        let plan = FaultPlan::new(fail_prob, max_attempts, seed);
+        Some(match domains {
+            Some(d) => plan.domain_groups(d),
+            None => plan,
+        })
     }
     CHAOS
         .get_or_init(|| std::env::var("GREEDI_CHAOS").ok().as_deref().and_then(parse))
@@ -110,8 +123,16 @@ pub struct RunSpec {
     /// machines (Lucic et al., 1605.09619). 1 = classic disjoint partition;
     /// protocols clamp to `min(c, m)`.
     pub multiplicity: usize,
+    /// Where the `multiplicity` replicas may land relative to the fault
+    /// plan's failure domains (`Anywhere` = PR 7 behavior, bit-identical).
+    pub placement: PlacementPolicy,
     /// What map stages do when a machine crashes (see `mapreduce::fault`).
     pub recovery: RecoveryPolicy,
+    /// Checkpoint period B for `RecoveryPolicy::Resume`: machines snapshot
+    /// partial progress every B units (greedy picks / sieve batches) and a
+    /// restarted task replays only the tail past the last checkpoint.
+    /// `0` disables checkpointing (Resume degrades to full recompute).
+    pub checkpoint_every: usize,
     /// Fault injection for the simulated cluster (`None` = fault-free).
     pub fault: Option<FaultPlan>,
     /// Base RNG seed — partitions and every per-task stream fork from it.
@@ -138,7 +159,9 @@ impl RunSpec {
             threads: 1,
             partition: PartitionStrategy::Random,
             multiplicity: 1,
+            placement: PlacementPolicy::Anywhere,
             recovery: RecoveryPolicy::Retry,
+            checkpoint_every: 0,
             fault: chaos_plan(),
             seed: 42,
             round1: None,
@@ -181,9 +204,22 @@ impl RunSpec {
         self
     }
 
+    /// Replica placement relative to failure domains (no-op when the run's
+    /// fault plan has no domain map, or `multiplicity == 1`).
+    pub fn placement(mut self, p: PlacementPolicy) -> Self {
+        self.placement = p;
+        self
+    }
+
     /// Crash-recovery policy for the map stages.
     pub fn recovery(mut self, policy: RecoveryPolicy) -> Self {
         self.recovery = policy;
+        self
+    }
+
+    /// Checkpoint period B for `Resume` recovery (0 = checkpoints off).
+    pub fn checkpoint_every(mut self, b: usize) -> Self {
+        self.checkpoint_every = b;
         self
     }
 
@@ -271,7 +307,9 @@ impl fmt::Debug for RunSpec {
             .field("threads", &self.threads)
             .field("partition", &self.partition)
             .field("multiplicity", &self.multiplicity)
+            .field("placement", &self.placement)
             .field("recovery", &self.recovery)
+            .field("checkpoint_every", &self.checkpoint_every)
             .field("fault", &self.fault)
             .field("seed", &self.seed)
             .field("round1", &self.round1.as_ref().map(|_| "<constraint>"))
@@ -420,13 +458,19 @@ mod tests {
     fn fault_spec_builders_default_and_clamp() {
         let s = RunSpec::new(4, 10);
         assert_eq!(s.multiplicity, 1, "replication off by default");
+        assert_eq!(s.placement, PlacementPolicy::Anywhere, "placement-agnostic by default");
         assert_eq!(s.recovery, RecoveryPolicy::Retry, "classic MapReduce default");
+        assert_eq!(s.checkpoint_every, 0, "checkpoints off by default");
         let s = RunSpec::new(4, 10)
             .multiplicity(0)
+            .placement(PlacementPolicy::DistinctDomains)
             .recovery(RecoveryPolicy::SurvivorMerge)
+            .checkpoint_every(8)
             .faults(FaultPlan::new(0.5, 10, 1).crashes(0.1));
         assert_eq!(s.multiplicity, 1, "multiplicity clamps to 1");
+        assert_eq!(s.placement, PlacementPolicy::DistinctDomains);
         assert_eq!(s.recovery, RecoveryPolicy::SurvivorMerge);
+        assert_eq!(s.checkpoint_every, 8);
         let plan = s.fault.expect("explicit plan stored");
         assert!(plan.active());
         assert_eq!(plan.crash_prob, 0.1);

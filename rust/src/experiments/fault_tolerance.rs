@@ -16,11 +16,18 @@
 //! Reported per row: value ratio vs the fault-free run at the same (m, c)
 //! and seed, mean ground-set coverage after crashes, mean crashed-machine
 //! count, total retries, and recovery-stage wallclock.
+//!
+//! Part c compares **correlated** (whole failure domain at once) against
+//! **independent** machine crashes at matched expected crash volume, across
+//! replica placement (anywhere vs distinct_domains) and recovery policy
+//! (survivor_merge vs resume with checkpoints) — the failure-domain story:
+//! independent losses rarely hit both replicas, rack-correlated losses hit
+//! them together unless placement forces the copies into distinct racks.
 
 use std::sync::Arc;
 
 use super::{ExpOpts, FigureReport};
-use crate::coordinator::protocol::{self, FaultPlan, Protocol, RecoveryPolicy};
+use crate::coordinator::protocol::{self, FaultPlan, PlacementPolicy, Protocol, RecoveryPolicy};
 use crate::coordinator::FacilityProblem;
 use crate::data::synth::{gaussian_blobs, SynthConfig};
 use crate::util::stats::mean;
@@ -127,6 +134,92 @@ pub fn run(opts: &ExpOpts) -> FigureReport {
         body.push('\n');
     }
 
+    // ---- Part c: correlated vs independent crashes, matched volume -------
+    // A domain crash with probability p takes each machine out with the
+    // same marginal probability p as an independent machine coin, but the
+    // losses arrive rack-at-a-time: with `anywhere` placement a rack can
+    // hold every replica of an element, while `distinct_domains` placement
+    // guarantees a single-rack loss leaves coverage 1.
+    if opts.wants("c") {
+        let (m, d, c, p) = (12usize, 4usize, 2usize, 0.25);
+        let mut t = Table::new(
+            &format!(
+                "correlated vs independent crashes (m={m}, domains={d}, c={c}, p={p}; \
+                 matched expected crash volume; ratio vs fault-free at same placement, seed)"
+            ),
+            &["mode", "placement", "policy", "ratio", "coverage", "crashed", "salvaged", "replayed"],
+        );
+        for placement in PlacementPolicy::ALL {
+            // Fault-free reference per trial seed at this placement: an
+            // inactive plan that still carries the domain map, so the
+            // placement-aware partition is identical to the faulted runs.
+            let refs: Vec<f64> = (0..trials)
+                .map(|t_idx| {
+                    let seed = trial_seed(opts.seed, t_idx);
+                    let base = opts
+                        .spec(m, k, false, "lazy")
+                        .multiplicity(c)
+                        .placement(placement)
+                        .seed(seed)
+                        .faults(FaultPlan::none().domain_groups(d));
+                    greedi.run(&problem, &base).value
+                })
+                .collect();
+            for correlated in [false, true] {
+                for policy in [RecoveryPolicy::SurvivorMerge, RecoveryPolicy::Resume] {
+                    let mut ratios = Vec::with_capacity(trials);
+                    let mut coverages = Vec::with_capacity(trials);
+                    let mut crashed_counts = Vec::with_capacity(trials);
+                    let mut salvaged = 0usize;
+                    let mut replayed = 0usize;
+                    for t_idx in 0..trials {
+                        let seed = trial_seed(opts.seed, t_idx);
+                        let plan = FaultPlan::new(0.0, 1, seed ^ PLAN_SALT).domain_groups(d);
+                        let plan = if correlated {
+                            plan.domain_crashes(p)
+                        } else {
+                            plan.crashes(p)
+                        };
+                        let spec = opts
+                            .spec(m, k, false, "lazy")
+                            .multiplicity(c)
+                            .placement(placement)
+                            .seed(seed)
+                            .recovery(policy)
+                            .checkpoint_every(4)
+                            .faults(plan);
+                        let r = greedi.run(&problem, &spec);
+                        ratios.push(r.value / refs[t_idx].max(f64::MIN_POSITIVE));
+                        match r.fault.as_ref() {
+                            Some(fs) => {
+                                coverages.push(fs.coverage());
+                                crashed_counts.push(fs.crashed_machines.len() as f64);
+                                salvaged += fs.salvaged_units;
+                                replayed += fs.replayed_units;
+                            }
+                            None => {
+                                coverages.push(1.0);
+                                crashed_counts.push(0.0);
+                            }
+                        }
+                    }
+                    t.row(&[
+                        if correlated { "correlated".into() } else { "independent".to_string() },
+                        placement.label().into(),
+                        policy.label().into(),
+                        format!("{:.4}", mean(&ratios)),
+                        format!("{:.3}", mean(&coverages)),
+                        format!("{:.1}", mean(&crashed_counts)),
+                        salvaged.to_string(),
+                        replayed.to_string(),
+                    ]);
+                }
+            }
+        }
+        body.push_str(&t.render());
+        body.push('\n');
+    }
+
     FigureReport { id: "fault_tolerance".into(), body }
 }
 
@@ -147,5 +240,16 @@ mod tests {
             assert!(rep.body.contains(needle), "missing {needle:?} in:\n{}", rep.body);
         }
         assert!(!rep.body.contains("m=100"), "part=a must skip the m=100 sweep");
+        assert!(!rep.body.contains("correlated"), "part=a must skip the domain sweep");
+    }
+
+    #[test]
+    fn tiny_run_part_c_sweeps_domains_placement_and_resume() {
+        let opts = ExpOpts { n: Some(150), trials: 1, part: "c".into(), ..Default::default() };
+        let rep = run(&opts);
+        for needle in ["correlated", "independent", "anywhere", "distinct_domains", "resume", "salvaged"] {
+            assert!(rep.body.contains(needle), "missing {needle:?} in:\n{}", rep.body);
+        }
+        assert!(!rep.body.contains("m=10;"), "part=c must skip the crash-rate sweeps");
     }
 }

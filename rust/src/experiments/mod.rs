@@ -27,7 +27,9 @@ pub mod theory;
 use std::collections::BTreeMap;
 
 use crate::coordinator::greedi::centralized;
-use crate::coordinator::protocol::{self, PartitionStrategy, Protocol, RecoveryPolicy, RunSpec};
+use crate::coordinator::protocol::{
+    self, PartitionStrategy, PlacementPolicy, Protocol, RecoveryPolicy, RunSpec,
+};
 use crate::coordinator::Problem;
 use crate::util::stats::summarize;
 use crate::util::table::Table;
@@ -45,8 +47,12 @@ pub struct ExpOpts {
     pub partition: PartitionStrategy,
     /// Replication multiplicity c for every protocol run (default 1).
     pub multiplicity: usize,
+    /// Replica placement relative to the fault plan's failure domains.
+    pub placement: PlacementPolicy,
     /// Crash-recovery policy for every protocol run.
     pub recovery: RecoveryPolicy,
+    /// Checkpoint period B for `recovery = resume` (0 = checkpoints off).
+    pub checkpoint_every: usize,
     /// Use the XLA facility-gain backend where applicable.
     pub xla: bool,
     /// Lift sizes toward paper scale.
@@ -64,7 +70,9 @@ impl Default for ExpOpts {
             threads: 1,
             partition: PartitionStrategy::Random,
             multiplicity: 1,
+            placement: PlacementPolicy::Anywhere,
             recovery: RecoveryPolicy::Retry,
+            checkpoint_every: 0,
             xla: false,
             full: false,
             part: String::new(),
@@ -87,7 +95,9 @@ impl ExpOpts {
             .algorithm(algorithm)
             .partition(self.partition)
             .multiplicity(self.multiplicity)
+            .placement(self.placement)
             .recovery(self.recovery)
+            .checkpoint_every(self.checkpoint_every)
             .threads(self.threads)
             .seed(self.seed);
         if local {

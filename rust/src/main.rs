@@ -23,7 +23,10 @@
 //!   --threads <int>    OS threads for the simulated cluster (default 1)
 //!   --partition <s>    random | balanced | contiguous (default random)
 //!   --multiplicity <c> replicate every element on c machines (default 1)
-//!   --recovery <s>     retry | drop_shard | survivor_merge (default retry)
+//!   --placement <s>    anywhere | distinct_domains (default anywhere)
+//!   --recovery <s>     retry | drop_shard | survivor_merge | resume (default retry)
+//!   --checkpoint-every <b>  snapshot partial progress every b units under
+//!                      --recovery resume (default 0 = off)
 //!   --protocol <name>  protocol for `quickstart` (see `protocol::by_name`;
 //!                      default greedi — figure harnesses run their fixed suites)
 //!   --part <a|b|c|d>   figure sub-part filter
@@ -45,7 +48,9 @@
 //! ```
 
 use greedi::config::ExperimentConfig;
-use greedi::coordinator::protocol::{self, PartitionStrategy, Protocol, RecoveryPolicy, RunSpec};
+use greedi::coordinator::protocol::{
+    self, PartitionStrategy, PlacementPolicy, Protocol, RecoveryPolicy, RunSpec,
+};
 use greedi::experiments::{self, ExpOpts, FigureReport};
 use greedi::util::args::Args;
 use greedi::util::trace;
@@ -65,14 +70,25 @@ fn opts_from(args: &Args) -> ExpOpts {
             })
             .unwrap_or(PartitionStrategy::Random),
         multiplicity: args.get_usize("multiplicity", 1),
+        placement: args
+            .get("placement")
+            .map(|s| {
+                PlacementPolicy::parse(s).unwrap_or_else(|| {
+                    panic!("--placement expects anywhere|distinct_domains, got {s:?}")
+                })
+            })
+            .unwrap_or(PlacementPolicy::Anywhere),
         recovery: args
             .get("recovery")
             .map(|s| {
                 RecoveryPolicy::parse(s).unwrap_or_else(|| {
-                    panic!("--recovery expects retry|drop_shard|survivor_merge, got {s:?}")
+                    panic!(
+                        "--recovery expects retry|drop_shard|survivor_merge|resume, got {s:?}"
+                    )
                 })
             })
             .unwrap_or(RecoveryPolicy::Retry),
+        checkpoint_every: args.get_usize("checkpoint-every", 0),
         xla: args.has_flag("xla"),
         full: args.has_flag("full"),
         part: args.get_str("part", ""),
@@ -310,7 +326,7 @@ fn info() {
 fn main() {
     let args = Args::from_env();
     let Some(cmd) = args.positional.first().cloned() else {
-        eprintln!("usage: greedi <quickstart|protocols|serve|query|fig4..fig10|theory|ablations|streaming|fault_tolerance|all|info> [--n N] [--trials T] [--seed S] [--threads T] [--partition S] [--multiplicity C] [--recovery P] [--protocol P] [--part P] [--xla] [--full]");
+        eprintln!("usage: greedi <quickstart|protocols|serve|query|fig4..fig10|theory|ablations|streaming|fault_tolerance|all|info> [--n N] [--trials T] [--seed S] [--threads T] [--partition S] [--multiplicity C] [--placement S] [--recovery P] [--checkpoint-every B] [--protocol P] [--part P] [--xla] [--full]");
         std::process::exit(2);
     };
     let mut opts = opts_from(&args);
@@ -340,8 +356,14 @@ fn main() {
         if args.get("multiplicity").is_none() {
             opts.multiplicity = cfg.multiplicity;
         }
+        if args.get("placement").is_none() {
+            opts.placement = cfg.placement;
+        }
         if args.get("recovery").is_none() {
             opts.recovery = cfg.recovery;
+        }
+        if args.get("checkpoint-every").is_none() {
+            opts.checkpoint_every = cfg.checkpoint_every;
         }
         if args.get("protocol").is_none() {
             proto_name = cfg.protocol.clone();

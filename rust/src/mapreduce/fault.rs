@@ -17,12 +17,24 @@
 //! - **Stragglers** — a deterministic per-task slowdown factor multiplies
 //!   the recorded task wallclock (timing only; outputs are untouched),
 //!   modeling the slow-node tail that dominates real stage latency.
+//! - **Failure domains** — a [`DomainMap`] assigns machines to rack/zone
+//!   groups; [`FaultPlan::domain_crashes`] flips one salted coin *per
+//!   group* and takes every machine in an unlucky group down atomically
+//!   (the top-of-rack-switch failure mode real replication placement must
+//!   survive). When a domain map is present, transient attempt-failure
+//!   coins are keyed on (domain, attempt) instead of (task, attempt) —
+//!   a rack-local network blip costs the whole rack the same attempt.
 //!
 //! What happens after a crash is the [`RecoveryPolicy`]'s call:
 //! [`run_stage_policied`] either aborts like today (`Retry`), or skips the
-//! crashed machines and lets the protocol degrade (`DropShard`) or rebuild
+//! crashed machines and lets the protocol degrade (`DropShard`), rebuild
 //! the lost shard from surviving replicas (`SurvivorMerge`, with
-//! multiplicity ≥ 2 from `partition::split_replicated`).
+//! multiplicity ≥ 2 from `partition::split_replicated`), or additionally
+//! salvage the crashed machine's checkpointed partial progress and replay
+//! only the tail (`Resume`, with `RunSpec::checkpoint_every`). The
+//! deterministic crash point — how far a crashed machine got before dying,
+//! as a fraction of its planned work — comes from [`FaultPlan::crash_point`]
+//! (salted coin per task, pinnable via [`FaultPlan::crash_progress`]).
 //!
 //! Because GreeDi's map tasks are pure functions of (shard, seed), retries
 //! cannot change the protocol's output — asserted by the integration tests.
@@ -34,11 +46,59 @@ use crate::util::executor::parallel_map;
 use crate::util::rng::Rng;
 use crate::util::trace;
 
+/// Assignment of machines (tasks) to failure domains — racks, zones,
+/// power strips: whatever fails together. The default (`None`) keeps the
+/// PR 7 model where every machine is its own domain.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub enum DomainMap {
+    /// Every machine is its own failure domain (independent crashes).
+    #[default]
+    None,
+    /// Round-robin racks: machine `i` lives in domain `i % d`.
+    Modulo(usize),
+    /// Explicit per-machine domain ids; machines beyond the map's length
+    /// each get a private fresh domain (never grouped with anything).
+    Explicit(Vec<usize>),
+}
+
+impl DomainMap {
+    /// Is this the trivial one-machine-per-domain map?
+    pub fn is_trivial(&self) -> bool {
+        matches!(self, DomainMap::None) || matches!(self, DomainMap::Modulo(1))
+    }
+
+    /// The failure domain machine `task` lives in.
+    pub fn domain_of(&self, task: usize) -> usize {
+        match self {
+            DomainMap::None => task,
+            DomainMap::Modulo(d) => task % (*d).max(1),
+            // out-of-map machines get private high domains, disjoint from
+            // any sane explicit id and from each other
+            DomainMap::Explicit(v) => v.get(task).copied().unwrap_or(usize::MAX - task),
+        }
+    }
+
+    /// Number of distinct domains across machines `0..m`.
+    pub fn count(&self, m: usize) -> usize {
+        match self {
+            DomainMap::None => m,
+            DomainMap::Modulo(d) => (*d).max(1).min(m),
+            DomainMap::Explicit(_) => {
+                let doms: std::collections::HashSet<usize> =
+                    (0..m).map(|t| self.domain_of(t)).collect();
+                doms.len()
+            }
+        }
+    }
+}
+
 /// Deterministic per-(task, attempt) failure oracle, plus machine-level
-/// crash and straggler injection.
+/// crash, correlated domain-crash, and straggler injection.
 #[derive(Debug, Clone, PartialEq)]
 pub struct FaultPlan {
-    /// Probability a given task attempt fails (transient; retried).
+    /// Probability a given task attempt fails (transient; retried). Keyed
+    /// per (task, attempt) — or per (domain, attempt) when a non-trivial
+    /// [`DomainMap`] is configured (correlated transients).
     pub fail_prob: f64,
     /// Probability a given task's machine crashes for the whole stage.
     pub crash_prob: f64,
@@ -50,11 +110,26 @@ pub struct FaultPlan {
     pub max_attempts: usize,
     /// Tasks that crash unconditionally (in addition to `crash_prob` draws).
     pub crashed_tasks: Vec<usize>,
+    /// Machine → failure-domain assignment (racks/zones).
+    pub domains: DomainMap,
+    /// Probability a whole failure domain crashes atomically.
+    pub domain_crash_prob: f64,
+    /// Domains that crash unconditionally (deterministic chaos scripting).
+    pub crashed_domains: Vec<usize>,
+    /// Pinned crash point for `Resume` salvage tests; `None` draws it from
+    /// the salted coin in [`FaultPlan::crash_point`].
+    crash_progress: Option<f64>,
     seed: u64,
 }
 
 const CRASH_SALT: u64 = 0x5851_F42D_4C95_7F2D;
 const STRAGGLE_SALT: u64 = 0x1405_7B7E_F767_814F;
+/// Salts the per-domain crash coin so rack loss never mirrors the
+/// per-machine crash draws at the same seed.
+const DOMAIN_SALT: u64 = 0x9E6C_63D0_985E_E21Bu64;
+/// Salts the per-task crash-point draw (how far a crashed machine got
+/// before dying) used by `RecoveryPolicy::Resume` salvage.
+const SALVAGE_SALT: u64 = 0x27D4_EB2F_1656_67C5u64;
 
 impl FaultPlan {
     pub fn new(fail_prob: f64, max_attempts: usize, seed: u64) -> Self {
@@ -67,6 +142,10 @@ impl FaultPlan {
             straggle_factor: 1.0,
             max_attempts,
             crashed_tasks: Vec::new(),
+            domains: DomainMap::None,
+            domain_crash_prob: 0.0,
+            crashed_domains: Vec::new(),
+            crash_progress: None,
             seed,
         }
     }
@@ -99,41 +178,113 @@ impl FaultPlan {
         self
     }
 
+    /// Assign machines to failure domains explicitly: machine `i` lives in
+    /// domain `groups[i]` (machines beyond the map get private domains).
+    pub fn domains(mut self, groups: Vec<usize>) -> Self {
+        self.domains = DomainMap::Explicit(groups);
+        self
+    }
+
+    /// Assign machines round-robin to `d` failure domains (`i % d`).
+    pub fn domain_groups(mut self, d: usize) -> Self {
+        assert!(d >= 1, "need at least one failure domain");
+        self.domains = DomainMap::Modulo(d);
+        self
+    }
+
+    /// Draw whole-domain crashes per failure domain with probability `p`;
+    /// every machine in an unlucky domain crashes atomically.
+    pub fn domain_crashes(mut self, p: f64) -> Self {
+        assert!((0.0..=1.0).contains(&p));
+        self.domain_crash_prob = p;
+        self
+    }
+
+    /// Crash these failure domains unconditionally (deterministic chaos
+    /// scripting; composes with `domain_crashes` draws).
+    pub fn crash_domains(mut self, doms: Vec<usize>) -> Self {
+        self.crashed_domains = doms;
+        self
+    }
+
+    /// Pin the crash point: every crashed machine died after completing
+    /// exactly fraction `f ∈ [0, 1)` of its planned work. Without this, the
+    /// crash point is drawn per task from a salted coin (see
+    /// [`FaultPlan::crash_point`]).
+    pub fn crash_progress(mut self, f: f64) -> Self {
+        assert!((0.0..1.0).contains(&f), "crash progress {f} must be in [0, 1)");
+        self.crash_progress = Some(f);
+        self
+    }
+
     /// Is any fault injection configured? Gates the faulted stage paths so
-    /// crash-only or straggler-only plans are not silently ignored.
+    /// crash-only or straggler-only plans are not silently ignored. A bare
+    /// [`DomainMap`] with no crash probability is *not* active — protocols
+    /// use it for replica placement even on clean reference runs.
     pub fn active(&self) -> bool {
         self.fail_prob > 0.0
             || self.crash_prob > 0.0
             || self.straggle_prob > 0.0
             || !self.crashed_tasks.is_empty()
+            || self.domain_crash_prob > 0.0
+            || !self.crashed_domains.is_empty()
     }
 
-    /// The same plan with machine crashes stripped (transient failures and
-    /// stragglers kept). Merge/reduce stages run under this: crashes model
-    /// the loss of data-holding *map* machines, while reducers read shuffle
-    /// data held at the driver and are always re-schedulable.
+    /// The same plan with machine *and domain* crashes stripped (transient
+    /// failures and stragglers kept). Merge/reduce stages run under this:
+    /// crashes model the loss of data-holding *map* machines, while
+    /// reducers read shuffle data held at the driver and are always
+    /// re-schedulable. The domain map itself is kept — transient coins stay
+    /// domain-correlated.
     pub fn without_crashes(&self) -> Self {
         let mut p = self.clone();
         p.crash_prob = 0.0;
         p.crashed_tasks.clear();
+        p.domain_crash_prob = 0.0;
+        p.crashed_domains.clear();
         p
     }
 
-    /// Does attempt `attempt` of task `task` fail?
+    /// Does attempt `attempt` of task `task` fail? With a non-trivial
+    /// domain map the coin is keyed on the task's *domain*, so every
+    /// machine in a rack loses the same attempts together (correlated
+    /// transients). Output-invariant either way: retries replay the same
+    /// pure task.
     pub fn fails(&self, task: usize, attempt: usize) -> bool {
         if self.fail_prob <= 0.0 {
             return false;
         }
+        let key = if self.domains.is_trivial() { task } else { self.domains.domain_of(task) };
         let mut rng = Rng::new(
-            self.seed ^ (task as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            self.seed ^ (key as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
                 ^ (attempt as u64).wrapping_mul(0xC2B2_AE3D_27D4_EB4F),
         );
         rng.bool(self.fail_prob)
     }
 
-    /// Is task `task`'s machine crashed for this stage?
+    /// Is failure domain `dom` crashed for this stage (pinned or drawn)?
+    pub fn domain_crashed(&self, dom: usize) -> bool {
+        if self.crashed_domains.contains(&dom) {
+            return true;
+        }
+        if self.domain_crash_prob <= 0.0 {
+            return false;
+        }
+        let mut rng = Rng::new(
+            self.seed ^ DOMAIN_SALT ^ (dom as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+        );
+        rng.bool(self.domain_crash_prob)
+    }
+
+    /// Is task `task`'s machine crashed for this stage? Either its own
+    /// machine coin/pin fired, or its whole failure domain went down.
     pub fn crashed(&self, task: usize) -> bool {
         if self.crashed_tasks.contains(&task) {
+            return true;
+        }
+        if (self.domain_crash_prob > 0.0 || !self.crashed_domains.is_empty())
+            && self.domain_crashed(self.domains.domain_of(task))
+        {
             return true;
         }
         if self.crash_prob <= 0.0 {
@@ -143,6 +294,21 @@ impl FaultPlan {
             self.seed ^ CRASH_SALT ^ (task as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
         );
         rng.bool(self.crash_prob)
+    }
+
+    /// How far task `task`'s machine got before crashing, as a fraction of
+    /// its planned work in `[0, 1)` — deterministic from (seed, task), or
+    /// pinned for every task via [`FaultPlan::crash_progress`]. `Resume`
+    /// floors this to the last checkpoint boundary to decide what is
+    /// salvageable.
+    pub fn crash_point(&self, task: usize) -> f64 {
+        if let Some(f) = self.crash_progress {
+            return f;
+        }
+        let mut rng = Rng::new(
+            self.seed ^ SALVAGE_SALT ^ (task as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+        );
+        rng.f64()
     }
 
     /// The wallclock multiplier for task `task`, if it straggles.
@@ -173,13 +339,22 @@ pub enum RecoveryPolicy {
     /// and re-run its task — with multiplicity ≥ 2, provably equal to the
     /// fault-free output whenever every element survives somewhere.
     SurvivorMerge,
+    /// Like `SurvivorMerge`, but additionally salvage the crashed machine's
+    /// last durable checkpoint (its greedy prefix / sieve ladder, taken
+    /// every `RunSpec::checkpoint_every` work units) and replay only the
+    /// tail under the same per-machine RNG fork — bit-identical to the
+    /// fault-free shard output while recomputing strictly less. Falls back
+    /// to a full `SurvivorMerge` recompute when checkpointing is off or the
+    /// rebuilt shard is incomplete.
+    Resume,
 }
 
 impl RecoveryPolicy {
-    pub const ALL: [RecoveryPolicy; 3] = [
+    pub const ALL: [RecoveryPolicy; 4] = [
         RecoveryPolicy::Retry,
         RecoveryPolicy::DropShard,
         RecoveryPolicy::SurvivorMerge,
+        RecoveryPolicy::Resume,
     ];
 
     pub fn parse(s: &str) -> Option<RecoveryPolicy> {
@@ -187,6 +362,7 @@ impl RecoveryPolicy {
             "retry" => RecoveryPolicy::Retry,
             "drop_shard" => RecoveryPolicy::DropShard,
             "survivor_merge" => RecoveryPolicy::SurvivorMerge,
+            "resume" => RecoveryPolicy::Resume,
             _ => return None,
         })
     }
@@ -196,7 +372,13 @@ impl RecoveryPolicy {
             RecoveryPolicy::Retry => "retry",
             RecoveryPolicy::DropShard => "drop_shard",
             RecoveryPolicy::SurvivorMerge => "survivor_merge",
+            RecoveryPolicy::Resume => "resume",
         }
+    }
+
+    /// Policies that rebuild crashed shards from surviving replicas.
+    pub fn rebuilds(&self) -> bool {
+        matches!(self, RecoveryPolicy::SurvivorMerge | RecoveryPolicy::Resume)
     }
 }
 
@@ -586,5 +768,98 @@ mod tests {
         }
         assert!(RecoveryPolicy::parse("pray").is_none());
         assert_eq!(RecoveryPolicy::default(), RecoveryPolicy::Retry);
+        assert!(RecoveryPolicy::Resume.rebuilds() && RecoveryPolicy::SurvivorMerge.rebuilds());
+        assert!(!RecoveryPolicy::Retry.rebuilds() && !RecoveryPolicy::DropShard.rebuilds());
+    }
+
+    #[test]
+    fn domain_map_assigns_and_counts() {
+        assert_eq!(DomainMap::None.domain_of(7), 7);
+        assert_eq!(DomainMap::None.count(5), 5);
+        let modulo = DomainMap::Modulo(3);
+        assert_eq!((0..6).map(|t| modulo.domain_of(t)).collect::<Vec<_>>(), vec![0, 1, 2, 0, 1, 2]);
+        assert_eq!(modulo.count(6), 3);
+        assert_eq!(modulo.count(2), 2, "fewer machines than domains");
+        let explicit = DomainMap::Explicit(vec![0, 0, 1, 1]);
+        assert_eq!(explicit.domain_of(1), 0);
+        assert_eq!(explicit.count(4), 2);
+        // machines beyond the explicit map get private distinct domains
+        assert_ne!(explicit.domain_of(4), explicit.domain_of(5));
+        assert_eq!(explicit.count(6), 4);
+        assert!(DomainMap::None.is_trivial() && DomainMap::Modulo(1).is_trivial());
+        assert!(!modulo.is_trivial() && !explicit.is_trivial());
+    }
+
+    #[test]
+    fn domain_crashes_take_whole_groups_atomically() {
+        // 8 machines in 4 racks of 2; every rack coin fires for the pair or
+        // not at all, at any seed.
+        for seed in [3u64, 11, 1234] {
+            let plan = FaultPlan::new(0.0, 1, seed).domain_groups(4).domain_crashes(0.5);
+            assert!(plan.active(), "domain-crash plan must count as active");
+            for rack in 0..4 {
+                assert_eq!(
+                    plan.crashed(rack),
+                    plan.crashed(rack + 4),
+                    "seed={seed}: rack {rack} lost only half its machines"
+                );
+                assert_eq!(plan.crashed(rack), plan.domain_crashed(rack));
+            }
+        }
+    }
+
+    #[test]
+    fn pinned_domain_crash_and_stripping() {
+        let plan = FaultPlan::new(0.3, 5, 9).domain_groups(3).crash_domains(vec![1]);
+        assert!(plan.active());
+        assert!(plan.crashed(1) && plan.crashed(4) && plan.crashed(7));
+        assert!(!plan.crashed(0) && !plan.crashed(2));
+        let stripped = plan.without_crashes();
+        assert!((0..9).all(|t| !stripped.crashed(t)), "domain crashes must strip");
+        assert_eq!(stripped.domains, plan.domains, "domain map survives stripping");
+        for t in 0..9 {
+            assert_eq!(stripped.fails(t, 0), plan.fails(t, 0), "transients survive stripping");
+        }
+    }
+
+    #[test]
+    fn domain_crash_coin_independent_of_machine_crash_coin() {
+        // one machine per domain: domain crashes degenerate to per-machine
+        // crashes, but the salted draws must differ at the same seed
+        let per_machine = FaultPlan::new(0.0, 1, 42).crashes(0.5);
+        let per_domain = FaultPlan::new(0.0, 1, 42).domain_crashes(0.5);
+        let a: Vec<bool> = (0..64).map(|t| per_machine.crashed(t)).collect();
+        let b: Vec<bool> = (0..64).map(|t| per_domain.crashed(t)).collect();
+        assert_ne!(a, b, "domain salt collapsed onto the machine-crash salt");
+    }
+
+    #[test]
+    fn transient_coins_correlate_within_a_domain() {
+        let correlated = FaultPlan::new(0.4, 6, 21).domain_groups(2);
+        for attempt in 0..6 {
+            assert_eq!(correlated.fails(0, attempt), correlated.fails(2, attempt));
+            assert_eq!(correlated.fails(1, attempt), correlated.fails(3, attempt));
+        }
+        // without a domain map the per-task coins must NOT all agree
+        let independent = FaultPlan::new(0.4, 6, 21);
+        let agree = (0..32).all(|t| {
+            (0..6).all(|a| independent.fails(2 * t, a) == independent.fails(2 * t + 1, a))
+        });
+        assert!(!agree, "task-keyed coins should differ across machines somewhere");
+    }
+
+    #[test]
+    fn crash_point_is_deterministic_and_pinnable() {
+        let plan = FaultPlan::new(0.0, 1, 13).crashes(0.5);
+        for t in 0..32 {
+            let p = plan.crash_point(t);
+            assert!((0.0..1.0).contains(&p));
+            assert_eq!(p.to_bits(), plan.crash_point(t).to_bits());
+        }
+        // different tasks see different crash points (salted per task)
+        assert_ne!(plan.crash_point(0).to_bits(), plan.crash_point(1).to_bits());
+        let pinned = FaultPlan::none().crash_progress(0.75);
+        assert_eq!(pinned.crash_point(0), 0.75);
+        assert_eq!(pinned.crash_point(17), 0.75);
     }
 }

@@ -264,6 +264,28 @@ mod tests {
     }
 
     #[test]
+    fn domain_crash_plan_takes_a_whole_rack_out_of_a_stage() {
+        // machines 0..6 in 2 racks (i % 2); pinning rack 0 crashes exactly
+        // the even machines, and the policied stage skips them atomically.
+        let mr = MapReduce::new(1);
+        let plan = fault::FaultPlan::none().domain_groups(2).crash_domains(vec![0]);
+        assert!(plan.active());
+        let stage = mr
+            .run_stage_policied(
+                (0..6).collect(),
+                &plan,
+                fault::RecoveryPolicy::DropShard,
+                |_, x: i32| x * 10,
+            )
+            .unwrap();
+        assert_eq!(stage.crashed, vec![0, 2, 4]);
+        assert_eq!(
+            stage.outputs,
+            vec![None, Some(10), None, Some(30), None, Some(50)]
+        );
+    }
+
+    #[test]
     fn max_task_time_is_max() {
         let mr = MapReduce::new(1);
         let (_, rep) = mr.run_stage(vec![1usize, 50_000], |_, n| {

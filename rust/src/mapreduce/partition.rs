@@ -6,7 +6,16 @@
 //! [`PartitionStrategy`] is the enum every protocol's `RunSpec` carries; it
 //! lives here (not in the coordinator) because partitioning is a MapReduce
 //! concern, not a GreeDi-specific one.
+//!
+//! Replicated splits additionally take a [`PlacementPolicy`]: `Anywhere`
+//! keeps the PR 7 behavior (replicas land on any distinct machines), while
+//! `DistinctDomains` spreads each element's `c` replicas across `c`
+//! distinct *failure domains* (racks/zones from [`DomainMap`]) whenever
+//! `c ≤ #domains` — replication is only as good as its placement under
+//! correlated loss (Lucic et al., 1605.09619), and domain-spread placement
+//! makes any single-domain crash survivable by construction.
 
+use super::fault::DomainMap;
 use crate::util::rng::Rng;
 
 /// How the ground set is spread over machines.
@@ -79,6 +88,87 @@ impl PartitionStrategy {
             PartitionStrategy::Contiguous => contiguous_replicated(ground, m, c),
         }
     }
+
+    /// Placement-aware replicated split. `Anywhere` delegates to
+    /// [`PartitionStrategy::split_replicated`] on the *same* RNG stream —
+    /// bit-identical to the pre-placement behavior. `DistinctDomains`
+    /// spreads each element's `c` replicas over `c` distinct failure
+    /// domains; it falls back to the `Anywhere` path when the domain map is
+    /// trivial or there are fewer domains than replicas (`c > d`), where
+    /// domain-distinct placement is impossible.
+    pub fn split_placed(
+        &self,
+        ground: &[usize],
+        m: usize,
+        c: usize,
+        placement: PlacementPolicy,
+        domains: &DomainMap,
+        rng: &mut Rng,
+    ) -> Vec<Vec<usize>> {
+        assert!(m >= 1);
+        assert!(
+            (1..=m).contains(&c),
+            "multiplicity {c} must be in 1..={m} (machines)"
+        );
+        let d = domains.count(m);
+        if placement == PlacementPolicy::Anywhere || c == 1 || domains.is_trivial() || c > d {
+            return self.split_replicated(ground, m, c, rng);
+        }
+        let groups = machines_by_domain(m, domains);
+        match self {
+            PartitionStrategy::Random => random_domain_replicated(ground, &groups, c, rng),
+            PartitionStrategy::Balanced => balanced_domain_replicated(ground, &groups, c, rng),
+            PartitionStrategy::Contiguous => contiguous_domain_replicated(ground, m, &groups, c),
+        }
+    }
+}
+
+/// Where an element's `c` replicas may land (replicated splits only).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PlacementPolicy {
+    /// Any `c` distinct machines (the pre-domain behavior; bit-identical
+    /// default).
+    #[default]
+    Anywhere,
+    /// `c` distinct failure domains whenever `c ≤ #domains`, so losing any
+    /// single rack/zone leaves every element on a survivor.
+    DistinctDomains,
+}
+
+impl PlacementPolicy {
+    pub const ALL: [PlacementPolicy; 2] =
+        [PlacementPolicy::Anywhere, PlacementPolicy::DistinctDomains];
+
+    pub fn parse(s: &str) -> Option<PlacementPolicy> {
+        Some(match s {
+            "anywhere" => PlacementPolicy::Anywhere,
+            "distinct_domains" => PlacementPolicy::DistinctDomains,
+            _ => return None,
+        })
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            PlacementPolicy::Anywhere => "anywhere",
+            PlacementPolicy::DistinctDomains => "distinct_domains",
+        }
+    }
+}
+
+/// Machines grouped by failure domain, domains ordered by first machine
+/// appearance (stable, machine-id independent of the raw domain labels).
+fn machines_by_domain(m: usize, domains: &DomainMap) -> Vec<Vec<usize>> {
+    let mut index: std::collections::HashMap<usize, usize> = std::collections::HashMap::new();
+    let mut groups: Vec<Vec<usize>> = Vec::new();
+    for machine in 0..m {
+        let dom = domains.domain_of(machine);
+        let gi = *index.entry(dom).or_insert_with(|| {
+            groups.push(Vec::new());
+            groups.len() - 1
+        });
+        groups[gi].push(machine);
+    }
+    groups
 }
 
 /// Uniformly random assignment of each element to one of `m` machines.
@@ -172,6 +262,84 @@ pub fn contiguous_replicated(ground: &[usize], m: usize, c: usize) -> Vec<Vec<us
     shards
 }
 
+/// Uniform domain-spread assignment: each element draws `c` distinct
+/// domains (Floyd's sampling over domain groups), then one uniform machine
+/// within each — the domain-aware analogue of [`random_replicated`].
+fn random_domain_replicated(
+    ground: &[usize],
+    groups: &[Vec<usize>],
+    c: usize,
+    rng: &mut Rng,
+) -> Vec<Vec<usize>> {
+    let m: usize = groups.iter().map(Vec::len).sum();
+    let mut shards = vec![Vec::with_capacity(ground.len() * c / m + 1); m];
+    for &e in ground {
+        for gi in rng.sample_indices(groups.len(), c) {
+            let within = &groups[gi];
+            shards[within[rng.below(within.len())]].push(e);
+        }
+    }
+    shards
+}
+
+/// Balanced domain-spread assignment: shuffle once, deal replica `r` of the
+/// `i`-th shuffled element into domain `(i*c + r) % d`, and rotate a
+/// per-domain cursor over that domain's machines so load stays even within
+/// each rack as well as across racks.
+fn balanced_domain_replicated(
+    ground: &[usize],
+    groups: &[Vec<usize>],
+    c: usize,
+    rng: &mut Rng,
+) -> Vec<Vec<usize>> {
+    let d = groups.len();
+    let m: usize = groups.iter().map(Vec::len).sum();
+    let mut ids = ground.to_vec();
+    rng.shuffle(&mut ids);
+    let mut shards = vec![Vec::with_capacity(ids.len() * c / m + 1); m];
+    let mut cursor = vec![0usize; d];
+    for (i, e) in ids.into_iter().enumerate() {
+        for r in 0..c {
+            let gi = (i * c + r) % d;
+            let within = &groups[gi];
+            shards[within[cursor[gi] % within.len()]].push(e);
+            cursor[gi] += 1;
+        }
+    }
+    shards
+}
+
+/// Contiguous domain-spread assignment: base slice `j` stays home on
+/// machine `j`, and replica `r ≥ 1` lands in domain `(dom(j) + r) % d` on
+/// the machine at `j`'s rotation offset — chained replication across racks
+/// instead of across machine ids, with no randomization.
+fn contiguous_domain_replicated(
+    ground: &[usize],
+    m: usize,
+    groups: &[Vec<usize>],
+    c: usize,
+) -> Vec<Vec<usize>> {
+    let d = groups.len();
+    // machine -> (its domain's group index, its position within the group)
+    let mut slot = vec![(0usize, 0usize); m];
+    for (gi, g) in groups.iter().enumerate() {
+        for (pos, &machine) in g.iter().enumerate() {
+            slot[machine] = (gi, pos);
+        }
+    }
+    let base = contiguous_partition(ground, m);
+    let mut shards = vec![Vec::new(); m];
+    for (j, slice) in base.iter().enumerate() {
+        let (home, pos) = slot[j];
+        for r in 0..c {
+            let within = &groups[(home + r) % d];
+            // r = 0 keeps the slice on its home machine j
+            shards[within[pos % within.len()]].extend_from_slice(slice);
+        }
+    }
+    shards
+}
+
 /// Verify that `shards` is an exact partition of `ground` (diagnostics and
 /// property tests).
 pub fn check_is_partition(ground: &[usize], shards: &[Vec<usize>]) -> bool {
@@ -198,6 +366,32 @@ pub fn check_replicated_partition(ground: &[usize], shards: &[Vec<usize>], c: us
         }
     }
     copies.len() == ground.len() && ground.iter().all(|e| copies.get(e) == Some(&c))
+}
+
+/// Verify domain-distinct placement: `shards` is an exact `c`-replicated
+/// partition AND every element's `c` replicas live in `c` distinct failure
+/// domains under `domains` — the invariant that makes any single-domain
+/// crash survivable.
+pub fn check_distinct_domain_placement(
+    ground: &[usize],
+    shards: &[Vec<usize>],
+    c: usize,
+    domains: &DomainMap,
+) -> bool {
+    if !check_replicated_partition(ground, shards, c) {
+        return false;
+    }
+    let mut doms: std::collections::HashMap<usize, std::collections::HashSet<usize>> =
+        std::collections::HashMap::with_capacity(ground.len());
+    for (machine, shard) in shards.iter().enumerate() {
+        let dom = domains.domain_of(machine);
+        for &e in shard {
+            if !doms.entry(e).or_default().insert(dom) {
+                return false; // two replicas in the same failure domain
+            }
+        }
+    }
+    ground.iter().all(|e| doms.get(e).map(std::collections::HashSet::len) == Some(c))
 }
 
 #[cfg(test)]
@@ -382,5 +576,171 @@ mod tests {
             assert_eq!(PartitionStrategy::parse(strat.label()), Some(strat));
         }
         assert!(PartitionStrategy::parse("quantum").is_none());
+    }
+
+    #[test]
+    fn placement_parse_label_roundtrip() {
+        for p in PlacementPolicy::ALL {
+            assert_eq!(PlacementPolicy::parse(p.label()), Some(p));
+        }
+        assert!(PlacementPolicy::parse("everywhere").is_none());
+        assert_eq!(PlacementPolicy::default(), PlacementPolicy::Anywhere);
+    }
+
+    #[test]
+    fn anywhere_placement_bit_identical_to_split_replicated() {
+        // acceptance (c): the placement-aware entry point with the default
+        // policy must consume the same RNG stream and return the same shards
+        let ground: Vec<usize> = (0..157).map(|i| i * 2 + 3).collect();
+        let domains = DomainMap::Modulo(3);
+        for strat in PartitionStrategy::ALL {
+            for c in [1, 2, 4] {
+                let plain = strat.split_replicated(&ground, 9, c, &mut Rng::new(31));
+                let placed = strat.split_placed(
+                    &ground,
+                    9,
+                    c,
+                    PlacementPolicy::Anywhere,
+                    &domains,
+                    &mut Rng::new(31),
+                );
+                assert_eq!(plain, placed, "{} c={c}", strat.label());
+            }
+        }
+    }
+
+    #[test]
+    fn distinct_domains_spreads_replicas_across_domains() {
+        let ground: Vec<usize> = (0..211).map(|i| i * 3 + 1).rev().collect();
+        for strat in PartitionStrategy::ALL {
+            for (m, d, c) in [(6, 3, 2), (6, 3, 3), (9, 3, 2), (12, 4, 4), (10, 5, 3)] {
+                let domains = DomainMap::Modulo(d);
+                let shards = strat.split_placed(
+                    &ground,
+                    m,
+                    c,
+                    PlacementPolicy::DistinctDomains,
+                    &domains,
+                    &mut Rng::new(5),
+                );
+                assert_eq!(shards.len(), m);
+                assert!(
+                    check_distinct_domain_placement(&ground, &shards, c, &domains),
+                    "{} m={m} d={d} c={c}",
+                    strat.label()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn distinct_domains_with_explicit_map_and_uneven_racks() {
+        // racks of uneven size: {0,1,2}, {3}, {4,5}
+        let domains = DomainMap::Explicit(vec![0, 0, 0, 1, 2, 2]);
+        let ground: Vec<usize> = (0..97).collect();
+        for strat in PartitionStrategy::ALL {
+            let shards = strat.split_placed(
+                &ground,
+                6,
+                2,
+                PlacementPolicy::DistinctDomains,
+                &domains,
+                &mut Rng::new(23),
+            );
+            assert!(
+                check_distinct_domain_placement(&ground, &shards, 2, &domains),
+                "{}",
+                strat.label()
+            );
+        }
+    }
+
+    #[test]
+    fn distinct_domains_falls_back_when_impossible() {
+        let ground: Vec<usize> = (0..60).collect();
+        // c = 3 replicas but only 2 domains: placement is impossible, so the
+        // split must silently take the Anywhere path (and stay valid)
+        let domains = DomainMap::Modulo(2);
+        for strat in PartitionStrategy::ALL {
+            let placed = strat.split_placed(
+                &ground,
+                6,
+                3,
+                PlacementPolicy::DistinctDomains,
+                &domains,
+                &mut Rng::new(7),
+            );
+            let anywhere = strat.split_replicated(&ground, 6, 3, &mut Rng::new(7));
+            assert_eq!(placed, anywhere, "{}", strat.label());
+            // trivial map likewise
+            let trivial = strat.split_placed(
+                &ground,
+                6,
+                3,
+                PlacementPolicy::DistinctDomains,
+                &DomainMap::None,
+                &mut Rng::new(7),
+            );
+            assert_eq!(trivial, anywhere, "{}", strat.label());
+        }
+    }
+
+    #[test]
+    fn distinct_domains_survives_any_single_domain_crash() {
+        let ground: Vec<usize> = (0..120).collect();
+        let (m, d, c) = (12, 4, 2);
+        let domains = DomainMap::Modulo(d);
+        for strat in PartitionStrategy::ALL {
+            let shards = strat.split_placed(
+                &ground,
+                m,
+                c,
+                PlacementPolicy::DistinctDomains,
+                &domains,
+                &mut Rng::new(41),
+            );
+            for dead in 0..d {
+                let survivors: HashSet<usize> = shards
+                    .iter()
+                    .enumerate()
+                    .filter(|(i, _)| domains.domain_of(*i) != dead)
+                    .flat_map(|(_, s)| s.iter().copied())
+                    .collect();
+                assert_eq!(
+                    survivors.len(),
+                    ground.len(),
+                    "{}: domain {dead} crash lost data",
+                    strat.label()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn checker_rejects_same_domain_replicas() {
+        // both replicas on machines 0 and 1, which share domain 0
+        let domains = DomainMap::Explicit(vec![0, 0, 1, 1]);
+        let shards = vec![vec![5], vec![5], vec![], vec![]];
+        assert!(check_replicated_partition(&[5], &shards, 2));
+        assert!(!check_distinct_domain_placement(&[5], &shards, 2, &domains));
+        let good = vec![vec![5], vec![], vec![5], vec![]];
+        assert!(check_distinct_domain_placement(&[5], &good, 2, &domains));
+    }
+
+    #[test]
+    fn balanced_distinct_domains_keeps_sizes_even() {
+        let ground: Vec<usize> = (0..103).collect();
+        let domains = DomainMap::Modulo(4);
+        let shards = PartitionStrategy::Balanced.split_placed(
+            &ground,
+            12,
+            2,
+            PlacementPolicy::DistinctDomains,
+            &domains,
+            &mut Rng::new(4),
+        );
+        let sizes: Vec<usize> = shards.iter().map(Vec::len).collect();
+        let (lo, hi) = (*sizes.iter().min().unwrap(), *sizes.iter().max().unwrap());
+        assert!(hi - lo <= 2, "sizes {sizes:?}");
     }
 }

@@ -5,6 +5,19 @@
 //! blocks for one reply line and decodes it into `Ok(result)` or the
 //! server's typed [`WireError`]. Transport failures surface as
 //! [`ErrorKind::Internal`] so callers handle exactly one error type.
+//!
+//! ## Retries
+//!
+//! [`Client::connect_retrying`] layers a bounded, deterministic retry loop
+//! over connection establishment and request sends: transient failures
+//! (connection refused, reset before any request byte was written) are
+//! retried up to [`RetryPolicy::attempts`] times with a capped exponential
+//! backoff, then surface as a typed [`ErrorKind::Unavailable`] give-up
+//! error. A send that already put bytes on the wire is **never** retried —
+//! the server may have executed the request, and replaying a non-idempotent
+//! op (`advance`, `shutdown`) would double-apply it. Read failures fall in
+//! the same category for the same reason. [`Client::connect`] keeps the
+//! single-attempt behavior.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpStream, ToSocketAddrs};
@@ -14,31 +27,162 @@ use crate::util::json::Json;
 
 use super::wire::{self, ErrorKind, QueryReply, WireError};
 
+/// Bounded deterministic retry schedule for transient transport failures:
+/// attempt i sleeps `min(base_delay_ms << i, max_delay_ms)` before the next
+/// try. No jitter — retries are reproducible, and the cap keeps the total
+/// worst-case wait small (defaults: 10, 20, 40ms ≈ 70ms across 4 attempts).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// Total tries (the first attempt counts; 1 = no retries).
+    pub attempts: usize,
+    pub base_delay_ms: u64,
+    pub max_delay_ms: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy { attempts: 4, base_delay_ms: 10, max_delay_ms: 160 }
+    }
+}
+
+impl RetryPolicy {
+    /// Backoff before retry number `attempt` (0-based): capped exponential.
+    pub fn delay_ms(&self, attempt: usize) -> u64 {
+        let factor = 1u64.checked_shl(attempt.min(63) as u32).unwrap_or(u64::MAX);
+        self.base_delay_ms.saturating_mul(factor).min(self.max_delay_ms)
+    }
+
+    fn sleep(&self, attempt: usize) {
+        let ms = self.delay_ms(attempt);
+        if ms > 0 {
+            std::thread::sleep(std::time::Duration::from_millis(ms));
+        }
+    }
+}
+
 /// A connected client. Requests carry a per-connection incrementing `id`
 /// that the server echoes, so replies are self-describing in logs.
 pub struct Client {
     writer: TcpStream,
     reader: BufReader<TcpStream>,
     next_id: u64,
+    /// Reconnect target + schedule; `None` = single-attempt client.
+    retry: Option<(String, RetryPolicy)>,
 }
 
 fn io_err(what: &str, e: std::io::Error) -> WireError {
     WireError::new(ErrorKind::Internal, format!("{what}: {e}"))
 }
 
+fn gave_up(what: &str, tried: usize, last: std::io::Error) -> WireError {
+    WireError::new(
+        ErrorKind::Unavailable,
+        format!("{what}: gave up after {tried} attempts: {last}"),
+    )
+}
+
+fn connect_once(addr: impl ToSocketAddrs) -> std::io::Result<(TcpStream, BufReader<TcpStream>)> {
+    let writer = TcpStream::connect(addr)?;
+    let read_half = writer.try_clone()?;
+    Ok((writer, BufReader::new(read_half)))
+}
+
+/// Outcome of one send attempt, split by whether a retry is safe.
+enum SendFailure {
+    /// Nothing reached the wire — reconnect + resend cannot double-apply.
+    Clean(std::io::Error),
+    /// Bytes were written (or the reply read failed): the server may have
+    /// executed the request; never retried.
+    Dirty(std::io::Error),
+}
+
 impl Client {
+    /// Single-attempt connect (no retries) — transport errors surface as
+    /// [`ErrorKind::Internal`] immediately.
     pub fn connect(addr: impl ToSocketAddrs) -> Result<Client, WireError> {
-        let writer = TcpStream::connect(addr).map_err(|e| io_err("connect", e))?;
-        let read_half = writer.try_clone().map_err(|e| io_err("clone stream", e))?;
-        Ok(Client { writer, reader: BufReader::new(read_half), next_id: 0 })
+        let (writer, reader) = connect_once(addr).map_err(|e| io_err("connect", e))?;
+        Ok(Client { writer, reader, next_id: 0, retry: None })
+    }
+
+    /// Connect with bounded retries on transient failures, and keep the
+    /// policy for later sends: a request whose bytes never reached the wire
+    /// reconnects and retries on the same schedule. Gives up with a typed
+    /// [`ErrorKind::Unavailable`] error after `policy.attempts` tries.
+    pub fn connect_retrying(addr: &str, policy: RetryPolicy) -> Result<Client, WireError> {
+        let attempts = policy.attempts.max(1);
+        let mut last: Option<std::io::Error> = None;
+        for attempt in 0..attempts {
+            if attempt > 0 {
+                policy.sleep(attempt - 1);
+            }
+            match connect_once(addr) {
+                Ok((writer, reader)) => {
+                    return Ok(Client {
+                        writer,
+                        reader,
+                        next_id: 0,
+                        retry: Some((addr.to_string(), policy)),
+                    })
+                }
+                Err(e) => last = Some(e),
+            }
+        }
+        Err(gave_up("connect", attempts, last.expect("attempts >= 1")))
+    }
+
+    /// Write the line byte-by-byte so a failure is classifiable: an error
+    /// before the first byte leaves the stream clean (retry-safe), any
+    /// later failure is dirty.
+    fn send_line(&mut self, line: &str) -> Result<(), SendFailure> {
+        let buf = format!("{line}\n");
+        let bytes = buf.as_bytes();
+        let mut written = 0usize;
+        while written < bytes.len() {
+            match self.writer.write(&bytes[written..]) {
+                Ok(0) => {
+                    let e = std::io::Error::new(
+                        std::io::ErrorKind::WriteZero,
+                        "wrote 0 bytes",
+                    );
+                    return Err(if written == 0 {
+                        SendFailure::Clean(e)
+                    } else {
+                        SendFailure::Dirty(e)
+                    });
+                }
+                Ok(n) => written += n,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) if written == 0 => return Err(SendFailure::Clean(e)),
+                Err(e) => return Err(SendFailure::Dirty(e)),
+            }
+        }
+        self.writer.flush().map_err(SendFailure::Dirty)
     }
 
     fn call(&mut self, line: String) -> Result<Json, WireError> {
-        self.writer
-            .write_all(line.as_bytes())
-            .and_then(|_| self.writer.write_all(b"\n"))
-            .and_then(|_| self.writer.flush())
-            .map_err(|e| io_err("send", e))?;
+        let mut attempt = 0usize;
+        loop {
+            match self.send_line(&line) {
+                Ok(()) => break,
+                Err(SendFailure::Dirty(e)) => return Err(io_err("send", e)),
+                Err(SendFailure::Clean(e)) => {
+                    let Some((addr, policy)) = self.retry.clone() else {
+                        return Err(io_err("send", e));
+                    };
+                    attempt += 1;
+                    if attempt >= policy.attempts.max(1) {
+                        return Err(gave_up("send", attempt, e));
+                    }
+                    policy.sleep(attempt - 1);
+                    // the old stream is dead; a fresh connection retries the
+                    // not-yet-sent request without replay risk
+                    let (writer, reader) =
+                        connect_once(addr.as_str()).map_err(|e| io_err("reconnect", e))?;
+                    self.writer = writer;
+                    self.reader = reader;
+                }
+            }
+        }
         let mut reply = String::new();
         let n = self.reader.read_line(&mut reply).map_err(|e| io_err("recv", e))?;
         if n == 0 {
@@ -95,5 +239,69 @@ impl Client {
     pub fn shutdown(&mut self) -> Result<Json, WireError> {
         let id = self.id();
         self.call(wire::simple_line("shutdown", id))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::TcpListener;
+    use std::time::Duration;
+
+    #[test]
+    fn backoff_is_deterministic_and_capped() {
+        let p = RetryPolicy { attempts: 6, base_delay_ms: 10, max_delay_ms: 160 };
+        assert_eq!(
+            (0..6).map(|i| p.delay_ms(i)).collect::<Vec<_>>(),
+            vec![10, 20, 40, 80, 160, 160],
+        );
+        // huge attempt indices must not overflow the shift
+        assert_eq!(p.delay_ms(1_000), 160);
+        let d = RetryPolicy::default();
+        assert_eq!(d.attempts, 4);
+        assert_eq!(d.delay_ms(0), 10);
+    }
+
+    #[test]
+    fn connect_retrying_gives_up_with_typed_error() {
+        // a freshly bound-then-dropped port refuses connections
+        let probe = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = probe.local_addr().unwrap().to_string();
+        drop(probe);
+        let policy = RetryPolicy { attempts: 2, base_delay_ms: 1, max_delay_ms: 2 };
+        let err = Client::connect_retrying(&addr, policy).unwrap_err();
+        assert_eq!(err.kind, ErrorKind::Unavailable, "{}", err.msg);
+        assert!(err.msg.contains("after 2 attempts"), "{}", err.msg);
+        // the single-attempt constructor keeps the legacy Internal mapping
+        let err = Client::connect(addr.as_str()).unwrap_err();
+        assert_eq!(err.kind, ErrorKind::Internal);
+    }
+
+    #[test]
+    fn connect_retrying_outlasts_a_flaky_listener() {
+        // Reserve a port, free it (attempt 1 gets refused), then bring the
+        // listener up mid-schedule: the retry loop must connect and the
+        // request must round-trip.
+        let probe = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = probe.local_addr().unwrap();
+        drop(probe);
+        let server = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(60));
+            let listener = TcpListener::bind(addr).expect("rebind freed port");
+            let (mut sock, _) = listener.accept().unwrap();
+            let mut lines = BufReader::new(sock.try_clone().unwrap());
+            let mut req = String::new();
+            lines.read_line(&mut req).unwrap();
+            assert!(req.contains("ping"), "unexpected request {req:?}");
+            sock.write_all(b"{\"ok\": true, \"id\": 1, \"result\": {\"pong\": true}}\n")
+                .unwrap();
+        });
+        let policy = RetryPolicy { attempts: 10, base_delay_ms: 20, max_delay_ms: 40 };
+        let mut client =
+            Client::connect_retrying(&addr.to_string(), policy).expect("retries reach the listener");
+        let pong = client.ping().expect("ping round-trips");
+        assert_eq!(pong.get("pong").and_then(|v| v.as_bool()), Some(true));
+        server.join().unwrap();
     }
 }

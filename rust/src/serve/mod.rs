@@ -19,7 +19,9 @@
 //! * [`metrics`] — per-query latency rings with p50/p99/qps summaries on
 //!   the `stats` op and in `BENCH_serve.json`.
 //! * [`server`] / [`client`] — thread-per-connection daemon and the
-//!   blocking client used by the `query` subcommand, bench and tests.
+//!   blocking client used by the `query` subcommand, bench and tests;
+//!   the client offers bounded deterministic retries for transient
+//!   connect/send failures ([`client::RetryPolicy`]).
 //!
 //! Served results are **bit-identical** to a direct
 //! `protocol::by_name(..).run(..)` with the same `RunSpec` and seed: the
@@ -37,7 +39,9 @@
 //! `{"v": 1, "ok": true, "id": ..., "result": {...}}` or
 //! `{"v": 1, "ok": false, "id": ..., "error": {"kind": ..., "msg": ...}}`
 //! with `kind` one of `bad_request`, `unknown_protocol`,
-//! `unknown_dataset`, `overloaded`, `shutting_down`, `internal`.
+//! `unknown_dataset`, `overloaded`, `shutting_down`, `internal` (the
+//! `unavailable` kind is client-side only: the bounded retry loop in
+//! [`client`] exhausted its attempts against an unreachable daemon).
 //!
 //! | op | request fields | result fields |
 //! |---|---|---|
@@ -88,7 +92,7 @@ pub mod state;
 pub mod wire;
 
 pub use admission::{split_budget, Admission, AdmissionStats, Permit};
-pub use client::Client;
+pub use client::{Client, RetryPolicy};
 pub use metrics::{LatencySnapshot, MetricsSnapshot, ServeMetrics};
 pub use server::{ServeSpec, Server};
 pub use state::{DatasetInfo, WarmProblem, WarmSnapshot, WarmState};

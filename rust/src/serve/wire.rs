@@ -41,7 +41,7 @@
 //! Error kinds are a closed enum ([`ErrorKind`]) so clients can switch on
 //! them: `bad_request`, `unknown_protocol`, `unknown_dataset`,
 //! `overloaded` (admission shed — retry later), `shutting_down`,
-//! `internal`.
+//! `internal`, `unavailable` (client-side: the bounded retry loop gave up).
 
 use std::collections::BTreeMap;
 
@@ -69,6 +69,9 @@ pub enum ErrorKind {
     ShuttingDown,
     /// Unexpected server-side failure.
     Internal,
+    /// Client-side only: the bounded retry loop exhausted its attempts on
+    /// transient connect/send failures (never sent by the server).
+    Unavailable,
 }
 
 impl ErrorKind {
@@ -80,6 +83,7 @@ impl ErrorKind {
             ErrorKind::Overloaded => "overloaded",
             ErrorKind::ShuttingDown => "shutting_down",
             ErrorKind::Internal => "internal",
+            ErrorKind::Unavailable => "unavailable",
         }
     }
 
@@ -91,6 +95,7 @@ impl ErrorKind {
             "overloaded" => ErrorKind::Overloaded,
             "shutting_down" => ErrorKind::ShuttingDown,
             "internal" => ErrorKind::Internal,
+            "unavailable" => ErrorKind::Unavailable,
             _ => return None,
         })
     }
@@ -717,6 +722,7 @@ mod tests {
             ErrorKind::Overloaded,
             ErrorKind::ShuttingDown,
             ErrorKind::Internal,
+            ErrorKind::Unavailable,
         ] {
             assert_eq!(ErrorKind::parse(k.label()), Some(k));
         }

@@ -77,7 +77,14 @@ impl StreamGreedi {
         let ground = problem.ground();
         let policy = spec.recovery;
         let multiplicity = spec.multiplicity.clamp(1, spec.m);
-        let shards = spec.partition.split_replicated(&ground, spec.m, multiplicity, &mut rng);
+        let shards = spec.partition.split_placed(
+            &ground,
+            spec.m,
+            multiplicity,
+            spec.placement,
+            &plan.domains,
+            &mut rng,
+        );
 
         let engine = MapReduce::new(spec.threads);
         let mut job = JobReport::default();
@@ -117,6 +124,8 @@ impl StreamGreedi {
         // ---- Crash recovery (map machines hold the shard streams) --------
         let mut recovery_time = 0.0;
         let mut dropped = 0usize;
+        let mut salvaged_units = 0usize;
+        let mut replayed_units = 0usize;
         if !crashed.is_empty() {
             let surviving: std::collections::HashSet<usize> = shards
                 .iter()
@@ -125,23 +134,64 @@ impl StreamGreedi {
                 .flat_map(|(_, s)| s.iter().copied())
                 .collect();
             dropped = ground.iter().filter(|e| !surviving.contains(e)).count();
-            if policy == RecoveryPolicy::SurvivorMerge {
-                let rebuilt: Vec<(usize, Vec<usize>)> = crashed
+            if policy.rebuilds() {
+                // A shard that lost elements (all replicas crashed) degrades
+                // to drop-shard semantics for the missing part: the partial
+                // stream still runs, coverage() stays < 1.
+                let rebuilt: Vec<(usize, Vec<usize>, bool)> = crashed
                     .iter()
                     .map(|&j| {
                         let shard: Vec<usize> =
                             shards[j].iter().copied().filter(|e| surviving.contains(e)).collect();
-                        (j, shard)
+                        let complete = shard.len() == shards[j].len();
+                        (j, shard, complete)
                     })
-                    .filter(|(_, shard)| !shard.is_empty())
+                    .filter(|(_, shard, _)| !shard.is_empty())
                     .collect();
                 if !rebuilt.is_empty() {
-                    let rebuilt_ids: Vec<usize> = rebuilt.iter().map(|(j, _)| *j).collect();
+                    let rebuilt_ids: Vec<usize> = rebuilt.iter().map(|(j, _, _)| *j).collect();
+                    // Resume restores the crashed machine's last sieve
+                    // checkpoint and replays only the tail of its stream —
+                    // valid only when the rebuilt shard is byte-for-byte the
+                    // lost one, so the checkpointed ladder matches the
+                    // replayed arrival order exactly.
+                    let ckpt_b = spec.checkpoint_every;
+                    let can_salvage = policy == RecoveryPolicy::Resume && ckpt_b > 0;
                     let (recovered, rec_stage) =
-                        engine.run_stage(rebuilt, |_, (j, shard)| run_sieve(j, shard));
+                        engine.run_stage(rebuilt, |_, (j, shard, complete)| {
+                            if can_salvage && complete {
+                                let total_batches = shard.len().div_ceil(batch);
+                                let frac = plan.crash_point(j);
+                                let ckpt_batches = ((frac * total_batches as f64).floor()
+                                    as usize
+                                    / ckpt_b)
+                                    * ckpt_b;
+                                let mut task_rng = base_rng.fork(3_000 + j as u64);
+                                let obj = if local_eval {
+                                    problem.local(&shard, &mut task_rng)
+                                } else {
+                                    problem.global()
+                                };
+                                let mut src = VecSource::shuffled_with(shard, &mut task_rng);
+                                let r = super::sieve::sieve_stream_resumed(
+                                    obj.as_ref(),
+                                    &mut src,
+                                    kappa,
+                                    epsilon,
+                                    batch,
+                                    oracle_threads,
+                                    ckpt_batches,
+                                );
+                                (r.result, r.saved_batches, r.replayed_batches)
+                            } else {
+                                (run_sieve(j, shard), 0, 0)
+                            }
+                        });
                     recovery_time = rec_stage.max_task_time;
                     job.stages.push(rec_stage);
-                    for (j, r) in rebuilt_ids.into_iter().zip(recovered) {
+                    for (j, (r, salvaged, replayed)) in rebuilt_ids.into_iter().zip(recovered) {
+                        salvaged_units += salvaged;
+                        replayed_units += replayed;
                         results[j] = Some(r);
                     }
                 }
@@ -244,6 +294,8 @@ impl StreamGreedi {
             dropped_elements: dropped,
             ground_size: ground.len(),
             recovery_time,
+            salvaged_units,
+            replayed_units,
         });
 
         Ok(RunMetrics {
@@ -349,6 +401,38 @@ mod tests {
         assert!(r.value >= 0.0);
         let set: std::collections::HashSet<_> = r.solution.iter().collect();
         assert_eq!(set.len(), r.solution.len(), "duplicate ids");
+    }
+
+    #[test]
+    fn resume_recovery_bit_identical_with_sieve_checkpoints() {
+        let p = problem(240, 67);
+        let domains = FaultPlan::none().domain_groups(2);
+        let base = |plan: FaultPlan| {
+            spec(4, 6)
+                .multiplicity(2)
+                .placement(crate::mapreduce::partition::PlacementPolicy::DistinctDomains)
+                .seed(9)
+                .faults(plan)
+        };
+        let clean = StreamGreedi.run(&p, &base(domains.clone()));
+        assert!(clean.fault.is_none(), "bare domain map must not activate the plan");
+        let run = StreamGreedi.run(
+            &p,
+            &base(domains.crash_tasks(vec![2]).crash_progress(0.8))
+                .recovery(RecoveryPolicy::Resume)
+                .checkpoint_every(1),
+        );
+        assert_eq!(run.solution, clean.solution, "resume changed the solution");
+        assert_eq!(run.value.to_bits(), clean.value.to_bits());
+        assert_eq!(
+            run.oracle_calls, clean.oracle_calls,
+            "sieve restore recovers the oracle counter too"
+        );
+        let f = run.fault.expect("active plan records stats");
+        assert_eq!(f.policy, "resume");
+        assert!((f.coverage() - 1.0).abs() < 1e-12, "replicas in the other rack");
+        assert!(f.salvaged_units > 0, "crash at 80% of 4 batches must salvage");
+        assert!(f.replayed_units > 0, "the tail past the checkpoint is replayed");
     }
 
     #[test]

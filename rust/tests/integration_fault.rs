@@ -7,10 +7,15 @@
 //! `value.to_bits()`) of the fault-free run — replication makes machine
 //! loss invisible, which is the whole point of the subsystem.
 
+//! PR 8 adds the failure-domain pins: under `distinct_domains` placement
+//! with c ≥ 2, crashing any **whole domain** is as invisible as a single
+//! machine crash was in PR 7, and `resume` recovery salvages checkpointed
+//! partial progress without moving a single output bit.
+
 use std::sync::Arc;
 
 use greedi::coordinator::protocol::{
-    self, FaultPlan, Protocol, RecoveryPolicy, RunSpec,
+    self, FaultPlan, PlacementPolicy, Protocol, RecoveryPolicy, RunSpec,
 };
 use greedi::coordinator::FacilityProblem;
 use greedi::data::synth::{gaussian_blobs, SynthConfig};
@@ -150,6 +155,144 @@ fn crashes_are_deterministic_from_seed_and_plan() {
     assert_eq!(fa.dropped_elements, fb.dropped_elements);
     assert_eq!(a.solution, b.solution);
     assert_eq!(a.value.to_bits(), b.value.to_bits());
+}
+
+#[test]
+fn distinct_domains_placement_survives_whole_domain_crashes() {
+    let p = problem(300, 67);
+    let (m, d) = (4usize, 2usize);
+    for name in ["greedi", "multiround", "stream_greedi"] {
+        let proto = protocol::by_name(name).unwrap();
+        // The fault-free reference carries the same domain map (inactive
+        // plan), so the placement-aware partition is identical — and no
+        // FaultStats attach to it.
+        let clean_spec = RunSpec::new(m, 8)
+            .multiplicity(2)
+            .placement(PlacementPolicy::DistinctDomains)
+            .algorithm("greedy")
+            .seed(23)
+            .faults(FaultPlan::none().domain_groups(d));
+        let clean = proto.run(&p, &clean_spec);
+        assert!(clean.fault.is_none(), "{name}: inactive plan must not attach stats");
+        for dom in 0..d {
+            for policy in [RecoveryPolicy::SurvivorMerge, RecoveryPolicy::Resume] {
+                let plan = FaultPlan::none().domain_groups(d).crash_domains(vec![dom]);
+                let spec = clean_spec
+                    .clone()
+                    .recovery(policy)
+                    .checkpoint_every(2)
+                    .faults(plan.clone());
+                let r = proto.run(&p, &spec);
+                assert_eq!(
+                    r.solution, clean.solution,
+                    "{name}/{}: crash of domain {dom} changed the solution",
+                    policy.label()
+                );
+                assert_eq!(r.value.to_bits(), clean.value.to_bits(), "{name} domain {dom}");
+                let fs = r.fault.as_ref().expect("fault stats under an active plan");
+                let rack: Vec<usize> =
+                    (0..m).filter(|&j| plan.domains.domain_of(j) == dom).collect();
+                assert_eq!(fs.crashed_machines, rack, "{name}: domain crash takes the whole rack");
+                assert_eq!(fs.dropped_elements, 0, "{name}: a replica survives in the other rack");
+                assert_eq!(fs.coverage(), 1.0, "{name}");
+                assert_eq!(fs.policy, policy.label(), "{name}");
+            }
+        }
+    }
+}
+
+#[test]
+fn resume_salvages_checkpointed_progress_without_changing_bits() {
+    let p = problem(300, 68);
+    let proto = protocol::by_name("greedi").unwrap();
+    let clean_spec = RunSpec::new(4, 10)
+        .multiplicity(2)
+        .placement(PlacementPolicy::DistinctDomains)
+        .algorithm("greedy")
+        .seed(29)
+        .faults(FaultPlan::none().domain_groups(2));
+    let clean = proto.run(&p, &clean_spec);
+    let crash = FaultPlan::none()
+        .domain_groups(2)
+        .crash_tasks(vec![2])
+        .crash_progress(0.8);
+    let resumed = proto.run(
+        &p,
+        &clean_spec
+            .clone()
+            .recovery(RecoveryPolicy::Resume)
+            .checkpoint_every(2)
+            .faults(crash.clone()),
+    );
+    assert_eq!(resumed.solution, clean.solution, "resume must not change the solution");
+    assert_eq!(resumed.value.to_bits(), clean.value.to_bits());
+    let fs = resumed.fault.as_ref().expect("fault stats");
+    assert_eq!(fs.policy, "resume");
+    assert!(fs.salvaged_units > 0, "the checkpointed prefix must be salvaged");
+    assert!(
+        fs.replayed_units < fs.salvaged_units + fs.replayed_units,
+        "resume must replay strictly less than a from-scratch rebuild"
+    );
+    assert_eq!(fs.coverage(), 1.0);
+    // checkpoint_every = 0: resume degrades to a full recompute — still
+    // bit-identical, nothing salvaged.
+    let cold = proto.run(&p, &clean_spec.clone().recovery(RecoveryPolicy::Resume).faults(crash));
+    assert_eq!(cold.solution, clean.solution);
+    assert_eq!(cold.value.to_bits(), clean.value.to_bits());
+    let cold_fs = cold.fault.as_ref().unwrap();
+    assert_eq!(cold_fs.salvaged_units, 0, "no checkpoints => nothing to salvage");
+}
+
+#[test]
+fn anywhere_placement_ignores_the_domain_map_bit_for_bit() {
+    // Acceptance pin: the defaults (anywhere placement, checkpoints off)
+    // reproduce the pre-domain runs exactly, even when the plan carries a
+    // rack map — split_placed must delegate on the same RNG stream.
+    let p = problem(300, 69);
+    for name in ["greedi", "multiround", "stream_greedi"] {
+        let proto = protocol::by_name(name).unwrap();
+        let legacy = RunSpec::new(4, 8).multiplicity(2).seed(33).faults(FaultPlan::none());
+        let base = proto.run(&p, &legacy);
+        let domained =
+            proto.run(&p, &legacy.clone().faults(FaultPlan::none().domain_groups(3)));
+        assert_eq!(domained.solution, base.solution, "{name}: rack map moved a replica");
+        assert_eq!(domained.value.to_bits(), base.value.to_bits(), "{name}");
+    }
+}
+
+#[test]
+fn losing_every_replica_degrades_to_drop_shard_semantics() {
+    // c = 2 but three of four machines die: some elements lose both
+    // replicas, so even rebuild policies cannot restore full coverage —
+    // they degrade to drop_shard semantics on whatever survived.
+    let p = problem(300, 70);
+    let proto = protocol::by_name("greedi").unwrap();
+    let clean_spec = RunSpec::new(4, 8).multiplicity(2).seed(37).faults(FaultPlan::none());
+    let clean = proto.run(&p, &clean_spec);
+    for policy in [RecoveryPolicy::SurvivorMerge, RecoveryPolicy::Resume] {
+        let spec = clean_spec
+            .clone()
+            .recovery(policy)
+            .checkpoint_every(2)
+            .faults(FaultPlan::none().crash_tasks(vec![0, 1, 2]));
+        let r = proto.run(&p, &spec);
+        let fs = r.fault.as_ref().expect("fault stats");
+        assert!(
+            fs.dropped_elements > 0,
+            "{}: losing every replica of an element must drop it",
+            policy.label()
+        );
+        assert!(fs.coverage() < 1.0, "{}: coverage {}", policy.label(), fs.coverage());
+        assert!(
+            r.value <= clean.value + 1e-9,
+            "{}: a partial-coverage run cannot beat the fault-free one",
+            policy.label()
+        );
+        // incomplete rebuilds are never salvaged: resume falls back to a
+        // full recompute of the partial shard
+        assert_eq!(fs.salvaged_units, 0, "{}", policy.label());
+        assert!(r.solution.len() <= 8);
+    }
 }
 
 #[test]

@@ -7,9 +7,18 @@
 //! 4. `c = 1` is bit-identical to the un-replicated `split` (so turning the
 //!    multiplicity knob off reproduces every pre-existing run exactly).
 
+//! PR 8 extends the harness with placement: `split_placed` under
+//! `distinct_domains` must put every element's replicas in distinct failure
+//! domains, and domain crashes must be rack-atomic and deterministic from
+//! `(seed, plan)`.
+
 use std::collections::{HashMap, HashSet};
 
-use greedi::mapreduce::partition::{check_replicated_partition, PartitionStrategy};
+use greedi::mapreduce::fault::{DomainMap, FaultPlan};
+use greedi::mapreduce::partition::{
+    check_distinct_domain_placement, check_replicated_partition, PartitionStrategy,
+    PlacementPolicy,
+};
 use greedi::util::rng::Rng;
 
 /// The one checker every (strategy, m, c) cell goes through.
@@ -100,6 +109,105 @@ fn randomized_strategies_respond_to_the_seed() {
     let a = PartitionStrategy::Contiguous.split_replicated(&ground, 8, 2, &mut Rng::new(21));
     let b = PartitionStrategy::Contiguous.split_replicated(&ground, 8, 2, &mut Rng::new(22));
     assert_eq!(a, b, "contiguous replication must be seed-independent");
+}
+
+#[test]
+fn distinct_domain_placement_holds_for_every_strategy() {
+    let ground: Vec<usize> = (0..257).map(|i| i * 3 + 1).rev().collect();
+    for strat in PartitionStrategy::ALL {
+        for (m, d) in [(4usize, 2usize), (9, 3), (16, 4)] {
+            let domains = DomainMap::Modulo(d);
+            for c in 2..=d.min(3) {
+                let shards = strat.split_placed(
+                    &ground,
+                    m,
+                    c,
+                    PlacementPolicy::DistinctDomains,
+                    &domains,
+                    &mut Rng::new(83),
+                );
+                assert!(
+                    check_distinct_domain_placement(&ground, &shards, c, &domains),
+                    "{} m={m} d={d} c={c}: replicas share a failure domain",
+                    strat.label()
+                );
+                // deterministic per seed, like every other split
+                let again = strat.split_placed(
+                    &ground,
+                    m,
+                    c,
+                    PlacementPolicy::DistinctDomains,
+                    &domains,
+                    &mut Rng::new(83),
+                );
+                assert_eq!(shards, again, "{} m={m} d={d} c={c}", strat.label());
+            }
+            // anywhere placement must be byte-identical to the pre-placement
+            // split_replicated on the same RNG stream
+            let anywhere = strat.split_placed(
+                &ground,
+                m,
+                2,
+                PlacementPolicy::Anywhere,
+                &domains,
+                &mut Rng::new(83),
+            );
+            let plain = strat.split_replicated(&ground, m, 2, &mut Rng::new(83));
+            assert_eq!(anywhere, plain, "{} m={m}: anywhere drifted from legacy", strat.label());
+        }
+    }
+}
+
+#[test]
+fn impossible_distinct_placement_falls_back_to_anywhere() {
+    // c > #domains: domain-distinct placement cannot exist, so the split
+    // must silently take the legacy path rather than panic or dead-loop.
+    let ground: Vec<usize> = (0..100).collect();
+    for strat in PartitionStrategy::ALL {
+        let domains = DomainMap::Modulo(2);
+        let placed = strat.split_placed(
+            &ground,
+            6,
+            3,
+            PlacementPolicy::DistinctDomains,
+            &domains,
+            &mut Rng::new(7),
+        );
+        let plain = strat.split_replicated(&ground, 6, 3, &mut Rng::new(7));
+        assert_eq!(placed, plain, "{}: c > d must fall back", strat.label());
+    }
+}
+
+#[test]
+fn domain_crashes_are_rack_atomic_and_deterministic() {
+    let m = 12;
+    let plan = FaultPlan::new(0.0, 1, 91).domain_groups(4).domain_crashes(0.5);
+    let crashed: Vec<bool> = (0..m).map(|t| plan.crashed(t)).collect();
+    // rack-atomic: two machines in the same domain share a fate
+    for t in 0..m {
+        let dom = plan.domains.domain_of(t);
+        assert_eq!(
+            crashed[t],
+            plan.domain_crashed(dom),
+            "machine {t} disagrees with its domain {dom}"
+        );
+        for u in 0..m {
+            if plan.domains.domain_of(u) == dom {
+                assert_eq!(crashed[t], crashed[u], "machines {t},{u} share domain {dom}");
+            }
+        }
+    }
+    // deterministic from (seed, plan): an identical rebuild draws the same coins
+    let rebuilt = FaultPlan::new(0.0, 1, 91).domain_groups(4).domain_crashes(0.5);
+    let again: Vec<bool> = (0..m).map(|t| rebuilt.crashed(t)).collect();
+    assert_eq!(crashed, again, "same (seed, plan) must crash the same racks");
+    // ...and the seed actually matters: across many seeds, at least one
+    // draws a different crash pattern (p = 0.5 over 4 racks).
+    let differs = (0..16u64).any(|s| {
+        let alt = FaultPlan::new(0.0, 1, 91 ^ (s + 1)).domain_groups(4).domain_crashes(0.5);
+        (0..m).map(|t| alt.crashed(t)).collect::<Vec<bool>>() != crashed
+    });
+    assert!(differs, "domain crash coins ignore the seed");
 }
 
 #[test]
