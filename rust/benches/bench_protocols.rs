@@ -50,6 +50,32 @@ fn main() {
         });
     }
 
+    // ---- accumulation-tree merge: fan-in r at small and wide clusters ------
+    // flat is the classic single-root merge (fanout >= m); the r = 2 / 4
+    // rows pay extra levels to cap the root's candidate pool at r·κ
+    for tree_m in [10usize, 100] {
+        for fanout in [2usize, 4, 0] {
+            let label = if fanout == 0 {
+                format!("protocol: greedi (m={tree_m}, flat merge)")
+            } else {
+                format!("protocol: greedi (m={tree_m}, tree r={fanout})")
+            };
+            let spec_tree = if fanout == 0 {
+                RunSpec::new(tree_m, k).seed(1)
+            } else {
+                RunSpec::new(tree_m, k).seed(1).fanout(fanout)
+            };
+            b.bench(&label, || {
+                black_box(
+                    protocol::by_name("greedi")
+                        .expect("registry")
+                        .run(&problem, &spec_tree)
+                        .value,
+                )
+            });
+        }
+    }
+
     // ---- fault-tolerance overhead: retries, replication, crash recovery ----
     let spec_retry = spec.clone().faults(FaultPlan::new(0.2, 8, 1));
     b.bench("protocol: greedi (retry, fail_p=0.2)", || {

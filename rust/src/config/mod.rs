@@ -89,6 +89,10 @@ pub struct ExperimentConfig {
     pub checkpoint_every: usize,
     /// OS threads for the simulated cluster.
     pub threads: usize,
+    /// Accumulation-tree fan-in r for greedi/multiround/stream_greedi
+    /// (`0` = protocol default: flat merge, or a binary tree for
+    /// multiround; otherwise ≥ 2).
+    pub fanout: usize,
     /// Stream batch size (`protocol = "stream_greedi"`; output-invariant).
     pub batch: usize,
     /// Approximation slack ε ∈ (0, 1): greedy_scaling's threshold decay and
@@ -121,6 +125,7 @@ impl Default for ExperimentConfig {
             recovery: RecoveryPolicy::Retry,
             checkpoint_every: 0,
             threads: 1,
+            fanout: 0,
             batch: 256,
             epsilon: 0.5,
             trials: 3,
@@ -189,6 +194,7 @@ impl ExperimentConfig {
                     cfg.checkpoint_every = value.as_usize().ok_or("checkpoint_every: int")?
                 }
                 "threads" => cfg.threads = value.as_usize().ok_or("threads: int")?,
+                "fanout" => cfg.fanout = value.as_usize().ok_or("fanout: int")?,
                 "batch" => cfg.batch = value.as_usize().ok_or("batch: int")?,
                 "epsilon" => cfg.epsilon = value.as_f64().ok_or("epsilon: float")?,
                 "trials" => cfg.trials = value.as_usize().ok_or("trials: int")?,
@@ -230,6 +236,9 @@ impl ExperimentConfig {
         if self.multiplicity == 0 {
             return Err("multiplicity must be >= 1".into());
         }
+        if self.fanout == 1 {
+            return Err("fanout must be 0 (protocol default) or >= 2".into());
+        }
         if self.batch == 0 {
             return Err("batch must be > 0".into());
         }
@@ -259,6 +268,9 @@ impl ExperimentConfig {
         if self.local_eval {
             spec = spec.local();
         }
+        // assign directly: the `.fanout()` builder clamps to >= 2, which
+        // would destroy the 0 = protocol-default sentinel
+        spec.fanout = self.fanout;
         spec
     }
 }
@@ -378,6 +390,23 @@ mod tests {
         assert!(ExperimentConfig::from_toml("batch = 0").is_err());
         assert!(ExperimentConfig::from_toml("epsilon = 0.0").is_err());
         assert!(ExperimentConfig::from_toml("epsilon = 1.5").is_err());
+    }
+
+    #[test]
+    fn fanout_key_parses_validates_and_reaches_spec() {
+        // explicit fan-in survives the preset -> RunSpec hop un-clamped
+        let cfg = ExperimentConfig::from_toml("fanout = 4").unwrap();
+        assert_eq!(cfg.fanout, 4);
+        assert_eq!(cfg.run_spec(8, 10).fanout, 4);
+        // default is the 0 sentinel (protocol picks flat vs binary tree)
+        let bare = ExperimentConfig::from_toml("").unwrap();
+        assert_eq!(bare.fanout, 0);
+        assert_eq!(bare.run_spec(8, 10).fanout, 0);
+        // a 1-ary "tree" never terminates; reject it loudly instead of
+        // silently clamping like the builder does
+        let err = ExperimentConfig::from_toml("fanout = 1").unwrap_err();
+        assert!(err.contains("fanout"), "{err}");
+        assert!(ExperimentConfig::from_toml(r#"fanout = "wide""#).is_err());
     }
 
     #[test]

@@ -192,6 +192,7 @@ impl Protocol for Baseline {
             job,
             rounds: 2,
             stream: None,
+            tree: None,
             fault: None,
         }
     }

@@ -8,7 +8,12 @@
 //!
 //! Round 2 (reduce): merge the m candidate sets into B (≤ m·κ elements —
 //! the only communication), run the black box again with budget k, and
-//! return the better of { best round-1 set, round-2 set }.
+//! return the better of { best round-1 set, round-2 set }. With
+//! `RunSpec::fanout` set to r < m the merge runs as an r-ary accumulation
+//! tree ([`mapreduce::reduce::TreeReduce`](crate::mapreduce::reduce)) whose
+//! interior nodes pre-merge under the round-1 constraint, capping any
+//! node's pool at r·κ candidates; the default is the flat single-root
+//! merge above, bit for bit.
 //!
 //! In **local mode** (paper §4.5, decomposable objectives) round 1 evaluates
 //! the objective restricted to each machine's shard and round 2 on a random
@@ -25,6 +30,7 @@ use crate::algorithms;
 use crate::constraints::cardinality::Cardinality;
 use crate::constraints::Constraint;
 use crate::mapreduce::fault::{FaultPlan, RecoveryPolicy};
+use crate::mapreduce::reduce::{NodeOutput, TreeReduce};
 use crate::mapreduce::{JobReport, MapReduce};
 use crate::util::rng::Rng;
 use crate::util::trace;
@@ -223,77 +229,80 @@ impl Greedi {
         let mut oracle_calls: u64 =
             round1_results.iter().flatten().map(|r| r.oracle_calls).sum();
 
-        // Union of surviving round-1 candidate sets = the only shuffled data.
-        let mut merged: Vec<usize> = Vec::new();
-        for r in round1_results.iter().flatten() {
-            merged.extend_from_slice(&r.solution);
-        }
-        merged.sort_unstable();
-        merged.dedup();
-        job.record_shuffle(merged.len());
-
-        // ---- Round 2: merge machine --------------------------------------
-        // Crashes model the loss of data-holding map machines; the reducer
-        // reads shuffle data held at the driver and is always re-schedulable,
-        // so the merge runs under the transient-failure plan only.
-        let merge_plan = plan.without_crashes();
+        // ---- Round 2+: accumulation-tree merge ---------------------------
+        // Surviving round-1 candidate sets feed the r-ary reduction tree in
+        // machine order. The default (flat) fan-in is one root node pooling
+        // all m sets — Algorithm 2's single merge machine, bit for bit; an
+        // explicit fanout r < m staggers the merge over ⌈log_r m⌉ levels so
+        // no node ever pools more than r·κ candidates. Interior nodes merge
+        // under the round-1 constraint (κ-budget partial merges, like
+        // multiround's levels); the root re-selects under the round-2
+        // constraint exactly as before. Crashes model the loss of
+        // data-holding map machines — reduce nodes read candidate sets held
+        // at the driver, so the root runs under the transient plan only and
+        // crashed interior nodes are re-run inline by the tree.
         let candidates: Vec<Vec<usize>> =
             round1_results.iter().flatten().map(|r| r.solution.clone()).collect();
-        let merged_for_task = merged.clone();
+        let total_candidates: usize = candidates.iter().map(|c| c.len()).sum();
         let algo_name2 = spec.algorithm.clone();
         let m = spec.m;
-        // The merge round is a single reducer — it gets the whole budget.
-        let merge_threads = spec.oracle_threads(1);
+        let tree = TreeReduce::new(spec.tree_fanout(true)).force_root(true);
         let _merge_span =
-            trace::span_with("greedi.merge", || vec![("candidates", merged.len().into())]);
-        let (mut round2_out, stage2, merge_retries) = engine
-            .run_stage_faulted(vec![()], &merge_plan, |_, ()| {
-            let mut task_rng = base_rng.fork(2000);
-            let obj = if local_eval {
-                problem.merge(m, &mut task_rng)
-            } else {
-                problem.global()
-            };
-            let algo = algorithms::by_name(&algo_name2).expect("algorithm");
-            let run_b = algo.maximize_threaded(
-                obj.as_ref(),
-                &merged_for_task,
-                round2,
-                &mut task_rng,
-                merge_threads,
-            );
-            let mut extra_oracle = run_b.oracle_calls;
+            trace::span_with("greedi.merge", || vec![("candidates", total_candidates.into())]);
+        let tree_run = tree
+            .run(&engine, candidates, &plan, policy, &mut job, |ctx, sets| {
+                // Per-node RNG: the root keeps the historical merge fork so
+                // flat runs reproduce today's outputs; interior nodes fork
+                // from (level, node).
+                let mut task_rng = if ctx.is_root {
+                    base_rng.fork(2000)
+                } else {
+                    base_rng.fork(900_000 + (ctx.level as u64) * 4096 + ctx.node as u64)
+                };
+                let con: &dyn Constraint = if ctx.is_root { round2 } else { round1 };
+                let node_threads = spec.oracle_threads(ctx.level_nodes);
+                let mut pool: Vec<usize> = sets.iter().flatten().copied().collect();
+                pool.sort_unstable();
+                pool.dedup();
+                let obj = if local_eval {
+                    problem.merge(m, &mut task_rng)
+                } else {
+                    problem.global()
+                };
+                let algo = algorithms::by_name(&algo_name2).expect("algorithm");
+                let run_b =
+                    algo.maximize_threaded(obj.as_ref(), &pool, con, &mut task_rng, node_threads);
+                let mut extra_oracle = run_b.oracle_calls;
 
-            // A^gc_max: the best round-1 set under this round's objective F,
-            // trimmed to feasibility under the round-2 constraint if κ > k
-            // (prefix-feasible by heredity: keep the greedy selection order).
-            let mut best: Option<(Vec<usize>, f64)> = None;
-            for cand in &candidates {
-                let mut trimmed: Vec<usize> = Vec::new();
-                for &e in cand {
-                    if round2.can_add(&trimmed, e) {
-                        trimmed.push(e);
+                // A^gc_max: the best input set under this node's objective F,
+                // trimmed to feasibility under the node constraint if κ > k
+                // (prefix-feasible by heredity: keep the greedy selection
+                // order).
+                let mut best: Option<(Vec<usize>, f64)> = None;
+                for cand in sets {
+                    let mut trimmed: Vec<usize> = Vec::new();
+                    for &e in cand {
+                        if con.can_add(&trimmed, e) {
+                            trimmed.push(e);
+                        }
+                    }
+                    let v = obj.eval(&trimmed);
+                    extra_oracle += trimmed.len() as u64;
+                    if best.as_ref().map(|(_, bv)| v > *bv).unwrap_or(true) {
+                        best = Some((trimmed, v));
                     }
                 }
-                let v = obj.eval(&trimmed);
-                extra_oracle += trimmed.len() as u64;
-                if best.as_ref().map(|(_, bv)| v > *bv).unwrap_or(true) {
-                    best = Some((trimmed, v));
-                }
-            }
-            let (max_sol, max_val) = best.unwrap_or((Vec::new(), f64::NEG_INFINITY));
-            let winner = if run_b.value >= max_val {
-                run_b.solution
-            } else {
-                max_sol
-            };
-            (winner, extra_oracle)
+                let (max_sol, max_val) = best.unwrap_or((Vec::new(), f64::NEG_INFINITY));
+                let winner = if run_b.value >= max_val { run_b.solution } else { max_sol };
+                let pooled = pool.len();
+                NodeOutput { result: winner, pooled, oracle_calls: extra_oracle }
             })
             .unwrap_or_else(|e| panic!("greedi merge aborted: {e}"));
-        job.stages.push(stage2);
-        fault_retries += merge_retries;
-        let (solution, extra) = round2_out.pop().unwrap();
-        oracle_calls += extra;
+        fault_retries += tree_run.stats.retries;
+        oracle_calls += tree_run.oracle_calls;
+        let rounds = 1 + tree_run.stats.depth;
+        let solution = tree_run.result.unwrap_or_default();
+        let tree_stats = tree_run.stats;
         drop(_merge_span);
 
         // Final reported value: always the true global objective.
@@ -329,8 +338,9 @@ impl Greedi {
             value,
             oracle_calls,
             job,
-            rounds: 2,
+            rounds,
             stream: None,
+            tree: Some(tree_stats),
             fault,
         }
     }
@@ -383,6 +393,7 @@ pub fn centralized_threaded(
         job,
         rounds: 1,
         stream: None,
+        tree: None,
         fault: None,
     }
 }
@@ -536,6 +547,38 @@ mod tests {
         );
         assert_eq!(cold.solution, clean.solution);
         assert_eq!(cold.fault.unwrap().salvaged_units, 0);
+    }
+
+    #[test]
+    fn tree_merge_competitive_and_caps_root_pool() {
+        let ds = Arc::new(gaussian_blobs(&SynthConfig::tiny_images(300, 8), 49));
+        let p = FacilityProblem::new(&ds);
+        let flat = Greedi.run(&p, &RunSpec::new(8, 6).seed(13));
+        let flat_tree = flat.tree.as_ref().expect("greedi reports tree stats");
+        assert_eq!(flat_tree.depth, 1, "default = flat single-root merge");
+        assert_eq!(flat.rounds, 2);
+        let deep = Greedi.run(&p, &RunSpec::new(8, 6).fanout(2).seed(13));
+        let deep_tree = deep.tree.as_ref().expect("tree stats");
+        assert!(deep_tree.depth > 1, "r=2 over 8 machines must stage the merge");
+        assert_eq!(deep.rounds, 1 + deep_tree.depth);
+        // interior winners are subsets of their pools, so the staged root
+        // can never pool more than the flat root
+        assert!(
+            deep_tree.root_peak() <= flat_tree.root_peak(),
+            "root peak grew: {} vs flat {}",
+            deep_tree.root_peak(),
+            flat_tree.root_peak()
+        );
+        assert!(
+            deep.value >= 0.9 * flat.value,
+            "staged merge lost too much: {} vs {}",
+            deep.value,
+            flat.value
+        );
+        // and the staged run stays deterministic
+        let again = Greedi.run(&p, &RunSpec::new(8, 6).fanout(2).seed(13));
+        assert_eq!(again.solution, deep.solution);
+        assert_eq!(again.value.to_bits(), deep.value.to_bits());
     }
 
     #[test]

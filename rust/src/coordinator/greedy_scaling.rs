@@ -177,6 +177,7 @@ fn finish(
         job,
         rounds,
         stream: None,
+        tree: None,
         fault: None,
     }
 }

@@ -5,6 +5,8 @@
 use crate::mapreduce::JobReport;
 use crate::util::json::Json;
 
+pub use crate::mapreduce::reduce::TreeStats;
+
 /// Bounded-memory accounting for streaming protocols (`stream_greedi`):
 /// the realized per-machine memory footprint of the one-pass sieve stage,
 /// reported against its theoretical O(k·log(k)/ε) candidate ceiling.
@@ -144,6 +146,10 @@ pub struct RunMetrics {
     pub rounds: usize,
     /// Streaming-stage memory accounting (`None` for batch protocols).
     pub stream: Option<StreamStats>,
+    /// Accumulation-tree accounting — per-level peak candidates, depth,
+    /// interior recoveries (`None` for protocols without a reduce tree).
+    /// A flat single-root merge is a depth-1 tree.
+    pub tree: Option<TreeStats>,
     /// Fault-tolerance accounting (`None` for fault-free runs).
     pub fault: Option<FaultStats>,
 }
@@ -189,6 +195,9 @@ impl RunMetrics {
         if let Some(s) = &self.stream {
             obj.insert("stream".to_string(), s.to_json());
         }
+        if let Some(t) = &self.tree {
+            obj.insert("tree".to_string(), t.to_json());
+        }
         if let Some(f) = &self.fault {
             obj.insert("fault".to_string(), f.to_json());
         }
@@ -199,6 +208,13 @@ impl RunMetrics {
         let stream = match &self.stream {
             Some(s) => format!(" peak_live={}/{}", s.peak_live(), s.live_bound),
             None => String::new(),
+        };
+        // Depth-1 trees are the classic flat merge — nothing worth a block.
+        let tree = match &self.tree {
+            Some(t) if t.depth > 1 => {
+                format!(" tree=[r={} depth={} root_peak={}]", t.fanout, t.depth, t.root_peak())
+            }
+            _ => String::new(),
         };
         let fault = match &self.fault {
             Some(f) => {
@@ -225,7 +241,7 @@ impl RunMetrics {
             None => String::new(),
         };
         format!(
-            "{:<16} f(S)={:<12.5} |S|={:<4} oracle={:<10} rounds={} simt={:.4}s comm={}{}{}",
+            "{:<16} f(S)={:<12.5} |S|={:<4} oracle={:<10} rounds={} simt={:.4}s comm={}{}{}{}",
             self.name,
             self.value,
             self.solution.len(),
@@ -234,6 +250,7 @@ impl RunMetrics {
             self.sim_time(),
             self.job.shuffled_elements,
             stream,
+            tree,
             fault
         )
     }
@@ -357,6 +374,7 @@ mod tests {
                 dropped_elements: 5,
                 ground_size: 100,
                 recovery_time: 0.25,
+                ..Default::default()
             }),
             ..Default::default()
         };
@@ -389,6 +407,48 @@ mod tests {
         let bare = RunMetrics { name: "x".into(), ..Default::default() }.to_json();
         assert!(bare.get("stream").is_none());
         assert!(bare.get("fault").is_none());
+    }
+
+    #[test]
+    fn tree_block_surfaces_only_for_deep_trees() {
+        // depth-1 = the classic flat merge: no tree block in the one-liner
+        let flat = RunMetrics {
+            name: "greedi".into(),
+            tree: Some(TreeStats {
+                fanout: 8,
+                depth: 1,
+                nodes_per_level: vec![1],
+                peak_per_level: vec![40],
+                ..Default::default()
+            }),
+            ..Default::default()
+        };
+        assert!(!flat.one_line().contains("tree=["), "{}", flat.one_line());
+        // ...but the JSON always carries it when present
+        let j = flat.to_json();
+        assert_eq!(
+            j.get("tree").and_then(|t| t.get("root_peak")).and_then(|v| v.as_f64()),
+            Some(40.0)
+        );
+        let deep = RunMetrics {
+            name: "greedi".into(),
+            tree: Some(TreeStats {
+                fanout: 2,
+                depth: 3,
+                nodes_per_level: vec![4, 2, 1],
+                peak_per_level: vec![16, 12, 9],
+                ..Default::default()
+            }),
+            ..Default::default()
+        };
+        let line = deep.one_line();
+        assert!(line.contains("tree=[r=2 depth=3 root_peak=9]"), "{line}");
+        // round-trips through util::json like every other block
+        let back = crate::util::json::parse(&deep.to_json().dump()).unwrap();
+        assert_eq!(back, deep.to_json());
+        // protocols without a reduce tree carry no block at all
+        let bare = RunMetrics { name: "centralized".into(), ..Default::default() };
+        assert!(bare.to_json().get("tree").is_none());
     }
 
     #[test]

@@ -14,6 +14,11 @@
 //! partitioning each level keeps the (1−1/e)/2-style average-case behavior,
 //! and empirically the tree loses almost nothing (see the ablation bench).
 //!
+//! The reduction itself is the shared
+//! [`mapreduce::reduce::TreeReduce`](crate::mapreduce::reduce) engine —
+//! this protocol only supplies the per-node merge body; `greedi` and
+//! `stream_greedi` ride the same tree with `fanout` set below m.
+//!
 //! Registered as `"multiround"`; reads m, k, κ, `fanout`, algorithm,
 //! local/global mode, partition, threads and seed from the shared
 //! [`RunSpec`].
@@ -25,6 +30,7 @@ use crate::algorithms;
 use crate::constraints::cardinality::Cardinality;
 use crate::constraints::Constraint;
 use crate::mapreduce::fault::{FaultPlan, RecoveryPolicy};
+use crate::mapreduce::reduce::{NodeOutput, TreeReduce};
 use crate::mapreduce::{JobReport, MapReduce};
 use crate::util::rng::Rng;
 use crate::util::trace;
@@ -38,10 +44,10 @@ impl Protocol for MultiRoundGreedi {
     }
 
     fn run(&self, problem: &dyn Problem, spec: &RunSpec) -> RunMetrics {
+        let fanout = spec.tree_fanout(false);
         let _proto_span = trace::span_with("protocol.multiround", || {
-            vec![("m", spec.m.into()), ("k", spec.k.into()), ("fanout", spec.fanout.into())]
+            vec![("m", spec.m.into()), ("k", spec.k.into()), ("fanout", fanout.into())]
         });
-        let fanout = spec.fanout.max(2);
         let base_rng = Rng::new(spec.seed);
         let mut rng = base_rng.clone();
         let ground = problem.ground();
@@ -186,43 +192,34 @@ impl Protocol for MultiRoundGreedi {
         oracle_calls += leaf_results.iter().flatten().map(|r| r.oracle_calls).sum::<u64>();
         // Surviving (or recovered) leaves feed the tree in leaf order; under
         // DropShard the crashed leaves simply vanish from the frontier.
-        let mut frontier: Vec<Vec<usize>> =
+        let frontier: Vec<Vec<usize>> =
             leaf_results.into_iter().flatten().map(|r| r.solution).collect();
-        // Reduction levels run under the transient-failure plan only: crashes
-        // model losing data-holding leaf machines, while reducers read
-        // shuffled candidate sets held at the driver.
-        let reduce_plan = plan.without_crashes();
 
-        // ---- Reduction levels ----------------------------------------------
-        let mut level = 0u64;
-        while frontier.len() > 1 {
-            level += 1;
-            rounds += 1;
-            let groups: Vec<(usize, Vec<Vec<usize>>)> = frontier
-                .chunks(fanout)
-                .map(|c| c.to_vec())
-                .enumerate()
-                .collect();
-            let _level_span = trace::span_with("multiround.reduce", || {
-                vec![("level", level.into()), ("groups", groups.len().into())]
-            });
-            let is_root = groups.len() == 1;
-            let con = if is_root {
-                Cardinality::new(spec.k)
-            } else {
-                Cardinality::new(spec.kappa)
-            };
-            let m = spec.m;
-            let algo_name = spec.algorithm.clone();
-            // Fewer merge tasks each level => more oracle threads per task
-            // (the root merge runs on the full budget).
-            let oracle_threads = spec.oracle_threads(groups.len());
-            let (next, stage, level_retries) = engine
-                .run_stage_faulted(groups, &reduce_plan, |_, (gi, sets)| {
-                let mut task_rng = base_rng.fork(8_000 + level * 100 + gi as u64);
+        // ---- Reduction levels: the shared accumulation tree -----------------
+        // Every level is one engine stage; non-root nodes merge under the
+        // κ-budget constraint, the root under k. Crashes model losing
+        // data-holding leaf machines — reduce nodes read candidate sets held
+        // at the driver, so the tree re-runs any crashed interior node inline
+        // (bit-identical: same fork, same inputs) and the root runs under the
+        // transient-failure plan only, as the hand-rolled loop always did.
+        let m = spec.m;
+        let algo_name = spec.algorithm.clone();
+        let tree = TreeReduce::new(fanout);
+        let tree_run = tree
+            .run(&engine, frontier, &plan, policy, &mut job, |ctx, sets| {
+                let mut task_rng =
+                    base_rng.fork(8_000 + (ctx.level as u64) * 100 + ctx.node as u64);
                 let mut pool: Vec<usize> = sets.iter().flatten().copied().collect();
                 pool.sort_unstable();
                 pool.dedup();
+                let con = if ctx.is_root {
+                    Cardinality::new(spec.k)
+                } else {
+                    Cardinality::new(spec.kappa)
+                };
+                // Fewer merge tasks each level => more oracle threads per
+                // task (the root merge runs on the full budget).
+                let oracle_threads = spec.oracle_threads(ctx.level_nodes);
                 let algo = algorithms::by_name(&algo_name).expect("algorithm");
                 let obj = if local_eval {
                     problem.merge(m, &mut task_rng)
@@ -236,7 +233,7 @@ impl Protocol for MultiRoundGreedi {
                 let mut best_set = run.solution;
                 let mut best_val = obj.eval(&best_set);
                 let mut calls = run.oracle_calls + best_set.len() as u64;
-                for s in &sets {
+                for s in sets {
                     let mut trimmed = Vec::new();
                     for &e in s {
                         if con.can_add(&trimmed, e) {
@@ -250,21 +247,16 @@ impl Protocol for MultiRoundGreedi {
                         best_set = trimmed;
                     }
                 }
-                (best_set, pool.len(), calls)
-                })
-                .unwrap_or_else(|e| panic!("multiround reduction aborted: {e}"));
-            fault_retries += level_retries;
-            job.stages.push(stage);
-            let mut new_frontier = Vec::with_capacity(next.len());
-            for (set, pool_len, calls) in next {
-                job.record_shuffle(pool_len);
-                oracle_calls += calls;
-                new_frontier.push(set);
-            }
-            frontier = new_frontier;
-        }
+                let pooled = pool.len();
+                NodeOutput { result: best_set, pooled, oracle_calls: calls }
+            })
+            .unwrap_or_else(|e| panic!("multiround reduction aborted: {e}"));
+        fault_retries += tree_run.stats.retries;
+        oracle_calls += tree_run.oracle_calls;
+        rounds += tree_run.stats.depth;
+        let tree_stats = tree_run.stats;
 
-        let mut solution = frontier.pop().unwrap_or_default();
+        let mut solution = tree_run.result.unwrap_or_default();
         // With m = 1 (or a degenerate tree) no root reduction ran, so the
         // leaf's κ-budget set may exceed k; the greedy selection order makes
         // the k-prefix feasible by heredity.
@@ -293,6 +285,7 @@ impl Protocol for MultiRoundGreedi {
             job,
             rounds,
             stream: None,
+            tree: Some(tree_stats),
             fault,
         }
     }
@@ -318,6 +311,11 @@ mod tests {
         assert!(r.solution.len() <= 8);
         // 16 leaves → 4 → 1: 1 leaf round + 2 reduction rounds
         assert_eq!(r.rounds, 3);
+        let t = r.tree.expect("multiround reports tree stats");
+        assert_eq!(t.depth, 2);
+        assert_eq!(t.nodes_per_level, vec![4, 1]);
+        assert_eq!(t.fanout, 4);
+        assert_eq!(t.peak_per_level.len(), 2);
     }
 
     #[test]

@@ -88,9 +88,9 @@ pub trait Protocol: Sync {
 
 /// Shared run specification — the one builder every protocol reads.
 ///
-/// Fields a protocol does not use are simply ignored (e.g. `fanout` only
-/// matters to `multiround`, `delta`/`epsilon` only to `greedy_scaling`), so
-/// a single spec can drive a whole protocol sweep apples-to-apples.
+/// Fields a protocol does not use are simply ignored (e.g. `delta` only
+/// matters to `greedy_scaling`, `batch` only to `stream_greedi`), so a
+/// single spec can drive a whole protocol sweep apples-to-apples.
 #[derive(Clone)]
 pub struct RunSpec {
     /// Number of machines m.
@@ -99,7 +99,12 @@ pub struct RunSpec {
     pub k: usize,
     /// Per-machine budget κ (Algorithm 2 allows κ ≠ k; α = κ/k).
     pub kappa: usize,
-    /// Candidate sets merged per reducer per level (`multiround` only, ≥ 2).
+    /// Accumulation-tree fan-in r: candidate sets merged per reduce node
+    /// per level ([`mapreduce::reduce::TreeReduce`](crate::mapreduce::reduce)),
+    /// shared by `greedi`, `multiround` and `stream_greedi`. `0` (the
+    /// default) means "protocol default": the flat single-root merge for
+    /// `greedi`/`stream_greedi`, a binary tree for `multiround`. Any
+    /// r ≥ m collapses to the flat merge bit-for-bit.
     pub fanout: usize,
     /// Memory exponent δ: driver pool μ = ⌈k·n^δ·ln n⌉ (`greedy_scaling`).
     pub delta: f64,
@@ -150,7 +155,7 @@ impl RunSpec {
             m: m.max(1),
             k,
             kappa: k,
-            fanout: 2,
+            fanout: 0,
             delta: 0.5,
             epsilon: 0.5,
             batch: 256,
@@ -239,10 +244,31 @@ impl RunSpec {
         self
     }
 
-    /// Tree-reduction fanout (`multiround`).
+    /// Accumulation-tree fan-in r, shared by every tree-reducing protocol
+    /// (`greedi`, `multiround`, `stream_greedi`). Clamped to ≥ 2; r ≥ m
+    /// reproduces the flat single-root merge exactly. Leave unset (the `0`
+    /// sentinel) for the per-protocol default — see [`RunSpec::tree_fanout`].
     pub fn fanout(mut self, fanout: usize) -> Self {
         self.fanout = fanout.max(2);
         self
+    }
+
+    /// Resolve the `fanout` knob for a tree reduction. The `0` sentinel
+    /// (never set explicitly) maps to the protocol's historical default:
+    /// the flat single-root merge (`usize::MAX`) for protocols that always
+    /// merged once (`greedi`, `stream_greedi`), a binary tree for
+    /// `multiround`, which has always reduced in levels.
+    pub fn tree_fanout(&self, flat_default: bool) -> usize {
+        match self.fanout {
+            0 => {
+                if flat_default {
+                    usize::MAX
+                } else {
+                    2
+                }
+            }
+            f => f.max(2),
+        }
     }
 
     /// GreedyScaling memory exponent δ.
@@ -437,6 +463,11 @@ mod tests {
         assert_eq!(s.threads, 1);
         assert_eq!(s.batch, 256, "stream batch defaults to 256");
         assert!(!s.local_eval);
+        assert_eq!(s.fanout, 0, "fanout defaults to the protocol-default sentinel");
+        assert_eq!(s.tree_fanout(true), usize::MAX, "greedi/stream default: flat merge");
+        assert_eq!(s.tree_fanout(false), 2, "multiround default: binary tree");
+        assert_eq!(s.clone().fanout(4).tree_fanout(true), 4, "explicit fanout wins");
+        assert_eq!(s.clone().fanout(4).tree_fanout(false), 4);
         let s = RunSpec::new(4, 10)
             .alpha(2.0)
             .local()

@@ -1,0 +1,93 @@
+//! Fan-in sweep for the accumulation-tree merge: r ∈ {2, 4, 8, flat} ×
+//! m ∈ {10, 100, 1000}, charting solution quality against merge time and
+//! the root node's candidate-pool peak.
+//!
+//! The flat single-root merge pools all m·κ candidates at once — its root
+//! peak grows linearly in m. A staged r-ary tree caps every node's pool at
+//! r·κ at the cost of extra rounds and a (slightly) lossier composition,
+//! so this sweep is the quality / merge-latency / peak-memory trade-off
+//! surface behind `RunSpec::fanout`. The m = 1000 column only runs under
+//! `--full` (its flat merge is the slow point by design).
+
+use std::sync::Arc;
+
+use super::{ExpOpts, FigureReport};
+use crate::coordinator::greedi::{centralized, Greedi};
+use crate::coordinator::protocol::Protocol;
+use crate::coordinator::FacilityProblem;
+use crate::data::synth::{gaussian_blobs, SynthConfig};
+use crate::util::table::Table;
+
+pub fn run(opts: &ExpOpts) -> FigureReport {
+    let n = opts.size(2_000, 20_000);
+    let ds = Arc::new(gaussian_blobs(&SynthConfig::tiny_images(n, 16), opts.seed));
+    let problem = FacilityProblem::new(&ds);
+    let k = 10.min(n / 100).max(4);
+    let central = centralized(&problem, k, "lazy", opts.seed).value;
+    let ms: &[usize] = if opts.full { &[10, 100, 1000] } else { &[10, 100] };
+    let mut body = format!(
+        "fan-in workload: tiny-images n={n}, k={k}; ratio is vs centralized \
+         ({} omitted without --full)\n\n",
+        if opts.full { "nothing" } else { "m=1000" }
+    );
+
+    for &m in ms {
+        let mut t = Table::new(
+            &format!("fan-in sweep at m={m}"),
+            &["fanout", "ratio", "rounds", "depth", "root peak", "merge time"],
+        );
+        let mut flat_peak = 0usize;
+        // flat first so the tree rows read as deltas against it
+        for fanout in [0usize, 2, 4, 8] {
+            if fanout != 0 && fanout >= m {
+                continue; // r >= m is the flat row again, bit for bit
+            }
+            let spec = opts.spec(m, k, false, "lazy");
+            let spec = if fanout == 0 { spec } else { spec.fanout(fanout) };
+            let run = Greedi.run(&problem, &spec);
+            let tree = run.tree.as_ref().expect("greedi reports tree stats");
+            // everything after the map stage is a tree level
+            let merge_time: f64 =
+                run.job.stages[1..].iter().map(|s| s.max_task_time).sum();
+            if fanout == 0 {
+                flat_peak = tree.root_peak();
+            }
+            t.row(&[
+                if fanout == 0 { "flat".into() } else { fanout.to_string() },
+                format!("{:.4}", run.value / central),
+                run.rounds.to_string(),
+                tree.depth.to_string(),
+                tree.root_peak().to_string(),
+                format!("{merge_time:.4}"),
+            ]);
+            // staging can only shrink the root's pool: interior winners are
+            // drawn from subsets of what the flat merge pools directly
+            assert!(
+                fanout == 0 || tree.root_peak() <= flat_peak,
+                "root peak must be monotone in fan-in"
+            );
+        }
+        body.push_str(&t.render());
+        body.push('\n');
+    }
+
+    FigureReport { id: "fanin".into(), body }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fanin_report_complete() {
+        let opts = ExpOpts { n: Some(400), trials: 1, ..Default::default() };
+        let rep = run(&opts);
+        assert_eq!(rep.id, "fanin");
+        assert!(rep.body.contains("fan-in sweep at m=10"));
+        assert!(rep.body.contains("fan-in sweep at m=100"));
+        assert!(rep.body.contains("flat"));
+        assert!(rep.body.contains("root peak"));
+        // fast mode keeps the m=1000 column out
+        assert!(!rep.body.contains("fan-in sweep at m=1000"));
+    }
+}

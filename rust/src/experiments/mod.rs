@@ -13,6 +13,7 @@
 //! `--full` or explicit `--n` lifts them toward paper scale.
 
 pub mod ablations;
+pub mod fanin;
 pub mod fault_tolerance;
 pub mod fig10;
 pub mod fig4;

@@ -9,6 +9,7 @@
 //!   protocols             sweep every registered protocol on one workload
 //!   fig4 … fig10          regenerate a figure from the paper's §6
 //!   theory                empirical checks of Theorems 3/4/11 + Table 1
+//!   fanin                 accumulation-tree fan-in sweep (quality vs root peak)
 //!   streaming             bounded-memory sieve→merge vs GreeDi (stream_greedi)
 //!   fault_tolerance       quality vs machine crash rate × multiplicity × policy
 //!   serve                 always-on selection daemon (see `serve` module)
@@ -106,6 +107,7 @@ fn run_figure(name: &str, opts: &ExpOpts) -> Option<FigureReport> {
         "fig10" => experiments::fig10::run(opts),
         "theory" => experiments::theory::run(opts),
         "ablations" => experiments::ablations::run(opts),
+        "fanin" => experiments::fanin::run(opts),
         "streaming" => experiments::streaming::run(opts),
         "fault_tolerance" => experiments::fault_tolerance::run(opts),
         _ => return None,
@@ -326,7 +328,7 @@ fn info() {
 fn main() {
     let args = Args::from_env();
     let Some(cmd) = args.positional.first().cloned() else {
-        eprintln!("usage: greedi <quickstart|protocols|serve|query|fig4..fig10|theory|ablations|streaming|fault_tolerance|all|info> [--n N] [--trials T] [--seed S] [--threads T] [--partition S] [--multiplicity C] [--placement S] [--recovery P] [--checkpoint-every B] [--protocol P] [--part P] [--xla] [--full]");
+        eprintln!("usage: greedi <quickstart|protocols|serve|query|fig4..fig10|theory|ablations|fanin|streaming|fault_tolerance|all|info> [--n N] [--trials T] [--seed S] [--threads T] [--partition S] [--multiplicity C] [--placement S] [--recovery P] [--checkpoint-every B] [--protocol P] [--part P] [--xla] [--full]");
         std::process::exit(2);
     };
     let mut opts = opts_from(&args);
@@ -393,7 +395,7 @@ fn main() {
         "query" => query_cmd(&args, &opts, cfg_opt.as_ref()),
         "info" => info(),
         "all" => {
-            for f in ["fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "theory", "ablations", "streaming", "fault_tolerance"] {
+            for f in ["fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "theory", "ablations", "fanin", "streaming", "fault_tolerance"] {
                 run_figure(f, &opts).unwrap().print();
             }
         }

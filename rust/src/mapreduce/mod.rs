@@ -14,10 +14,15 @@
 //! per-task timings interference-free on small hosts.
 //!
 //! The engine is generic over task payloads; GreeDi's coordinator submits
-//! one map task per machine shard and one reduce task for the merge round.
+//! one map task per machine shard, and the aggregation side goes through
+//! [`reduce::TreeReduce`] — a staged r-ary accumulation tree whose levels
+//! are ordinary stages (one reduce node per task), so partial merges
+//! inherit the same timing, fault and tracing story as map tasks. With
+//! `fanout ≥ m` the tree degenerates to the classic single-root merge.
 
 pub mod fault;
 pub mod partition;
+pub mod reduce;
 
 use std::time::Instant;
 

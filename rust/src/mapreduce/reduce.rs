@@ -1,0 +1,434 @@
+//! Staged r-ary accumulation-tree reduction over the MapReduce engine.
+//!
+//! Every protocol used to funnel all m candidate sets into ONE root merge,
+//! so root memory and merge time grow as O(m·κ) — the real ceiling on the
+//! paper's "millions of machines" story. GreedyML (arXiv:2403.10332)
+//! replaces the root with an r-ary tree of partial merges: each level
+//! groups `fanout` sets per reduce node, runs the node body, and feeds the
+//! winners to the next level, until one set remains. Per-node input volume
+//! drops from m·κ to fanout·κ at the cost of ⌈log_r m⌉ − 1 extra rounds.
+//!
+//! [`TreeReduce`] is that tree as engine infrastructure: protocols supply
+//! only the per-node merge body (`Fn(&NodeCtx, &[R]) -> NodeOutput<R>`) and
+//! inherit, per level,
+//!
+//! - executor parallelism + [`StageReport`](super::StageReport) timing
+//!   (each level is one engine stage; nodes are its tasks),
+//! - the fault model: transient failures and stragglers at every node,
+//!   crashes at interior nodes recovered under the run's
+//!   [`RecoveryPolicy`] (the driver retains every node's inputs, so a
+//!   crashed partial merge is always re-runnable — see below),
+//! - `util::trace` spans (`mr.tree.level` / `mr.tree.node`) and the
+//!   `mr.tree.peak_candidates` high-water gauge,
+//! - shuffle accounting ([`JobReport::record_shuffle`] per node) and
+//!   per-level peak-candidate stats ([`TreeStats`]).
+//!
+//! Fault semantics, chosen to keep flat runs bit-for-bit compatible with
+//! the historical single-root merge:
+//!
+//! - The **root level** (and every level under `RecoveryPolicy::Retry`)
+//!   runs via `run_stage_faulted` under `plan.without_crashes()` — crashes
+//!   model losing data-holding *leaf* machines, while reduce nodes read
+//!   candidate sets held at the driver and are always re-schedulable.
+//!   This is exactly the historical merge path, including its retry
+//!   accounting and straggler timing.
+//! - **Interior levels** under a rebuilding policy (`DropShard`,
+//!   `SurvivorMerge`, `Resume`) run via `run_stage_policied` under the
+//!   full plan: a crashed node is re-run inline from its driver-held
+//!   inputs (same ctx, same body ⇒ bit-identical output) with the
+//!   recovery wallclock spliced into the level's report at the crashed
+//!   slot. Interior levels therefore never lose data — unlike leaves,
+//!   where a lost shard can be genuinely unrecoverable.
+//!
+//! Determinism contract: groups are formed by chunking the frontier in
+//! node order, outputs fold back in node order, and the node body derives
+//! its RNG from (seed, level, node) — so results are bit-identical at any
+//! thread count, and `fanout ≥ inputs` reproduces the flat merge exactly.
+
+use super::fault::{FaultPlan, RecoveryPolicy, StageFailed};
+use super::{JobReport, MapReduce};
+use crate::util::json::Json;
+use crate::util::trace;
+
+/// Where a reduce node sits in the tree — everything a merge body needs to
+/// derive its RNG fork, constraint and oracle-thread budget.
+#[derive(Debug, Clone, Copy)]
+pub struct NodeCtx {
+    /// Tree level, 1-based (level 1 consumes the leaf frontier).
+    pub level: usize,
+    /// Node index within the level (= chunk index, node order).
+    pub node: usize,
+    /// Number of nodes at this level (feeds `RunSpec::oracle_threads`).
+    pub level_nodes: usize,
+    /// Whether this level produces the final single output (the root gets
+    /// the final budget k and the full thread budget).
+    pub is_root: bool,
+}
+
+/// What a merge body returns for one node.
+#[derive(Debug, Clone)]
+pub struct NodeOutput<R> {
+    /// The partial merge fed to the next level (or the final result).
+    pub result: R,
+    /// Candidates pooled at this node (deduped input volume) — the
+    /// per-node memory footprint and shuffle contribution.
+    pub pooled: usize,
+    /// Oracle calls spent inside this node.
+    pub oracle_calls: u64,
+}
+
+/// Per-level accounting for one tree reduction — the `tree` block of
+/// `RunMetrics`, mirroring how `stream_greedi` reports `peak_live`.
+#[derive(Debug, Clone, Default)]
+pub struct TreeStats {
+    /// Effective fan-in r (clamped to the leaf count for display: a flat
+    /// merge over m sets reports r = m).
+    pub fanout: usize,
+    /// Number of reduction levels (flat single-root merge ⇒ 1).
+    pub depth: usize,
+    /// Reduce nodes per level, level order (root last).
+    pub nodes_per_level: Vec<usize>,
+    /// Max candidates pooled at any node of each level, level order. The
+    /// last entry is the root's peak — O(r·κ) for a tree vs O(m·κ) flat.
+    pub peak_per_level: Vec<usize>,
+    /// Transient-failure retries across all levels.
+    pub retries: usize,
+    /// Interior nodes that crashed and were re-run from driver-held inputs.
+    pub recovered_nodes: usize,
+}
+
+impl TreeStats {
+    /// Candidates pooled at the root — the memory number the fan-in sweep
+    /// charts against quality.
+    pub fn root_peak(&self) -> usize {
+        self.peak_per_level.last().copied().unwrap_or(0)
+    }
+
+    /// The `tree` block of `RunMetrics::to_json`.
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            ("fanout", Json::num(self.fanout as f64)),
+            ("depth", Json::num(self.depth as f64)),
+            (
+                "nodes_per_level",
+                Json::Arr(self.nodes_per_level.iter().map(|&n| Json::num(n as f64)).collect()),
+            ),
+            (
+                "peak_per_level",
+                Json::Arr(self.peak_per_level.iter().map(|&p| Json::num(p as f64)).collect()),
+            ),
+            ("root_peak", Json::num(self.root_peak() as f64)),
+            ("retries", Json::num(self.retries as f64)),
+            ("recovered_nodes", Json::num(self.recovered_nodes as f64)),
+        ])
+    }
+}
+
+/// Outcome of [`TreeReduce::run`].
+#[derive(Debug, Clone)]
+pub struct TreeRun<R> {
+    /// The root's result (`None` only for an empty frontier without
+    /// `force_root`).
+    pub result: Option<R>,
+    pub stats: TreeStats,
+    /// Σ oracle calls over all nodes.
+    pub oracle_calls: u64,
+}
+
+/// The staged r-ary reduction.
+#[derive(Debug, Clone)]
+pub struct TreeReduce {
+    /// Sets merged per node per level (clamped to ≥ 2; `usize::MAX` ⇒ one
+    /// flat root level).
+    pub fanout: usize,
+    /// Run a root level even when the frontier is already a single set
+    /// (GreeDi's merge round always runs, re-selecting under the final
+    /// budget; multiround's m = 1 case skips it instead).
+    pub force_root: bool,
+}
+
+impl TreeReduce {
+    pub fn new(fanout: usize) -> Self {
+        TreeReduce { fanout, force_root: false }
+    }
+
+    pub fn force_root(mut self, yes: bool) -> Self {
+        self.force_root = yes;
+        self
+    }
+
+    /// Reduce `inputs` to one result. Each level is one engine stage whose
+    /// report is pushed onto `job`; each node's `pooled` count is recorded
+    /// as shuffle volume. `Err` only when a task exhausts the plan's
+    /// attempts on the abort-on-exhaustion path (root level, or any level
+    /// under `Retry`).
+    pub fn run<R, F>(
+        &self,
+        engine: &MapReduce,
+        inputs: Vec<R>,
+        plan: &FaultPlan,
+        policy: RecoveryPolicy,
+        job: &mut JobReport,
+        merge_fn: F,
+    ) -> Result<TreeRun<R>, StageFailed>
+    where
+        R: Send + Clone,
+        F: Fn(&NodeCtx, &[R]) -> NodeOutput<R> + Sync,
+    {
+        let fanout = self.fanout.max(2);
+        let leaves = inputs.len();
+        let mut stats =
+            TreeStats { fanout: fanout.min(leaves.max(1)), ..TreeStats::default() };
+        let mut oracle_calls = 0u64;
+        let mut frontier = inputs;
+        let mut level = 0usize;
+
+        while frontier.len() > 1 || (self.force_root && level == 0) {
+            level += 1;
+            let groups: Vec<Vec<R>> = if frontier.is_empty() {
+                vec![Vec::new()]
+            } else {
+                frontier.chunks(fanout).map(|c| c.to_vec()).collect()
+            };
+            let level_nodes = groups.len();
+            let is_root = level_nodes == 1;
+            let _level_span = trace::span_with("mr.tree.level", || {
+                vec![("level", level.into()), ("nodes", level_nodes.into())]
+            });
+            let run_node = |node: usize, sets: &[R]| -> NodeOutput<R> {
+                let ctx = NodeCtx { level, node, level_nodes, is_root };
+                let _node_span = trace::span_with("mr.tree.node", || {
+                    vec![("level", level.into()), ("node", node.into()), ("inputs", sets.len().into())]
+                });
+                let out = merge_fn(&ctx, sets);
+                crate::trace_gauge!("mr.tree.peak_candidates").record(out.pooled as u64);
+                out
+            };
+
+            // Root levels (and everything under Retry) take the historical
+            // flat-merge path: transients + stragglers only, abort on
+            // exhaustion. Interior levels under a rebuilding policy run the
+            // full plan and recover crashed nodes inline (see module docs).
+            let stage_inputs: Vec<(usize, Vec<R>)> =
+                groups.iter().cloned().enumerate().collect();
+            let (outputs, report, level_retries) =
+                if is_root || policy == RecoveryPolicy::Retry {
+                    let (outs, report, retries) = engine.run_stage_faulted(
+                        stage_inputs,
+                        &plan.without_crashes(),
+                        |_, (node, sets)| run_node(node, &sets),
+                    )?;
+                    (outs, report, retries)
+                } else {
+                    let stage = engine.run_stage_policied(
+                        stage_inputs,
+                        plan,
+                        policy,
+                        |_, (node, sets)| run_node(node, &sets),
+                    )?;
+                    let mut outs = stage.outputs;
+                    let mut report = stage.report;
+                    if !stage.crashed.is_empty() {
+                        let lost: Vec<(usize, Vec<R>)> = stage
+                            .crashed
+                            .iter()
+                            .map(|&nid| (nid, groups[nid].clone()))
+                            .collect();
+                        let (rec_outs, rec_report) =
+                            engine.run_stage(lost, |_, (node, sets)| run_node(node, &sets));
+                        for ((&nid, out), &t) in stage
+                            .crashed
+                            .iter()
+                            .zip(rec_outs)
+                            .zip(rec_report.task_times.iter())
+                        {
+                            outs[nid] = Some(out);
+                            report.task_times[nid] = t;
+                        }
+                        report.max_task_time =
+                            report.task_times.iter().cloned().fold(0.0, f64::max);
+                        report.total_cpu_time = report.task_times.iter().sum();
+                        stats.recovered_nodes += stage.crashed.len();
+                    }
+                    let outs: Vec<NodeOutput<R>> = outs
+                        .into_iter()
+                        .map(|o| o.expect("interior nodes always recover"))
+                        .collect();
+                    (outs, report, stage.retries)
+                };
+
+            job.stages.push(report);
+            stats.retries += level_retries;
+            let mut peak = 0usize;
+            let mut next = Vec::with_capacity(outputs.len());
+            for out in outputs {
+                job.record_shuffle(out.pooled);
+                peak = peak.max(out.pooled);
+                oracle_calls += out.oracle_calls;
+                next.push(out.result);
+            }
+            stats.nodes_per_level.push(level_nodes);
+            stats.peak_per_level.push(peak);
+            trace::event_with("mr.tree.level.done", || {
+                vec![("level", level.into()), ("nodes", level_nodes.into()), ("peak", peak.into())]
+            });
+            frontier = next;
+        }
+
+        stats.depth = stats.nodes_per_level.len();
+        Ok(TreeRun { result: frontier.pop(), stats, oracle_calls })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Deterministic merge body: sorted dedup union, capped to `cap`.
+    fn union_cap(cap: usize) -> impl Fn(&NodeCtx, &[Vec<usize>]) -> NodeOutput<Vec<usize>> + Sync {
+        move |ctx, sets| {
+            let mut pool: Vec<usize> = sets.iter().flatten().copied().collect();
+            pool.sort_unstable();
+            pool.dedup();
+            let pooled = pool.len();
+            let keep = if ctx.is_root { cap } else { cap + 2 };
+            pool.truncate(keep);
+            NodeOutput { result: pool, pooled, oracle_calls: 1 }
+        }
+    }
+
+    fn leaves(m: usize, per: usize) -> Vec<Vec<usize>> {
+        (0..m).map(|i| (0..per).map(|j| i * per + j).collect()).collect()
+    }
+
+    #[test]
+    fn flat_fanout_is_single_root_level() {
+        let engine = MapReduce::new(1);
+        let mut job = JobReport::default();
+        let tree = TreeReduce::new(usize::MAX).force_root(true);
+        let run = tree
+            .run(&engine, leaves(6, 3), &FaultPlan::none(), RecoveryPolicy::Retry, &mut job, union_cap(4))
+            .unwrap();
+        assert_eq!(run.stats.depth, 1);
+        assert_eq!(run.stats.nodes_per_level, vec![1]);
+        assert_eq!(run.stats.fanout, 6, "flat merge reports r = leaves");
+        assert_eq!(run.stats.root_peak(), 18, "root pools every candidate");
+        assert_eq!(run.result.unwrap(), vec![0, 1, 2, 3]);
+        assert_eq!(job.stages.len(), 1);
+        assert_eq!(job.shuffled_elements, 18);
+    }
+
+    #[test]
+    fn binary_tree_shape_and_order() {
+        let engine = MapReduce::new(1);
+        let mut job = JobReport::default();
+        let run = TreeReduce::new(2)
+            .run(&engine, leaves(5, 2), &FaultPlan::none(), RecoveryPolicy::Retry, &mut job, union_cap(100))
+            .unwrap();
+        // 5 → 3 → 2 → 1
+        assert_eq!(run.stats.depth, 3);
+        assert_eq!(run.stats.nodes_per_level, vec![3, 2, 1]);
+        assert_eq!(run.stats.peak_per_level.len(), 3);
+        assert_eq!(job.stages.len(), 3);
+        // union-preserving body ⇒ the root sees everything, in order
+        assert_eq!(run.result.unwrap(), (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn threads_do_not_change_the_result() {
+        let plan = FaultPlan::none();
+        let mut runs = Vec::new();
+        for threads in [1usize, 2, 8] {
+            let engine = MapReduce::new(threads);
+            let mut job = JobReport::default();
+            let run = TreeReduce::new(3)
+                .run(&engine, leaves(9, 4), &plan, RecoveryPolicy::Retry, &mut job, union_cap(5))
+                .unwrap();
+            runs.push((run.result.unwrap(), run.stats.nodes_per_level, job.shuffled_elements));
+        }
+        assert_eq!(runs[0], runs[1]);
+        assert_eq!(runs[0], runs[2]);
+    }
+
+    #[test]
+    fn force_root_runs_on_single_and_empty_frontiers() {
+        let engine = MapReduce::new(1);
+        let mut job = JobReport::default();
+        let tree = TreeReduce::new(usize::MAX).force_root(true);
+        let one = tree
+            .run(&engine, leaves(1, 3), &FaultPlan::none(), RecoveryPolicy::Retry, &mut job, union_cap(2))
+            .unwrap();
+        assert_eq!(one.stats.depth, 1, "the root re-selects even for one input");
+        assert_eq!(one.result.unwrap(), vec![0, 1]);
+        let empty = tree
+            .run(&engine, Vec::new(), &FaultPlan::none(), RecoveryPolicy::Retry, &mut job, union_cap(2))
+            .unwrap();
+        assert_eq!(empty.stats.depth, 1);
+        assert_eq!(empty.result.unwrap(), Vec::<usize>::new());
+        // without force_root, degenerate frontiers skip the tree entirely
+        let skip = TreeReduce::new(2)
+            .run(&engine, leaves(1, 3), &FaultPlan::none(), RecoveryPolicy::Retry, &mut job, union_cap(2))
+            .unwrap();
+        assert_eq!(skip.stats.depth, 0);
+        assert_eq!(skip.result.unwrap(), vec![0, 1, 2], "untouched leaf passes through");
+    }
+
+    #[test]
+    fn interior_crash_recovers_bit_identically() {
+        let engine = MapReduce::new(2);
+        let clean = {
+            let mut job = JobReport::default();
+            TreeReduce::new(2)
+                .run(&engine, leaves(4, 2), &FaultPlan::none(), RecoveryPolicy::SurvivorMerge, &mut job, union_cap(100))
+                .unwrap()
+        };
+        // crash task 0 of every stage: at level 1 that's an interior node
+        let plan = FaultPlan::none().crash_tasks(vec![0]);
+        let mut job = JobReport::default();
+        let run = TreeReduce::new(2)
+            .run(&engine, leaves(4, 2), &plan, RecoveryPolicy::SurvivorMerge, &mut job, union_cap(100))
+            .unwrap();
+        assert_eq!(run.result.unwrap(), clean.result.unwrap(), "recovery changed the result");
+        assert!(run.stats.recovered_nodes >= 1, "level-1 node 0 must be recovered");
+        assert_eq!(job.stages.len(), 2, "inline recovery adds no stage");
+        assert_eq!(run.oracle_calls, clean.oracle_calls);
+    }
+
+    #[test]
+    fn transient_retries_are_counted_and_output_invariant() {
+        let engine = MapReduce::new(1);
+        let clean = {
+            let mut job = JobReport::default();
+            TreeReduce::new(2)
+                .run(&engine, leaves(16, 2), &FaultPlan::none(), RecoveryPolicy::Retry, &mut job, union_cap(50))
+                .unwrap()
+        };
+        let plan = FaultPlan::new(0.5, 20, 11);
+        let mut job = JobReport::default();
+        let run = TreeReduce::new(2)
+            .run(&engine, leaves(16, 2), &plan, RecoveryPolicy::Retry, &mut job, union_cap(50))
+            .unwrap();
+        assert_eq!(run.result.unwrap(), clean.result.unwrap());
+        assert!(run.stats.retries > 0, "p=0.5 over 15 nodes must retry sometimes");
+    }
+
+    #[test]
+    fn tree_stats_json_shape() {
+        let s = TreeStats {
+            fanout: 2,
+            depth: 3,
+            nodes_per_level: vec![3, 2, 1],
+            peak_per_level: vec![6, 8, 9],
+            retries: 1,
+            recovered_nodes: 2,
+        };
+        assert_eq!(s.root_peak(), 9);
+        let j = s.to_json();
+        assert_eq!(j.get("fanout").and_then(|v| v.as_f64()), Some(2.0));
+        assert_eq!(j.get("depth").and_then(|v| v.as_f64()), Some(3.0));
+        assert_eq!(j.get("root_peak").and_then(|v| v.as_f64()), Some(9.0));
+        assert_eq!(j.get("nodes_per_level").and_then(|v| v.as_arr()).map(|a| a.len()), Some(3));
+        assert_eq!(j.get("recovered_nodes").and_then(|v| v.as_f64()), Some(2.0));
+        assert_eq!(TreeStats::default().root_peak(), 0);
+    }
+}

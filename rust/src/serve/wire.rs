@@ -256,10 +256,14 @@ pub fn spec_from_json(v: &Json) -> Result<RunSpec, WireError> {
                 spec = spec.alpha(a);
             }
             "fanout" => {
+                // 0 = the protocol-default sentinel (flat merge for
+                // greedi/stream_greedi, binary tree for multiround).
                 spec.fanout = val
                     .as_usize()
-                    .filter(|&x| x >= 2)
-                    .ok_or_else(|| WireError::bad("spec: fanout must be an integer >= 2"))?;
+                    .filter(|&x| x == 0 || x >= 2)
+                    .ok_or_else(|| {
+                        WireError::bad("spec: fanout must be 0 (protocol default) or an integer >= 2")
+                    })?;
             }
             "delta" => {
                 spec.delta = val
@@ -556,6 +560,11 @@ mod tests {
         assert_eq!(back.threads, spec.threads);
         assert_eq!(back.partition, spec.partition);
         assert_eq!(back.seed, spec.seed);
+        // the 0 sentinel (protocol-default fanout) survives the wire too
+        let default_spec = RunSpec::new(4, 6);
+        assert_eq!(default_spec.fanout, 0);
+        let back = spec_from_json(&spec_to_json(&default_spec)).unwrap();
+        assert_eq!(back.fanout, 0);
     }
 
     #[test]

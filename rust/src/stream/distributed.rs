@@ -22,8 +22,10 @@
 //! [`RunSpec::oracle_threads`], and the merge round gets the full budget.
 //!
 //! Registered as `"stream_greedi"`; reads m, k, κ (per-machine sieve
-//! budget), `batch`, `epsilon` (ladder resolution), algorithm (merge
-//! round), local/global mode, partition, threads and seed from the spec.
+//! budget), `batch`, `epsilon` (ladder resolution), `fanout` (merge-tree
+//! fan-in — default is the historical flat single-root merge), algorithm
+//! (merge round), local/global mode, partition, threads and seed from the
+//! spec.
 
 use super::sieve::{candidate_bound, sieve_stream};
 use super::source::VecSource;
@@ -34,6 +36,7 @@ use crate::coordinator::metrics::{FaultStats, RunMetrics, StreamStats};
 use crate::coordinator::protocol::{Protocol, RunSpec};
 use crate::coordinator::Problem;
 use crate::mapreduce::fault::{FaultPlan, RecoveryPolicy, StageFailed};
+use crate::mapreduce::reduce::{NodeOutput, TreeReduce};
 use crate::mapreduce::{JobReport, MapReduce};
 use crate::util::rng::Rng;
 use crate::util::trace;
@@ -200,50 +203,59 @@ impl StreamGreedi {
 
         let mut oracle_calls: u64 = results.iter().flatten().map(|r| r.oracle_calls).sum();
 
-        // The union of surviving sieve summaries is the only shuffled data —
-        // at most m·candidate_bound(κ, ε) ids, independent of n.
-        let mut merged: Vec<usize> = Vec::new();
-        for r in results.iter().flatten() {
-            merged.extend_from_slice(&r.union);
-        }
-        merged.sort_unstable();
-        merged.dedup();
-        job.record_shuffle(merged.len());
-
-        // ---- Stage 2: merge round (single reducer, full thread budget) ---
-        // The reducer reads shuffle data held at the driver, so it runs
-        // under the transient-failure plan only (no machine crashes).
-        let merge_plan = plan.without_crashes();
-        let candidates: Vec<Vec<usize>> =
-            results.iter().flatten().map(|r| r.solution.clone()).collect();
-        let merged_in = merged;
+        // ---- Stage 2+: accumulation-tree merge ---------------------------
+        // Each surviving machine contributes (sieve union, sieve solution):
+        // the union is what a node pools (at most candidate_bound(κ, ε) ids
+        // per machine — the only shuffled data, independent of n), the
+        // solution is the A^gc_max-style floor. The default (flat) fan-in is
+        // the single full-budget reducer this protocol always had, bit for
+        // bit; fanout r < m stages the merge so no node pools more than
+        // r·bound ids. Interior nodes re-select κ candidates under the
+        // κ-budget and pass them up as both pool and floor; the root
+        // re-selects under k. Reduce nodes read driver-held summaries, so
+        // the root runs under the transient plan only and crashed interior
+        // nodes are re-run inline by the tree.
+        let pairs: Vec<(Vec<usize>, Vec<usize>)> = results
+            .iter()
+            .flatten()
+            .map(|r| (r.union.clone(), r.solution.clone()))
+            .collect();
         let algo_name = spec.algorithm.clone();
         let (m, k) = (spec.m, spec.k);
-        let merge_threads = spec.oracle_threads(1);
-        let (mut out2, stage2, retries2) = engine.run_stage_faulted(vec![()], &merge_plan, |_, ()| {
-            let mut task_rng = base_rng.fork(4_000);
+        let tree = TreeReduce::new(spec.tree_fanout(true)).force_root(true);
+        let tree_run = tree.run(&engine, pairs, plan, policy, &mut job, |ctx, sets| {
+            let mut task_rng = if ctx.is_root {
+                base_rng.fork(4_000)
+            } else {
+                base_rng.fork(910_000 + (ctx.level as u64) * 4096 + ctx.node as u64)
+            };
+            let mut pool: Vec<usize> =
+                sets.iter().flat_map(|(union, _)| union.iter().copied()).collect();
+            pool.sort_unstable();
+            pool.dedup();
             let obj = if local_eval {
                 problem.merge(m, &mut task_rng)
             } else {
                 problem.global()
             };
-            let merge_con = Cardinality::new(k);
+            let merge_con = Cardinality::new(if ctx.is_root { k } else { kappa });
             let algo = algorithms::by_name(&algo_name).expect("algorithm");
+            let node_threads = spec.oracle_threads(ctx.level_nodes);
             let run_b = algo.maximize_threaded(
                 obj.as_ref(),
-                &merged_in,
+                &pool,
                 &merge_con,
                 &mut task_rng,
-                merge_threads,
+                node_threads,
             );
             let mut extra_oracle = run_b.oracle_calls;
 
-            // Like GreeDi's A^gc_max: keep the best machine-local sieve
-            // solution under this round's objective as a floor (κ-budget
-            // sets trim to the k-prefix, feasible by heredity — sieves
-            // commit greedily in stream order).
+            // Like GreeDi's A^gc_max: keep the best input sieve solution
+            // under this node's objective as a floor (κ-budget sets trim to
+            // the budget prefix, feasible by heredity — sieves commit
+            // greedily in stream order).
             let mut best: Option<(Vec<usize>, f64)> = None;
-            for cand in &candidates {
+            for (_, cand) in sets {
                 let mut trimmed: Vec<usize> = Vec::new();
                 for &e in cand {
                     if merge_con.can_add(&trimmed, e) {
@@ -257,16 +269,15 @@ impl StreamGreedi {
                 }
             }
             let (max_sol, max_val) = best.unwrap_or((Vec::new(), f64::NEG_INFINITY));
-            let winner = if run_b.value >= max_val {
-                run_b.solution
-            } else {
-                max_sol
-            };
-            (winner, extra_oracle)
+            let winner = if run_b.value >= max_val { run_b.solution } else { max_sol };
+            let pooled = pool.len();
+            NodeOutput { result: (winner.clone(), winner), pooled, oracle_calls: extra_oracle }
         })?;
-        job.stages.push(stage2);
-        let (solution, extra) = out2.pop().expect("merge stage yields one task");
-        oracle_calls += extra;
+        let retries2 = tree_run.stats.retries;
+        oracle_calls += tree_run.oracle_calls;
+        let rounds = 1 + tree_run.stats.depth;
+        let solution = tree_run.result.map(|(sol, _)| sol).unwrap_or_default();
+        let tree_stats = tree_run.stats;
 
         // Reported value: always the true global objective.
         let value = problem.global().eval(&solution);
@@ -312,8 +323,9 @@ impl StreamGreedi {
             value,
             oracle_calls,
             job,
-            rounds: 2,
+            rounds,
             stream: Some(stream),
+            tree: Some(tree_stats),
             fault,
         })
     }

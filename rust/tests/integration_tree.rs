@@ -1,0 +1,193 @@
+//! Integration tests for the staged r-ary accumulation-tree merge
+//! (`mapreduce::reduce::TreeReduce`) as wired into the three distributed
+//! protocols via `RunSpec::fanout`.
+//!
+//! The headline pins:
+//!
+//! * any fanout is **thread-invariant**: solution and `value.to_bits()`
+//!   are identical at 1/2/8 threads for greedi, multiround and
+//!   stream_greedi;
+//! * `fanout >= m` (and the 0 default, for the flat-by-default protocols)
+//!   reproduces the classic single-root merge **bit for bit** — the tree
+//!   is a strict generalization, not a fork;
+//! * an interior merge-node crash under `survivor_merge` / `resume` is
+//!   recovered to the bit-identical fault-free output;
+//! * staging is what it claims to be for memory: the root's candidate
+//!   pool at r = 2 never exceeds the flat merge's.
+
+use std::sync::Arc;
+
+use greedi::coordinator::protocol::{
+    self, FaultPlan, Protocol, RecoveryPolicy, RunSpec,
+};
+use greedi::coordinator::FacilityProblem;
+use greedi::data::synth::{gaussian_blobs, SynthConfig};
+
+fn problem(n: usize, seed: u64) -> FacilityProblem {
+    let ds = Arc::new(gaussian_blobs(&SynthConfig::tiny_images(n, 8), seed));
+    FacilityProblem::new(&ds)
+}
+
+const PROTOCOLS: [&str; 3] = ["greedi", "multiround", "stream_greedi"];
+
+#[test]
+fn tree_outputs_are_thread_invariant_across_fanouts() {
+    let p = problem(300, 71);
+    let m = 6usize;
+    for name in PROTOCOLS {
+        let proto = protocol::by_name(name).unwrap();
+        for fanout in [2usize, 4, m] {
+            let base = RunSpec::new(m, 8).seed(41).fanout(fanout);
+            let serial = proto.run(&p, &base.clone().threads(1));
+            let tree = serial.tree.as_ref().expect("tree stats attach");
+            assert_eq!(tree.nodes_per_level.len(), tree.depth, "{name} r={fanout}");
+            assert_eq!(*tree.nodes_per_level.last().unwrap(), 1, "{name}: one root");
+            for threads in [2usize, 8] {
+                let par = proto.run(&p, &base.clone().threads(threads));
+                assert_eq!(
+                    par.solution, serial.solution,
+                    "{name} r={fanout} threads={threads}: solution drifted"
+                );
+                assert_eq!(
+                    par.value.to_bits(),
+                    serial.value.to_bits(),
+                    "{name} r={fanout} threads={threads}: value drifted"
+                );
+                assert_eq!(
+                    par.tree.as_ref().unwrap().peak_per_level,
+                    tree.peak_per_level,
+                    "{name} r={fanout} threads={threads}: per-level peaks drifted"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn saturating_fanout_reproduces_the_flat_merge_bit_for_bit() {
+    let p = problem(300, 72);
+    let m = 5usize;
+    // greedi and stream_greedi default to the flat single-root merge; any
+    // r >= m must collapse back onto it exactly
+    for name in ["greedi", "stream_greedi"] {
+        let proto = protocol::by_name(name).unwrap();
+        let flat = proto.run(&p, &RunSpec::new(m, 8).seed(43));
+        let flat_tree = flat.tree.as_ref().expect("tree stats");
+        assert_eq!(flat_tree.depth, 1, "{name}: default merge is one level");
+        assert_eq!(flat.rounds, 2, "{name}: map + merge");
+        for r in [m, 64] {
+            let sat = proto.run(&p, &RunSpec::new(m, 8).seed(43).fanout(r));
+            assert_eq!(sat.solution, flat.solution, "{name} r={r}");
+            assert_eq!(sat.value.to_bits(), flat.value.to_bits(), "{name} r={r}");
+            assert_eq!(sat.rounds, flat.rounds, "{name} r={r}");
+            assert_eq!(
+                sat.tree.as_ref().unwrap().peak_per_level,
+                flat_tree.peak_per_level,
+                "{name} r={r}"
+            );
+        }
+    }
+    // multiround's historic default is the binary tree: fanout 0 == fanout 2
+    let proto = protocol::by_name("multiround").unwrap();
+    let default = proto.run(&p, &RunSpec::new(m, 8).seed(43));
+    let binary = proto.run(&p, &RunSpec::new(m, 8).seed(43).fanout(2));
+    assert_eq!(default.solution, binary.solution);
+    assert_eq!(default.value.to_bits(), binary.value.to_bits());
+    assert_eq!(default.rounds, binary.rounds);
+}
+
+#[test]
+fn interior_node_crash_recovers_bit_identically() {
+    let p = problem(300, 73);
+    let m = 4usize;
+    for name in PROTOCOLS {
+        let proto = protocol::by_name(name).unwrap();
+        // multiplicity 2 keeps the map-stage crash of machine 0 invisible
+        // (PR 7's pin); what's new here is that the SAME plan also crashes
+        // node 0 of every interior tree level, recovered in place
+        let clean_spec =
+            RunSpec::new(m, 8).multiplicity(2).seed(47).fanout(2).faults(FaultPlan::none());
+        let clean = proto.run(&p, &clean_spec);
+        assert!(
+            clean.tree.as_ref().unwrap().depth > 1,
+            "{name}: fanout 2 over {m} leaves must stage"
+        );
+        for policy in [RecoveryPolicy::SurvivorMerge, RecoveryPolicy::Resume] {
+            let spec = clean_spec
+                .clone()
+                .recovery(policy)
+                .checkpoint_every(2)
+                .faults(FaultPlan::none().crash_tasks(vec![0]));
+            let r = proto.run(&p, &spec);
+            assert_eq!(
+                r.solution,
+                clean.solution,
+                "{name}/{}: interior crash changed the solution",
+                policy.label()
+            );
+            assert_eq!(r.value.to_bits(), clean.value.to_bits(), "{name}/{}", policy.label());
+            let tree = r.tree.as_ref().expect("tree stats");
+            assert!(
+                tree.recovered_nodes >= 1,
+                "{name}/{}: the crashed interior node must be re-merged",
+                policy.label()
+            );
+            assert_eq!(tree.peak_per_level, clean.tree.as_ref().unwrap().peak_per_level);
+        }
+    }
+}
+
+#[test]
+fn root_peak_is_monotone_versus_flat() {
+    let p = problem(400, 74);
+    for name in PROTOCOLS {
+        let proto = protocol::by_name(name).unwrap();
+        let m = 8usize;
+        let flat = proto.run(&p, &RunSpec::new(m, 8).seed(53).fanout(m));
+        let deep = proto.run(&p, &RunSpec::new(m, 8).seed(53).fanout(2));
+        let (flat_t, deep_t) = (flat.tree.as_ref().unwrap(), deep.tree.as_ref().unwrap());
+        assert_eq!(flat_t.depth, 1, "{name}");
+        assert!(deep_t.depth > 1, "{name}");
+        // interior winners are drawn from subsets of what the flat merge
+        // pools directly, so staging can only shrink the root's pool
+        assert!(
+            deep_t.root_peak() <= flat_t.root_peak(),
+            "{name}: root peak grew under staging: {} vs flat {}",
+            deep_t.root_peak(),
+            flat_t.root_peak()
+        );
+        assert_eq!(deep.rounds, 1 + deep_t.depth, "{name}: rounds track depth");
+    }
+}
+
+#[test]
+fn m100_tree_caps_root_peak_well_below_flat() {
+    // the acceptance-scale point: at m = 100 the flat merge pools O(m·κ)
+    // candidates at the root while an r = 4 tree caps it at O(r·κ)
+    let p = problem(600, 75);
+    let proto = protocol::by_name("greedi").unwrap();
+    let k = 4usize;
+    let flat = proto.run(&p, &RunSpec::new(100, k).seed(59).algorithm("greedy"));
+    let tree = proto.run(&p, &RunSpec::new(100, k).seed(59).algorithm("greedy").fanout(4));
+    let (ft, tt) = (flat.tree.as_ref().unwrap(), tree.tree.as_ref().unwrap());
+    assert!(
+        tt.root_peak() < ft.root_peak(),
+        "r=4 root peak {} must undercut flat {}",
+        tt.root_peak(),
+        ft.root_peak()
+    );
+    assert!(
+        tt.root_peak() <= 4 * k,
+        "r=4 root pool is at most r·κ = {}: got {}",
+        4 * k,
+        tt.root_peak()
+    );
+    assert!(ft.root_peak() > 4 * k, "flat pools many machines' candidates");
+    // staging trades memory for quality only mildly: within 10% here
+    assert!(
+        tree.value >= 0.9 * flat.value,
+        "tree quality collapsed: {} vs {}",
+        tree.value,
+        flat.value
+    );
+}
